@@ -1,0 +1,172 @@
+//! End-to-end system driver (EXPERIMENTS.md §E2E): proves all layers
+//! compose on a real workload.
+//!
+//! 1. Generate a real SPICE dataset for the `small` block (thousands of
+//!    transient simulations via the structured solver).
+//! 2. Train SEMULATOR through the AOT PJRT train-step for a few hundred
+//!    epochs with the paper's LR-halving schedule, logging the loss curve.
+//! 3. Evaluate: MAE, MSE vs the Thm-4.1 bound, error Gaussianity.
+//! 4. Stand up the serving stack (batcher + shadow router) and push a
+//!    request burst, reporting latency/throughput vs the golden path.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_train [-- n_samples epochs]
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use semulator::coordinator::{
+    train, BatcherConfig, EmulatorService, LrSchedule, Metrics, Policy, Router, TrainConfig,
+};
+use semulator::datagen::{generate, GenConfig, SampleDist};
+use semulator::repro::{predict_all, signed_errors};
+use semulator::runtime::ArtifactStore;
+use semulator::stats::{empirical_p_within, moments, mse_bound};
+use semulator::util::Rng;
+use semulator::xbar::{AnalogBlock, BlockConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_samples: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(6000);
+    let epochs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let variant = "small";
+    let store = ArtifactStore::open(std::path::Path::new("artifacts"))?;
+    let block_cfg = BlockConfig::small();
+
+    // ---- 1. SPICE dataset ------------------------------------------------
+    println!("[1/4] generating {n_samples} SPICE samples for {variant} ...");
+    let t0 = Instant::now();
+    let ds = generate(&GenConfig::new(block_cfg.clone(), n_samples, 0));
+    println!(
+        "      {:.1}s ({:.2} ms/sample); target mean |V| = {:.4}",
+        t0.elapsed().as_secs_f64(),
+        t0.elapsed().as_secs_f64() * 1e3 / n_samples as f64,
+        ds.target_mean_abs()[0]
+    );
+    let (train_ds, test_ds) = ds.split(0.1, 0xA5);
+
+    // ---- 2. train through PJRT -------------------------------------------
+    println!("[2/4] training {epochs} epochs (PJRT train step, LR halved at 50/75/90%) ...");
+    let mut cfg = TrainConfig::new(variant, epochs);
+    cfg.lr = LrSchedule::paper_scaled(1e-3, epochs);
+    cfg.eval_every = (epochs / 10).max(1);
+    cfg.ckpt_out = Some("runs/ckpt/e2e_small.ckpt".into());
+    let t0 = Instant::now();
+    let (state, report) = train(&store, &cfg, &train_ds, &test_ds, |row| {
+        if row.test_loss.is_some() || row.epoch % 25 == 0 {
+            println!(
+                "      epoch {:>4}  lr {:.2e}  train {:.3e}  test {}",
+                row.epoch,
+                row.lr,
+                row.train_loss,
+                row.test_loss.map(|v| format!("{v:.3e}")).unwrap_or_else(|| "-".into())
+            );
+        }
+    })?;
+    println!(
+        "      {} steps in {:.1}s ({:.1} steps/s)",
+        report.steps,
+        t0.elapsed().as_secs_f64(),
+        report.steps as f64 / t0.elapsed().as_secs_f64()
+    );
+    std::fs::create_dir_all("runs/results/e2e")?;
+    std::fs::write("runs/results/e2e/loss_curve.csv", report.history_csv())?;
+    println!("      loss curve -> runs/results/e2e/loss_curve.csv");
+
+    // ---- 3. accuracy ------------------------------------------------------
+    println!("[3/4] evaluation on {} held-out samples:", test_ds.n);
+    println!(
+        "      MAE {:.4} mV   MSE {:.3e}   P(|err|<0.5mV) {:.3}",
+        report.test.mae * 1e3,
+        report.test.mse,
+        report.test.p_halfmv
+    );
+    let bound = mse_bound(3.0, 0.3);
+    println!(
+        "      Thm 4.1 bound (s=3,p=0.3) = {:.2e}: {}",
+        bound,
+        if report.test.mse < bound { "satisfied" } else { "not yet (more data/epochs)" }
+    );
+    let preds = predict_all(&store, variant, &state, &test_ds)?;
+    let errs = signed_errors(&preds, &test_ds);
+    let m = moments(&errs);
+    println!(
+        "      error dist: mean {:.2e}  std {:.2e}  skew {:.2}  ex-kurtosis {:.2} (Lemma 4.2: ~Gaussian)",
+        m.mean,
+        m.var.sqrt(),
+        m.skew,
+        m.kurtosis
+    );
+    println!("      P(|err|<1mV) = {:.3}", empirical_p_within(&errs, 1e-3));
+
+    // ---- 4. serving -------------------------------------------------------
+    println!("[4/4] serving: batcher + shadow router, 256-request burst ...");
+    let metrics = Arc::new(Metrics::default());
+    let service = EmulatorService::spawn(
+        "artifacts".into(),
+        variant,
+        state,
+        BatcherConfig::default(),
+        metrics.clone(),
+    )?;
+    let router = Arc::new(Router::new(
+        AnalogBlock::new(block_cfg.clone()).map_err(anyhow::Error::msg)?,
+        service.handle(),
+        Policy::Shadow { verify_frac: 0.05 },
+        metrics.clone(),
+        0,
+    ));
+    let n_req = 256;
+    let mut rng = Rng::seed_from(99);
+    let requests: Vec<_> = (0..n_req).map(|_| SampleDist::UniformIid.sample(&block_cfg, &mut rng)).collect();
+    let t0 = Instant::now();
+    let mut max_dev: f64 = 0.0;
+    std::thread::scope(|scope| {
+        let threads: Vec<_> = requests
+            .chunks(n_req / 8)
+            .map(|chunk| {
+                let router = router.clone();
+                scope.spawn(move || {
+                    let mut dev: f64 = 0.0;
+                    for x in chunk {
+                        let r = router.handle(x).expect("request failed");
+                        if let Some(d) = r.verify_dev {
+                            dev = dev.max(d);
+                        }
+                    }
+                    dev
+                })
+            })
+            .collect();
+        for t in threads {
+            max_dev = max_dev.max(t.join().unwrap());
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "      {} requests in {:.2}s -> {:.0} req/s (mean batch {:.1}, p50 {} us, p95 {} us)",
+        n_req,
+        wall,
+        n_req as f64 / wall,
+        metrics.mean_batch_size(),
+        metrics.latency.quantile_us(0.5),
+        metrics.latency.quantile_us(0.95)
+    );
+    println!("      shadow verification max |emul - golden| = {:.3} mV", max_dev * 1e3);
+
+    // Golden throughput for comparison.
+    let block = AnalogBlock::new(block_cfg).map_err(anyhow::Error::msg)?;
+    let t0 = Instant::now();
+    for x in requests.iter().take(64) {
+        std::hint::black_box(block.simulate(x));
+    }
+    let golden_rate = 64.0 / t0.elapsed().as_secs_f64();
+    println!(
+        "      golden SPICE path: {:.0} req/s -> emulator speedup {:.1}x",
+        golden_rate,
+        (n_req as f64 / wall) / golden_rate
+    );
+    println!("e2e complete.");
+    Ok(())
+}

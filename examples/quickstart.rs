@@ -1,0 +1,57 @@
+//! Quickstart: simulate an analog MAC block, generate a tiny SPICE dataset,
+//! and (if `make artifacts` has run) push a batch through the AOT-compiled
+//! neural emulator.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use semulator::datagen::{generate, GenConfig, SampleDist};
+use semulator::model::ModelState;
+use semulator::repro::predict_all;
+use semulator::runtime::ArtifactStore;
+use semulator::util::Rng;
+use semulator::xbar::{AnalogBlock, BlockConfig, CellInputs};
+
+fn main() -> anyhow::Result<()> {
+    // 1. An analog computing block: 2 tiles x 16 rows x 2 columns of 1T1R
+    //    cells + one differential charge-sense MAC.
+    let cfg = BlockConfig::small();
+    let block = AnalogBlock::new(cfg.clone()).map_err(anyhow::Error::msg)?;
+    println!("block: {:?} -> {} output(s), {} cells", cfg.input_shape(), cfg.n_mac(), cfg.n_cells());
+
+    // 2. Simulate one read: activations on the gates, conductances as weights.
+    let mut rng = Rng::seed_from(1);
+    let mut x = CellInputs::zeros(&cfg);
+    for k in 0..cfg.n_cells() {
+        x.v[k] = rng.range(0.0, cfg.v_gate_max);
+        x.g[k] = rng.range(cfg.cell.g_min, cfg.cell.g_max);
+    }
+    let fast = block.simulate(&x);
+    let golden = block.simulate_golden(&x).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("fast structured solver: {:.6} V", fast[0]);
+    println!("golden full-MNA SPICE : {:.6} V (|diff| {:.2e} V)", golden[0], (fast[0] - golden[0]).abs());
+
+    // 3. A small training dataset straight from the simulator.
+    let ds = generate(&GenConfig { dist: SampleDist::UniformIid, ..GenConfig::new(cfg.clone(), 256, 7) });
+    println!("dataset: {} samples, {} features -> {} outputs", ds.n, ds.d, ds.o);
+    println!("target mean |V|: {:.4}", ds.target_mean_abs()[0]);
+
+    // 4. The neural emulator (needs artifacts; harmless to skip).
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("meta.json").exists() {
+        let store = ArtifactStore::open(dir)?;
+        let meta = store.meta.variant("small")?.clone();
+        let state = ModelState::init(&meta, 0); // untrained weights — shapes demo
+        let preds = predict_all(&store, "small", &state, &ds)?;
+        println!(
+            "emulator (untrained, batch via PJRT): first prediction {:.6} V over {} samples",
+            preds[0],
+            ds.n
+        );
+        println!("-> train it: cargo run --release -- train --variant small --data <dataset>");
+    } else {
+        println!("artifacts/ not built — run `make artifacts` to enable the neural emulator");
+    }
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Serving demo: stand up the TCP simulation server on an ephemeral port,
+//! drive it with concurrent clients speaking the JSON line protocol, and
+//! print the server-side metrics — the "SEMULATOR as a SPICE replacement
+//! service" deployment story.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_emulator
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use semulator::coordinator::{BatcherConfig, EmulatorService, Metrics, Policy, Router, Server};
+use semulator::datagen::SampleDist;
+use semulator::model::ModelState;
+use semulator::repro::block_for;
+use semulator::runtime::ArtifactStore;
+use semulator::util::{json_parse, Json, Rng};
+use semulator::xbar::AnalogBlock;
+
+fn main() -> anyhow::Result<()> {
+    let variant = "small";
+    let dir = std::path::PathBuf::from("artifacts");
+    let store = ArtifactStore::open(&dir)?;
+    let meta = store.meta.variant(variant)?.clone();
+
+    // Use a trained checkpoint when available, else fresh weights (the
+    // protocol demo does not depend on accuracy).
+    let ckpt = std::path::Path::new("runs/ckpt/e2e_small.ckpt");
+    let state = if ckpt.exists() {
+        println!("using trained checkpoint {}", ckpt.display());
+        ModelState::load(ckpt, &meta)?
+    } else {
+        println!("no checkpoint found — serving untrained weights (run e2e_train first for accuracy)");
+        ModelState::init(&meta, 0)
+    };
+
+    let metrics = Arc::new(Metrics::default());
+    let service =
+        EmulatorService::spawn(dir, variant, state, BatcherConfig::default(), metrics.clone())?;
+    let block_cfg = block_for(variant)?;
+    let router = Arc::new(Router::new(
+        AnalogBlock::new(block_cfg.clone()).map_err(anyhow::Error::msg)?,
+        service.handle(),
+        Policy::Shadow { verify_frac: 0.1 },
+        metrics.clone(),
+        7,
+    ));
+    let server = Server::spawn("127.0.0.1:0", router, metrics.clone())?;
+    println!("server listening on {}", server.addr);
+
+    // 4 concurrent clients x 16 requests each.
+    let addr = server.addr;
+    std::thread::scope(|scope| {
+        for client in 0..4u64 {
+            scope.spawn(move || {
+                let mut rng = Rng::seed_from(100 + client);
+                let stream = TcpStream::connect(addr).expect("connect");
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut stream = stream;
+                let cfg = block_for("small").unwrap();
+                for i in 0..16 {
+                    let x = SampleDist::UniformIid.sample(&cfg, &mut rng);
+                    let req =
+                        Json::obj(vec![("v", Json::arr_f64(&x.v)), ("g", Json::arr_f64(&x.g))]);
+                    stream.write_all(req.to_string().as_bytes()).unwrap();
+                    stream.write_all(b"\n").unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    let reply = json_parse(line.trim()).unwrap();
+                    if client == 0 && i == 0 {
+                        println!("sample reply: {}", line.trim());
+                    }
+                    assert!(reply.get("y").is_some(), "bad reply: {line}");
+                }
+            });
+        }
+    });
+
+    // Ask the server for its metrics over the wire.
+    let mut stream = TcpStream::connect(server.addr)?;
+    stream.write_all(b"{\"cmd\":\"metrics\"}\n")?;
+    let mut line = String::new();
+    BufReader::new(stream.try_clone()?).read_line(&mut line)?;
+    println!("server metrics: {}", line.trim());
+    println!("local snapshot: {}", metrics.snapshot().to_string_pretty());
+    Ok(())
+}

@@ -1,0 +1,175 @@
+"""AOT compile path: lower every SEMULATOR artifact to HLO text + meta.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax >=
+0.5 emits protos with 64-bit instruction ids which the rust `xla` crate's
+XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Per variant (small / cfg_a / cfg_b) we emit:
+
+    {name}_train.hlo.txt    (*params, *m, *v, step, x, y, lr) ->
+                            (*params', *m', *v', step', loss)
+    {name}_eval.hlo.txt     (*params, x, y) -> (abs_err, sq_err)   [B, O]
+    {name}_fwd_b1.hlo.txt   (*params, x) -> (y,)                   latency path
+    {name}_fwd_bN.hlo.txt   (*params, x) -> (y,)                   batch path
+
+plus one shared `meta.json` describing shapes, parameter layout and init
+bounds so the rust side never re-derives architecture facts.
+
+Python runs ONCE at `make artifacts`; nothing here is on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import arch as A
+from . import model as M
+
+# Fixed batch sizes baked into the artifacts (PJRT executables have static
+# shapes; the rust batcher pads to these).
+TRAIN_BATCH = {"small": 128, "cfg_a": 256, "cfg_b": 256}
+EVAL_BATCH = {"small": 256, "cfg_a": 256, "cfg_b": 256}
+INFER_BATCHES = [1, 64]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_variant(name, out_dir):
+    """Lower all artifacts for one variant; returns its meta dict."""
+    arch = A.ARCHS[name]
+    A.validate_arch(arch)
+    specs = A.param_specs(arch)
+    p_specs = [f32(s["shape"]) for s in specs]
+    n_p = len(p_specs)
+    in_shape = arch["input"]
+    n_out = arch["outputs"]
+
+    artifacts = {}
+
+    def emit(kind, fn, args):
+        fname = f"{name}_{kind}.hlo.txt"
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        return fname
+
+    # --- train step -------------------------------------------------------
+    bt = TRAIN_BATCH[name]
+
+    def train_fn(*args):
+        params = list(args[:n_p])
+        m = list(args[n_p : 2 * n_p])
+        v = list(args[2 * n_p : 3 * n_p])
+        step, x, y, lr = args[3 * n_p :]
+        new_p, new_m, new_v, new_step, loss = M.train_step(arch, params, m, v, step, x, y, lr)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (new_step, loss)
+
+    train_args = p_specs * 3 + [f32(()), f32((bt, *in_shape)), f32((bt, n_out)), f32(())]
+    artifacts["train"] = {
+        "file": emit("train", train_fn, train_args),
+        "batch": bt,
+        "n_inputs": 3 * n_p + 4,
+        "n_outputs": 3 * n_p + 2,
+    }
+
+    # --- eval -------------------------------------------------------------
+    be = EVAL_BATCH[name]
+
+    def eval_fn(*args):
+        params = list(args[:n_p])
+        x, y = args[n_p :]
+        return M.eval_errors(arch, params, x, y)
+
+    eval_args = p_specs + [f32((be, *in_shape)), f32((be, n_out))]
+    artifacts["eval"] = {
+        "file": emit("eval", eval_fn, eval_args),
+        "batch": be,
+        "n_inputs": n_p + 2,
+        "n_outputs": 2,
+    }
+
+    # --- forward (inference) ---------------------------------------------
+    for bi in INFER_BATCHES:
+
+        def fwd_fn(*args, _b=bi):
+            params = list(args[:n_p])
+            return (M.forward(arch, params, args[n_p]),)
+
+        fwd_args = p_specs + [f32((bi, *in_shape))]
+        artifacts[f"fwd_b{bi}"] = {
+            "file": emit(f"fwd_b{bi}", fwd_fn, fwd_args),
+            "batch": bi,
+            "n_inputs": n_p + 1,
+            "n_outputs": 1,
+        }
+
+    # --- kernel-ablation forward (stock-XLA ops, no Pallas) ---------------
+    # Same math as fwd_b{max}; comparing PJRT cost isolates the Pallas
+    # interpret-mode lowering overhead (EXPERIMENTS.md §Perf).
+    bi = max(INFER_BATCHES)
+
+    def fwd_ref_fn(*args):
+        params = list(args[:n_p])
+        return (M.forward_ref(arch, params, args[n_p]),)
+
+    artifacts[f"fwd_b{bi}_ref"] = {
+        "file": emit(f"fwd_b{bi}_ref", fwd_ref_fn, p_specs + [f32((bi, *in_shape))]),
+        "batch": bi,
+        "n_inputs": n_p + 1,
+        "n_outputs": 1,
+    }
+
+    return {
+        "input": list(in_shape),
+        "outputs": n_out,
+        "n_param_arrays": n_p,
+        "n_parameters": A.n_parameters(arch),
+        "params": [
+            {"name": s["name"], "shape": list(s["shape"]), "bound": s["bound"]} for s in specs
+        ],
+        "artifacts": artifacts,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", nargs="*", default=list(A.ARCHS.keys()))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    meta = {"version": 1, "infer_batches": INFER_BATCHES, "variants": {}}
+    for name in args.variants:
+        print(f"lowering {name} ...", flush=True)
+        meta["variants"][name] = lower_variant(name, args.out_dir)
+
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    # Merge with an existing meta when only a subset of variants was built.
+    if os.path.exists(meta_path) and set(args.variants) != set(A.ARCHS.keys()):
+        with open(meta_path) as f:
+            old = json.load(f)
+        old["variants"].update(meta["variants"])
+        meta = old
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

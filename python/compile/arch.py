@@ -1,0 +1,114 @@
+"""SEMULATOR network architectures (paper Table 2) as declarative specs.
+
+Each arch is a dict:
+    input   — (C, D, H, W) cell-feature tensor shape (no batch dim)
+    outputs — number of MAC output voltages
+    layers  — list of layer specs:
+        {"type": "conv",  "cin", "cout", "k": (kD,kH,kW), "s": (sD,sH,sW), "celu": bool}
+        {"type": "flatten"}
+        {"type": "dense", "cin", "cout", "celu": bool}
+
+Note on cfg_b: the paper lists stride (1,1,1) for the last conv of both
+variants, but its own Linear(256, 32) only type-checks on the (2,2,64,8)
+input if that layer has stride (1,1,2) (32ch * D2 * H1 * W4 = 256). We use
+stride (1,1,2) there and record the discrepancy in DESIGN.md.
+"""
+
+from .kernels import conv4xbar_out_shape
+
+CELU_ALPHA = 1.0
+
+
+def _conv(cin, cout, k, s, celu=True):
+    return {"type": "conv", "cin": cin, "cout": cout, "k": tuple(k), "s": tuple(s), "celu": celu}
+
+
+def _dense(cin, cout, celu=True):
+    return {"type": "dense", "cin": cin, "cout": cout, "celu": celu}
+
+
+def _xbar_stack(head_h_kernels, last_w_kernel, last_w_stride):
+    """The shared Conv4Xbar trunk of Table 2: per-cell 1x1x1 features, then
+    column-wise (H) reductions, then the cross-column (W) mix."""
+    layers = [_conv(2, 16, (1, 1, 1), (1, 1, 1))]
+    cin = 16
+    for cout, kh in head_h_kernels:
+        layers.append(_conv(cin, cout, (1, kh, 1), (1, kh, 1)))
+        cin = cout
+    layers.append(_conv(cin, 32, (1, 1, last_w_kernel), (1, 1, last_w_stride)))
+    return layers
+
+
+ARCHS = {
+    # Table 1 row 1 / Table 2 row 1: (2,4,64,2) -> 1 voltage.
+    "cfg_a": {
+        "input": (2, 4, 64, 2),
+        "outputs": 1,
+        "layers": _xbar_stack([(8, 2), (4, 4), (32, 8)], 2, 1)
+        + [{"type": "flatten"}, _dense(128, 32), _dense(32, 16), _dense(16, 1, celu=False)],
+    },
+    # Table 1 row 2 / Table 2 row 2: (2,2,64,8) -> 4 voltages.
+    "cfg_b": {
+        "input": (2, 2, 64, 8),
+        "outputs": 4,
+        "layers": _xbar_stack([(8, 2), (4, 4), (32, 8)], 2, 2)
+        + [{"type": "flatten"}, _dense(256, 32), _dense(32, 16), _dense(16, 4, celu=False)],
+    },
+    # Reduced block for single-core end-to-end runs: (2,2,16,2) -> 1 voltage.
+    "small": {
+        "input": (2, 2, 16, 2),
+        "outputs": 1,
+        "layers": _xbar_stack([(8, 2), (32, 8)], 2, 1)
+        + [{"type": "flatten"}, _dense(64, 32), _dense(32, 16), _dense(16, 1, celu=False)],
+    },
+}
+
+
+def validate_arch(arch):
+    """Shape-check the layer stack; returns the flattened feature count."""
+    c, d, h, w = arch["input"]
+    spatial = (d, h, w)
+    flat = None
+    for ly in arch["layers"]:
+        if ly["type"] == "conv":
+            assert ly["cin"] == c, f"conv cin {ly['cin']} != {c}"
+            spatial = conv4xbar_out_shape(spatial, ly["cout"], ly["k"], ly["s"])
+            c = ly["cout"]
+        elif ly["type"] == "flatten":
+            flat = c * spatial[0] * spatial[1] * spatial[2]
+            c = flat
+        elif ly["type"] == "dense":
+            assert ly["cin"] == c, f"dense cin {ly['cin']} != {c}"
+            c = ly["cout"]
+        else:
+            raise ValueError(f"unknown layer {ly['type']}")
+    assert c == arch["outputs"], f"final width {c} != outputs {arch['outputs']}"
+    return flat
+
+
+def param_specs(arch):
+    """Ordered parameter descriptors: name, shape, init bound (Kaiming-
+    uniform, like torch's Conv3d/Linear defaults)."""
+    specs = []
+    for i, ly in enumerate(arch["layers"]):
+        if ly["type"] == "conv":
+            kd, kh, kw = ly["k"]
+            fan_in = ly["cin"] * kd * kh * kw
+            bound = (1.0 / fan_in) ** 0.5
+            specs.append({"name": f"conv{i}.w", "shape": (ly["cout"], ly["cin"], kd, kh, kw), "bound": bound})
+            specs.append({"name": f"conv{i}.b", "shape": (ly["cout"],), "bound": bound})
+        elif ly["type"] == "dense":
+            bound = (1.0 / ly["cin"]) ** 0.5
+            specs.append({"name": f"dense{i}.w", "shape": (ly["cin"], ly["cout"]), "bound": bound})
+            specs.append({"name": f"dense{i}.b", "shape": (ly["cout"],), "bound": bound})
+    return specs
+
+
+def n_parameters(arch):
+    total = 0
+    for s in param_specs(arch):
+        n = 1
+        for dim in s["shape"]:
+            n *= dim
+        total += n
+    return total

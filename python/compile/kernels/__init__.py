@@ -1,0 +1,12 @@
+"""L1 Pallas kernels for SEMULATOR (build-time only, interpret=True).
+
+`fused_linear` is the single compute hot-spot: matmul + bias + CELU fused
+for the MXU. `conv4xbar` lowers every Conv4Xbar layer onto it via disjoint
+patch extraction. `ref` holds the pure-jnp oracles used by pytest.
+"""
+
+from . import ref
+from .conv4xbar import conv4xbar, conv4xbar_out_shape
+from .fused_linear import fused_linear, fused_linear_pallas
+
+__all__ = ["ref", "conv4xbar", "conv4xbar_out_shape", "fused_linear", "fused_linear_pallas"]

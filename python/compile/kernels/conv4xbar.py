@@ -1,0 +1,69 @@
+"""Conv4Xbar layers as patch matmuls over the fused Pallas kernel.
+
+The paper's feature extractor (Fig. 3 / Table 2) uses 3D convolutions whose
+kernels have depth 1 and stride equal to kernel size — each layer partitions
+the (tile, row, col) grid into disjoint patches and applies one shared
+filter per patch, which is exactly how the crossbar shares one cell model
+``d(.)`` across all cells. Here each such layer is lowered to
+
+    reshape -> (B * D' * H' * W', Cin * kH * kW) @ (Cin * kH * kW, Cout)
+
+and dispatched to :func:`..kernels.fused_linear.fused_linear` (MXU matmul +
+fused bias/CELU). See DESIGN.md §Hardware-Adaptation.
+
+Supported geometry per spatial dim: ``stride == kernel`` (disjoint patches),
+or ``stride == 1`` with ``kernel == dim`` (a single patch — e.g. the final
+(1,1,2) layer on W=2 in cfg_a). Anything else is not a Conv4Xbar layer.
+"""
+
+import jax.numpy as jnp
+
+from .fused_linear import fused_linear
+
+
+def _blocks(dim: int, k: int, s: int) -> int:
+    """Number of output positions along one spatial dim."""
+    if s == k:
+        assert dim % k == 0, f"dim {dim} not divisible by kernel {k}"
+        return dim // k
+    if s == 1 and k == dim:
+        return 1
+    raise ValueError(f"unsupported conv geometry: dim={dim} k={k} s={s}")
+
+
+def conv4xbar(x, w, b, stride, apply_celu: bool, alpha: float = 1.0):
+    """Conv4Xbar layer. x: (B, Cin, D, H, W), w: (Cout, Cin, kD, kH, kW).
+
+    Returns (B, Cout, D', H', W').
+    """
+    bsz, cin, d, h, wd = x.shape
+    cout, cin2, kd, kh, kw = w.shape
+    sd, sh, sw = stride
+    assert cin == cin2, f"channel mismatch {cin} vs {cin2}"
+    assert kd == 1 and sd == 1, "Conv4Xbar kernels have unit depth"
+    od, oh, ow = d, _blocks(h, kh, sh), _blocks(wd, kw, sw)
+
+    # Patch extraction by pure reshape/transpose (no data duplication —
+    # patches are disjoint). (B, C, D, H, W) -> (B, C, D, oh, kh, ow, kw).
+    xp = x.reshape(bsz, cin, d, oh, kh, ow, kw)
+    # -> (B, D, oh, ow, C, kh, kw): positions major, patch content minor.
+    xp = xp.transpose(0, 2, 3, 5, 1, 4, 6)
+    a = xp.reshape(bsz * od * oh * ow, cin * kh * kw)
+
+    # Weights: (Cout, Cin, 1, kh, kw) -> (Cin * kh * kw, Cout), matching the
+    # patch content order (C, kh, kw).
+    wm = w.reshape(cout, cin * kh * kw).T
+
+    y = fused_linear(a, wm, b, apply_celu, alpha)
+
+    # (B * D' * H' * W', Cout) -> (B, Cout, D', H', W').
+    y = y.reshape(bsz, od, oh, ow, cout).transpose(0, 4, 1, 2, 3)
+    return y
+
+
+def conv4xbar_out_shape(in_shape, cout, kernel, stride):
+    """Static output spatial shape for architecture checking."""
+    d, h, w = in_shape
+    _, kh, kw = kernel
+    _, sh, sw = stride
+    return (d, _blocks(h, kh, sh), _blocks(w, kw, sw))

@@ -1,0 +1,105 @@
+"""Fused matmul + bias + CELU as a Pallas kernel — the L1 hot-spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): every Conv4Xbar layer
+has unit-depth kernels with stride == kernel size, i.e. it partitions its
+input into disjoint patches. On TPU that is not a sliding-window convolution
+at all — it is a patch matrix times a small weight matrix, which feeds the
+MXU directly. This kernel is that matmul with the bias add and CELU fused in
+(VPU elementwise after the MXU pass), so one layer = one VMEM round trip.
+
+The grid tiles the M (batch*positions) dimension; the full K x N weight tile
+stays resident in VMEM across the grid (K*N here is at most a few thousand
+floats — far under the ~16 MiB VMEM budget; see DESIGN.md §Perf for the
+accounting).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers through the interpreter into plain HLO.
+Numerics are identical; TPU performance is estimated statically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# M-dimension tile for a real TPU: 128 matches the MXU systolic dimension
+# (see DESIGN.md §Perf for the VMEM/BlockSpec accounting at this size).
+TPU_BLOCK_M = 128
+
+# The artifacts in this repo target the CPU PJRT client, where the Pallas
+# interpreter serializes the grid — a 1024-step grid of tiny MXU tiles is
+# ~50x slower than one fused dot. For the CPU schedule we therefore use a
+# single full-M block (grid of 1). Tests exercise multi-block grids
+# explicitly via the `block_m` argument; numerics are identical.
+DEFAULT_BLOCK_M = None  # None -> full M in one block
+
+
+def _kernel(a_ref, w_ref, b_ref, o_ref, *, apply_celu: bool, alpha: float):
+    """One grid step: (bm, K) @ (K, N) + b, optional CELU."""
+    a = a_ref[...]
+    w = w_ref[...]
+    z = jnp.dot(a, w, preferred_element_type=jnp.float32) + b_ref[...]
+    if apply_celu:
+        z = jnp.maximum(z, 0.0) + jnp.minimum(0.0, alpha * jnp.expm1(z / alpha))
+    o_ref[...] = z
+
+
+def fused_linear_pallas(a, w, b, apply_celu: bool, alpha: float = 1.0, block_m: int | None = DEFAULT_BLOCK_M):
+    """``celu(a @ w + b)`` via Pallas. a: (M, K), w: (K, N), b: (N,)."""
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} vs ({n},)"
+
+    bm = m if block_m is None else min(block_m, m)
+    m_pad = (bm - m % bm) % bm
+    if m_pad:
+        a = jnp.pad(a, ((0, m_pad), (0, 0)))
+    grid = (a.shape[0] // bm,)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, apply_celu=apply_celu, alpha=alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),  # stream M tiles
+            pl.BlockSpec((k, n), lambda i: (0, 0)),   # weights resident
+            pl.BlockSpec((n,), lambda i: (0,)),       # bias resident
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], n), jnp.float32),
+        interpret=True,
+    )(a, w, b)
+    return out[:m] if m_pad else out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fused_linear(a, w, b, apply_celu: bool, alpha: float = 1.0):
+    """Differentiable fused linear layer.
+
+    Forward runs the Pallas kernel; backward is closed-form jnp (Pallas
+    interpret-mode has no transpose rule, and the backward pass is itself
+    two matmuls XLA fuses well).
+    """
+    return fused_linear_pallas(a, w, b, apply_celu, alpha)
+
+
+def _fwd(a, w, b, apply_celu, alpha):
+    y = fused_linear_pallas(a, w, b, apply_celu, alpha)
+    return y, (a, w, b)
+
+
+def _bwd(apply_celu, alpha, res, gy):
+    a, w, b = res
+    if apply_celu:
+        z = a @ w + b  # cheap recompute; saves storing pre-activations
+        gz = gy * jnp.where(z >= 0.0, 1.0, jnp.exp(z / alpha))
+    else:
+        gz = gy
+    ga = gz @ w.T
+    gw = a.T @ gz
+    gb = gz.sum(axis=0)
+    return ga, gw, gb
+
+
+fused_linear.defvjp(_fwd, _bwd)

@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is deliberately written with stock XLA ops
+(``lax.conv_general_dilated`` for the Conv4Xbar layers, plain ``@`` for the
+dense layers) so the Pallas implementations in this package have an
+independent reference. pytest checks kernel-vs-ref allclose across a
+hypothesis sweep of shapes — this is the CORE correctness signal for L1.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def celu(x, alpha: float = 1.0):
+    """CELU activation (matches torch.nn.CELU)."""
+    return jnp.maximum(x, 0.0) + jnp.minimum(0.0, alpha * jnp.expm1(x / alpha))
+
+
+def celu_grad(x, alpha: float = 1.0):
+    """d celu(x) / dx (used by the custom VJPs)."""
+    return jnp.where(x >= 0.0, 1.0, jnp.exp(x / alpha))
+
+
+def linear_ref(a, w, b, apply_celu: bool, alpha: float = 1.0):
+    """Reference for the fused dense kernel: ``a @ w + b`` then CELU.
+
+    a: (M, K), w: (K, N), b: (N,) -> (M, N)
+    """
+    z = a @ w + b
+    return celu(z, alpha) if apply_celu else z
+
+
+def conv3d_ref(x, w, b, stride, apply_celu: bool, alpha: float = 1.0):
+    """Reference Conv4Xbar layer via XLA's general convolution.
+
+    x: (B, Cin, D, H, W), w: (Cout, Cin, kD, kH, kW), b: (Cout,),
+    stride: (sD, sH, sW), VALID padding -> (B, Cout, D', H', W').
+    """
+    z = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=tuple(stride),
+        padding="VALID",
+        dimension_numbers=("NCDHW", "OIDHW", "NCDHW"),
+    )
+    z = z + b.reshape(1, -1, 1, 1, 1)
+    return celu(z, alpha) if apply_celu else z

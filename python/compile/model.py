@@ -1,0 +1,112 @@
+"""L2: the SEMULATOR regression network — forward, loss, Adam train step.
+
+Pure functions over flat parameter lists (ordered per
+:func:`compile.arch.param_specs`), so the whole training step AOT-lowers to
+a single HLO computation the rust coordinator can execute via PJRT with
+donated buffers. The Conv4Xbar layers dispatch to the Pallas patch-matmul
+kernel (:mod:`compile.kernels`), so the kernel is on the compute path of
+every artifact, forward and training alike.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .arch import CELU_ALPHA, param_specs
+from .kernels import conv4xbar, fused_linear
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def init_params(arch, key):
+    """Kaiming-uniform initialization; returns the flat parameter list."""
+    params = []
+    for spec in param_specs(arch):
+        key, sub = jax.random.split(key)
+        params.append(
+            jax.random.uniform(sub, spec["shape"], jnp.float32, -spec["bound"], spec["bound"])
+        )
+    return params
+
+
+def forward(arch, params, x):
+    """x: (B, C, D, H, W) normalized features -> (B, outputs) volts."""
+    b = x.shape[0]
+    it = iter(params)
+    h = x
+    for ly in arch["layers"]:
+        if ly["type"] == "conv":
+            w, bias = next(it), next(it)
+            h = conv4xbar(h, w, bias, ly["s"], ly["celu"], CELU_ALPHA)
+        elif ly["type"] == "flatten":
+            h = h.reshape(b, -1)
+        elif ly["type"] == "dense":
+            w, bias = next(it), next(it)
+            h = fused_linear(h, w, bias, ly["celu"], CELU_ALPHA)
+    return h
+
+
+def forward_ref(arch, params, x):
+    """Reference forward pass on stock XLA ops (no Pallas) — identical math.
+
+    Used for the kernel-ablation artifact (`fwd_*_ref`): comparing its PJRT
+    cost against the Pallas-path artifact isolates the interpret-mode
+    lowering overhead (EXPERIMENTS.md §Perf).
+    """
+    from .kernels import ref
+
+    b = x.shape[0]
+    it = iter(params)
+    h = x
+    for ly in arch["layers"]:
+        if ly["type"] == "conv":
+            w, bias = next(it), next(it)
+            h = ref.conv3d_ref(h, w, bias, ly["s"], ly["celu"], CELU_ALPHA)
+        elif ly["type"] == "flatten":
+            h = h.reshape(b, -1)
+        elif ly["type"] == "dense":
+            w, bias = next(it), next(it)
+            h = ref.linear_ref(h, w, bias, ly["celu"], CELU_ALPHA)
+    return h
+
+
+def mse_loss(arch, params, x, y):
+    """Mean squared error over batch and outputs (paper's training loss)."""
+    pred = forward(arch, params, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+def eval_errors(arch, params, x, y):
+    """Per-sample error tensors for MAE / Thm 4.1 / Fig 7: (abs, sq), each
+    (B, outputs)."""
+    pred = forward(arch, params, x)
+    err = pred - y
+    return jnp.abs(err), err**2
+
+
+def init_opt_state(params):
+    """Adam state: (m, v, step)."""
+    zeros = [jnp.zeros_like(p) for p in params]
+    return zeros, [jnp.zeros_like(p) for p in params], jnp.zeros((), jnp.float32)
+
+
+def train_step(arch, params, m, v, step, x, y, lr):
+    """One Adam step at learning rate `lr` (a traced scalar, so the rust
+    side owns the schedule — paper Fig 4 halves it at fixed epochs).
+
+    Returns (new_params, new_m, new_v, new_step, loss).
+    """
+    loss, grads = jax.value_and_grad(lambda p: mse_loss(arch, p, x, y))(params)
+    step = step + 1.0
+    bc1 = 1.0 - ADAM_B1**step
+    bc2 = 1.0 - ADAM_B2**step
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        p = p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_params.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_params, new_m, new_v, step, loss

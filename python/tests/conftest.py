@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Make `compile` importable regardless of pytest rootdir.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

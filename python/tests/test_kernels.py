@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; the assertions are tight allclose checks —
+this is the core correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv4xbar, fused_linear, fused_linear_pallas, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- fused_linear
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    celu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, celu, seed):
+    a = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n), 0.5)
+    b = rand(seed + 2, (n,), 0.5)
+    got = fused_linear_pallas(a, w, b, celu, 1.0)
+    want = ref.linear_ref(a, w, b, celu, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(block_m=st.sampled_from([1, 7, 32, 128]), m=st.integers(1, 200), seed=st.integers(0, 1000))
+def test_fused_linear_grid_tiling_invariant(block_m, m, seed):
+    """Multi-block grids (the TPU schedule) match the single-block result."""
+    a = rand(seed, (m, 24))
+    w = rand(seed + 1, (24, 8))
+    b = rand(seed + 2, (8,))
+    tiled = fused_linear_pallas(a, w, b, True, 1.0, block_m=block_m)
+    full = fused_linear_pallas(a, w, b, True, 1.0, block_m=None)
+    np.testing.assert_allclose(tiled, full, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_linear_alpha_variants():
+    a = rand(0, (17, 9))
+    w = rand(1, (9, 5))
+    b = rand(2, (5,))
+    for alpha in [0.5, 1.0, 2.0]:
+        got = fused_linear_pallas(a, w, b, True, alpha)
+        want = ref.linear_ref(a, w, b, True, alpha)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_fused_linear_gradients_match_ref():
+    a = rand(3, (33, 12))
+    w = rand(4, (12, 7))
+    b = rand(5, (7,))
+
+    def loss(f):
+        return lambda aa, ww, bb: jnp.sum(f(aa, ww, bb, True, 1.0) ** 2)
+
+    g = jax.grad(loss(fused_linear), argnums=(0, 1, 2))(a, w, b)
+    gr = jax.grad(loss(ref.linear_ref), argnums=(0, 1, 2))(a, w, b)
+    for gi, gri in zip(g, gr):
+        np.testing.assert_allclose(gi, gri, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_linear_inside_jit():
+    a = rand(6, (50, 10))
+    w = rand(7, (10, 4))
+    b = rand(8, (4,))
+    f = jax.jit(lambda aa: fused_linear(aa, w, b, True, 1.0))
+    np.testing.assert_allclose(f(a), ref.linear_ref(a, w, b, True, 1.0), rtol=1e-5, atol=1e-5)
+
+
+def test_fused_linear_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        fused_linear_pallas(rand(0, (4, 3)), rand(1, (5, 2)), rand(2, (2,)), False, 1.0)
+    with pytest.raises(AssertionError):
+        fused_linear_pallas(rand(0, (4, 3)), rand(1, (3, 2)), rand(2, (3,)), False, 1.0)
+
+
+# ------------------------------------------------------------------ conv4xbar
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 16),
+    d=st.integers(1, 4),
+    h_blocks=st.integers(1, 8),
+    kh=st.sampled_from([1, 2, 4]),
+    w=st.sampled_from([1, 2, 4]),
+    celu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv4xbar_stride_eq_kernel(b, cin, cout, d, h_blocks, kh, w, celu, seed):
+    h = h_blocks * kh
+    x = rand(seed, (b, cin, d, h, w))
+    wt = rand(seed + 1, (cout, cin, 1, kh, 1), 0.4)
+    bias = rand(seed + 2, (cout,), 0.2)
+    got = conv4xbar(x, wt, bias, (1, kh, 1), celu)
+    want = ref.conv3d_ref(x, wt, bias, (1, kh, 1), celu)
+    assert got.shape == (b, cout, d, h // kh, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_conv4xbar_single_patch_geometry():
+    """The cfg_a final layer: kernel (1,1,2), stride (1,1,1) on W=2."""
+    x = rand(0, (5, 32, 4, 1, 2))
+    w = rand(1, (32, 32, 1, 1, 2), 0.2)
+    b = rand(2, (32,), 0.2)
+    got = conv4xbar(x, w, b, (1, 1, 1), True)
+    want = ref.conv3d_ref(x, w, b, (1, 1, 1), True)
+    assert got.shape == (5, 32, 4, 1, 1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_conv4xbar_w_stride_2():
+    """The cfg_b final layer: kernel (1,1,2), stride (1,1,2) on W=8."""
+    x = rand(3, (2, 32, 2, 1, 8))
+    w = rand(4, (32, 32, 1, 1, 2), 0.2)
+    b = rand(5, (32,), 0.2)
+    got = conv4xbar(x, w, b, (1, 1, 2), True)
+    want = ref.conv3d_ref(x, w, b, (1, 1, 2), True)
+    assert got.shape == (2, 32, 2, 1, 4)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_conv4xbar_rejects_overlapping_windows():
+    x = rand(0, (1, 2, 1, 8, 2))
+    w = rand(1, (4, 2, 1, 3, 1))
+    b = rand(2, (4,))
+    with pytest.raises(ValueError):
+        conv4xbar(x, w, b, (1, 1, 1), True)  # k=3, s=1, dim=8: overlapping
+
+
+def test_conv4xbar_gradients_match_ref():
+    x = rand(9, (4, 2, 2, 8, 2))
+    w = rand(10, (6, 2, 1, 2, 1), 0.3)
+    b = rand(11, (6,), 0.1)
+
+    def mk(f):
+        return lambda xx, ww, bb: jnp.sum(f(xx, ww, bb, (1, 2, 1), True) ** 2)
+
+    g = jax.grad(mk(conv4xbar), argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(mk(ref.conv3d_ref), argnums=(0, 1, 2))(x, w, b)
+    for gi, gri in zip(g, gr):
+        np.testing.assert_allclose(gi, gri, rtol=1e-4, atol=1e-4)
+
+
+def test_celu_matches_definition():
+    x = jnp.linspace(-5, 5, 101)
+    got = ref.celu(x, 1.3)
+    want = jnp.where(x > 0, x, 1.3 * (jnp.exp(x / 1.3) - 1.0))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+    # Gradient helper agrees with autodiff.
+    g = jax.vmap(jax.grad(lambda v: ref.celu(v, 1.3)))(x)
+    np.testing.assert_allclose(ref.celu_grad(x, 1.3), g, rtol=1e-6, atol=1e-7)

@@ -1,0 +1,130 @@
+"""L2 correctness: architecture shapes, training dynamics, eval outputs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import arch as A
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name", list(A.ARCHS.keys()))
+def test_arch_validates(name):
+    A.validate_arch(A.ARCHS[name])
+
+
+def test_table2_flatten_widths():
+    """The flatten widths the paper's Table 2 dense layers expect."""
+    assert A.validate_arch(A.ARCHS["cfg_a"]) == 128
+    assert A.validate_arch(A.ARCHS["cfg_b"]) == 256
+    assert A.validate_arch(A.ARCHS["small"]) == 64
+
+
+@pytest.mark.parametrize("name", list(A.ARCHS.keys()))
+def test_forward_shape(name):
+    arch = A.ARCHS[name]
+    params = M.init_params(arch, jax.random.PRNGKey(0))
+    x = jnp.zeros((3, *arch["input"]), jnp.float32)
+    y = M.forward(arch, params, x)
+    assert y.shape == (3, arch["outputs"])
+    assert jnp.all(jnp.isfinite(y))
+
+
+def test_param_specs_order_matches_init():
+    arch = A.ARCHS["small"]
+    params = M.init_params(arch, jax.random.PRNGKey(1))
+    specs = A.param_specs(arch)
+    assert len(params) == len(specs)
+    for p, s in zip(params, specs):
+        assert p.shape == tuple(s["shape"]), s["name"]
+        assert float(jnp.abs(p).max()) <= s["bound"] + 1e-7
+
+
+def test_init_is_seed_deterministic():
+    arch = A.ARCHS["small"]
+    p1 = M.init_params(arch, jax.random.PRNGKey(7))
+    p2 = M.init_params(arch, jax.random.PRNGKey(7))
+    p3 = M.init_params(arch, jax.random.PRNGKey(8))
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(a, b)
+    assert any(float(jnp.abs(a - b).max()) > 0 for a, b in zip(p1, p3))
+
+
+def test_train_step_decreases_loss_on_fixed_batch():
+    arch = A.ARCHS["small"]
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(arch, key)
+    m, v, step = M.init_opt_state(params)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (32, *arch["input"]), jnp.float32)
+    y = jax.random.uniform(jax.random.PRNGKey(2), (32, arch["outputs"]), jnp.float32, -0.5, 0.5)
+    ts = jax.jit(lambda p, mm, vv, ss, lr: M.train_step(arch, p, mm, vv, ss, x, y, lr))
+    first = None
+    loss = None
+    for i in range(60):
+        params, m, v, step, loss = ts(params, m, v, step, 3e-3)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < 0.3 * first, f"loss {first} -> {float(loss)}"
+    assert float(step) == 60.0
+
+
+def test_eval_errors_shapes_and_values():
+    arch = A.ARCHS["small"]
+    params = M.init_params(arch, jax.random.PRNGKey(0))
+    x = jnp.zeros((5, *arch["input"]), jnp.float32)
+    y = jnp.ones((5, arch["outputs"]), jnp.float32)
+    abs_e, sq_e = M.eval_errors(arch, params, x, y)
+    assert abs_e.shape == (5, arch["outputs"])
+    assert sq_e.shape == (5, arch["outputs"])
+    np.testing.assert_allclose(sq_e, abs_e**2, rtol=1e-5)
+    # Identical rows -> identical errors.
+    np.testing.assert_allclose(abs_e[0], abs_e[4], rtol=1e-6)
+
+
+def test_mse_loss_zero_on_perfect_targets():
+    arch = A.ARCHS["small"]
+    params = M.init_params(arch, jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(3), (4, *arch["input"]), jnp.float32)
+    y = M.forward(arch, params, x)
+    assert float(M.mse_loss(arch, params, x, y)) < 1e-12
+
+
+def test_parameter_count_small_vs_formula():
+    arch = A.ARCHS["small"]
+    params = M.init_params(arch, jax.random.PRNGKey(0))
+    total = sum(int(np.prod(p.shape)) for p in params)
+    assert total == A.n_parameters(arch)
+
+
+def test_lr_zero_is_identity():
+    arch = A.ARCHS["small"]
+    params = M.init_params(arch, jax.random.PRNGKey(0))
+    m, v, step = M.init_opt_state(params)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8, *arch["input"]), jnp.float32)
+    y = jnp.zeros((8, arch["outputs"]), jnp.float32)
+    new_p, *_ = M.train_step(arch, params, m, v, step, x, y, 0.0)
+    for a, b in zip(params, new_p):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_forward_ref_matches_forward():
+    """The no-Pallas ablation path must compute identical math."""
+    arch = A.ARCHS["small"]
+    params = M.init_params(arch, jax.random.PRNGKey(5))
+    x = jax.random.uniform(jax.random.PRNGKey(6), (9, *arch["input"]), jnp.float32)
+    y_pallas = M.forward(arch, params, x)
+    y_ref = M.forward_ref(arch, params, x)
+    np.testing.assert_allclose(y_pallas, y_ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["cfg_a", "cfg_b"])
+def test_paper_archs_forward_ref_consistency(name):
+    arch = A.ARCHS[name]
+    params = M.init_params(arch, jax.random.PRNGKey(1))
+    x = jax.random.uniform(jax.random.PRNGKey(2), (2, *arch["input"]), jnp.float32)
+    np.testing.assert_allclose(
+        M.forward(arch, params, x), M.forward_ref(arch, params, x), rtol=1e-4, atol=1e-5
+    )

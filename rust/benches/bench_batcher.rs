@@ -1,0 +1,66 @@
+//! Coordinator-overhead benchmark: request -> batcher -> PJRT -> reply
+//! round trip under different concurrency levels and batching policies.
+//! Requires artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use semulator::coordinator::{BatcherConfig, EmulatorService, Metrics};
+use semulator::model::ModelState;
+use semulator::runtime::ArtifactStore;
+use semulator::util::{BenchConfig, Bencher};
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts");
+    if !dir.join("meta.json").exists() {
+        println!("bench_batcher: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let store = ArtifactStore::open(&dir).unwrap();
+    let meta = store.meta.variant("small").unwrap().clone();
+    let state = ModelState::init(&meta, 0);
+    let feat = meta.n_features();
+    println!("# bench_batcher — request round-trip through the dynamic batcher");
+
+    let mut b = Bencher::new(BenchConfig {
+        warmup: Duration::from_millis(300),
+        measure: Duration::from_secs(2),
+        min_samples: 20,
+        max_samples: 5000,
+    });
+
+    for (tag, cfg) in [
+        ("wait0", BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(0) }),
+        ("wait200us", BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(200) }),
+        ("wait2ms", BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) }),
+    ] {
+        let metrics = Arc::new(Metrics::default());
+        let service =
+            EmulatorService::spawn(dir.clone(), "small", state.clone(), cfg, metrics.clone())
+                .unwrap();
+        let handle = service.handle();
+
+        // Single-client latency.
+        let features = vec![0.2f32; feat];
+        b.bench(&format!("{tag}/serial_roundtrip"), || handle.infer(features.clone()).unwrap());
+
+        // 8-way concurrent burst (measures batching efficiency).
+        let stats = b.bench(&format!("{tag}/burst8"), || {
+            std::thread::scope(|scope| {
+                let threads: Vec<_> = (0..8)
+                    .map(|i| {
+                        let h = handle.clone();
+                        let f = vec![0.1 * i as f32 / 8.0; feat];
+                        scope.spawn(move || h.infer(f).unwrap())
+                    })
+                    .collect();
+                threads.into_iter().map(|t| t.join().unwrap()).count()
+            })
+        });
+        println!(
+            "  -> {tag}: mean batch size {:.1}, burst of 8 in {:.2} ms",
+            metrics.mean_batch_size(),
+            stats.mean.as_secs_f64() * 1e3
+        );
+    }
+}

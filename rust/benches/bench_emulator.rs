@@ -1,0 +1,39 @@
+//! Neural-emulator inference benchmarks: PJRT forward latency (batch 1) and
+//! throughput (batch 64) per variant — the fast side of the paper's
+//! headline speed claim. Requires `make artifacts`.
+
+use semulator::model::ModelState;
+use semulator::runtime::{lit_f32, ArtifactStore};
+use semulator::util::{BenchConfig, Bencher};
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("meta.json").exists() {
+        println!("bench_emulator: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let store = ArtifactStore::open(dir).unwrap();
+    let mut b = Bencher::new(BenchConfig::default());
+    println!("# bench_emulator — PJRT forward cost (per call)");
+
+    for variant in ["small", "cfg_a", "cfg_b"] {
+        let Ok(meta) = store.meta.variant(variant) else { continue };
+        let meta = meta.clone();
+        let params = ModelState::init(&meta, 0).to_literals().unwrap();
+        for kind in ["fwd_b1", "fwd_b64", "fwd_b64_ref"] {
+            let am = meta.artifact(kind).unwrap();
+            let exe = store.executable(variant, kind).unwrap();
+            let mut dims = vec![am.batch];
+            dims.extend_from_slice(&meta.input);
+            let xs = vec![0.3f32; am.batch * meta.n_features()];
+            let x_lit = lit_f32(&dims, &xs).unwrap();
+            let stats = b.bench(&format!("{variant}/{kind}"), || {
+                let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+                inputs.push(&x_lit);
+                exe.run(&inputs).unwrap()
+            });
+            let per_sample = stats.mean.as_secs_f64() / am.batch as f64;
+            println!("  -> {:.1} µs/sample at batch {}", per_sample * 1e6, am.batch);
+        }
+    }
+}

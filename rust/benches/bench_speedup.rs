@@ -1,0 +1,97 @@
+//! The headline table (paper §1/§5): end-to-end per-sample simulation cost,
+//! SPICE (golden MNA and structured fast path) vs the neural emulator, with
+//! speedup factors. Uses untrained weights — identical compute cost to a
+//! trained model. Requires `make artifacts` for the emulator rows.
+
+use semulator::datagen::SampleDist;
+use semulator::model::ModelState;
+use semulator::runtime::{lit_f32, ArtifactStore};
+use semulator::util::{BenchConfig, Bencher, Rng};
+use semulator::xbar::{AnalogBlock, BlockConfig};
+
+fn main() {
+    let mut b = Bencher::new(BenchConfig {
+        warmup: std::time::Duration::from_millis(300),
+        measure: std::time::Duration::from_secs(3),
+        min_samples: 3,
+        max_samples: 3000,
+    });
+    println!("# bench_speedup — SPICE vs SEMULATOR, per sample (paper headline)");
+
+    // First non-flag argument selects the variant (cargo bench appends a
+    // `--bench` flag that must be ignored).
+    let variant = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| "small".to_string());
+    let cfg = match variant.as_str() {
+        "cfg_a" => BlockConfig::paper_cfg_a(),
+        "cfg_b" => BlockConfig::paper_cfg_b(),
+        _ => BlockConfig::small(),
+    };
+    let block = AnalogBlock::new(cfg.clone()).unwrap();
+    let mut rng = Rng::seed_from(7);
+    let xs: Vec<_> = (0..8).map(|_| SampleDist::UniformIid.sample(&cfg, &mut rng)).collect();
+
+    let mut i = 0;
+    b.bench("spice_golden_mna", || {
+        i = (i + 1) % xs.len();
+        block.simulate_golden(&xs[i]).unwrap()
+    });
+    let mut j = 0;
+    b.bench("spice_fast_structured", || {
+        j = (j + 1) % xs.len();
+        block.simulate(&xs[j])
+    });
+
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("meta.json").exists() {
+        let store = ArtifactStore::open(dir).unwrap();
+        let meta = store.meta.variant(&variant).unwrap().clone();
+        let params = ModelState::init(&meta, 0).to_literals().unwrap();
+        let feats: Vec<Vec<f32>> = xs.iter().map(|x| x.normalized(&cfg)).collect();
+
+        let exe1 = store.executable(&variant, "fwd_b1").unwrap();
+        let mut dims1 = vec![1usize];
+        dims1.extend_from_slice(&meta.input);
+        let mut k = 0;
+        b.bench("emulator_b1", || {
+            k = (k + 1) % feats.len();
+            let x_lit = lit_f32(&dims1, &feats[k]).unwrap();
+            let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+            inputs.push(&x_lit);
+            exe1.run(&inputs).unwrap()
+        });
+
+        let am = meta.artifact("fwd_b64").unwrap().clone();
+        let exe64 = store.executable(&variant, "fwd_b64").unwrap();
+        let mut dims64 = vec![am.batch];
+        dims64.extend_from_slice(&meta.input);
+        let big: Vec<f32> = (0..am.batch).flat_map(|r| feats[r % feats.len()].clone()).collect();
+        let x64 = lit_f32(&dims64, &big).unwrap();
+        let stats = b.bench("emulator_b64_call", || {
+            let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+            inputs.push(&x64);
+            exe64.run(&inputs).unwrap()
+        });
+        let per_sample_us = stats.mean.as_secs_f64() * 1e6 / am.batch as f64;
+
+        println!("\n== speedup table ({variant}, {} cells) ==", cfg.n_cells());
+        for fast in ["spice_fast_structured", "emulator_b1"] {
+            if let Some(s) = b.speedup("spice_golden_mna", fast) {
+                println!("golden MNA / {fast}: {s:.1}x");
+            }
+        }
+        if let (Some(g), Some(f)) = (b.speedup("spice_golden_mna", "emulator_b64_call"), b.speedup("spice_fast_structured", "emulator_b64_call")) {
+            println!(
+                "batched emulator: {:.1} µs/sample -> {:.0}x vs golden MNA, {:.1}x vs fast SPICE (per-call basis x{})",
+                per_sample_us,
+                g * am.batch as f64,
+                f * am.batch as f64,
+                am.batch
+            );
+        }
+    } else {
+        println!("(artifacts not built — emulator rows skipped)");
+    }
+}

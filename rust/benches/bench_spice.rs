@@ -1,0 +1,56 @@
+//! SPICE-engine benchmarks: per-block simulation cost of the golden
+//! full-MNA path vs the structured fast solver, across block sizes — the
+//! cost side of the paper's "SPICE is too slow" motivation, and the
+//! ablation for the structured-solver optimization (DESIGN.md §Perf).
+
+use semulator::datagen::SampleDist;
+use semulator::util::{BenchConfig, Bencher, Rng};
+use semulator::xbar::{AnalogBlock, BlockConfig};
+
+fn main() {
+    let mut b = Bencher::new(BenchConfig {
+        warmup: std::time::Duration::from_millis(200),
+        measure: std::time::Duration::from_secs(2),
+        min_samples: 5,
+        max_samples: 2000,
+    });
+    println!("# bench_spice — per-sample block simulation cost");
+
+    for (tag, cfg) in [
+        ("tiny_1x4x2", BlockConfig::with_dims(1, 4, 2)),
+        ("small_2x16x2", BlockConfig::small()),
+        ("cfg_a_4x64x2", BlockConfig::paper_cfg_a()),
+        ("cfg_b_2x64x8", BlockConfig::paper_cfg_b()),
+    ] {
+        let block = AnalogBlock::new(cfg.clone()).unwrap();
+        let mut rng = Rng::seed_from(1);
+        let xs: Vec<_> = (0..8).map(|_| SampleDist::UniformIid.sample(&cfg, &mut rng)).collect();
+        let mut i = 0;
+        b.bench(&format!("fast_structured/{tag}"), || {
+            i = (i + 1) % xs.len();
+            block.simulate(&xs[i])
+        });
+        // Ablation: same solver without the cross-timestep warm start.
+        let solver = semulator::xbar::FastSolver::new(cfg.clone());
+        let mut k = 0;
+        b.bench(&format!("fast_no_warmstart/{tag}"), || {
+            k = (k + 1) % xs.len();
+            solver.simulate_opts(&xs[k], false)
+        });
+        if let Some(s) = b.speedup(&format!("fast_no_warmstart/{tag}"), &format!("fast_structured/{tag}")) {
+            println!("  -> warm-start speedup on {tag}: {s:.2}x");
+        }
+        // Golden full-netlist MNA only on the sizes where a sample stays
+        // sub-second (the point of the ablation is the gap, not pain).
+        if cfg.n_cells() <= 64 {
+            let mut j = 0;
+            b.bench(&format!("golden_mna/{tag}"), || {
+                j = (j + 1) % xs.len();
+                block.simulate_golden(&xs[j]).unwrap()
+            });
+            if let Some(s) = b.speedup(&format!("golden_mna/{tag}"), &format!("fast_structured/{tag}")) {
+                println!("  -> structured solver speedup on {tag}: {s:.1}x");
+            }
+        }
+    }
+}

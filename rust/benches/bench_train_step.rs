@@ -1,0 +1,59 @@
+//! Training-step benchmark: one AOT Adam step through PJRT per variant —
+//! the cost that dominates `repro table1/fig4/fig6`. Requires artifacts.
+
+use semulator::model::ModelState;
+use semulator::runtime::{lit_f32, lit_scalar, ArtifactStore};
+use semulator::util::{BenchConfig, Bencher};
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("meta.json").exists() {
+        println!("bench_train_step: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let store = ArtifactStore::open(dir).unwrap();
+    let mut b = Bencher::new(BenchConfig::default());
+    println!("# bench_train_step — one Adam step via PJRT (fixed batch)");
+
+    for variant in ["small", "cfg_a", "cfg_b"] {
+        let Ok(meta) = store.meta.variant(variant) else { continue };
+        let meta = meta.clone();
+        let am = meta.artifact("train").unwrap().clone();
+        let exe = store.executable(variant, "train").unwrap();
+        let n_p = meta.n_param_arrays;
+
+        let mut params = ModelState::init(&meta, 0).to_literals().unwrap();
+        let mut m = ModelState::zeros_like(&meta).to_literals().unwrap();
+        let mut v = ModelState::zeros_like(&meta).to_literals().unwrap();
+        let mut step = lit_scalar(0.0);
+        let mut dims = vec![am.batch];
+        dims.extend_from_slice(&meta.input);
+        let x_lit = lit_f32(&dims, &vec![0.4f32; am.batch * meta.n_features()]).unwrap();
+        let y_lit = lit_f32(&[am.batch, meta.outputs], &vec![0.05f32; am.batch * meta.outputs]).unwrap();
+        let lr = lit_scalar(1e-3);
+
+        let stats = b.bench(&format!("{variant}/train_step_b{}", am.batch), || {
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n_p + 4);
+            inputs.extend(params.iter());
+            inputs.extend(m.iter());
+            inputs.extend(v.iter());
+            inputs.push(&step);
+            inputs.push(&x_lit);
+            inputs.push(&y_lit);
+            inputs.push(&lr);
+            let mut outs = exe.run(&inputs).unwrap();
+            let _loss = outs.pop().unwrap();
+            step = outs.pop().unwrap();
+            let vs = outs.split_off(2 * n_p);
+            let ms = outs.split_off(n_p);
+            params = outs;
+            m = ms;
+            v = vs;
+        });
+        println!(
+            "  -> {:.2} ms/step, {:.1} samples/s",
+            stats.mean.as_secs_f64() * 1e3,
+            am.batch as f64 / stats.mean.as_secs_f64()
+        );
+    }
+}

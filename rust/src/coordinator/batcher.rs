@@ -1,0 +1,245 @@
+//! Dynamic batching for emulation requests.
+//!
+//! The AOT forward executables have static batch shapes (1 and N); the
+//! batcher queues incoming requests, drains up to `max_batch` of them (or
+//! whatever arrived within `max_wait` of the first), pads to the executable
+//! batch, runs one PJRT call, and scatters the replies. Classic
+//! vLLM-router-style size/timeout policy, sized for a regression service.
+//!
+//! Threading note: the `xla` crate's handles are not `Send` (they share an
+//! internal `Rc`'d client), so the worker thread constructs its *own*
+//! [`ArtifactStore`]/PJRT client and owns every xla object; other threads
+//! only exchange plain `Vec<f32>` through channels.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::model::ModelState;
+use crate::runtime::{lit_f32, read_f32, ArtifactStore, Executable};
+
+use super::metrics::Metrics;
+
+/// One queued request: normalized features and the reply channel.
+pub struct EmuRequest {
+    pub features: Vec<f32>,
+    pub reply: Sender<Result<Vec<f32>, String>>,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Upper bound per PJRT call; clamped to the largest forward batch.
+    pub max_batch: usize,
+    /// How long to hold the first request while more arrive.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// Handle for submitting requests to a running batcher (clone freely).
+#[derive(Clone)]
+pub struct EmulatorHandle {
+    tx: Sender<EmuRequest>,
+    n_features: usize,
+    n_outputs: usize,
+}
+
+impl EmulatorHandle {
+    /// Submit one request and wait for the reply.
+    pub fn infer(&self, features: Vec<f32>) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            features.len() == self.n_features,
+            "expected {} features, got {}",
+            self.n_features,
+            features.len()
+        );
+        let (tx, rx) = channel();
+        self.tx
+            .send(EmuRequest { features, reply: tx })
+            .map_err(|_| anyhow::anyhow!("batcher shut down"))?;
+        rx.recv().context("batcher dropped reply")?.map_err(anyhow::Error::msg)
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+}
+
+/// The batcher service: a worker thread owning the PJRT client + params.
+pub struct EmulatorService {
+    handle: EmulatorHandle,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EmulatorService {
+    /// Spawn the batching worker for `variant` with checkpointed parameters.
+    /// Blocks until the worker has compiled its executables (so startup
+    /// failures surface here, not on the first request).
+    pub fn spawn(
+        artifact_dir: PathBuf,
+        variant: &str,
+        params: ModelState,
+        cfg: BatcherConfig,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self> {
+        let (tx, rx) = channel::<EmuRequest>();
+        let (init_tx, init_rx) = channel::<Result<(usize, usize), String>>();
+        let variant_owned = variant.to_string();
+        let worker = std::thread::Builder::new()
+            .name(format!("batcher-{variant}"))
+            .spawn(move || {
+                match BatchWorker::init(&artifact_dir, &variant_owned, &params, &cfg) {
+                    Ok(worker) => {
+                        let _ = init_tx.send(Ok((worker.n_features, worker.n_outputs)));
+                        worker.run(rx, metrics);
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(format!("{e:#}")));
+                    }
+                }
+            })
+            .context("spawning batcher thread")?;
+        let (n_features, n_outputs) = init_rx
+            .recv()
+            .context("batcher worker died during init")?
+            .map_err(anyhow::Error::msg)?;
+        Ok(Self { handle: EmulatorHandle { tx, n_features, n_outputs }, worker: Some(worker) })
+    }
+
+    pub fn handle(&self) -> EmulatorHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for EmulatorService {
+    fn drop(&mut self) {
+        // Replace the handle's sender so the worker's receiver disconnects.
+        let (dead, _) = channel();
+        self.handle.tx = dead;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Worker-thread state (owns all xla objects; never crosses threads).
+struct BatchWorker {
+    exes: Vec<(usize, std::sync::Arc<Executable>)>,
+    params: Vec<xla::Literal>,
+    input_dims: Vec<usize>,
+    n_features: usize,
+    n_outputs: usize,
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+impl BatchWorker {
+    fn init(dir: &std::path::Path, variant: &str, params: &ModelState, cfg: &BatcherConfig) -> Result<Self> {
+        let store = ArtifactStore::open(dir)?;
+        let meta = store.meta.variant(variant)?.clone();
+        let mut batch_kinds: Vec<(usize, String)> = meta
+            .artifacts
+            .iter()
+            .filter(|(k, _)| k.starts_with("fwd_b") && !k.ends_with("_ref"))
+            .map(|(k, a)| (a.batch, k.clone()))
+            .collect();
+        batch_kinds.sort();
+        anyhow::ensure!(!batch_kinds.is_empty(), "variant '{variant}' has no forward artifacts");
+        let exes = batch_kinds
+            .iter()
+            .map(|(b, k)| Ok((*b, store.executable(variant, k)?)))
+            .collect::<Result<Vec<_>>>()?;
+        let max_exe_batch = exes.last().unwrap().0;
+        Ok(Self {
+            exes,
+            params: params.to_literals()?,
+            input_dims: meta.input.clone(),
+            n_features: meta.n_features(),
+            n_outputs: meta.outputs,
+            max_batch: cfg.max_batch.min(max_exe_batch).max(1),
+            max_wait: cfg.max_wait,
+        })
+    }
+
+    fn run(self, rx: Receiver<EmuRequest>, metrics: Arc<Metrics>) {
+        loop {
+            // Block for the first request; exit when every sender is gone.
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return,
+            };
+            let t0 = Instant::now();
+            let mut pending = vec![first];
+            let deadline = t0 + self.max_wait;
+            while pending.len() < self.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => pending.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            self.run_batch(&pending, &metrics);
+            metrics.latency.record(t0.elapsed());
+        }
+    }
+
+    fn run_batch(&self, pending: &[EmuRequest], metrics: &Metrics) {
+        let k = pending.len();
+        // Smallest executable batch that fits all pending requests
+        // (max_batch is clamped to the largest, so one always fits).
+        let (exe_batch, exe) = self
+            .exes
+            .iter()
+            .find(|(b, _)| *b >= k)
+            .unwrap_or_else(|| self.exes.last().unwrap());
+        let exe_batch = *exe_batch;
+
+        // Pack, padding by repeating the first request.
+        let mut xb: Vec<f32> = Vec::with_capacity(exe_batch * self.n_features);
+        for r in pending {
+            xb.extend_from_slice(&r.features);
+        }
+        for _ in k..exe_batch {
+            xb.extend_from_slice(&pending[0].features);
+        }
+        let mut dims = vec![exe_batch];
+        dims.extend_from_slice(&self.input_dims);
+
+        let result = lit_f32(&dims, &xb)
+            .and_then(|x_lit| {
+                let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+                inputs.push(&x_lit);
+                exe.run(&inputs)
+            })
+            .and_then(|outs| read_f32(&outs[0]));
+
+        metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        metrics.batched_requests.fetch_add(k as u64, std::sync::atomic::Ordering::Relaxed);
+
+        match result {
+            Ok(flat) => {
+                for (i, r) in pending.iter().enumerate() {
+                    let y = flat[i * self.n_outputs..(i + 1) * self.n_outputs].to_vec();
+                    let _ = r.reply.send(Ok(y));
+                }
+            }
+            Err(e) => {
+                for r in pending {
+                    let _ = r.reply.send(Err(format!("emulator failure: {e:#}")));
+                }
+            }
+        }
+    }
+}

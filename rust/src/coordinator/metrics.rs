@@ -1,0 +1,139 @@
+//! Serving metrics: counters and log-bucketed latency histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::Json;
+
+/// Log2-bucketed latency histogram from 1 us to ~1 s (thread-safe).
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    /// bucket k counts latencies in [2^k, 2^(k+1)) microseconds, k in 0..20.
+    buckets: [AtomicU64; 21],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let k = (63 - us.leading_zeros() as usize).min(20);
+        self.buckets[k].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile from the bucket boundaries (upper bound).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (k, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (k + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Router/batcher counters.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub emulated: AtomicU64,
+    pub golden: AtomicU64,
+    pub verified: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("emulated", Json::Num(self.emulated.load(Ordering::Relaxed) as f64)),
+            ("golden", Json::Num(self.golden.load(Ordering::Relaxed) as f64)),
+            ("verified", Json::Num(self.verified.load(Ordering::Relaxed) as f64)),
+            ("mean_batch_size", Json::Num(self.mean_batch_size())),
+            ("latency_mean_us", Json::Num(self.latency.mean_us())),
+            ("latency_p50_us", Json::Num(self.latency.quantile_us(0.5) as f64)),
+            ("latency_p95_us", Json::Num(self.latency.quantile_us(0.95) as f64)),
+            ("latency_max_us", Json::Num(self.latency.max_us() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_quantiles() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 20, 30, 1000, 2000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean_us() > 500.0 && h.mean_us() < 700.0);
+        // p50 upper bound should be a small bucket, p95 a big one.
+        assert!(h.quantile_us(0.5) <= 64);
+        assert!(h.quantile_us(0.95) >= 1024);
+        assert_eq!(h.max_us(), 2000);
+    }
+
+    #[test]
+    fn zero_state() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_us(0.9), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn metrics_snapshot_is_json() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests);
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batched_requests.fetch_add(10, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.get("requests").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s.get("mean_batch_size").unwrap().as_f64(), Some(5.0));
+    }
+}

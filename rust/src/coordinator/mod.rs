@@ -1,0 +1,21 @@
+//! L3 coordinator: the systems layer around the emulator.
+//!
+//! * [`trainer`] — epoch/minibatch loop with the paper's LR-halving
+//!   schedule, driving the AOT train-step through PJRT.
+//! * [`batcher`] — dynamic batching of inference requests onto the static
+//!   PJRT batch shapes.
+//! * [`router`] — golden(SPICE)/emulated routing with shadow verification.
+//! * [`server`] — TCP line-protocol front end.
+//! * [`metrics`] — counters and latency histograms.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod trainer;
+
+pub use batcher::{BatcherConfig, EmulatorHandle, EmulatorService};
+pub use metrics::{LatencyHistogram, Metrics};
+pub use router::{Policy, Route, RouteResult, Router};
+pub use server::Server;
+pub use trainer::{evaluate, evaluate_state, train, EpochLog, EvalStats, LrSchedule, TrainConfig, TrainReport};

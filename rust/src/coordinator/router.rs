@@ -1,0 +1,118 @@
+//! Golden / emulated request routing.
+//!
+//! A simulation request carries *physical* cell inputs. The router decides
+//! whether it is answered by the neural emulator (fast path: normalize ->
+//! batcher -> PJRT forward) or by the SPICE-accurate solver (golden path),
+//! and optionally shadow-verifies a sampled fraction of emulated answers
+//! against the golden path — the deployment story the paper's "replace SPICE
+//! with a regressor" methodology implies.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::util::Rng;
+use crate::xbar::{AnalogBlock, CellInputs};
+
+use super::batcher::EmulatorHandle;
+use super::metrics::Metrics;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Always answer with the neural emulator.
+    Emulator,
+    /// Always answer with the SPICE-accurate solver.
+    Golden,
+    /// Emulate, but re-simulate a random fraction with the golden path and
+    /// report the deviation.
+    Shadow { verify_frac: f64 },
+}
+
+/// Which path produced an answer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    Emulated,
+    Golden,
+}
+
+/// Router response.
+#[derive(Debug, Clone)]
+pub struct RouteResult {
+    pub outputs: Vec<f64>,
+    pub route: Route,
+    /// Max |emulated - golden| over outputs, when shadow verification ran.
+    pub verify_dev: Option<f64>,
+}
+
+/// The router service (thread-safe via interior RNG lock).
+pub struct Router {
+    block: AnalogBlock,
+    emulator: EmulatorHandle,
+    policy: Policy,
+    metrics: Arc<Metrics>,
+    rng: std::sync::Mutex<Rng>,
+}
+
+impl Router {
+    pub fn new(
+        block: AnalogBlock,
+        emulator: EmulatorHandle,
+        policy: Policy,
+        metrics: Arc<Metrics>,
+        seed: u64,
+    ) -> Self {
+        Self { block, emulator, policy, metrics, rng: std::sync::Mutex::new(Rng::seed_from(seed)) }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Handle one simulation request.
+    pub fn handle(&self, x: &CellInputs) -> Result<RouteResult> {
+        Metrics::inc(&self.metrics.requests);
+        let t0 = std::time::Instant::now();
+        let result = match self.policy {
+            Policy::Golden => {
+                Metrics::inc(&self.metrics.golden);
+                RouteResult { outputs: self.block.simulate(x), route: Route::Golden, verify_dev: None }
+            }
+            Policy::Emulator => {
+                Metrics::inc(&self.metrics.emulated);
+                let y = self.emulate(x)?;
+                RouteResult { outputs: y, route: Route::Emulated, verify_dev: None }
+            }
+            Policy::Shadow { verify_frac } => {
+                Metrics::inc(&self.metrics.emulated);
+                let y = self.emulate(x)?;
+                let verify = { self.rng.lock().unwrap().uniform() } < verify_frac;
+                let verify_dev = if verify {
+                    Metrics::inc(&self.metrics.verified);
+                    let golden = self.block.simulate(x);
+                    Some(
+                        y.iter()
+                            .zip(&golden)
+                            .map(|(a, b)| (a - b).abs())
+                            .fold(0.0f64, f64::max),
+                    )
+                } else {
+                    None
+                };
+                RouteResult { outputs: y, route: Route::Emulated, verify_dev }
+            }
+        };
+        self.metrics.latency.record(t0.elapsed());
+        Ok(result)
+    }
+
+    fn emulate(&self, x: &CellInputs) -> Result<Vec<f64>> {
+        let features = x.normalized(self.block.config());
+        let y = self.emulator.infer(features)?;
+        Ok(y.into_iter().map(|v| v as f64).collect())
+    }
+
+    pub fn block(&self) -> &AnalogBlock {
+        &self.block
+    }
+}

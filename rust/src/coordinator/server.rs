@@ -1,0 +1,162 @@
+//! TCP line-protocol simulation server.
+//!
+//! One JSON object per line in, one per line out:
+//!
+//! ```text
+//! -> {"v": [..n_cells gate volts..], "g": [..n_cells siemens..]}
+//! <- {"y": [..MAC output volts..], "route": "emulated", "us": 1234}
+//! -> {"cmd": "metrics"}
+//! <- {"requests": ..., "latency_p50_us": ...}
+//! -> {"cmd": "shutdown"}
+//! ```
+//!
+//! Built on `std::net` + a thread per connection; the heavy lifting is the
+//! shared [`Router`] (which serializes through the batcher anyway).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::util::{json_parse, Json};
+use crate::xbar::CellInputs;
+
+use super::metrics::Metrics;
+use super::router::Router;
+
+/// A running server (join on drop).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve.
+    pub fn spawn(addr: &str, router: Arc<Router>, metrics: Arc<Metrics>) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        listener.set_nonblocking(true)?;
+        let accept_thread = std::thread::Builder::new().name("server-accept".into()).spawn(move || {
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        let router = router.clone();
+                        let metrics = metrics.clone();
+                        let stop3 = stop2.clone();
+                        conns.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &router, &metrics, &stop3);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        })?;
+        Ok(Self { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: &Router,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let t0 = std::time::Instant::now();
+        let reply = match process_line(line.trim(), router, metrics, stop) {
+            Ok(Some(mut obj)) => {
+                obj.push(("us".to_string(), Json::Num(t0.elapsed().as_micros() as f64)));
+                Json::Obj(obj.into_iter().collect()).to_string()
+            }
+            Ok(None) => return Ok(()), // shutdown
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+fn process_line(
+    line: &str,
+    router: &Router,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+) -> Result<Option<Vec<(String, Json)>>> {
+    let msg = json_parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+    if let Some(cmd) = msg.get("cmd").and_then(|c| c.as_str()) {
+        return match cmd {
+            "metrics" => {
+                let snap = metrics.snapshot();
+                let obj = snap.as_obj().unwrap().clone().into_iter().collect();
+                Ok(Some(obj))
+            }
+            "shutdown" => {
+                stop.store(true, Ordering::Relaxed);
+                Ok(None)
+            }
+            other => anyhow::bail!("unknown command '{other}'"),
+        };
+    }
+    let cfg = router.block().config();
+    let n = cfg.n_cells();
+    let parse_arr = |key: &str| -> Result<Vec<f64>> {
+        let arr = msg
+            .get(key)
+            .and_then(|a| a.as_arr())
+            .with_context(|| format!("missing array '{key}'"))?;
+        anyhow::ensure!(arr.len() == n, "'{key}' must have {n} entries, got {}", arr.len());
+        arr.iter()
+            .map(|v| v.as_f64().context("non-numeric entry"))
+            .collect()
+    };
+    let x = CellInputs { v: parse_arr("v")?, g: parse_arr("g")? };
+    let res = router.handle(&x)?;
+    let mut obj = vec![
+        ("y".to_string(), Json::arr_f64(&res.outputs)),
+        (
+            "route".to_string(),
+            Json::Str(match res.route {
+                super::router::Route::Emulated => "emulated".into(),
+                super::router::Route::Golden => "golden".into(),
+            }),
+        ),
+    ];
+    if let Some(dev) = res.verify_dev {
+        obj.push(("verify_dev".to_string(), Json::Num(dev)));
+    }
+    Ok(Some(obj))
+}

@@ -1,0 +1,304 @@
+//! The training coordinator: epochs, minibatches, the paper's LR-halving
+//! schedule, periodic eval, checkpointing — all driving the AOT-compiled
+//! train-step executable through PJRT. Python is not involved.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::datagen::Dataset;
+use crate::model::ModelState;
+use crate::runtime::{lit_f32, lit_scalar, read_f32, ArtifactStore};
+use crate::util::Rng;
+
+/// Learning-rate schedule: constant base rate halved at the given epoch
+/// indices (paper Fig 4: halved at 1000, 1500 and 1800 of 2000).
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base: f64,
+    pub halve_at: Vec<usize>,
+}
+
+impl LrSchedule {
+    /// The paper's Fig-4 schedule scaled to a different total epoch count:
+    /// halvings at 50%, 75% and 90% of training.
+    pub fn paper_scaled(base: f64, epochs: usize) -> Self {
+        Self {
+            base,
+            halve_at: vec![epochs / 2, epochs * 3 / 4, epochs * 9 / 10],
+        }
+    }
+
+    pub fn at(&self, epoch: usize) -> f64 {
+        let halvings = self.halve_at.iter().filter(|&&e| epoch >= e).count();
+        self.base * 0.5f64.powi(halvings as i32)
+    }
+}
+
+/// Training run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub variant: String,
+    pub epochs: usize,
+    pub lr: LrSchedule,
+    pub seed: u64,
+    /// Evaluate on the test split every `eval_every` epochs (0 = only at end).
+    pub eval_every: usize,
+    /// Optional checkpoint path written at the end of training.
+    pub ckpt_out: Option<PathBuf>,
+}
+
+impl TrainConfig {
+    pub fn new(variant: &str, epochs: usize) -> Self {
+        Self {
+            variant: variant.to_string(),
+            epochs,
+            lr: LrSchedule::paper_scaled(1e-3, epochs),
+            seed: 0,
+            eval_every: 10,
+            ckpt_out: None,
+        }
+    }
+}
+
+/// Per-epoch log row (Fig 4's series).
+#[derive(Debug, Clone)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub lr: f64,
+    pub train_loss: f64,
+    pub test_loss: Option<f64>,
+}
+
+/// Evaluation statistics over a dataset.
+#[derive(Debug, Clone)]
+pub struct EvalStats {
+    pub n: usize,
+    /// Mean absolute error (volts) over all samples and outputs.
+    pub mae: f64,
+    /// Mean squared error (the paper's loss / Thm 4.1 quantity).
+    pub mse: f64,
+    /// Fraction of errors with |err| < 0.5e-3 V (Thm 4.1 with s = 3).
+    pub p_halfmv: f64,
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub history: Vec<EpochLog>,
+    pub final_train_loss: f64,
+    pub test: EvalStats,
+    pub wall_seconds: f64,
+    pub steps: usize,
+}
+
+impl TrainReport {
+    /// CSV of the Fig-4 series: epoch, lr, train_loss, test_loss.
+    pub fn history_csv(&self) -> String {
+        let mut out = String::from("epoch,lr,train_loss,test_loss\n");
+        for row in &self.history {
+            out.push_str(&format!(
+                "{},{},{},{}\n",
+                row.epoch,
+                row.lr,
+                row.train_loss,
+                row.test_loss.map(|v| v.to_string()).unwrap_or_default()
+            ));
+        }
+        out
+    }
+}
+
+/// Train SEMULATOR on `train_ds`, evaluating on `test_ds`.
+pub fn train(
+    store: &ArtifactStore,
+    cfg: &TrainConfig,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    mut progress: impl FnMut(&EpochLog),
+) -> Result<(ModelState, TrainReport)> {
+    let meta = store.meta.variant(&cfg.variant)?.clone();
+    let am = meta.artifact("train")?.clone();
+    let batch = am.batch;
+    let n_p = meta.n_param_arrays;
+    anyhow::ensure!(train_ds.d == meta.n_features(), "dataset features {} vs meta {}", train_ds.d, meta.n_features());
+    anyhow::ensure!(train_ds.o == meta.outputs, "dataset outputs {} vs meta {}", train_ds.o, meta.outputs);
+
+    let exe = store.executable(&cfg.variant, "train")?;
+
+    // Mutable training state as literals (fed back each step).
+    let mut params = ModelState::init(&meta, cfg.seed).to_literals()?;
+    let mut m = ModelState::zeros_like(&meta).to_literals()?;
+    let mut v = ModelState::zeros_like(&meta).to_literals()?;
+    let mut step = lit_scalar(0.0);
+
+    let mut rng = Rng::seed_from(cfg.seed ^ 0x5EED);
+    let x_dims: Vec<usize> = std::iter::once(batch).chain(meta.input.iter().copied()).collect();
+    let y_dims = [batch, meta.outputs];
+    let mut xb: Vec<f32> = Vec::new();
+    let mut yb: Vec<f32> = Vec::new();
+
+    let steps_per_epoch = train_ds.n.div_ceil(batch);
+    let mut history = Vec::with_capacity(cfg.epochs);
+    let mut final_train_loss = f64::NAN;
+    let t0 = Instant::now();
+    let mut total_steps = 0usize;
+
+    for epoch in 0..cfg.epochs {
+        let lr = cfg.lr.at(epoch);
+        let lr_lit = lit_scalar(lr as f32);
+        let order = rng.permutation(train_ds.n);
+        let mut loss_acc = 0.0f64;
+        for s in 0..steps_per_epoch {
+            let idx = &order[s * batch..((s + 1) * batch).min(train_ds.n)];
+            train_ds.gather_batch(idx, batch, &mut xb, &mut yb);
+            // Inputs: params, m, v, step, x, y, lr.
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n_p + 4);
+            inputs.extend(params.iter());
+            inputs.extend(m.iter());
+            inputs.extend(v.iter());
+            let x_lit = lit_f32(&x_dims, &xb)?;
+            let y_lit = lit_f32(&y_dims, &yb)?;
+            inputs.push(&step);
+            inputs.push(&x_lit);
+            inputs.push(&y_lit);
+            inputs.push(&lr_lit);
+            let mut outs = exe.run(&inputs).context("train step")?;
+            anyhow::ensure!(outs.len() == 3 * n_p + 2, "train step returned {} outputs", outs.len());
+            let loss = outs.pop().unwrap();
+            step = outs.pop().unwrap();
+            let vs = outs.split_off(2 * n_p);
+            let ms = outs.split_off(n_p);
+            params = outs;
+            m = ms;
+            v = vs;
+            loss_acc += read_f32(&loss)?[0] as f64;
+            total_steps += 1;
+        }
+        let train_loss = loss_acc / steps_per_epoch as f64;
+        final_train_loss = train_loss;
+
+        let test_loss = if (cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0) || epoch + 1 == cfg.epochs {
+            Some(evaluate(store, &cfg.variant, &params, test_ds)?.mse)
+        } else {
+            None
+        };
+        let row = EpochLog { epoch, lr, train_loss, test_loss };
+        progress(&row);
+        history.push(row);
+    }
+
+    let test = evaluate(store, &cfg.variant, &params, test_ds)?;
+    let state = ModelState::from_literals(&meta.params, &params)?;
+    if let Some(path) = &cfg.ckpt_out {
+        state.save(path)?;
+    }
+    Ok((
+        state,
+        TrainReport {
+            history,
+            final_train_loss,
+            test,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            steps: total_steps,
+        },
+    ))
+}
+
+/// Evaluate a parameter set (as literals) over a dataset using the AOT eval
+/// artifact; remainder batches are padded and the padding excluded.
+pub fn evaluate(
+    store: &ArtifactStore,
+    variant: &str,
+    params: &[xla::Literal],
+    ds: &Dataset,
+) -> Result<EvalStats> {
+    let meta = store.meta.variant(variant)?;
+    let am = meta.artifact("eval")?;
+    let batch = am.batch;
+    let exe = store.executable(variant, "eval")?;
+    let x_dims: Vec<usize> = std::iter::once(batch).chain(meta.input.iter().copied()).collect();
+    let y_dims = [batch, meta.outputs];
+
+    let mut xb = Vec::new();
+    let mut yb = Vec::new();
+    let mut abs_sum = 0.0f64;
+    let mut sq_sum = 0.0f64;
+    let mut n_half = 0usize;
+    let mut count = 0usize;
+    let idx_all: Vec<usize> = (0..ds.n).collect();
+    for chunk in idx_all.chunks(batch) {
+        ds.gather_batch(chunk, batch, &mut xb, &mut yb);
+        let x_lit = lit_f32(&x_dims, &xb)?;
+        let y_lit = lit_f32(&y_dims, &yb)?;
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&x_lit);
+        inputs.push(&y_lit);
+        let outs = exe.run(&inputs).context("eval step")?;
+        anyhow::ensure!(outs.len() == 2, "eval returned {} outputs", outs.len());
+        let abs = read_f32(&outs[0])?;
+        let sq = read_f32(&outs[1])?;
+        let valid = chunk.len() * meta.outputs;
+        for k in 0..valid {
+            abs_sum += abs[k] as f64;
+            sq_sum += sq[k] as f64;
+            if (abs[k] as f64) < 0.5e-3 {
+                n_half += 1;
+            }
+        }
+        count += valid;
+    }
+    Ok(EvalStats {
+        n: count,
+        mae: abs_sum / count.max(1) as f64,
+        mse: sq_sum / count.max(1) as f64,
+        p_halfmv: n_half as f64 / count.max(1) as f64,
+    })
+}
+
+/// Evaluate a host-side checkpoint.
+pub fn evaluate_state(
+    store: &ArtifactStore,
+    variant: &str,
+    state: &ModelState,
+    ds: &Dataset,
+) -> Result<EvalStats> {
+    evaluate(store, variant, &state.to_literals()?, ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_halves() {
+        let s = LrSchedule { base: 1e-3, halve_at: vec![10, 20, 30] };
+        assert_eq!(s.at(0), 1e-3);
+        assert_eq!(s.at(9), 1e-3);
+        assert_eq!(s.at(10), 5e-4);
+        assert_eq!(s.at(25), 2.5e-4);
+        assert_eq!(s.at(35), 1.25e-4);
+    }
+
+    #[test]
+    fn paper_scaled_matches_fig4_fractions() {
+        // Paper: 2000 epochs, halved at 1000, 1500, 1800.
+        let s = LrSchedule::paper_scaled(1e-3, 2000);
+        assert_eq!(s.halve_at, vec![1000, 1500, 1800]);
+    }
+
+    #[test]
+    fn report_csv_format() {
+        let r = TrainReport {
+            history: vec![EpochLog { epoch: 0, lr: 1e-3, train_loss: 0.5, test_loss: Some(0.6) }],
+            final_train_loss: 0.5,
+            test: EvalStats { n: 1, mae: 0.1, mse: 0.01, p_halfmv: 0.0 },
+            wall_seconds: 1.0,
+            steps: 10,
+        };
+        let csv = r.history_csv();
+        assert!(csv.starts_with("epoch,lr,train_loss,test_loss\n"));
+        assert!(csv.contains("0,0.001,0.5,0.6"));
+    }
+}

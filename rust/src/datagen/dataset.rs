@@ -1,0 +1,233 @@
+//! On-disk dataset format and in-memory container.
+//!
+//! Binary layout (little-endian):
+//!
+//! ```text
+//! magic   b"SEMD"
+//! version u32 = 1
+//! n       u32   samples
+//! d       u32   features per sample (normalized, f32)
+//! o       u32   outputs per sample (volts, f32)
+//! x       f32[n * d]   row-major
+//! y       f32[n * o]   row-major
+//! ```
+//!
+//! A sibling `<path>.meta.json` records the generating block config, seed,
+//! and sampler so every dataset is reproducible.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Rng;
+
+const MAGIC: &[u8; 4] = b"SEMD";
+const VERSION: u32 = 1;
+
+/// An in-memory regression dataset (normalized features -> output volts).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub n: usize,
+    pub d: usize,
+    pub o: usize,
+    /// `n * d`, row-major.
+    pub x: Vec<f32>,
+    /// `n * o`, row-major.
+    pub y: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(n: usize, d: usize, o: usize, x: Vec<f32>, y: Vec<f32>) -> Self {
+        assert_eq!(x.len(), n * d, "feature buffer size");
+        assert_eq!(y.len(), n * o, "target buffer size");
+        Self { n, d, o, x, y }
+    }
+
+    pub fn features(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn targets(&self, i: usize) -> &[f32] {
+        &self.y[i * self.o..(i + 1) * self.o]
+    }
+
+    /// Split into `(train, test)` with `test_frac` of samples held out,
+    /// shuffled deterministically by `seed`.
+    pub fn split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&test_frac));
+        let mut rng = Rng::seed_from(seed);
+        let perm = rng.permutation(self.n);
+        let n_test = ((self.n as f64) * test_frac).round() as usize;
+        let take = |idx: &[usize]| {
+            let mut x = Vec::with_capacity(idx.len() * self.d);
+            let mut y = Vec::with_capacity(idx.len() * self.o);
+            for &i in idx {
+                x.extend_from_slice(self.features(i));
+                y.extend_from_slice(self.targets(i));
+            }
+            Dataset::new(idx.len(), self.d, self.o, x, y)
+        };
+        (take(&perm[n_test..]), take(&perm[..n_test]))
+    }
+
+    /// First `k` samples (for data-requirement sweeps, paper Fig. 6).
+    pub fn head(&self, k: usize) -> Dataset {
+        let k = k.min(self.n);
+        Dataset::new(
+            k,
+            self.d,
+            self.o,
+            self.x[..k * self.d].to_vec(),
+            self.y[..k * self.o].to_vec(),
+        )
+    }
+
+    /// Gather a minibatch into caller buffers (padded by repetition if the
+    /// index list is shorter than the batch — AOT executables have a fixed
+    /// batch dimension).
+    pub fn gather_batch(&self, idx: &[usize], batch: usize, xb: &mut Vec<f32>, yb: &mut Vec<f32>) {
+        assert!(!idx.is_empty());
+        xb.clear();
+        yb.clear();
+        for b in 0..batch {
+            let i = idx[b % idx.len()];
+            xb.extend_from_slice(self.features(i));
+            yb.extend_from_slice(self.targets(i));
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        for v in [VERSION, self.n as u32, self.d as u32, self.o as u32] {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        for v in &self.x {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        for v in &self.y {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not a SEMD dataset", path.display());
+        }
+        let mut u32buf = [0u8; 4];
+        let mut read_u32 = |f: &mut dyn Read| -> Result<u32> {
+            f.read_exact(&mut u32buf)?;
+            Ok(u32::from_le_bytes(u32buf))
+        };
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("{}: unsupported version {version}", path.display());
+        }
+        let n = read_u32(&mut f)? as usize;
+        let d = read_u32(&mut f)? as usize;
+        let o = read_u32(&mut f)? as usize;
+        let read_f32s = |f: &mut dyn Read, len: usize| -> Result<Vec<f32>> {
+            let mut bytes = vec![0u8; len * 4];
+            f.read_exact(&mut bytes)?;
+            Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+        };
+        let x = read_f32s(&mut f, n * d)?;
+        let y = read_f32s(&mut f, n * o)?;
+        Ok(Dataset::new(n, d, o, x, y))
+    }
+
+    /// Per-output mean absolute value of the targets (sanity metric).
+    pub fn target_mean_abs(&self) -> Vec<f64> {
+        let mut acc = vec![0.0f64; self.o];
+        for i in 0..self.n {
+            for (a, t) in acc.iter_mut().zip(self.targets(i)) {
+                *a += t.abs() as f64;
+            }
+        }
+        acc.iter_mut().for_each(|a| *a /= self.n.max(1) as f64);
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let n = 10;
+        let d = 3;
+        let o = 2;
+        let x: Vec<f32> = (0..n * d).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..n * o).map(|i| -(i as f32)).collect();
+        Dataset::new(n, d, o, x, y)
+    }
+
+    #[test]
+    fn roundtrip_through_disk() {
+        let ds = toy();
+        let dir = std::env::temp_dir().join(format!("semd_test_{}", std::process::id()));
+        let path = dir.join("toy.bin");
+        ds.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(ds, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("semd_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn split_partitions_all_samples() {
+        let ds = toy();
+        let (train, test) = ds.split(0.3, 7);
+        assert_eq!(train.n + test.n, ds.n);
+        assert_eq!(test.n, 3);
+        assert_eq!(train.d, ds.d);
+        // Same seed -> same split.
+        let (train2, _) = ds.split(0.3, 7);
+        assert_eq!(train, train2);
+        // Different seed -> (almost surely) different order.
+        let (train3, _) = ds.split(0.3, 8);
+        assert_ne!(train, train3);
+    }
+
+    #[test]
+    fn gather_batch_pads_by_repetition() {
+        let ds = toy();
+        let mut xb = Vec::new();
+        let mut yb = Vec::new();
+        ds.gather_batch(&[1, 2], 5, &mut xb, &mut yb);
+        assert_eq!(xb.len(), 5 * ds.d);
+        assert_eq!(&xb[0..3], ds.features(1));
+        assert_eq!(&xb[3..6], ds.features(2));
+        assert_eq!(&xb[6..9], ds.features(1)); // wrap
+    }
+
+    #[test]
+    fn head_truncates() {
+        let ds = toy();
+        let h = ds.head(4);
+        assert_eq!(h.n, 4);
+        assert_eq!(h.features(3), ds.features(3));
+        assert_eq!(ds.head(100).n, ds.n);
+    }
+}

@@ -1,0 +1,10 @@
+//! Dataset generation for SEMULATOR training: sample block inputs, simulate
+//! with the SPICE-accurate fast solver, persist (features, volts) pairs.
+
+pub mod dataset;
+pub mod generate;
+pub mod sampler;
+
+pub use dataset::Dataset;
+pub use generate::{generate, generate_to, GenConfig};
+pub use sampler::SampleDist;

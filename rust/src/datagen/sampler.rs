@@ -1,0 +1,107 @@
+//! Input samplers for dataset generation.
+//!
+//! The paper samples cell parameters "randomly chosen" over the normalized
+//! ranges; we provide that plus two structured distributions that exercise
+//! the block the way real workloads would (binarized activations as in the
+//! VCAM paper the PS32 block comes from, and sparse activations), used for
+//! generalization stress tests and ablations.
+
+use crate::util::Rng;
+use crate::xbar::{BlockConfig, CellInputs};
+
+/// Distribution over block inputs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SampleDist {
+    /// Every gate voltage ~ U[0, v_gate_max), every conductance
+    /// ~ U[g_min, g_max). The paper's setting.
+    UniformIid,
+    /// Binary activations (0 or v_gate_max with equal probability),
+    /// uniform conductances — analog *binarized* network workload.
+    BinaryActs,
+    /// Each activation is zero with probability `p`, else uniform.
+    SparseActs { p: f64 },
+}
+
+impl SampleDist {
+    /// Stable tag for file names / meta.
+    pub fn tag(&self) -> String {
+        match self {
+            SampleDist::UniformIid => "uniform".into(),
+            SampleDist::BinaryActs => "binary".into(),
+            SampleDist::SparseActs { p } => format!("sparse{p:.2}"),
+        }
+    }
+
+    /// Draw one sample of raw (physical-unit) cell inputs.
+    pub fn sample(&self, cfg: &BlockConfig, rng: &mut Rng) -> CellInputs {
+        let n = cfg.n_cells();
+        let mut x = CellInputs::zeros(cfg);
+        for k in 0..n {
+            x.v[k] = match self {
+                SampleDist::UniformIid => rng.range(0.0, cfg.v_gate_max),
+                SampleDist::BinaryActs => {
+                    if rng.uniform() < 0.5 {
+                        0.0
+                    } else {
+                        cfg.v_gate_max
+                    }
+                }
+                SampleDist::SparseActs { p } => {
+                    if rng.uniform() < *p {
+                        0.0
+                    } else {
+                        rng.range(0.0, cfg.v_gate_max)
+                    }
+                }
+            };
+            x.g[k] = rng.range(cfg.cell.g_min, cfg.cell.g_max);
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_stays_in_range() {
+        let cfg = BlockConfig::small();
+        let mut rng = Rng::seed_from(1);
+        let x = SampleDist::UniformIid.sample(&cfg, &mut rng);
+        for k in 0..cfg.n_cells() {
+            assert!(x.v[k] >= 0.0 && x.v[k] < cfg.v_gate_max);
+            assert!(x.g[k] >= cfg.cell.g_min && x.g[k] < cfg.cell.g_max);
+        }
+    }
+
+    #[test]
+    fn binary_acts_are_binary() {
+        let cfg = BlockConfig::small();
+        let mut rng = Rng::seed_from(2);
+        let x = SampleDist::BinaryActs.sample(&cfg, &mut rng);
+        let mut zeros = 0;
+        for &v in &x.v {
+            assert!(v == 0.0 || v == cfg.v_gate_max);
+            zeros += (v == 0.0) as usize;
+        }
+        // Both levels occur.
+        assert!(zeros > 0 && zeros < x.v.len());
+    }
+
+    #[test]
+    fn sparse_fraction_approximately_p() {
+        let cfg = BlockConfig::with_dims(4, 32, 4); // 512 cells
+        let mut rng = Rng::seed_from(3);
+        let x = SampleDist::SparseActs { p: 0.7 }.sample(&cfg, &mut rng);
+        let zeros = x.v.iter().filter(|&&v| v == 0.0).count();
+        let frac = zeros as f64 / x.v.len() as f64;
+        assert!((frac - 0.7).abs() < 0.08, "zero fraction {frac}");
+    }
+
+    #[test]
+    fn tags_are_stable() {
+        assert_eq!(SampleDist::UniformIid.tag(), "uniform");
+        assert_eq!(SampleDist::SparseActs { p: 0.5 }.tag(), "sparse0.50");
+    }
+}

@@ -1,0 +1,32 @@
+//! # SEMULATOR — emulating crossbar-array analog neural systems
+//!
+//! A reproduction of *"SEMULATOR: Emulating the Dynamics of Crossbar
+//! Array-based Analog Neural System with Regression Neural Networks"*
+//! (Lee & Kim, 2021) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * [`spice`] — a from-scratch SPICE-class circuit simulator (MNA +
+//!   Newton-Raphson + transient), the golden data generator.
+//! * [`xbar`] — 1T1R crossbar arrays and the PS32-style differential
+//!   charge-sense peripheral: the "analog computing block" being emulated.
+//! * [`datagen`] — sampling, dataset files, train/test splits.
+//! * [`model`] — the SEMULATOR network config mirrored from the python side,
+//!   parameter layout and checkpoints.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts.
+//! * [`coordinator`] — training loop, dynamic batcher, golden/emulated
+//!   request router, metrics.
+//! * [`analytic`] — the human-expert analytical baseline the paper argues
+//!   against.
+//! * [`stats`] — Theorem 4.1 error-bound machinery and histograms.
+//! * [`repro`] — one entrypoint per paper table/figure.
+
+pub mod analytic;
+pub mod util;
+
+pub mod coordinator;
+pub mod datagen;
+pub mod model;
+pub mod repro;
+pub mod runtime;
+pub mod spice;
+pub mod stats;
+pub mod xbar;

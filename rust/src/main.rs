@@ -1,0 +1,303 @@
+//! `semulator` — the leader binary: dataset generation, training, eval,
+//! serving, and the paper-reproduction harness.
+//!
+//! ```text
+//! semulator info
+//! semulator datagen --variant small --n 8000 --out runs/data/small.bin
+//! semulator train   --variant small --data runs/data/small.bin --epochs 150
+//! semulator eval    --variant small --data runs/data/small.bin --ckpt runs/ckpt/x.ckpt
+//! semulator serve   --variant small --ckpt runs/ckpt/x.ckpt --addr 127.0.0.1:7070
+//! semulator repro   table1|fig4|fig5|fig6|fig7|bound|speed|all [--preset ci|small|paper]
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use semulator::coordinator::{
+    evaluate_state, train, BatcherConfig, EmulatorService, LrSchedule, Metrics, Policy, Router,
+    Server, TrainConfig,
+};
+use semulator::datagen::{generate_to, Dataset, GenConfig, SampleDist};
+use semulator::model::ModelState;
+use semulator::repro;
+use semulator::runtime::ArtifactStore;
+use semulator::util::cli::Args;
+use semulator::xbar::AnalogBlock;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn work_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("work", "runs"))
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("info") => cmd_info(args),
+        Some("datagen") => cmd_datagen(args),
+        Some("train") => cmd_train(args),
+        Some("eval") => cmd_eval(args),
+        Some("serve") => cmd_serve(args),
+        Some("repro") => cmd_repro(args),
+        Some(other) => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage: semulator <info|datagen|train|eval|serve|repro> [options]
+  info                                   list artifacts and variants
+  datagen  --variant V --n N --out FILE  generate a SPICE dataset
+  train    --variant V --data FILE       train SEMULATOR (PJRT train step)
+  eval     --variant V --data FILE --ckpt FILE
+  serve    --variant V --ckpt FILE --addr HOST:PORT [--policy emulator|golden|shadow]
+  repro    <table1|fig4|fig5|fig6|fig7|bound|speed|all> [--preset ci|small|paper]
+common:    --artifacts DIR (default artifacts)   --work DIR (default runs)";
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let store = ArtifactStore::open(&artifact_dir(args))?;
+    println!("platform: {}", store.runtime().platform());
+    for (name, v) in &store.meta.variants {
+        println!(
+            "variant {name}: input {:?}, outputs {}, {} parameters in {} arrays",
+            v.input, v.outputs, v.n_parameters, v.n_param_arrays
+        );
+        for (kind, a) in &v.artifacts {
+            println!("  {kind:<8} batch {:<4} {}", a.batch, a.file);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let variant = args.str_or("variant", "small");
+    let n = args.usize_or("n", 8000)?;
+    let seed = args.u64_or("seed", 0)?;
+    let out = PathBuf::from(
+        args.str_opt("out")
+            .map(String::from)
+            .unwrap_or_else(|| format!("runs/data/{variant}_n{n}_s{seed}.bin")),
+    );
+    let dist = match args.str_or("dist", "uniform").as_str() {
+        "uniform" => SampleDist::UniformIid,
+        "binary" => SampleDist::BinaryActs,
+        s if s.starts_with("sparse") => {
+            SampleDist::SparseActs { p: s.trim_start_matches("sparse").parse().unwrap_or(0.5) }
+        }
+        other => anyhow::bail!("unknown dist '{other}'"),
+    };
+    let mut cfg = GenConfig::new(repro::block_for(&variant)?, n, seed);
+    cfg.dist = dist;
+    cfg.n_workers = args.usize_or("workers", semulator::util::default_workers())?;
+    let t0 = std::time::Instant::now();
+    let ds = generate_to(&cfg, &out)?;
+    println!(
+        "generated {} samples ({} features -> {} outputs) in {:.1}s -> {}",
+        ds.n,
+        ds.d,
+        ds.o,
+        t0.elapsed().as_secs_f64(),
+        out.display()
+    );
+    println!("target mean |V|: {:?}", ds.target_mean_abs());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let variant = args.str_or("variant", "small");
+    let store = ArtifactStore::open(&artifact_dir(args))?;
+    let data = args.str_opt("data").context("--data FILE required")?;
+    let ds = Dataset::load(Path::new(data))?;
+    let (train_ds, test_ds) = ds.split(args.f64_or("test-frac", 0.1)?, args.u64_or("seed", 0)? ^ 0xA5);
+    let epochs = args.usize_or("epochs", 150)?;
+    let mut cfg = TrainConfig::new(&variant, epochs);
+    cfg.lr = LrSchedule::paper_scaled(args.f64_or("lr", 1e-3)?, epochs);
+    if let Some(h) = args.str_opt("halve-at") {
+        cfg.lr.halve_at = h.split(',').map(|s| s.trim().parse().unwrap_or(usize::MAX)).collect();
+    }
+    cfg.seed = args.u64_or("seed", 0)?;
+    cfg.eval_every = args.usize_or("eval-every", (epochs / 20).max(1))?;
+    let ckpt = PathBuf::from(args.str_or("ckpt", &format!("runs/ckpt/{variant}.ckpt")));
+    cfg.ckpt_out = Some(ckpt.clone());
+    let (_, report) = train(&store, &cfg, &train_ds, &test_ds, |row| {
+        println!(
+            "epoch {:>5}  lr {:.2e}  train {:.4e}  test {}",
+            row.epoch,
+            row.lr,
+            row.train_loss,
+            row.test_loss.map(|v| format!("{v:.4e}")).unwrap_or_else(|| "-".into())
+        );
+    })?;
+    println!(
+        "done: {} steps in {:.1}s  test MAE {:.4}mV  mse {:.3e}  P(|err|<0.5mV) {:.3}",
+        report.steps,
+        report.wall_seconds,
+        report.test.mae * 1e3,
+        report.test.mse,
+        report.test.p_halfmv
+    );
+    if let Some(log) = args.str_opt("log") {
+        std::fs::write(log, report.history_csv())?;
+        println!("wrote {log}");
+    }
+    println!("checkpoint: {}", ckpt.display());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let variant = args.str_or("variant", "small");
+    let store = ArtifactStore::open(&artifact_dir(args))?;
+    let ds = Dataset::load(Path::new(args.str_opt("data").context("--data FILE required")?))?;
+    let meta = store.meta.variant(&variant)?;
+    let state = ModelState::load(Path::new(args.str_opt("ckpt").context("--ckpt FILE required")?), meta)?;
+    let stats = evaluate_state(&store, &variant, &state, &ds)?;
+    println!(
+        "n {}  MAE {:.4}mV  mse {:.4e}  P(|err|<0.5mV) {:.3}",
+        stats.n,
+        stats.mae * 1e3,
+        stats.mse,
+        stats.p_halfmv
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let variant = args.str_or("variant", "small");
+    let dir = artifact_dir(args);
+    let store = ArtifactStore::open(&dir)?;
+    let meta = store.meta.variant(&variant)?.clone();
+    let state = ModelState::load(
+        Path::new(args.str_opt("ckpt").context("--ckpt FILE required (train first)")?),
+        &meta,
+    )?;
+    let policy = match args.str_or("policy", "shadow").as_str() {
+        "emulator" => Policy::Emulator,
+        "golden" => Policy::Golden,
+        "shadow" => Policy::Shadow { verify_frac: args.f64_or("verify-frac", 0.05)? },
+        other => anyhow::bail!("unknown policy '{other}'"),
+    };
+    let metrics = Arc::new(Metrics::default());
+    let batcher_cfg = BatcherConfig {
+        max_batch: args.usize_or("max-batch", 64)?,
+        max_wait: std::time::Duration::from_micros(args.u64_or("max-wait-us", 200)?),
+    };
+    let service = EmulatorService::spawn(dir, &variant, state, batcher_cfg, metrics.clone())?;
+    let block = AnalogBlock::new(repro::block_for(&variant)?).map_err(anyhow::Error::msg)?;
+    let router = Arc::new(Router::new(block, service.handle(), policy, metrics.clone(), 0));
+    let addr = args.str_or("addr", "127.0.0.1:7070");
+    let server = Server::spawn(&addr, router, metrics)?;
+    println!(
+        "serving {variant} on {} (policy {policy:?}); send {{\"cmd\":\"shutdown\"}} to stop",
+        server.addr
+    );
+    // Block until the acceptor exits (shutdown command) — dropping joins.
+    drop(server);
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let store = ArtifactStore::open(&artifact_dir(args))?;
+    let work = work_dir(args);
+    let results = work.join("results");
+    let preset = repro::Preset::by_name(&args.str_or("preset", "ci"))?;
+    let verbose = args.has("verbose");
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    let variant = args.str_or("variant", "small");
+
+    let run_one = |name: &str| -> Result<()> {
+        let rep = match name {
+            "table1" => repro::table1::run(
+                &store,
+                &work,
+                &repro::table1::Table1Options {
+                    variants: args.list_or("variants", &[&variant]),
+                    preset: preset.clone(),
+                    with_analytic: args.has("with-analytic"),
+                    verbose,
+                },
+            )?,
+            "fig4" => repro::fig4::run(
+                &store,
+                &work,
+                &repro::fig4::Fig4Options { variant: variant.clone(), preset: preset.clone(), verbose },
+            )?,
+            "fig5" => repro::fig5::run(
+                &store,
+                &work,
+                &repro::fig5::Fig5Options {
+                    variant: variant.clone(),
+                    preset: preset.clone(),
+                    grid: args.usize_or("grid", 17)?,
+                    verbose,
+                },
+            )?,
+            "fig6" => {
+                let opts = repro::fig6::Fig6Options {
+                    variant: variant.clone(),
+                    preset: preset.clone(),
+                    sizes: args
+                        .str_opt("sizes")
+                        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+                        .unwrap_or_else(|| repro::fig6::Fig6Options::default_sizes(&preset)),
+                    verbose,
+                };
+                repro::fig6::run(&store, &work, &opts)?
+            }
+            "fig7" => repro::fig7::run(
+                &store,
+                &work,
+                &repro::fig7::Fig7Options {
+                    variant: variant.clone(),
+                    preset: preset.clone(),
+                    bins: args.usize_or("bins", 41)?,
+                    verbose,
+                },
+            )?,
+            "bound" => repro::bound::run(
+                &store,
+                &work,
+                &repro::bound::BoundOptions {
+                    variant: Some(variant.clone()),
+                    preset: preset.clone(),
+                    verbose,
+                },
+            )?,
+            "speed" => repro::speed::run(
+                &store,
+                &work,
+                &repro::speed::SpeedOptions {
+                    variant: variant.clone(),
+                    preset: preset.clone(),
+                    n_fast: args.usize_or("n-fast", 64)?,
+                    n_golden: args.usize_or("n-golden", 3)?,
+                    verbose,
+                },
+            )?,
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        };
+        rep.emit(&results)?;
+        Ok(())
+    };
+
+    if which == "all" {
+        for name in ["bound", "table1", "fig4", "fig5", "fig6", "fig7", "speed"] {
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}

@@ -1,0 +1,6 @@
+//! Model-state mirror of the python side: parameter layout (from
+//! artifacts/meta.json), initialization, and checkpoints.
+
+pub mod params;
+
+pub use params::ModelState;

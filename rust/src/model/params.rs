@@ -1,0 +1,200 @@
+//! Model parameter state: initialization, literal conversion, checkpoints.
+//!
+//! The parameter layout (order, shapes, init bounds) comes from
+//! `artifacts/meta.json` — python is the source of truth, rust never
+//! re-derives architecture facts. Initialization matches the Kaiming-uniform
+//! scheme the paper's PyTorch reference would use (`U(-bound, bound)` with
+//! `bound = 1/sqrt(fan_in)`, recorded per-array in the meta).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{lit_f32, read_f32, ParamSpec, VariantMeta};
+use crate::util::Rng;
+
+const CKPT_MAGIC: &[u8; 4] = b"SEMC";
+const CKPT_VERSION: u32 = 1;
+
+/// Host-side parameter (or optimizer-slot) arrays, ordered per meta.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelState {
+    pub specs: Vec<ParamSpec>,
+    pub arrays: Vec<Vec<f32>>,
+}
+
+impl ModelState {
+    /// Kaiming-uniform init from the meta's per-array bounds.
+    pub fn init(meta: &VariantMeta, seed: u64) -> Self {
+        let mut rng = Rng::seed_from(seed);
+        let arrays = meta
+            .params
+            .iter()
+            .map(|s| (0..s.numel()).map(|_| rng.range(-s.bound, s.bound) as f32).collect())
+            .collect();
+        Self { specs: meta.params.clone(), arrays }
+    }
+
+    /// All-zeros state with the same layout (Adam m/v slots).
+    pub fn zeros_like(meta: &VariantMeta) -> Self {
+        let arrays = meta.params.iter().map(|s| vec![0.0f32; s.numel()]).collect();
+        Self { specs: meta.params.clone(), arrays }
+    }
+
+    pub fn n_parameters(&self) -> usize {
+        self.arrays.iter().map(|a| a.len()).sum()
+    }
+
+    /// Convert to PJRT literals (one per array, meta order).
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.specs
+            .iter()
+            .zip(&self.arrays)
+            .map(|(s, a)| lit_f32(&s.shape, a))
+            .collect()
+    }
+
+    /// Rebuild from literals (e.g. post-training state).
+    pub fn from_literals(specs: &[ParamSpec], lits: &[xla::Literal]) -> Result<Self> {
+        anyhow::ensure!(specs.len() == lits.len(), "literal count mismatch");
+        let arrays = lits.iter().map(read_f32).collect::<Result<Vec<_>>>()?;
+        for (s, a) in specs.iter().zip(&arrays) {
+            anyhow::ensure!(s.numel() == a.len(), "array '{}' size mismatch", s.name);
+        }
+        Ok(Self { specs: specs.to_vec(), arrays })
+    }
+
+    /// Save a checkpoint (`SEMC` binary: names, shapes, f32 data).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(CKPT_MAGIC)?;
+        f.write_all(&CKPT_VERSION.to_le_bytes())?;
+        f.write_all(&(self.arrays.len() as u32).to_le_bytes())?;
+        for (s, a) in self.specs.iter().zip(&self.arrays) {
+            let name = s.name.as_bytes();
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name)?;
+            f.write_all(&(s.shape.len() as u32).to_le_bytes())?;
+            for &d in &s.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for v in a {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint and verify it matches `meta`'s layout.
+    pub fn load(path: &Path, meta: &VariantMeta) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != CKPT_MAGIC {
+            bail!("{}: not a SEMC checkpoint", path.display());
+        }
+        let mut b4 = [0u8; 4];
+        let mut u32_ = |f: &mut dyn Read| -> Result<u32> {
+            f.read_exact(&mut b4)?;
+            Ok(u32::from_le_bytes(b4))
+        };
+        let version = u32_(&mut f)?;
+        if version != CKPT_VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let n = u32_(&mut f)? as usize;
+        anyhow::ensure!(n == meta.params.len(), "checkpoint has {n} arrays, meta wants {}", meta.params.len());
+        let mut arrays = Vec::with_capacity(n);
+        for spec in &meta.params {
+            let name_len = u32_(&mut f)? as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            anyhow::ensure!(name == spec.name, "array order mismatch: '{name}' vs '{}'", spec.name);
+            let ndims = u32_(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                shape.push(u32_(&mut f)? as usize);
+            }
+            anyhow::ensure!(shape == spec.shape, "array '{name}' shape mismatch");
+            let numel: usize = shape.iter().product();
+            let mut bytes = vec![0u8; numel * 4];
+            f.read_exact(&mut bytes)?;
+            arrays.push(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect());
+        }
+        Ok(Self { specs: meta.params.clone(), arrays })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_meta() -> VariantMeta {
+        VariantMeta {
+            name: "t".into(),
+            input: vec![2, 1, 2, 2],
+            outputs: 1,
+            n_param_arrays: 2,
+            n_parameters: 10,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![4, 2], bound: 0.5 },
+                ParamSpec { name: "b".into(), shape: vec![2], bound: 0.5 },
+            ],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn init_respects_bounds_and_seed() {
+        let meta = fake_meta();
+        let a = ModelState::init(&meta, 1);
+        let b = ModelState::init(&meta, 1);
+        let c = ModelState::init(&meta, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.n_parameters(), 10);
+        for arr in &a.arrays {
+            for &v in arr {
+                assert!(v.abs() <= 0.5);
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let meta = fake_meta();
+        let st = ModelState::init(&meta, 3);
+        let dir = std::env::temp_dir().join(format!("semckpt_{}", std::process::id()));
+        let path = dir.join("p.ckpt");
+        st.save(&path).unwrap();
+        let back = ModelState::load(&path, &meta).unwrap();
+        assert_eq!(st, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_layout_mismatch() {
+        let meta = fake_meta();
+        let st = ModelState::init(&meta, 3);
+        let dir = std::env::temp_dir().join(format!("semckpt2_{}", std::process::id()));
+        let path = dir.join("p.ckpt");
+        st.save(&path).unwrap();
+        let mut other = fake_meta();
+        other.params[1].shape = vec![3];
+        assert!(ModelState::load(&path, &other).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn zeros_like_is_zero() {
+        let z = ModelState::zeros_like(&fake_meta());
+        assert!(z.arrays.iter().all(|a| a.iter().all(|&v| v == 0.0)));
+    }
+}

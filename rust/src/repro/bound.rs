@@ -1,0 +1,50 @@
+//! Theorem 4.1 verification: the closed-form MSE bound table, plus (when a
+//! trained model exists) the empirical check that a model trained under the
+//! bound actually satisfies `P(|err| < 10^-s) > p`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::ArtifactStore;
+use crate::stats::{empirical_p_within, mse_bound, p_within};
+
+use super::helpers::{predict_all, signed_errors, train_cached, ExpReport, Preset};
+
+pub struct BoundOptions {
+    pub variant: Option<String>,
+    pub preset: Preset,
+    pub verbose: bool,
+}
+
+pub fn run(store: &ArtifactStore, work: &Path, opts: &BoundOptions) -> Result<ExpReport> {
+    let mut rep = ExpReport::new("bound");
+    rep.line("Theorem 4.1: train MSE below the bound guarantees P(|err| < 10^-s) > p");
+    rep.line(format!("{:>4} {:>6} {:>14}", "s", "p", "mse bound"));
+    let mut csv = String::from("s,p,mse_bound\n");
+    for s in [2.0, 3.0, 4.0] {
+        for p in [0.1, 0.3, 0.5, 0.9] {
+            let b = mse_bound(s, p);
+            rep.line(format!("{s:>4} {p:>6} {b:>14.4e}"));
+            csv.push_str(&format!("{s},{p},{b}\n"));
+        }
+    }
+    rep.line(format!("paper's operating point: s=3, p=0.3 -> {:.3e}", mse_bound(3.0, 0.3)));
+
+    if let Some(variant) = &opts.variant {
+        let (state, _, _, test_ds) = train_cached(store, work, variant, &opts.preset, opts.verbose)?;
+        let preds = predict_all(store, variant, &state, &test_ds)?;
+        let errs = signed_errors(&preds, &test_ds);
+        let mse: f64 = errs.iter().map(|e| e * e).sum::<f64>() / errs.len() as f64;
+        for s in [2.0, 3.0] {
+            let tol = 10f64.powf(-s);
+            let predicted = p_within(mse, tol);
+            let observed = empirical_p_within(&errs, tol);
+            rep.line(format!(
+                "empirical ({variant}): mse {mse:.3e}; s={s}: theorem predicts P {predicted:.3}, observed {observed:.3}"
+            ));
+        }
+    }
+    rep.file("bound_table.csv", csv);
+    Ok(rep)
+}

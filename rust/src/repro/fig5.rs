@@ -1,0 +1,106 @@
+//! Paper Fig 5: response heatmap of the trained emulator when one cell's
+//! normalized (V, G) is swept and every other parameter is held at a random
+//! draw — for a positive-weight cell and a negative-weight cell. The
+//! emulator must reproduce the 1T1R nonlinearity (flat below threshold,
+//! ~ 1/2 k (V-V_t)^alpha above). We emit the golden SPICE grid alongside,
+//! plus the calibrated analytical baseline the paper argues against.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::analytic::AnalyticModel;
+use crate::datagen::{Dataset, SampleDist};
+use crate::runtime::ArtifactStore;
+use crate::util::Rng;
+use crate::xbar::{AnalogBlock, CellInputs};
+
+use super::helpers::{block_for, predict_all, train_cached, ExpReport, Preset};
+
+pub struct Fig5Options {
+    pub variant: String,
+    pub preset: Preset,
+    /// Grid resolution per axis.
+    pub grid: usize,
+    pub verbose: bool,
+}
+
+pub fn run(store: &ArtifactStore, work: &Path, opts: &Fig5Options) -> Result<ExpReport> {
+    let mut rep = ExpReport::new("fig5");
+    let cfg = block_for(&opts.variant)?;
+    let block = AnalogBlock::new(cfg.clone()).map_err(anyhow::Error::msg)?;
+    let (state, _, _, _) = train_cached(store, work, &opts.variant, &opts.preset, opts.verbose)?;
+    let analytic = {
+        let mut rng = Rng::seed_from(77);
+        let calib: Vec<_> = (0..24).map(|_| SampleDist::UniformIid.sample(&cfg, &mut rng)).collect();
+        AnalyticModel::calibrate(cfg.clone(), &calib)
+    };
+
+    // Fixed background: one random draw shared by every grid point.
+    let mut rng = Rng::seed_from(opts.preset.seed ^ 0xF16_5);
+    let background = SampleDist::UniformIid.sample(&cfg, &mut rng);
+    let g = opts.grid;
+
+    for (label, col) in [("positive", 0usize), ("negative", 1usize)] {
+        let cell = CellInputs::idx(&cfg, 0, 0, col);
+        // Build the batch of grid inputs.
+        let mut inputs: Vec<CellInputs> = Vec::with_capacity(g * g);
+        for gi in 0..g {
+            for vi in 0..g {
+                let mut x = background.clone();
+                x.v[cell] = cfg.v_gate_max * vi as f64 / (g - 1) as f64;
+                x.g[cell] = cfg.cell.g_min
+                    + (cfg.cell.g_max - cfg.cell.g_min) * gi as f64 / (g - 1) as f64;
+                inputs.push(x);
+            }
+        }
+        // Golden grid.
+        let golden: Vec<f64> = inputs.iter().map(|x| block.simulate(x)[0]).collect();
+        // Emulator grid (batched through the forward artifact).
+        let feats: Vec<f32> = inputs.iter().flat_map(|x| x.normalized(&cfg)).collect();
+        let ds = Dataset::new(inputs.len(), cfg.n_features(), cfg.n_mac(), feats, vec![0.0; inputs.len() * cfg.n_mac()]);
+        let preds = predict_all(store, &opts.variant, &state, &ds)?;
+        let emulated: Vec<f64> = (0..inputs.len()).map(|i| preds[i * cfg.n_mac()] as f64).collect();
+        // Analytic grid.
+        let analytic_grid: Vec<f64> = inputs.iter().map(|x| analytic.predict(x)[0]).collect();
+
+        let mut csv = String::from("g_norm,v_norm,golden_v,emulated_v,analytic_v\n");
+        let mut max_dev = 0.0f64;
+        let mut max_dev_analytic = 0.0f64;
+        for gi in 0..g {
+            for vi in 0..g {
+                let k = gi * g + vi;
+                csv.push_str(&format!(
+                    "{},{},{},{},{}\n",
+                    gi as f64 / (g - 1) as f64,
+                    vi as f64 / (g - 1) as f64,
+                    golden[k],
+                    emulated[k],
+                    analytic_grid[k]
+                ));
+                max_dev = max_dev.max((golden[k] - emulated[k]).abs());
+                max_dev_analytic = max_dev_analytic.max((golden[k] - analytic_grid[k]).abs());
+            }
+        }
+        // The qualitative Fig-5 shape check: response along V at max G should
+        // be ~flat below the threshold and rising above it.
+        let row_at = |vi: usize| golden[(g - 1) * g + vi];
+        let vth_norm = cfg.cell.mos.vth / cfg.v_gate_max;
+        let below: Vec<f64> =
+            (0..g).filter(|&vi| (vi as f64 / (g - 1) as f64) < vth_norm * 0.9).map(row_at).collect();
+        let spread_below = below
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max)
+            - below.iter().cloned().fold(f64::INFINITY, f64::min);
+        rep.line(format!(
+            "{label} cell (col {col}): max|emul-golden| {:.3}mV, max|analytic-golden| {:.3}mV, sub-threshold spread {:.3}mV",
+            max_dev * 1e3,
+            max_dev_analytic * 1e3,
+            spread_below.abs() * 1e3
+        ));
+        rep.file(&format!("fig5_{label}.csv"), csv);
+    }
+    rep.line(format!("grid {g}x{g}, background seed {}", opts.preset.seed ^ 0xF16_5));
+    Ok(rep)
+}

@@ -1,0 +1,71 @@
+//! Paper Fig 6: train loss as a function of dataset size — "tens of
+//! thousands of samples are required". We retrain at a sweep of N and
+//! report the final train loss per point.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::{train, LrSchedule, TrainConfig};
+use crate::runtime::ArtifactStore;
+
+use super::helpers::{dataset_cached, ExpReport, Preset};
+
+pub struct Fig6Options {
+    pub variant: String,
+    pub preset: Preset,
+    /// Dataset sizes to sweep; defaults scale off the preset size.
+    pub sizes: Vec<usize>,
+    pub verbose: bool,
+}
+
+impl Fig6Options {
+    pub fn default_sizes(preset: &Preset) -> Vec<usize> {
+        let n = preset.n_samples;
+        vec![n / 16, n / 8, n / 4, n / 2, n]
+    }
+}
+
+pub fn run(store: &ArtifactStore, work: &Path, opts: &Fig6Options) -> Result<ExpReport> {
+    let mut rep = ExpReport::new("fig6");
+    // One master dataset; sweeps reuse prefixes so the points are nested
+    // (same as adding data, which is what the paper's x-axis means).
+    let master = dataset_cached(work, &opts.variant, opts.preset.n_samples, opts.preset.seed)?;
+    let mut csv = String::from("n_data,final_train_loss,test_mse,test_mae_v\n");
+    let mut prev_loss = f64::INFINITY;
+    let mut monotone = true;
+    for &n in &opts.sizes {
+        let sub = master.head(n.min(master.n));
+        let (train_ds, test_ds) = sub.split(0.1, opts.preset.seed ^ 0xA5);
+        let mut cfg = TrainConfig::new(&opts.variant, opts.preset.epochs);
+        cfg.lr = LrSchedule::paper_scaled(opts.preset.lr, opts.preset.epochs);
+        cfg.seed = opts.preset.seed;
+        cfg.eval_every = 0;
+        let (_, report) = train(store, &cfg, &train_ds, &test_ds, |row| {
+            if opts.verbose && row.epoch % 20 == 0 {
+                eprintln!("  n={n} epoch {:>4} train {:.3e}", row.epoch, row.train_loss);
+            }
+        })?;
+        rep.line(format!(
+            "N={:<7} final train loss {:.3e}  test mse {:.3e}  test MAE {:.3}mV",
+            train_ds.n,
+            report.final_train_loss,
+            report.test.mse,
+            report.test.mae * 1e3
+        ));
+        csv.push_str(&format!(
+            "{},{},{},{}\n",
+            train_ds.n, report.final_train_loss, report.test.mse, report.test.mae
+        ));
+        if report.final_train_loss > prev_loss * 1.5 {
+            monotone = false;
+        }
+        prev_loss = report.final_train_loss;
+    }
+    rep.line(format!(
+        "trend: loss {} with more data (paper Fig 6: decreasing)",
+        if monotone { "decreases" } else { "is non-monotone" }
+    ));
+    rep.file("fig6_data_sweep.csv", csv);
+    Ok(rep)
+}

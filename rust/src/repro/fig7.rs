@@ -1,0 +1,47 @@
+//! Paper Fig 7: distribution of test-set errors for the trained emulator —
+//! approximately zero-mean Gaussian (the Lemma-4.2 assumption behind the
+//! Thm-4.1 bound). We emit the histogram plus the standardized moments.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::ArtifactStore;
+use crate::stats::{empirical_p_within, moments, Histogram};
+
+use super::helpers::{predict_all, signed_errors, train_cached, ExpReport, Preset};
+
+pub struct Fig7Options {
+    pub variant: String,
+    pub preset: Preset,
+    pub bins: usize,
+    pub verbose: bool,
+}
+
+pub fn run(store: &ArtifactStore, work: &Path, opts: &Fig7Options) -> Result<ExpReport> {
+    let mut rep = ExpReport::new("fig7");
+    let (state, _, _, test_ds) = train_cached(store, work, &opts.variant, &opts.preset, opts.verbose)?;
+    let preds = predict_all(store, &opts.variant, &state, &test_ds)?;
+    let errs = signed_errors(&preds, &test_ds);
+
+    let m = moments(&errs);
+    let hist = Histogram::of(&errs, opts.bins);
+    rep.line(format!(
+        "variant {}  n={} test errors: mean {:.3e}V  std {:.3e}V",
+        opts.variant,
+        m.n,
+        m.mean,
+        m.var.sqrt()
+    ));
+    rep.line(format!(
+        "gaussianity: skew {:.3}  excess kurtosis {:.3}  (0, 0 for exact Gaussian / Lemma 4.2)",
+        m.skew, m.kurtosis
+    ));
+    rep.line(format!(
+        "P(|err| < 0.5mV) = {:.3}   P(|err| < 1mV) = {:.3}",
+        empirical_p_within(&errs, 0.5e-3),
+        empirical_p_within(&errs, 1e-3)
+    ));
+    rep.file("fig7_error_hist.csv", hist.to_csv());
+    Ok(rep)
+}

@@ -1,0 +1,213 @@
+//! Shared plumbing for the experiment harness: presets, cached datasets and
+//! checkpoints, prediction helpers, and the report container.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{train, TrainConfig, TrainReport};
+use crate::datagen::{generate_to, Dataset, GenConfig};
+use crate::model::ModelState;
+use crate::runtime::{lit_f32, read_f32, ArtifactStore};
+use crate::xbar::BlockConfig;
+
+/// The analog block each model variant emulates.
+pub fn block_for(variant: &str) -> Result<BlockConfig> {
+    Ok(match variant {
+        "cfg_a" => BlockConfig::paper_cfg_a(),
+        "cfg_b" => BlockConfig::paper_cfg_b(),
+        "small" => BlockConfig::small(),
+        other => anyhow::bail!("unknown variant '{other}'"),
+    })
+}
+
+/// Experiment scale preset. `ci` is sized for this single-core environment;
+/// `paper` is the full Table-1 scale (50k samples, 2000 epochs).
+#[derive(Debug, Clone)]
+pub struct Preset {
+    pub name: String,
+    pub n_samples: usize,
+    pub epochs: usize,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+impl Preset {
+    pub fn by_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "ci" => Self { name: name.into(), n_samples: 4000, epochs: 60, lr: 1e-3, seed: 0 },
+            "small" => Self { name: name.into(), n_samples: 12_000, epochs: 150, lr: 1e-3, seed: 0 },
+            "long" => Self { name: name.into(), n_samples: 25_000, epochs: 400, lr: 2e-3, seed: 0 },
+            "paper" => Self { name: name.into(), n_samples: 50_000, epochs: 2000, lr: 1e-3, seed: 0 },
+            other => anyhow::bail!("unknown preset '{other}' (ci | small | long | paper)"),
+        })
+    }
+}
+
+/// Generate (or reload) the dataset for `(variant, n_samples, seed)` under
+/// `runs/data/`.
+pub fn dataset_cached(work: &Path, variant: &str, n: usize, seed: u64) -> Result<Dataset> {
+    let path = work.join("data").join(format!("{variant}_n{n}_s{seed}.bin"));
+    if path.exists() {
+        return Dataset::load(&path);
+    }
+    let cfg = GenConfig::new(block_for(variant)?, n, seed);
+    generate_to(&cfg, &path)
+}
+
+/// Train (or reload a cached checkpoint for) `(variant, preset)`.
+/// Returns the model plus the train report when training actually ran.
+pub fn train_cached(
+    store: &ArtifactStore,
+    work: &Path,
+    variant: &str,
+    preset: &Preset,
+    verbose: bool,
+) -> Result<(ModelState, Option<TrainReport>, Dataset, Dataset)> {
+    let ds = dataset_cached(work, variant, preset.n_samples, preset.seed)?;
+    let (train_ds, test_ds) = ds.split(0.1, preset.seed ^ 0xA5);
+    let ckpt = work
+        .join("ckpt")
+        .join(format!("{variant}_{}_n{}_e{}.ckpt", preset.name, preset.n_samples, preset.epochs));
+    let meta = store.meta.variant(variant)?;
+    if ckpt.exists() {
+        let state = ModelState::load(&ckpt, meta)?;
+        return Ok((state, None, train_ds, test_ds));
+    }
+    let mut cfg = TrainConfig::new(variant, preset.epochs);
+    cfg.lr = crate::coordinator::LrSchedule::paper_scaled(preset.lr, preset.epochs);
+    cfg.seed = preset.seed;
+    cfg.eval_every = (preset.epochs / 20).max(1);
+    cfg.ckpt_out = Some(ckpt);
+    let (state, report) = train(store, &cfg, &train_ds, &test_ds, |row| {
+        if verbose && (row.epoch % 10 == 0 || row.test_loss.is_some()) {
+            eprintln!(
+                "  epoch {:>4}  lr {:.2e}  train {:.3e}  test {}",
+                row.epoch,
+                row.lr,
+                row.train_loss,
+                row.test_loss.map(|v| format!("{v:.3e}")).unwrap_or_else(|| "-".into())
+            );
+        }
+    })?;
+    Ok((state, Some(report), train_ds, test_ds))
+}
+
+/// Batched predictions for a dataset via the largest forward artifact.
+/// Returns `n * outputs` predictions (volts).
+pub fn predict_all(
+    store: &ArtifactStore,
+    variant: &str,
+    state: &ModelState,
+    ds: &Dataset,
+) -> Result<Vec<f32>> {
+    let meta = store.meta.variant(variant)?;
+    // Largest forward batch available.
+    let (kind, batch) = meta
+        .artifacts
+        .iter()
+        .filter(|(k, _)| k.starts_with("fwd_b") && !k.ends_with("_ref"))
+        .max_by_key(|(_, a)| a.batch)
+        .map(|(k, a)| (k.clone(), a.batch))
+        .context("no forward artifacts")?;
+    let exe = store.executable(variant, &kind)?;
+    let params = state.to_literals()?;
+    let mut dims = vec![batch];
+    dims.extend_from_slice(&meta.input);
+
+    let mut preds = Vec::with_capacity(ds.n * ds.o);
+    let mut xb: Vec<f32> = Vec::with_capacity(batch * ds.d);
+    let mut i = 0usize;
+    while i < ds.n {
+        let take = batch.min(ds.n - i);
+        xb.clear();
+        for j in 0..batch {
+            let row = i + j.min(take - 1); // pad by repeating the last row
+            xb.extend_from_slice(ds.features(row.min(ds.n - 1)));
+        }
+        let x_lit = lit_f32(&dims, &xb)?;
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&x_lit);
+        let outs = exe.run(&inputs)?;
+        let flat = read_f32(&outs[0])?;
+        preds.extend_from_slice(&flat[..take * ds.o]);
+        i += take;
+    }
+    Ok(preds)
+}
+
+/// Signed per-output errors `pred - target` (volts).
+pub fn signed_errors(preds: &[f32], ds: &Dataset) -> Vec<f64> {
+    preds.iter().zip(ds.y.iter()).map(|(p, t)| (*p - *t) as f64).collect()
+}
+
+/// An experiment result: console summary plus named CSV payloads.
+#[derive(Debug, Clone, Default)]
+pub struct ExpReport {
+    pub id: String,
+    pub summary: Vec<String>,
+    pub files: Vec<(String, String)>,
+}
+
+impl ExpReport {
+    pub fn new(id: &str) -> Self {
+        Self { id: id.to_string(), ..Default::default() }
+    }
+
+    pub fn line(&mut self, s: impl Into<String>) {
+        self.summary.push(s.into());
+    }
+
+    pub fn file(&mut self, name: &str, content: String) {
+        self.files.push((name.to_string(), content));
+    }
+
+    /// Print the summary and persist the payloads under `dir/<id>/`.
+    pub fn emit(&self, dir: &Path) -> Result<Vec<PathBuf>> {
+        println!("== {} ==", self.id);
+        for l in &self.summary {
+            println!("{l}");
+        }
+        let out_dir = dir.join(&self.id);
+        std::fs::create_dir_all(&out_dir)?;
+        let mut paths = Vec::new();
+        for (name, content) in &self.files {
+            let p = out_dir.join(name);
+            std::fs::write(&p, content)?;
+            println!("  wrote {}", p.display());
+            paths.push(p);
+        }
+        Ok(paths)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        assert_eq!(Preset::by_name("ci").unwrap().n_samples, 4000);
+        assert_eq!(Preset::by_name("paper").unwrap().epochs, 2000);
+        assert!(Preset::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn block_mapping_matches_table1() {
+        assert_eq!(block_for("cfg_a").unwrap().input_shape(), [2, 4, 64, 2]);
+        assert_eq!(block_for("cfg_b").unwrap().n_mac(), 4);
+        assert!(block_for("huge").is_err());
+    }
+
+    #[test]
+    fn report_emit_writes_files() {
+        let mut r = ExpReport::new("test_exp");
+        r.line("hello");
+        r.file("data.csv", "a,b\n1,2\n".into());
+        let dir = std::env::temp_dir().join(format!("semrep_{}", std::process::id()));
+        let paths = r.emit(&dir).unwrap();
+        assert_eq!(paths.len(), 1);
+        assert!(paths[0].exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,22 @@
+//! Experiment harness: one module per paper table/figure (see DESIGN.md §6).
+//!
+//! | module   | paper result                                     |
+//! |----------|--------------------------------------------------|
+//! | `table1` | Table 1 — test MAE on the two RRAM+PS32 blocks    |
+//! | `fig4`   | Fig 4 — train/test loss, LR halving schedule      |
+//! | `fig5`   | Fig 5 — (V, G) response heatmaps, +/- weight cell |
+//! | `fig6`   | Fig 6 — train loss vs dataset size                |
+//! | `fig7`   | Fig 7 — test error distribution (Gaussianity)     |
+//! | `bound`  | Thm 4.1 — MSE bound table + empirical check       |
+//! | `speed`  | §1/§5 — SPICE vs emulator speedups                |
+
+pub mod bound;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod helpers;
+pub mod speed;
+pub mod table1;
+
+pub use helpers::{block_for, dataset_cached, predict_all, signed_errors, train_cached, ExpReport, Preset};

@@ -1,0 +1,134 @@
+//! The paper's headline claim (§1/§5): emulation is "incomparably" faster
+//! than circuit simulation. We measure, per block variant:
+//!
+//! * golden SPICE (full MNA netlist, dense LU over every cell node),
+//! * the structured fast solver (still SPICE-accurate; our datagen path),
+//! * the neural emulator at batch 1 (latency) and max batch (throughput),
+//!
+//! and report per-sample times and speedups.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::datagen::{Dataset, SampleDist};
+use crate::runtime::ArtifactStore;
+use crate::util::Rng;
+use crate::xbar::AnalogBlock;
+
+use super::helpers::{block_for, predict_all, train_cached, ExpReport, Preset};
+
+pub struct SpeedOptions {
+    pub variant: String,
+    pub preset: Preset,
+    /// Samples for the fast/emulated paths.
+    pub n_fast: usize,
+    /// Samples for the golden MNA path (expensive).
+    pub n_golden: usize,
+    pub verbose: bool,
+}
+
+impl Default for SpeedOptions {
+    fn default() -> Self {
+        Self {
+            variant: "small".into(),
+            preset: Preset::by_name("ci").unwrap(),
+            n_fast: 64,
+            n_golden: 3,
+            verbose: false,
+        }
+    }
+}
+
+pub fn run(store: &ArtifactStore, work: &Path, opts: &SpeedOptions) -> Result<ExpReport> {
+    let mut rep = ExpReport::new("speed");
+    let cfg = block_for(&opts.variant)?;
+    let block = AnalogBlock::new(cfg.clone()).map_err(anyhow::Error::msg)?;
+    let mut rng = Rng::seed_from(0xBEEF);
+    let samples: Vec<_> =
+        (0..opts.n_fast).map(|_| SampleDist::UniformIid.sample(&cfg, &mut rng)).collect();
+
+    // Golden full-netlist MNA.
+    let t0 = Instant::now();
+    for x in samples.iter().take(opts.n_golden) {
+        block.simulate_golden(x).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    let golden_per = t0.elapsed().as_secs_f64() / opts.n_golden.max(1) as f64;
+
+    // Structured fast solver.
+    let t0 = Instant::now();
+    for x in &samples {
+        std::hint::black_box(block.simulate(x));
+    }
+    let fast_per = t0.elapsed().as_secs_f64() / samples.len() as f64;
+
+    // Emulator (needs a trained model; accuracy is irrelevant for timing
+    // but we reuse the cached checkpoint).
+    let (state, _, _, _) = train_cached(store, work, &opts.variant, &opts.preset, opts.verbose)?;
+    let feats: Vec<f32> = samples.iter().flat_map(|x| x.normalized(&cfg)).collect();
+    let ds = Dataset::new(
+        samples.len(),
+        cfg.n_features(),
+        cfg.n_mac(),
+        feats,
+        vec![0.0; samples.len() * cfg.n_mac()],
+    );
+    // Batch path (throughput). One untimed warmup call first so PJRT
+    // compilation does not pollute the measurement.
+    let _ = predict_all(store, &opts.variant, &state, &ds)?;
+    let t0 = Instant::now();
+    let _ = predict_all(store, &opts.variant, &state, &ds)?;
+    let emu_batch_per = t0.elapsed().as_secs_f64() / samples.len() as f64;
+    // b1 path (latency).
+    let exe = store.executable(&opts.variant, "fwd_b1")?;
+    let params = state.to_literals()?;
+    let mut dims = vec![1usize];
+    dims.extend_from_slice(&store.meta.variant(&opts.variant)?.input);
+    {
+        // Warmup (compile) before timing.
+        let x_lit = crate::runtime::lit_f32(&dims, ds.features(0))?;
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&x_lit);
+        let _ = exe.run(&inputs)?;
+    }
+    let t0 = Instant::now();
+    let n_lat = samples.len().min(32);
+    for i in 0..n_lat {
+        let x_lit = crate::runtime::lit_f32(&dims, ds.features(i))?;
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&x_lit);
+        std::hint::black_box(exe.run(&inputs)?);
+    }
+    let emu_b1_per = t0.elapsed().as_secs_f64() / n_lat as f64;
+
+    let fmt = |s: f64| {
+        if s >= 1.0 {
+            format!("{s:.3} s")
+        } else if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else {
+            format!("{:.1} µs", s * 1e6)
+        }
+    };
+    rep.line(format!("variant {} ({} cells/block)", opts.variant, cfg.n_cells()));
+    rep.line(format!("{:<34} {:>12} {:>12}", "path", "per-sample", "vs golden"));
+    for (name, t) in [
+        ("SPICE golden (full MNA netlist)", golden_per),
+        ("SPICE fast (structured 2-level NR)", fast_per),
+        ("SEMULATOR (PJRT, batch=1)", emu_b1_per),
+        ("SEMULATOR (PJRT, batched)", emu_batch_per),
+    ] {
+        rep.line(format!("{:<34} {:>12} {:>11.0}x", name, fmt(t), golden_per / t));
+    }
+    rep.line(format!(
+        "headline: emulator (batched) is {:.0}x faster than full SPICE, {:.1}x faster than the optimized SPICE fast path",
+        golden_per / emu_batch_per,
+        fast_per / emu_batch_per
+    ));
+    let csv = format!(
+        "path,per_sample_s\ngolden_mna,{golden_per}\nfast_structured,{fast_per}\nemulator_b1,{emu_b1_per}\nemulator_batched,{emu_batch_per}\n"
+    );
+    rep.file("speed.csv", csv);
+    Ok(rep)
+}

@@ -1,0 +1,95 @@
+//! Paper Table 1: test MAE of SEMULATOR on the RRAM+PS32 blocks.
+//!
+//! | Computing Block | Inputs (C,D,H,W) | Outputs | Data | MAE      |
+//! | RRAM+PS32       | (2,4,64,2)       | 1       | 50k  | 0.981 mV |
+//! | RRAM+PS32       | (2,2,64,8)       | 4       | 50k  | 0.955 mV |
+//!
+//! We regenerate the same rows end-to-end (SPICE datagen -> train -> test
+//! MAE), optionally adding the calibrated analytical baseline column the
+//! paper's argument implies.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::analytic::AnalyticModel;
+use crate::coordinator::evaluate_state;
+use crate::datagen::SampleDist;
+use crate::runtime::ArtifactStore;
+use crate::util::Rng;
+
+use super::helpers::{block_for, train_cached, ExpReport, Preset};
+
+/// Paper-reported MAE (volts) for the shape comparison.
+pub fn paper_mae(variant: &str) -> Option<f64> {
+    match variant {
+        "cfg_a" => Some(0.981e-3),
+        "cfg_b" => Some(0.955e-3),
+        _ => None,
+    }
+}
+
+pub struct Table1Options {
+    pub variants: Vec<String>,
+    pub preset: Preset,
+    pub with_analytic: bool,
+    pub verbose: bool,
+}
+
+pub fn run(store: &ArtifactStore, work: &Path, opts: &Table1Options) -> Result<ExpReport> {
+    let mut rep = ExpReport::new("table1");
+    rep.line(format!(
+        "{:<10} {:<16} {:>7} {:>8} {:>12} {:>12} {:>14}",
+        "Block", "Inputs(C,D,H,W)", "Outputs", "Data(N)", "MAE", "paper MAE", "analytic MAE"
+    ));
+    let mut csv = String::from("variant,inputs,outputs,n_data,mae_v,paper_mae_v,analytic_mae_v\n");
+
+    for variant in &opts.variants {
+        let block_cfg = block_for(variant)?;
+        let (state, _report, _train_ds, test_ds) =
+            train_cached(store, work, variant, &opts.preset, opts.verbose)?;
+        let stats = evaluate_state(store, variant, &state, &test_ds)?;
+
+        let analytic_mae = if opts.with_analytic {
+            let mut rng = Rng::seed_from(opts.preset.seed ^ 0xBA5E);
+            let calib: Vec<_> =
+                (0..24).map(|_| SampleDist::UniformIid.sample(&block_cfg, &mut rng)).collect();
+            let test: Vec<_> =
+                (0..24).map(|_| SampleDist::UniformIid.sample(&block_cfg, &mut rng)).collect();
+            let model = AnalyticModel::calibrate(block_cfg.clone(), &calib);
+            Some(model.mae_vs_golden(&test))
+        } else {
+            None
+        };
+
+        let shape = block_cfg.input_shape();
+        rep.line(format!(
+            "{:<10} {:<16} {:>7} {:>8} {:>11.3}mV {:>11} {:>14}",
+            "RRAM+PS32",
+            format!("({},{},{},{})", shape[0], shape[1], shape[2], shape[3]),
+            block_cfg.n_mac(),
+            opts.preset.n_samples,
+            stats.mae * 1e3,
+            paper_mae(variant).map(|v| format!("{:.3}mV", v * 1e3)).unwrap_or_else(|| "-".into()),
+            analytic_mae.map(|v| format!("{:.3}mV", v * 1e3)).unwrap_or_else(|| "-".into()),
+        ));
+        csv.push_str(&format!(
+            "{variant},({} {} {} {}),{},{},{},{},{}\n",
+            shape[0],
+            shape[1],
+            shape[2],
+            shape[3],
+            block_cfg.n_mac(),
+            opts.preset.n_samples,
+            stats.mae,
+            paper_mae(variant).map(|v| v.to_string()).unwrap_or_default(),
+            analytic_mae.map(|v| v.to_string()).unwrap_or_default(),
+        ));
+        rep.line(format!(
+            "    mse {:.3e}  P(|err|<0.5mV) {:.3}  (n={} test samples)",
+            stats.mse, stats.p_halfmv, stats.n
+        ));
+    }
+    rep.file("table1.csv", csv);
+    Ok(rep)
+}

@@ -1,0 +1,240 @@
+//! Artifact registry: `artifacts/meta.json` + lazily compiled executables.
+//!
+//! `python/compile/aot.py` is the single source of truth for shapes and
+//! parameter layouts; this module parses its meta and hands out compiled
+//! [`Executable`]s by `(variant, kind)`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json_parse;
+
+use super::client::{Executable, Runtime};
+
+/// One parameter array's layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Kaiming-uniform init bound.
+    pub bound: f64,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled-artifact descriptor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub batch: usize,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+}
+
+/// Per-variant metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantMeta {
+    pub name: String,
+    /// Input tensor shape (C, D, H, W), no batch dim.
+    pub input: Vec<usize>,
+    pub outputs: usize,
+    pub n_param_arrays: usize,
+    pub n_parameters: usize,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl VariantMeta {
+    /// Features per sample (product of input dims).
+    pub fn n_features(&self) -> usize {
+        self.input.iter().product()
+    }
+
+    pub fn artifact(&self, kind: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(kind)
+            .with_context(|| format!("variant '{}' has no artifact '{kind}'", self.name))
+    }
+}
+
+/// Parsed meta.json.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub variants: BTreeMap<String, VariantMeta>,
+}
+
+impl Meta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = json_parse(text).context("parsing meta.json")?;
+        let version = root.req("version")?.as_usize().context("version")?;
+        if version != 1 {
+            bail!("unsupported meta version {version}");
+        }
+        let mut variants = BTreeMap::new();
+        for (name, v) in root.req("variants")?.as_obj().context("variants object")? {
+            let params = v
+                .req("params")?
+                .as_arr()
+                .context("params array")?
+                .iter()
+                .map(|p| -> Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: p.req("name")?.as_str().context("param name")?.to_string(),
+                        shape: p.req("shape")?.as_usize_vec().context("param shape")?,
+                        bound: p.req("bound")?.as_f64().context("param bound")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mut artifacts = BTreeMap::new();
+            for (kind, a) in v.req("artifacts")?.as_obj().context("artifacts object")? {
+                artifacts.insert(
+                    kind.clone(),
+                    ArtifactMeta {
+                        file: a.req("file")?.as_str().context("file")?.to_string(),
+                        batch: a.req("batch")?.as_usize().context("batch")?,
+                        n_inputs: a.req("n_inputs")?.as_usize().context("n_inputs")?,
+                        n_outputs: a.req("n_outputs")?.as_usize().context("n_outputs")?,
+                    },
+                );
+            }
+            variants.insert(
+                name.clone(),
+                VariantMeta {
+                    name: name.clone(),
+                    input: v.req("input")?.as_usize_vec().context("input shape")?,
+                    outputs: v.req("outputs")?.as_usize().context("outputs")?,
+                    n_param_arrays: v.req("n_param_arrays")?.as_usize().context("n_param_arrays")?,
+                    n_parameters: v.req("n_parameters")?.as_usize().context("n_parameters")?,
+                    params,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Meta { variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantMeta> {
+        self.variants.get(name).with_context(|| {
+            format!(
+                "unknown variant '{name}' (have: {})",
+                self.variants.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+}
+
+/// Artifact store: meta + compile-on-first-use executable cache.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    pub meta: Meta,
+    runtime: Runtime,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: &Path) -> Result<Self> {
+        let meta = Meta::load(dir)?;
+        let runtime = Runtime::cpu()?;
+        Ok(Self { dir: dir.to_path_buf(), meta, runtime, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Compile (or fetch from cache) the executable for `(variant, kind)`.
+    pub fn executable(&self, variant: &str, kind: &str) -> Result<std::sync::Arc<Executable>> {
+        let vm = self.meta.variant(variant)?;
+        let am = vm.artifact(kind)?;
+        let key = format!("{variant}/{kind}");
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&key) {
+                return Ok(exe.clone());
+            }
+        }
+        let exe = std::sync::Arc::new(self.runtime.load_hlo(&self.dir.join(&am.file))?);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "infer_batches": [1, 64],
+      "variants": {
+        "small": {
+          "input": [2, 2, 16, 2],
+          "outputs": 1,
+          "n_param_arrays": 4,
+          "n_parameters": 1234,
+          "params": [
+            {"name": "conv0.w", "shape": [16, 2, 1, 1, 1], "bound": 0.7071},
+            {"name": "conv0.b", "shape": [16], "bound": 0.7071},
+            {"name": "dense5.w", "shape": [64, 1], "bound": 0.125},
+            {"name": "dense5.b", "shape": [1], "bound": 0.125}
+          ],
+          "artifacts": {
+            "train": {"file": "small_train.hlo.txt", "batch": 128, "n_inputs": 16, "n_outputs": 14},
+            "fwd_b1": {"file": "small_fwd_b1.hlo.txt", "batch": 1, "n_inputs": 5, "n_outputs": 1}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample_meta() {
+        let meta = Meta::parse(SAMPLE).unwrap();
+        let v = meta.variant("small").unwrap();
+        assert_eq!(v.input, vec![2, 2, 16, 2]);
+        assert_eq!(v.n_features(), 128);
+        assert_eq!(v.params[0].shape, vec![16, 2, 1, 1, 1]);
+        assert_eq!(v.params[0].numel(), 32);
+        assert_eq!(v.artifact("train").unwrap().batch, 128);
+        assert!(v.artifact("missing").is_err());
+        assert!(meta.variant("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 99");
+        assert!(Meta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_real_repo_meta_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("meta.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let meta = Meta::load(&dir).unwrap();
+        for name in ["small", "cfg_a", "cfg_b"] {
+            let v = meta.variant(name).unwrap();
+            assert_eq!(v.params.len(), v.n_param_arrays);
+            let total: usize = v.params.iter().map(|p| p.numel()).sum();
+            assert_eq!(total, v.n_parameters, "{name}");
+            // Train artifact signature arithmetic.
+            let t = v.artifact("train").unwrap();
+            assert_eq!(t.n_inputs, 3 * v.n_param_arrays + 4);
+            assert_eq!(t.n_outputs, 3 * v.n_param_arrays + 2);
+        }
+    }
+}

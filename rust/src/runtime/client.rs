@@ -1,0 +1,84 @@
+//! PJRT execution of AOT-compiled HLO artifacts.
+//!
+//! Wraps the `xla` crate: CPU client, HLO-text loading (the 0.5.1-safe
+//! interchange format — see `python/compile/aot.py`), compilation, and
+//! tuple-returning execution. One [`Runtime`] per process; executables are
+//! cheap handles once compiled.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Process-wide PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** artifact and compile it.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.file_name().unwrap().to_string_lossy().into_owned() })
+    }
+}
+
+/// A compiled computation. All our artifacts are lowered with
+/// `return_tuple=True`, so execution returns the decomposed tuple elements.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with literal inputs; returns the tuple elements.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(&self, inputs: &[L]) -> Result<Vec<xla::Literal>> {
+        let outs = self.exe.execute::<L>(inputs).with_context(|| format!("executing {}", self.name))?;
+        let lit = outs[0][0].to_literal_sync().context("fetching result")?;
+        let parts = lit.to_tuple().context("decomposing result tuple")?;
+        Ok(parts)
+    }
+}
+
+/// Build an f32 literal with the given dimensions.
+pub fn lit_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal size mismatch: dims {:?} vs {} elements", dims, data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read an f32 literal back to host (flattened row-major).
+pub fn read_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read the dims of a literal.
+pub fn literal_dims(lit: &xla::Literal) -> Result<Vec<usize>> {
+    let shape = lit.array_shape()?;
+    Ok(shape.dims().iter().map(|&d| d as usize).collect())
+}

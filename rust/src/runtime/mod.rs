@@ -1,0 +1,11 @@
+//! PJRT runtime: load and execute the AOT artifacts from the rust hot path.
+//!
+//! Python never runs at serve/train time — `make artifacts` lowered the
+//! JAX/Pallas model to HLO text once; this module compiles those files on
+//! the in-process PJRT CPU client and exposes typed entry points.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactMeta, ArtifactStore, Meta, ParamSpec, VariantMeta};
+pub use client::{lit_f32, lit_scalar, literal_dims, read_f32, Executable, Runtime};

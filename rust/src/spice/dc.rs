@@ -1,0 +1,521 @@
+//! MNA stamping and the damped Newton-Raphson nonlinear solver.
+//!
+//! Unknown ordering: node voltages `1..n_nodes` map to indices `0..n_nodes-1`,
+//! followed by one branch current per voltage source (in device order).
+//!
+//! Each Newton iteration stamps the linearized system `A x = b` from scratch
+//! into preallocated buffers (no allocation in the loop), factors it with the
+//! dense LU from [`super::matrix`], and applies a damped update. Circuits
+//! with no nonlinear devices converge in one iteration.
+
+use super::devices::{mos_eval, switch_g, Device, NodeId};
+use super::matrix::{lu_factor_inplace, lu_solve_inplace, DMat};
+use super::netlist::Circuit;
+
+/// Integration method for transient companion models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    BackwardEuler,
+    Trapezoidal,
+}
+
+/// Per-capacitor transient state (voltage and branch current at the previous
+/// accepted timepoint), indexed in capacitor device order.
+#[derive(Debug, Clone, Default)]
+pub struct TranState {
+    pub v: Vec<f64>,
+    pub i: Vec<f64>,
+}
+
+/// How capacitors are treated during a solve.
+#[derive(Debug, Clone, Copy)]
+pub enum CapMode<'a> {
+    /// DC operating point: capacitors are open (a tiny leak keeps the matrix
+    /// nonsingular when a node hangs only off a capacitor).
+    Open,
+    /// Transient step of size `h` using a companion model around `state`.
+    Companion { h: f64, method: Method, state: &'a TranState },
+}
+
+/// Newton-Raphson tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct NrOptions {
+    pub max_iter: usize,
+    /// Relative convergence tolerance on unknown updates.
+    pub reltol: f64,
+    /// Absolute tolerance for node voltages (V).
+    pub vabstol: f64,
+    /// Absolute tolerance for branch currents (A).
+    pub iabstol: f64,
+    /// Conductance added from every nonlinear-device terminal to ground.
+    pub gmin: f64,
+    /// Maximum per-iteration node-voltage step (damping limit, V).
+    pub dv_max: f64,
+}
+
+impl Default for NrOptions {
+    fn default() -> Self {
+        Self {
+            max_iter: 200,
+            reltol: 1e-6,
+            vabstol: 1e-9,
+            iabstol: 1e-12,
+            gmin: 1e-12,
+            dv_max: 0.5,
+        }
+    }
+}
+
+/// Solver failure modes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpiceError {
+    Singular { at_col: usize },
+    NonConvergence { t: f64, iters: usize, max_delta: f64 },
+    Invalid(String),
+}
+
+impl std::fmt::Display for SpiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpiceError::Singular { at_col } => write!(f, "singular MNA matrix at column {at_col}"),
+            SpiceError::NonConvergence { t, iters, max_delta } => {
+                write!(f, "Newton-Raphson failed to converge at t={t:e} after {iters} iterations (max delta {max_delta:e})")
+            }
+            SpiceError::Invalid(msg) => write!(f, "invalid circuit: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SpiceError {}
+
+/// Reusable solver buffers; create once per circuit, reuse across timesteps.
+#[derive(Debug, Clone)]
+pub struct Workspace {
+    a: DMat,
+    b: Vec<f64>,
+    x_new: Vec<f64>,
+    perm: Vec<usize>,
+}
+
+impl Workspace {
+    pub fn for_circuit(ckt: &Circuit) -> Self {
+        let n = ckt.n_unknowns();
+        Self { a: DMat::zeros_sq(n), b: vec![0.0; n], x_new: vec![0.0; n], perm: Vec::with_capacity(n) }
+    }
+}
+
+/// Voltage of `node` under unknown vector `x`.
+#[inline]
+pub fn node_v(x: &[f64], node: NodeId) -> f64 {
+    if node == 0 {
+        0.0
+    } else {
+        x[node - 1]
+    }
+}
+
+#[inline]
+fn stamp_g(a: &mut DMat, p: NodeId, n: NodeId, g: f64) {
+    if p != 0 {
+        a.add(p - 1, p - 1, g);
+        if n != 0 {
+            a.add(p - 1, n - 1, -g);
+        }
+    }
+    if n != 0 {
+        a.add(n - 1, n - 1, g);
+        if p != 0 {
+            a.add(n - 1, p - 1, -g);
+        }
+    }
+}
+
+/// Stamp a current `i` flowing from node `p` to node `n` (through a device).
+#[inline]
+fn stamp_i(b: &mut [f64], p: NodeId, n: NodeId, i: f64) {
+    if p != 0 {
+        b[p - 1] -= i;
+    }
+    if n != 0 {
+        b[n - 1] += i;
+    }
+}
+
+/// Build the linearized MNA system around guess `x` at time `t`.
+#[allow(clippy::too_many_arguments)]
+fn stamp_all(
+    ckt: &Circuit,
+    t: f64,
+    x: &[f64],
+    cap: &CapMode<'_>,
+    gmin: f64,
+    a: &mut DMat,
+    b: &mut [f64],
+) {
+    a.clear();
+    b.iter_mut().for_each(|v| *v = 0.0);
+    let branch_base = ckt.n_nodes() - 1;
+    let mut branch = 0usize;
+    let mut cap_idx = 0usize;
+    for dev in &ckt.devices {
+        match dev {
+            Device::Resistor { p, n, r } => stamp_g(a, *p, *n, 1.0 / r),
+            Device::Capacitor { p, n, c, .. } => {
+                match cap {
+                    CapMode::Open => {
+                        // Tiny leak keeps cap-only nodes from floating in DC.
+                        stamp_g(a, *p, *n, 1e-12);
+                    }
+                    CapMode::Companion { h, method, state } => {
+                        let (geq, i0) = match method {
+                            Method::BackwardEuler => {
+                                let geq = c / h;
+                                (geq, -geq * state.v[cap_idx])
+                            }
+                            Method::Trapezoidal => {
+                                let geq = 2.0 * c / h;
+                                (geq, -geq * state.v[cap_idx] - state.i[cap_idx])
+                            }
+                        };
+                        stamp_g(a, *p, *n, geq);
+                        stamp_i(b, *p, *n, i0);
+                    }
+                }
+                cap_idx += 1;
+            }
+            Device::VSource { p, n, wave } => {
+                let bi = branch_base + branch;
+                if *p != 0 {
+                    a.add(*p - 1, bi, 1.0);
+                    a.add(bi, *p - 1, 1.0);
+                }
+                if *n != 0 {
+                    a.add(*n - 1, bi, -1.0);
+                    a.add(bi, *n - 1, -1.0);
+                }
+                b[bi] = wave.at(t);
+                branch += 1;
+            }
+            Device::ISource { p, n, wave } => {
+                stamp_i(b, *p, *n, wave.at(t));
+            }
+            Device::Diode { p, n, model } => {
+                let v = node_v(x, *p) - node_v(x, *n);
+                let (i, gd) = model.eval(v);
+                stamp_g(a, *p, *n, gd + gmin);
+                stamp_i(b, *p, *n, i - gd * v);
+            }
+            Device::Rram { p, n, model } => {
+                let v = node_v(x, *p) - node_v(x, *n);
+                let (i, gd) = model.eval(v);
+                stamp_g(a, *p, *n, gd + gmin);
+                stamp_i(b, *p, *n, i - gd * v);
+            }
+            Device::Mosfet { d, g, s, model } => {
+                let vd = node_v(x, *d);
+                let vg = node_v(x, *g);
+                let vs = node_v(x, *s);
+                let op = mos_eval(model, vd, vg, vs);
+                let vgs = vg - vs;
+                let vds = vd - vs;
+                // i(d->s) = id + gm*dvgs + gds*dvds; stamp the linearization.
+                let ieq = op.id - op.gm * vgs - op.gds * vds;
+                // Drain row.
+                if *d != 0 {
+                    if *g != 0 {
+                        a.add(*d - 1, *g - 1, op.gm);
+                    }
+                    if *s != 0 {
+                        a.add(*d - 1, *s - 1, -op.gm - op.gds);
+                    }
+                    a.add(*d - 1, *d - 1, op.gds);
+                    b[*d - 1] -= ieq;
+                }
+                // Source row (current enters the source terminal).
+                if *s != 0 {
+                    if *g != 0 {
+                        a.add(*s - 1, *g - 1, -op.gm);
+                    }
+                    a.add(*s - 1, *s - 1, op.gm + op.gds);
+                    if *d != 0 {
+                        a.add(*s - 1, *d - 1, -op.gds);
+                    }
+                    b[*s - 1] += ieq;
+                }
+                // Keep drain/source weakly tied so cutoff devices do not
+                // leave floating nodes.
+                stamp_g(a, *d, *s, gmin);
+            }
+            Device::MosfetFg { d, s, vg, model } => {
+                // Same linearization as Mosfet with the gate voltage a known
+                // constant: the gm term becomes part of the RHS.
+                let vd = node_v(x, *d);
+                let vs = node_v(x, *s);
+                let op = mos_eval(model, vd, *vg, vs);
+                let vgs = vg - vs;
+                let vds = vd - vs;
+                let ieq = op.id - op.gm * vgs - op.gds * vds;
+                // i(d->s) = ieq + gm*(vg - vs) + gds*(vd - vs); vg is known,
+                // so fold gm*vg into the RHS and stamp -(gm+gds) on vs.
+                if *d != 0 {
+                    a.add(*d - 1, *d - 1, op.gds);
+                    if *s != 0 {
+                        a.add(*d - 1, *s - 1, -op.gm - op.gds);
+                    }
+                    b[*d - 1] -= ieq + op.gm * vg;
+                }
+                if *s != 0 {
+                    a.add(*s - 1, *s - 1, op.gm + op.gds);
+                    if *d != 0 {
+                        a.add(*s - 1, *d - 1, -op.gds);
+                    }
+                    b[*s - 1] += ieq + op.gm * vg;
+                }
+                stamp_g(a, *d, *s, gmin);
+            }
+            Device::Switch { p, n, g_on, g_off, on } => {
+                stamp_g(a, *p, *n, switch_g(*g_on, *g_off, on, t));
+            }
+            Device::Vccs { p, n, cp, cn, gm } => {
+                for (row, sign) in [(*p, 1.0), (*n, -1.0)] {
+                    if row != 0 {
+                        if *cp != 0 {
+                            a.add(row - 1, *cp - 1, sign * gm);
+                        }
+                        if *cn != 0 {
+                            a.add(row - 1, *cn - 1, -sign * gm);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One nonlinear solve (DC operating point or a single transient step).
+///
+/// `x` carries the initial guess in and the solution out. Returns the number
+/// of Newton iterations used.
+pub fn nr_solve(
+    ckt: &Circuit,
+    t: f64,
+    x: &mut [f64],
+    cap: CapMode<'_>,
+    opts: &NrOptions,
+    ws: &mut Workspace,
+) -> Result<usize, SpiceError> {
+    let n = ckt.n_unknowns();
+    assert_eq!(x.len(), n, "solution vector length mismatch");
+    let n_v = ckt.n_nodes() - 1;
+    let linear = !ckt.is_nonlinear();
+    let mut last_delta = f64::INFINITY;
+    for iter in 0..opts.max_iter {
+        stamp_all(ckt, t, x, &cap, opts.gmin, &mut ws.a, &mut ws.b);
+        lu_factor_inplace(&mut ws.a, &mut ws.perm)
+            .map_err(|e| SpiceError::Singular { at_col: e.at_col })?;
+        ws.x_new.copy_from_slice(&ws.b);
+        lu_solve_inplace(&ws.a, &ws.perm, &mut ws.x_new);
+
+        // Convergence check on the undamped update.
+        let mut converged = true;
+        let mut max_dv: f64 = 0.0;
+        for i in 0..n {
+            let dx = (ws.x_new[i] - x[i]).abs();
+            let abstol = if i < n_v { opts.vabstol } else { opts.iabstol };
+            let tol = opts.reltol * ws.x_new[i].abs().max(x[i].abs()) + abstol;
+            if dx > tol {
+                converged = false;
+            }
+            if i < n_v {
+                max_dv = max_dv.max(dx);
+            }
+        }
+        last_delta = max_dv;
+
+        if linear {
+            // One factorization is exact for linear circuits.
+            x.copy_from_slice(&ws.x_new);
+            return Ok(iter + 1);
+        }
+        if converged {
+            x.copy_from_slice(&ws.x_new);
+            return Ok(iter + 1);
+        }
+        // Damped update: scale the whole step so no node moves more than
+        // dv_max in one iteration (keeps exponential devices in line).
+        if max_dv > opts.dv_max {
+            let scale = opts.dv_max / max_dv;
+            for i in 0..n {
+                x[i] += scale * (ws.x_new[i] - x[i]);
+            }
+        } else {
+            x.copy_from_slice(&ws.x_new);
+        }
+    }
+    Err(SpiceError::NonConvergence { t, iters: opts.max_iter, max_delta: last_delta })
+}
+
+/// DC operating point with gmin stepping fallback.
+///
+/// Tries a direct solve first; on non-convergence walks gmin down from 1e-3
+/// to the target, reusing each stage's solution as the next initial guess.
+pub fn dc_op(ckt: &Circuit, opts: &NrOptions) -> Result<Vec<f64>, SpiceError> {
+    let mut ws = Workspace::for_circuit(ckt);
+    let mut x = vec![0.0; ckt.n_unknowns()];
+    match nr_solve(ckt, 0.0, &mut x, CapMode::Open, opts, &mut ws) {
+        Ok(_) => return Ok(x),
+        Err(SpiceError::NonConvergence { .. }) => {}
+        Err(e) => return Err(e),
+    }
+    // Gmin stepping continuation.
+    x.iter_mut().for_each(|v| *v = 0.0);
+    let mut gmin = 1e-3;
+    loop {
+        let staged = NrOptions { gmin, ..*opts };
+        nr_solve(ckt, 0.0, &mut x, CapMode::Open, &staged, &mut ws)?;
+        if gmin <= opts.gmin {
+            return Ok(x);
+        }
+        gmin = (gmin * 0.1).max(opts.gmin);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spice::devices::{DiodeModel, MosModel, RramModel};
+    use crate::spice::netlist::GND;
+    use crate::spice::waveform::Waveform;
+
+    #[test]
+    fn voltage_divider() {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let b = c.node("b");
+        c.vdc(a, GND, 2.0).resistor(a, b, 1e3).resistor(b, GND, 1e3);
+        let x = dc_op(&c, &NrOptions::default()).unwrap();
+        assert!((node_v(&x, a) - 2.0).abs() < 1e-9);
+        assert!((node_v(&x, b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vsource_branch_current() {
+        // 1 V across 1 kOhm: branch current = -1 mA by MNA sign convention
+        // (current flows from + through the source is positive out of p).
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        c.vdc(a, GND, 1.0).resistor(a, GND, 1e3);
+        let x = dc_op(&c, &NrOptions::default()).unwrap();
+        let i_branch = x[c.n_nodes() - 1];
+        assert!((i_branch + 1e-3).abs() < 1e-9, "got {i_branch}");
+    }
+
+    #[test]
+    fn current_source_into_resistor() {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        // 1 mA pushed from ground into node a through the source.
+        c.isource(GND, a, Waveform::Dc(1e-3)).resistor(a, GND, 1e3);
+        let x = dc_op(&c, &NrOptions::default()).unwrap();
+        assert!((node_v(&x, a) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diode_forward_drop() {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let k = c.node("k");
+        c.vdc(a, GND, 5.0).resistor(a, k, 1e3).diode(k, GND, DiodeModel::default());
+        let x = dc_op(&c, &NrOptions::default()).unwrap();
+        let vk = node_v(&x, k);
+        // A silicon-ish diode at ~4 mA should sit in the 0.6-1.1 V range for
+        // n=1.5 and conduct most of the supply across the resistor.
+        assert!(vk > 0.4 && vk < 1.2, "diode drop {vk}");
+        let i = (5.0 - vk) / 1e3;
+        let (i_d, _) = DiodeModel::default().eval(vk);
+        assert!((i - i_d).abs() / i < 1e-4, "KCL mismatch {i} vs {i_d}");
+    }
+
+    #[test]
+    fn rram_divider_is_consistent() {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let m = c.node("m");
+        let model = RramModel { g: 1e-4, alpha: 1.5 };
+        c.vdc(a, GND, 1.0).resistor(a, m, 2e3).rram(m, GND, model);
+        let x = dc_op(&c, &NrOptions::default()).unwrap();
+        let vm = node_v(&x, m);
+        let (i_r, _) = model.eval(vm);
+        let i_res = (1.0 - vm) / 2e3;
+        assert!((i_r - i_res).abs() < 1e-9, "KCL: {i_r} vs {i_res}");
+    }
+
+    #[test]
+    fn nmos_common_source() {
+        // NMOS with vgs = 1.5 (vth 0.5, k 2e-4) pulling current through a
+        // 10k drain resistor from a 5 V rail: sat current = 0.5*k*1 = 100 uA
+        // -> 1 V drop, vd = 4 V (lambda = 0).
+        let mut c = Circuit::new();
+        let vdd = c.node("vdd");
+        let g = c.node("g");
+        let d = c.node("d");
+        let model = MosModel { ty: MosType::Nmos, vth: 0.5, k: 2e-4, lambda: 0.0 };
+        c.vdc(vdd, GND, 5.0).vdc(g, GND, 1.5).resistor(vdd, d, 1e4).mosfet(d, g, GND, model);
+        let x = dc_op(&c, &NrOptions::default()).unwrap();
+        assert!((node_v(&x, d) - 4.0).abs() < 1e-3, "vd = {}", node_v(&x, d));
+    }
+
+    use crate::spice::devices::MosType;
+
+    #[test]
+    fn fixed_gate_matches_explicit_gate_node() {
+        // A 1T1R-style stack solved both ways must agree exactly.
+        let model = MosModel::access_nmos();
+        let rmodel = RramModel { g: 5e-5, alpha: 1.5 };
+        let build = |fixed: bool| {
+            let mut c = Circuit::new();
+            let rail = c.node("rail");
+            let m = c.node("m");
+            let bl = c.node("bl");
+            c.vdc(rail, GND, 0.2);
+            if fixed {
+                c.mosfet_fg(rail, m, 0.9, model);
+            } else {
+                let g = c.node("g");
+                c.vdc(g, GND, 0.9);
+                c.mosfet(rail, g, m, model);
+            }
+            c.rram(m, bl, rmodel).resistor(bl, GND, 1e4);
+            let x = dc_op(&c, &NrOptions::default()).unwrap();
+            (node_v(&x, m), node_v(&x, bl))
+        };
+        let (m_f, bl_f) = build(true);
+        let (m_e, bl_e) = build(false);
+        assert!((m_f - m_e).abs() < 1e-9, "internal {m_f} vs {m_e}");
+        assert!((bl_f - bl_e).abs() < 1e-9, "bitline {bl_f} vs {bl_e}");
+    }
+
+    #[test]
+    fn singular_reported_for_floating_subcircuit() {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let b = c.node("b");
+        // b touches only a current source chain with no DC path to ground.
+        c.vdc(a, GND, 1.0).resistor(a, GND, 1.0);
+        c.isource(a, b, Waveform::Dc(0.0));
+        let r = dc_op(&c, &NrOptions::default());
+        assert!(matches!(r, Err(SpiceError::Singular { .. })));
+    }
+
+    #[test]
+    fn vccs_transconductance() {
+        let mut c = Circuit::new();
+        let vin = c.node("in");
+        let out = c.node("out");
+        c.vdc(vin, GND, 0.5);
+        // i(out->gnd) = gm * v(in): 1 mS * 0.5 V = 0.5 mA into 1k -> -0.5 V.
+        c.vccs(out, GND, vin, GND, 1e-3).resistor(out, GND, 1e3);
+        let x = dc_op(&c, &NrOptions::default()).unwrap();
+        assert!((node_v(&x, out) + 0.5).abs() < 1e-9, "vout={}", node_v(&x, out));
+    }
+}

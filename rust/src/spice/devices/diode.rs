@@ -1,0 +1,90 @@
+//! Exponential junction diode (clamp / ESD devices in the peripheral).
+
+/// Diode model card.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiodeModel {
+    /// Saturation current (A).
+    pub is: f64,
+    /// Emission coefficient times thermal voltage, `n * Vt` (V).
+    pub n_vt: f64,
+}
+
+impl Default for DiodeModel {
+    fn default() -> Self {
+        // n = 1.5 at room temperature.
+        Self { is: 1e-14, n_vt: 1.5 * 0.025852 }
+    }
+}
+
+impl DiodeModel {
+    /// Current and small-signal conductance at junction voltage `v`.
+    /// The exponent is clamped so Newton iterates stay finite; beyond the
+    /// clamp the model continues linearly (standard SPICE practice).
+    #[inline]
+    pub fn eval(&self, v: f64) -> (f64, f64) {
+        let x = v / self.n_vt;
+        if x > 40.0 {
+            // Linear continuation of the exponential at x = 40.
+            let e = 40f64.exp();
+            let i0 = self.is * (e - 1.0);
+            let g = self.is * e / self.n_vt;
+            (i0 + g * (v - 40.0 * self.n_vt), g)
+        } else if x < -40.0 {
+            (-self.is, 1e-15)
+        } else {
+            let e = x.exp();
+            (self.is * (e - 1.0), self.is * e / self.n_vt)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bias_zero_current() {
+        let d = DiodeModel::default();
+        let (i, g) = d.eval(0.0);
+        assert_eq!(i, 0.0);
+        assert!(g > 0.0);
+    }
+
+    #[test]
+    fn forward_conduction() {
+        let d = DiodeModel::default();
+        let (i, _) = d.eval(0.7);
+        assert!(i > 1e-7, "diode should conduct at 0.7 V, got {i}");
+    }
+
+    #[test]
+    fn reverse_saturation() {
+        let d = DiodeModel::default();
+        let (i, _) = d.eval(-1.0);
+        assert!((i + d.is).abs() < 1e-16);
+    }
+
+    #[test]
+    fn monotone_and_finite_over_extreme_bias() {
+        let d = DiodeModel::default();
+        let mut prev = f64::NEG_INFINITY;
+        for k in -100..=100 {
+            let v = k as f64 * 0.05;
+            let (i, g) = d.eval(v);
+            assert!(i.is_finite() && g.is_finite());
+            assert!(i >= prev);
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let d = DiodeModel::default();
+        let h = 1e-9;
+        for v in [-0.5, 0.0, 0.3, 0.6] {
+            let (_, g) = d.eval(v);
+            let fd = (d.eval(v + h).0 - d.eval(v - h).0) / (2.0 * h);
+            assert!((g - fd).abs() < 1e-4 * (1.0 + fd.abs()), "v={v}: {g} vs {fd}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Circuit element types and their model cards.
+//!
+//! Each variant knows its terminals; the Newton-Raphson linearization /
+//! MNA stamping lives in [`crate::spice::dc`], the model math in the
+//! per-device submodules.
+
+pub mod diode;
+pub mod mosfet;
+pub mod rram;
+
+pub use diode::DiodeModel;
+pub use mosfet::{mos_eval, MosModel, MosOp, MosType};
+pub use rram::RramModel;
+
+use super::waveform::Waveform;
+
+/// Node identifier; `0` is ground.
+pub type NodeId = usize;
+
+/// A circuit element.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Device {
+    /// Linear resistor between `p` and `n`.
+    Resistor { p: NodeId, n: NodeId, r: f64 },
+    /// Linear capacitor; `ic` is the optional initial voltage used with
+    /// `uic` transient starts.
+    Capacitor { p: NodeId, n: NodeId, c: f64, ic: Option<f64> },
+    /// Independent voltage source (adds one MNA branch current unknown).
+    VSource { p: NodeId, n: NodeId, wave: Waveform },
+    /// Independent current source; positive current flows p -> n through
+    /// the source (i.e. it is pushed INTO node `n`).
+    ISource { p: NodeId, n: NodeId, wave: Waveform },
+    /// Junction diode, anode `p`, cathode `n`.
+    Diode { p: NodeId, n: NodeId, model: DiodeModel },
+    /// Level-1 MOSFET (drain, gate, source; bulk tied to source).
+    Mosfet { d: NodeId, g: NodeId, s: NodeId, model: MosModel },
+    /// Fixed-gate MOSFET: the gate is driven by an ideal source whose value
+    /// is a known parameter, not a circuit node. Level-1 gates draw no
+    /// current, so this is exact and removes one node + one source per cell
+    /// in crossbar netlists (the access-transistor activation input).
+    MosfetFg { d: NodeId, s: NodeId, vg: f64, model: MosModel },
+    /// Static RRAM / memristor read model.
+    Rram { p: NodeId, n: NodeId, model: RramModel },
+    /// Time-scheduled switch: conductance `g_on` while `t` is inside any
+    /// `[start, stop)` interval of `on`, else `g_off`. Used for ideal sense /
+    /// reset phases of the peripheral without NR discontinuity issues.
+    Switch { p: NodeId, n: NodeId, g_on: f64, g_off: f64, on: Vec<(f64, f64)> },
+    /// Voltage-controlled current source: `i(p->n) = gm * (v(cp) - v(cn))`.
+    Vccs { p: NodeId, n: NodeId, cp: NodeId, cn: NodeId, gm: f64 },
+}
+
+impl Device {
+    /// Whether this element contributes nonlinear (iteration-dependent)
+    /// stamps. Circuits with no nonlinear devices converge in one NR step.
+    pub fn is_nonlinear(&self) -> bool {
+        matches!(
+            self,
+            Device::Diode { .. } | Device::Mosfet { .. } | Device::MosfetFg { .. } | Device::Rram { .. }
+        )
+    }
+
+    /// Whether this element introduces an MNA branch-current unknown.
+    pub fn has_branch(&self) -> bool {
+        matches!(self, Device::VSource { .. })
+    }
+
+    /// Whether this element carries transient (capacitive) state.
+    pub fn has_state(&self) -> bool {
+        matches!(self, Device::Capacitor { .. })
+    }
+
+    /// Terminal list (for gmin insertion and connectivity checks).
+    pub fn terminals(&self) -> Vec<NodeId> {
+        match *self {
+            Device::Resistor { p, n, .. }
+            | Device::Capacitor { p, n, .. }
+            | Device::VSource { p, n, .. }
+            | Device::ISource { p, n, .. }
+            | Device::Diode { p, n, .. }
+            | Device::Rram { p, n, .. }
+            | Device::Switch { p, n, .. } => vec![p, n],
+            Device::Mosfet { d, g, s, .. } => vec![d, g, s],
+            Device::MosfetFg { d, s, .. } => vec![d, s],
+            Device::Vccs { p, n, cp, cn, .. } => vec![p, n, cp, cn],
+        }
+    }
+}
+
+/// Evaluate a time-scheduled switch's conductance at time `t`.
+#[inline]
+pub fn switch_g(g_on: f64, g_off: f64, on: &[(f64, f64)], t: f64) -> f64 {
+    if on.iter().any(|&(a, b)| t >= a && t < b) {
+        g_on
+    } else {
+        g_off
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nonlinearity_classification() {
+        let r = Device::Resistor { p: 1, n: 0, r: 1.0 };
+        let d = Device::Diode { p: 1, n: 0, model: DiodeModel::default() };
+        assert!(!r.is_nonlinear());
+        assert!(d.is_nonlinear());
+    }
+
+    #[test]
+    fn switch_schedule() {
+        let on = vec![(1.0, 2.0), (3.0, 4.0)];
+        assert_eq!(switch_g(1.0, 1e-12, &on, 0.5), 1e-12);
+        assert_eq!(switch_g(1.0, 1e-12, &on, 1.5), 1.0);
+        assert_eq!(switch_g(1.0, 1e-12, &on, 2.5), 1e-12);
+        assert_eq!(switch_g(1.0, 1e-12, &on, 3.0), 1.0);
+        // Half-open interval: off exactly at stop.
+        assert_eq!(switch_g(1.0, 1e-12, &on, 2.0), 1e-12);
+    }
+
+    #[test]
+    fn terminals_cover_all_pins() {
+        let m = Device::Mosfet { d: 3, g: 2, s: 1, model: MosModel::access_nmos() };
+        assert_eq!(m.terminals(), vec![3, 2, 1]);
+    }
+}

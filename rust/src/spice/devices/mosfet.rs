@@ -1,0 +1,164 @@
+//! Level-1 (Shichman-Hodges) MOSFET model.
+//!
+//! This is the access transistor of the 1T1R cell and the source-follower /
+//! switch transistor of the PS32 peripheral. The paper's own description of
+//! the cell response — flat below a threshold, `~ 1/2 k (V - V_t)^alpha`
+//! above it — is exactly level-1 saturation, which is why this model is a
+//! faithful substitute for the authors' fab-calibrated device (see DESIGN.md
+//! §Substitutions).
+
+/// N- or P-channel polarity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MosType {
+    Nmos,
+    Pmos,
+}
+
+/// Level-1 model card.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MosModel {
+    pub ty: MosType,
+    /// Threshold voltage (positive for both polarities; sign handled by `ty`).
+    pub vth: f64,
+    /// Transconductance factor `k = mu * Cox * W / L` (A/V^2).
+    pub k: f64,
+    /// Channel-length modulation (1/V).
+    pub lambda: f64,
+}
+
+impl MosModel {
+    /// A reasonable default access transistor for a 1T1R cell:
+    /// vth = 0.5 V, k = 200 uA/V^2, mild channel-length modulation.
+    pub fn access_nmos() -> Self {
+        Self { ty: MosType::Nmos, vth: 0.5, k: 2.0e-4, lambda: 0.01 }
+    }
+}
+
+/// Linearized operating point of the device at `(vgs, vds)`, in the ORIGINAL
+/// (d, g, s) frame: current `id` flows from drain to source and
+/// `id(vgs+dg, vds+dd) ~ id + gm*dg + gds*dd`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MosOp {
+    pub id: f64,
+    pub gm: f64,
+    pub gds: f64,
+}
+
+/// Evaluate the NMOS equations for `vds >= 0` (the canonical frame).
+fn nmos_canonical(model: &MosModel, vgs: f64, vds: f64) -> MosOp {
+    debug_assert!(vds >= 0.0);
+    let vov = vgs - model.vth;
+    if vov <= 0.0 {
+        // Cutoff. A tiny gds is added by the caller's gmin, not here.
+        return MosOp { id: 0.0, gm: 0.0, gds: 0.0 };
+    }
+    if vds < vov {
+        // Triode.
+        let id = model.k * (vov * vds - 0.5 * vds * vds);
+        let gm = model.k * vds;
+        let gds = model.k * (vov - vds);
+        MosOp { id, gm, gds }
+    } else {
+        // Saturation with channel-length modulation.
+        let idsat = 0.5 * model.k * vov * vov;
+        let id = idsat * (1.0 + model.lambda * vds);
+        let gm = model.k * vov * (1.0 + model.lambda * vds);
+        let gds = idsat * model.lambda;
+        MosOp { id, gm, gds }
+    }
+}
+
+/// Evaluate the model at terminal voltages `(vd, vg, vs)`, handling source /
+/// drain swap (symmetric device) and polarity. Returned quantities are in the
+/// original frame (see [`MosOp`]).
+pub fn mos_eval(model: &MosModel, vd: f64, vg: f64, vs: f64) -> MosOp {
+    match model.ty {
+        MosType::Nmos => mos_eval_n(model, vd, vg, vs),
+        MosType::Pmos => {
+            // PMOS = NMOS with all terminal voltages negated; current flips.
+            let op = mos_eval_n(model, -vd, -vg, -vs);
+            // id' = -id, and derivatives w.r.t. (vgs, vds) pick up (-1)*(-1).
+            MosOp { id: -op.id, gm: op.gm, gds: op.gds }
+        }
+    }
+}
+
+fn mos_eval_n(model: &MosModel, vd: f64, vg: f64, vs: f64) -> MosOp {
+    let vds = vd - vs;
+    if vds >= 0.0 {
+        nmos_canonical(model, vg - vs, vds)
+    } else {
+        // Swap source and drain: evaluate in the frame where vds' >= 0,
+        // then map the linearization back (see derivation in module docs).
+        let op = nmos_canonical(model, vg - vd, -vds);
+        MosOp { id: -op.id, gm: -op.gm, gds: op.gm + op.gds }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> MosModel {
+        MosModel { ty: MosType::Nmos, vth: 0.5, k: 2.0e-4, lambda: 0.0 }
+    }
+
+    #[test]
+    fn cutoff_zero_current() {
+        let op = mos_eval(&m(), 1.0, 0.3, 0.0);
+        assert_eq!(op.id, 0.0);
+        assert_eq!(op.gm, 0.0);
+    }
+
+    #[test]
+    fn saturation_square_law() {
+        // vgs = 1.5 -> vov = 1.0, vds = 2.0 > vov -> sat: id = k/2 * vov^2.
+        let op = mos_eval(&m(), 2.0, 1.5, 0.0);
+        assert!((op.id - 0.5 * 2.0e-4).abs() < 1e-12);
+        assert!((op.gm - 2.0e-4).abs() < 1e-12);
+        assert_eq!(op.gds, 0.0);
+    }
+
+    #[test]
+    fn triode_current() {
+        // vov = 1.0, vds = 0.5 -> triode: id = k*(1.0*0.5 - 0.125).
+        let op = mos_eval(&m(), 0.5, 1.5, 0.0);
+        assert!((op.id - 2.0e-4 * 0.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetric_swap_antisymmetric_current() {
+        // Swapping drain and source voltages flips the current sign when the
+        // gate is referenced symmetrically.
+        let a = mos_eval(&m(), 1.0, 2.0, 0.0);
+        let b = mos_eval(&m(), 0.0, 2.0, 1.0);
+        assert!((a.id + b.id).abs() < 1e-15, "{} vs {}", a.id, b.id);
+    }
+
+    #[test]
+    fn finite_difference_matches_derivatives() {
+        let model = MosModel { ty: MosType::Nmos, vth: 0.4, k: 1e-4, lambda: 0.02 };
+        let h = 1e-7;
+        for (vd, vg, vs) in [
+            (1.2, 1.0, 0.0),
+            (0.2, 1.0, 0.0),
+            (-0.5, 0.8, 0.0), // swapped frame
+            (0.7, 0.9, 0.3),
+        ] {
+            let op = mos_eval(&model, vd, vg, vs);
+            let dg = (mos_eval(&model, vd, vg + h, vs).id - mos_eval(&model, vd, vg - h, vs).id) / (2.0 * h);
+            let dd = (mos_eval(&model, vd + h, vg, vs).id - mos_eval(&model, vd - h, vg, vs).id) / (2.0 * h);
+            assert!((op.gm - dg).abs() < 1e-6 * (1.0 + dg.abs()), "gm: {} vs fd {}", op.gm, dg);
+            assert!((op.gds - dd).abs() < 1e-6 * (1.0 + dd.abs()), "gds: {} vs fd {}", op.gds, dd);
+        }
+    }
+
+    #[test]
+    fn pmos_mirrors_nmos() {
+        let nm = m();
+        let pm = MosModel { ty: MosType::Pmos, ..m() };
+        let n = mos_eval(&nm, 1.0, 1.5, 0.0);
+        let p = mos_eval(&pm, -1.0, -1.5, 0.0);
+        assert!((n.id + p.id).abs() < 1e-15);
+    }
+}

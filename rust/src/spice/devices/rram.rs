@@ -1,0 +1,96 @@
+//! Static RRAM (memristor) conduction model.
+//!
+//! The analog memory unit of the crossbar. We use the standard static
+//! `I = G * sinh(alpha * V) / alpha` nonlinearity (VTEAM/Stanford-style read
+//! model): for small `V` the device is ohmic with conductance `G`; for larger
+//! `V` the current grows super-linearly — the nonlinearity SEMULATOR's
+//! Conv4Xbar has to learn per cell. Conductance programming (the "weight") is
+//! a parameter, not a state variable: SEMULATOR emulates *read* dynamics.
+
+/// RRAM model card: programmed conductance plus nonlinearity shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RramModel {
+    /// Programmed (low-field) conductance in siemens.
+    pub g: f64,
+    /// Nonlinearity factor (1/V); `alpha -> 0` is a perfect resistor.
+    pub alpha: f64,
+}
+
+impl RramModel {
+    /// Typical analog RRAM window: 1 uS .. 100 uS with alpha ~ 1.5/V.
+    pub fn with_conductance(g: f64) -> Self {
+        Self { g, alpha: 1.5 }
+    }
+
+    /// Current and small-signal conductance at branch voltage `v`.
+    ///
+    /// `i = g * sinh(alpha*v) / alpha`, `di/dv = g * cosh(alpha*v)`.
+    /// The exponent is clamped at +-40 to keep Newton iterations finite.
+    #[inline]
+    pub fn eval(&self, v: f64) -> (f64, f64) {
+        if self.alpha.abs() < 1e-12 {
+            return (self.g * v, self.g);
+        }
+        let x = (self.alpha * v).clamp(-40.0, 40.0);
+        let i = self.g * x.sinh() / self.alpha;
+        let gd = self.g * x.cosh();
+        (i, gd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ohmic_at_small_bias() {
+        let m = RramModel { g: 1e-5, alpha: 1.5 };
+        let (i, gd) = m.eval(1e-3);
+        assert!((i - 1e-5 * 1e-3).abs() < 1e-12);
+        assert!((gd - 1e-5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn superlinear_at_high_bias() {
+        let m = RramModel { g: 1e-5, alpha: 2.0 };
+        let (i1, _) = m.eval(0.5);
+        let (i2, _) = m.eval(1.0);
+        // More than 2x current for 2x voltage.
+        assert!(i2 > 2.0 * i1);
+    }
+
+    #[test]
+    fn odd_symmetry() {
+        let m = RramModel::with_conductance(5e-5);
+        let (ip, gp) = m.eval(0.7);
+        let (im, gm) = m.eval(-0.7);
+        assert!((ip + im).abs() < 1e-18);
+        assert!((gp - gm).abs() < 1e-18);
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let m = RramModel { g: 2e-5, alpha: 1.5 };
+        let h = 1e-7;
+        for v in [-1.0, -0.3, 0.0, 0.2, 0.9] {
+            let (_, gd) = m.eval(v);
+            let fd = (m.eval(v + h).0 - m.eval(v - h).0) / (2.0 * h);
+            assert!((gd - fd).abs() < 1e-6 * (1.0 + fd.abs()), "v={v}: {gd} vs {fd}");
+        }
+    }
+
+    #[test]
+    fn alpha_zero_is_resistor() {
+        let m = RramModel { g: 1e-4, alpha: 0.0 };
+        let (i, gd) = m.eval(0.8);
+        assert_eq!(i, 1e-4 * 0.8);
+        assert_eq!(gd, 1e-4);
+    }
+
+    #[test]
+    fn clamp_keeps_finite() {
+        let m = RramModel { g: 1e-4, alpha: 10.0 };
+        let (i, gd) = m.eval(100.0);
+        assert!(i.is_finite() && gd.is_finite());
+    }
+}

@@ -1,0 +1,273 @@
+//! Dense linear algebra for MNA systems.
+//!
+//! Modified-nodal-analysis Jacobians for the circuits in this crate are small
+//! (tens to a few hundred unknowns once the structured crossbar path has
+//! eliminated the per-cell internal nodes, see [`crate::xbar::fast`]), so a
+//! cache-friendly dense LU with partial pivoting is both simpler and faster
+//! than a general sparse factorization at these sizes. The factorization is
+//! done in place and reuses the caller's buffers so the Newton-Raphson inner
+//! loop performs no allocation.
+
+/// A dense row-major matrix of `f64`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DMat {
+    n_rows: usize,
+    n_cols: usize,
+    data: Vec<f64>,
+}
+
+impl DMat {
+    /// Create an `n_rows x n_cols` zero matrix.
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Self {
+        Self { n_rows, n_cols, data: vec![0.0; n_rows * n_cols] }
+    }
+
+    /// Square zero matrix.
+    pub fn zeros_sq(n: usize) -> Self {
+        Self::zeros(n, n)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Reset all entries to zero, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.n_rows && c < self.n_cols);
+        self.data[r * self.n_cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.n_rows && c < self.n_cols);
+        self.data[r * self.n_cols + c] = v;
+    }
+
+    /// Accumulate `v` into entry `(r, c)` — the MNA "stamp" primitive.
+    #[inline]
+    pub fn add(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.n_rows && c < self.n_cols);
+        self.data[r * self.n_cols + c] += v;
+    }
+
+    /// Row slice access (row-major layout).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.n_cols..(r + 1) * self.n_cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.n_cols..(r + 1) * self.n_cols]
+    }
+
+    /// `y = self * x` (no allocation; `y.len() == n_rows`).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        for r in 0..self.n_rows {
+            let row = self.row(r);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x.iter()) {
+                acc += a * b;
+            }
+            y[r] = acc;
+        }
+    }
+}
+
+/// Error raised when an LU factorization hits a (numerically) singular pivot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SingularMatrix {
+    /// Elimination column at which the pivot underflowed.
+    pub at_col: usize,
+    /// The offending pivot magnitude.
+    pub pivot: f64,
+}
+
+impl std::fmt::Display for SingularMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "singular matrix: pivot {:e} at column {}", self.pivot, self.at_col)
+    }
+}
+
+impl std::error::Error for SingularMatrix {}
+
+/// In-place LU factorization with partial (row) pivoting.
+///
+/// After a successful call, `a` holds L (unit diagonal, below) and U (on and
+/// above the diagonal), and `perm[k]` records the row swapped into position
+/// `k` at step `k`. Use [`lu_solve_inplace`] to back-substitute.
+pub fn lu_factor_inplace(a: &mut DMat, perm: &mut Vec<usize>) -> Result<(), SingularMatrix> {
+    let n = a.n_rows;
+    assert_eq!(n, a.n_cols, "LU requires a square matrix");
+    perm.clear();
+    perm.reserve(n);
+    for k in 0..n {
+        // Partial pivot: find the largest |a[i][k]| for i >= k.
+        let mut p = k;
+        let mut pmax = a.get(k, k).abs();
+        for i in (k + 1)..n {
+            let v = a.get(i, k).abs();
+            if v > pmax {
+                pmax = v;
+                p = i;
+            }
+        }
+        if pmax < 1e-300 {
+            return Err(SingularMatrix { at_col: k, pivot: pmax });
+        }
+        if p != k {
+            // Swap rows k and p.
+            let (lo, hi) = a.data.split_at_mut(p * a.n_cols);
+            lo[k * a.n_cols..(k + 1) * a.n_cols].swap_with_slice(&mut hi[..a.n_cols]);
+        }
+        perm.push(p);
+        let pivot = a.get(k, k);
+        let inv_pivot = 1.0 / pivot;
+        for i in (k + 1)..n {
+            let m = a.get(i, k) * inv_pivot;
+            a.set(i, k, m);
+            if m != 0.0 {
+                // row_i -= m * row_k for columns k+1..n
+                let (rk, ri) = {
+                    let (lo, hi) = a.data.split_at_mut(i * a.n_cols);
+                    (&lo[k * a.n_cols..(k + 1) * a.n_cols], &mut hi[..a.n_cols])
+                };
+                for c in (k + 1)..n {
+                    ri[c] -= m * rk[c];
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Solve `A x = b` in place using the factorization from [`lu_factor_inplace`].
+/// `b` is overwritten with the solution.
+pub fn lu_solve_inplace(lu: &DMat, perm: &[usize], b: &mut [f64]) {
+    let n = lu.n_rows;
+    assert_eq!(b.len(), n);
+    assert_eq!(perm.len(), n);
+    // Apply the row permutation.
+    for (k, &p) in perm.iter().enumerate() {
+        if p != k {
+            b.swap(k, p);
+        }
+    }
+    // Forward substitution (L has unit diagonal).
+    for i in 1..n {
+        let row = lu.row(i);
+        let mut acc = b[i];
+        for k in 0..i {
+            acc -= row[k] * b[k];
+        }
+        b[i] = acc;
+    }
+    // Back substitution with U.
+    for i in (0..n).rev() {
+        let row = lu.row(i);
+        let mut acc = b[i];
+        for k in (i + 1)..n {
+            acc -= row[k] * b[k];
+        }
+        b[i] = acc / row[i];
+    }
+}
+
+/// One-shot dense solve: factors a copy of `a` and returns `x` with `a x = b`.
+pub fn solve(a: &DMat, b: &[f64]) -> Result<Vec<f64>, SingularMatrix> {
+    let mut lu = a.clone();
+    let mut perm = Vec::new();
+    lu_factor_inplace(&mut lu, &mut perm)?;
+    let mut x = b.to_vec();
+    lu_solve_inplace(&lu, &perm, &mut x);
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: &[&[f64]]) -> DMat {
+        let mut m = DMat::zeros(rows.len(), rows[0].len());
+        for (r, row) in rows.iter().enumerate() {
+            for (c, &v) in row.iter().enumerate() {
+                m.set(r, c, v);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn solve_identity() {
+        let a = mat(&[&[1.0, 0.0], &[0.0, 1.0]]);
+        let x = solve(&a, &[3.0, -4.5]).unwrap();
+        assert_eq!(x, vec![3.0, -4.5]);
+    }
+
+    #[test]
+    fn solve_2x2() {
+        let a = mat(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = solve(&a, &[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_needs_pivoting() {
+        // Zero on the initial diagonal forces a row swap.
+        let a = mat(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let x = solve(&a, &[2.0, 3.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = mat(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(solve(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn solve_random_5x5_roundtrip() {
+        // A x = b with a known x: reconstruct b then solve and compare.
+        let a = mat(&[
+            &[4.0, 1.0, 0.2, 0.0, 0.3],
+            &[1.0, 5.0, 1.0, 0.1, 0.0],
+            &[0.2, 1.0, 6.0, 1.0, 0.4],
+            &[0.0, 0.1, 1.0, 3.0, 1.0],
+            &[0.3, 0.0, 0.4, 1.0, 2.0],
+        ]);
+        let x_true = [1.0, -2.0, 0.5, 3.0, -1.0];
+        let mut b = vec![0.0; 5];
+        a.matvec_into(&x_true, &mut b);
+        let x = solve(&a, &b).unwrap();
+        for (xi, ti) in x.iter().zip(x_true.iter()) {
+            assert!((xi - ti).abs() < 1e-10, "{xi} vs {ti}");
+        }
+    }
+
+    #[test]
+    fn factor_reuse_multiple_rhs() {
+        let a = mat(&[&[3.0, 1.0], &[1.0, 2.0]]);
+        let mut lu = a.clone();
+        let mut perm = Vec::new();
+        lu_factor_inplace(&mut lu, &mut perm).unwrap();
+        for (b, expect) in [([5.0, 5.0], [1.0, 2.0]), ([4.0, 3.0], [1.0, 1.0])] {
+            let mut x = b.to_vec();
+            lu_solve_inplace(&lu, &perm, &mut x);
+            assert!((x[0] - expect[0]).abs() < 1e-12);
+            assert!((x[1] - expect[1]).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! A from-scratch SPICE-class circuit simulator.
+//!
+//! This is the substrate the paper's data generator (SPYCE) provides:
+//! modified nodal analysis with damped Newton-Raphson, gmin stepping, and
+//! backward-Euler / trapezoidal transient integration. It is the *golden*
+//! reference SEMULATOR is trained against and benchmarked over.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libstdc++ rpath in this offline
+//! // image; the same circuit is exercised by unit tests.)
+//! use semulator::spice::{Circuit, dc_op, NrOptions, node_v, GND};
+//!
+//! let mut c = Circuit::new();
+//! let a = c.node("a");
+//! let b = c.node("b");
+//! c.vdc(a, GND, 2.0).resistor(a, b, 1e3).resistor(b, GND, 1e3);
+//! let x = dc_op(&c, &NrOptions::default()).unwrap();
+//! assert!((node_v(&x, b) - 1.0).abs() < 1e-9);
+//! ```
+
+pub mod dc;
+pub mod devices;
+pub mod matrix;
+pub mod netlist;
+pub mod transient;
+pub mod waveform;
+
+pub use dc::{dc_op, node_v, CapMode, Method, NrOptions, SpiceError, TranState, Workspace};
+pub use devices::{Device, DiodeModel, MosModel, MosType, NodeId, RramModel};
+pub use netlist::{Circuit, GND};
+pub use transient::{transient, TranOptions, TranResult};
+pub use waveform::Waveform;

@@ -1,0 +1,240 @@
+//! Netlist / circuit container with a builder API.
+//!
+//! Node `0` is ground. Named nodes are interned; anonymous internal nodes are
+//! created with [`Circuit::fresh_node`]. Devices are stored in insertion
+//! order; that order defines the MNA branch-current numbering (voltage
+//! sources) and transient-state slots (capacitors).
+
+use std::collections::HashMap;
+
+use super::devices::{Device, DiodeModel, MosModel, NodeId, RramModel};
+use super::waveform::Waveform;
+
+/// Ground node id.
+pub const GND: NodeId = 0;
+
+/// A circuit under construction / simulation.
+#[derive(Debug, Clone, Default)]
+pub struct Circuit {
+    /// Interned node names (index = NodeId). `names[0] == "0"`.
+    names: Vec<String>,
+    by_name: HashMap<String, NodeId>,
+    /// Elements in insertion order.
+    pub devices: Vec<Device>,
+}
+
+impl Circuit {
+    pub fn new() -> Self {
+        let mut c = Circuit { names: Vec::new(), by_name: HashMap::new(), devices: Vec::new() };
+        c.names.push("0".to_string());
+        c.by_name.insert("0".to_string(), GND);
+        c
+    }
+
+    /// Intern (or look up) a named node.
+    pub fn node(&mut self, name: &str) -> NodeId {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        let id = self.names.len();
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    /// Create an anonymous internal node.
+    pub fn fresh_node(&mut self) -> NodeId {
+        let id = self.names.len();
+        self.names.push(format!("_n{id}"));
+        id
+    }
+
+    /// Look up a node id by name without creating it.
+    pub fn find_node(&self, name: &str) -> Option<NodeId> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Name of a node id (for diagnostics).
+    pub fn node_name(&self, id: NodeId) -> &str {
+        &self.names[id]
+    }
+
+    /// Total node count including ground.
+    pub fn n_nodes(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Number of MNA branch-current unknowns (one per voltage source).
+    pub fn n_branches(&self) -> usize {
+        self.devices.iter().filter(|d| d.has_branch()).count()
+    }
+
+    /// Number of transient state slots (one per capacitor).
+    pub fn n_states(&self) -> usize {
+        self.devices.iter().filter(|d| d.has_state()).count()
+    }
+
+    /// Size of the MNA unknown vector: node voltages (minus ground) plus
+    /// branch currents.
+    pub fn n_unknowns(&self) -> usize {
+        (self.n_nodes() - 1) + self.n_branches()
+    }
+
+    /// Whether any device requires Newton iteration.
+    pub fn is_nonlinear(&self) -> bool {
+        self.devices.iter().any(|d| d.is_nonlinear())
+    }
+
+    // ---- builder helpers -------------------------------------------------
+
+    pub fn resistor(&mut self, p: NodeId, n: NodeId, r: f64) -> &mut Self {
+        assert!(r > 0.0, "resistance must be positive, got {r}");
+        self.devices.push(Device::Resistor { p, n, r });
+        self
+    }
+
+    pub fn capacitor(&mut self, p: NodeId, n: NodeId, c: f64) -> &mut Self {
+        assert!(c > 0.0, "capacitance must be positive, got {c}");
+        self.devices.push(Device::Capacitor { p, n, c, ic: None });
+        self
+    }
+
+    pub fn capacitor_ic(&mut self, p: NodeId, n: NodeId, c: f64, ic: f64) -> &mut Self {
+        assert!(c > 0.0, "capacitance must be positive, got {c}");
+        self.devices.push(Device::Capacitor { p, n, c, ic: Some(ic) });
+        self
+    }
+
+    pub fn vsource(&mut self, p: NodeId, n: NodeId, wave: Waveform) -> &mut Self {
+        self.devices.push(Device::VSource { p, n, wave });
+        self
+    }
+
+    pub fn vdc(&mut self, p: NodeId, n: NodeId, v: f64) -> &mut Self {
+        self.vsource(p, n, Waveform::Dc(v))
+    }
+
+    pub fn isource(&mut self, p: NodeId, n: NodeId, wave: Waveform) -> &mut Self {
+        self.devices.push(Device::ISource { p, n, wave });
+        self
+    }
+
+    pub fn diode(&mut self, p: NodeId, n: NodeId, model: DiodeModel) -> &mut Self {
+        self.devices.push(Device::Diode { p, n, model });
+        self
+    }
+
+    pub fn mosfet(&mut self, d: NodeId, g: NodeId, s: NodeId, model: MosModel) -> &mut Self {
+        self.devices.push(Device::Mosfet { d, g, s, model });
+        self
+    }
+
+    /// Fixed-gate MOSFET (gate driven by a known voltage, not a node).
+    pub fn mosfet_fg(&mut self, d: NodeId, s: NodeId, vg: f64, model: MosModel) -> &mut Self {
+        self.devices.push(Device::MosfetFg { d, s, vg, model });
+        self
+    }
+
+    pub fn rram(&mut self, p: NodeId, n: NodeId, model: RramModel) -> &mut Self {
+        self.devices.push(Device::Rram { p, n, model });
+        self
+    }
+
+    pub fn switch(
+        &mut self,
+        p: NodeId,
+        n: NodeId,
+        g_on: f64,
+        g_off: f64,
+        on: Vec<(f64, f64)>,
+    ) -> &mut Self {
+        self.devices.push(Device::Switch { p, n, g_on, g_off, on });
+        self
+    }
+
+    pub fn vccs(&mut self, p: NodeId, n: NodeId, cp: NodeId, cn: NodeId, gm: f64) -> &mut Self {
+        self.devices.push(Device::Vccs { p, n, cp, cn, gm });
+        self
+    }
+
+    /// Sanity-check the netlist: every non-ground node must be reachable
+    /// through at least one device terminal, and ground must appear
+    /// somewhere (otherwise the MNA matrix is singular by construction).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut touched = vec![false; self.n_nodes()];
+        for d in &self.devices {
+            for t in d.terminals() {
+                if t >= self.n_nodes() {
+                    return Err(format!("device references unknown node id {t}"));
+                }
+                touched[t] = true;
+            }
+        }
+        if !touched[GND] {
+            return Err("no device is connected to ground".to_string());
+        }
+        for (id, t) in touched.iter().enumerate().skip(1) {
+            if !t {
+                return Err(format!("floating node '{}' (id {id})", self.names[id]));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_interning() {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let a2 = c.node("a");
+        let b = c.node("b");
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(c.find_node("a"), Some(a));
+        assert_eq!(c.find_node("zzz"), None);
+        assert_eq!(c.node_name(a), "a");
+    }
+
+    #[test]
+    fn unknown_counting() {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let b = c.node("b");
+        c.vdc(a, GND, 1.0).resistor(a, b, 1e3).capacitor(b, GND, 1e-12);
+        assert_eq!(c.n_nodes(), 3);
+        assert_eq!(c.n_branches(), 1);
+        assert_eq!(c.n_states(), 1);
+        assert_eq!(c.n_unknowns(), 3); // 2 node voltages + 1 branch current
+    }
+
+    #[test]
+    fn validate_catches_floating_node() {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let _orphan = c.node("orphan");
+        c.vdc(a, GND, 1.0);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_requires_ground() {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let b = c.node("b");
+        c.resistor(a, b, 1.0);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_ok_simple_divider() {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let b = c.node("b");
+        c.vdc(a, GND, 1.0).resistor(a, b, 1e3).resistor(b, GND, 1e3);
+        assert!(c.validate().is_ok());
+    }
+}

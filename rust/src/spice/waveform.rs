@@ -1,0 +1,189 @@
+//! Time-dependent source waveforms (the SPICE `DC`/`PULSE`/`PWL`/`SIN` forms).
+
+/// A source waveform evaluated at simulation time `t` (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Waveform {
+    /// Constant value.
+    Dc(f64),
+    /// SPICE `PULSE(v1 v2 td tr tf pw period)`. `period <= 0` means one-shot.
+    Pulse {
+        v1: f64,
+        v2: f64,
+        /// Delay before the first edge.
+        td: f64,
+        /// Rise time (v1 -> v2), linear ramp.
+        tr: f64,
+        /// Fall time (v2 -> v1), linear ramp.
+        tf: f64,
+        /// Pulse width at v2 (between ramps).
+        pw: f64,
+        /// Repetition period; `<= 0.0` disables repetition.
+        period: f64,
+    },
+    /// Piecewise-linear `(t, v)` points; must be sorted by `t`.
+    /// Clamps to the first/last value outside the range.
+    Pwl(Vec<(f64, f64)>),
+    /// `v = offset + ampl * sin(2*pi*freq*(t - td))` for `t >= td`, else offset.
+    Sine { offset: f64, ampl: f64, freq: f64, td: f64 },
+}
+
+impl Waveform {
+    /// Evaluate the waveform at time `t`.
+    pub fn at(&self, t: f64) -> f64 {
+        match self {
+            Waveform::Dc(v) => *v,
+            Waveform::Pulse { v1, v2, td, tr, tf, pw, period } => {
+                if t < *td {
+                    return *v1;
+                }
+                let mut tau = t - td;
+                if *period > 0.0 {
+                    tau %= period;
+                }
+                // Zero rise/fall degrade to ideal steps.
+                if tau < *tr {
+                    if *tr <= 0.0 {
+                        *v2
+                    } else {
+                        v1 + (v2 - v1) * (tau / tr)
+                    }
+                } else if tau < tr + pw {
+                    *v2
+                } else if tau < tr + pw + tf {
+                    if *tf <= 0.0 {
+                        *v1
+                    } else {
+                        v2 + (v1 - v2) * ((tau - tr - pw) / tf)
+                    }
+                } else {
+                    *v1
+                }
+            }
+            Waveform::Pwl(points) => {
+                if points.is_empty() {
+                    return 0.0;
+                }
+                if t <= points[0].0 {
+                    return points[0].1;
+                }
+                let last = points[points.len() - 1];
+                if t >= last.0 {
+                    return last.1;
+                }
+                // Linear interpolation in the containing segment.
+                for w in points.windows(2) {
+                    let (t0, v0) = w[0];
+                    let (t1, v1) = w[1];
+                    if t >= t0 && t <= t1 {
+                        if t1 <= t0 {
+                            return v1;
+                        }
+                        return v0 + (v1 - v0) * ((t - t0) / (t1 - t0));
+                    }
+                }
+                last.1
+            }
+            Waveform::Sine { offset, ampl, freq, td } => {
+                if t < *td {
+                    *offset
+                } else {
+                    offset + ampl * (2.0 * std::f64::consts::PI * freq * (t - td)).sin()
+                }
+            }
+        }
+    }
+
+    /// Times at which the waveform has a corner/discontinuity within
+    /// `[0, t_stop]`; the transient engine aligns steps to these so ideal
+    /// edges are not stepped over.
+    pub fn breakpoints(&self, t_stop: f64) -> Vec<f64> {
+        let mut bps = Vec::new();
+        match self {
+            Waveform::Dc(_) | Waveform::Sine { .. } => {}
+            Waveform::Pulse { td, tr, tf, pw, period, .. } => {
+                let mut base = *td;
+                loop {
+                    for edge in [base, base + tr, base + tr + pw, base + tr + pw + tf] {
+                        if edge <= t_stop {
+                            bps.push(edge);
+                        }
+                    }
+                    if *period > 0.0 {
+                        base += period;
+                        if base > t_stop {
+                            break;
+                        }
+                    } else {
+                        break;
+                    }
+                }
+            }
+            Waveform::Pwl(points) => {
+                bps.extend(points.iter().map(|p| p.0).filter(|&t| t > 0.0 && t <= t_stop));
+            }
+        }
+        bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dc_is_constant() {
+        let w = Waveform::Dc(1.5);
+        assert_eq!(w.at(0.0), 1.5);
+        assert_eq!(w.at(1e9), 1.5);
+    }
+
+    #[test]
+    fn pulse_phases() {
+        let w = Waveform::Pulse { v1: 0.0, v2: 1.0, td: 1.0, tr: 1.0, tf: 1.0, pw: 2.0, period: 0.0 };
+        assert_eq!(w.at(0.5), 0.0); // before delay
+        assert!((w.at(1.5) - 0.5).abs() < 1e-12); // mid-rise
+        assert_eq!(w.at(2.5), 1.0); // on
+        assert!((w.at(4.5) - 0.5).abs() < 1e-12); // mid-fall
+        assert_eq!(w.at(6.0), 0.0); // after
+    }
+
+    #[test]
+    fn pulse_periodic() {
+        let w = Waveform::Pulse { v1: 0.0, v2: 2.0, td: 0.0, tr: 0.0, tf: 0.0, pw: 1.0, period: 2.0 };
+        assert_eq!(w.at(0.5), 2.0);
+        assert_eq!(w.at(1.5), 0.0);
+        assert_eq!(w.at(2.5), 2.0);
+    }
+
+    #[test]
+    fn pulse_ideal_edges() {
+        let w = Waveform::Pulse { v1: 0.0, v2: 1.0, td: 0.0, tr: 0.0, tf: 0.0, pw: 5.0, period: 0.0 };
+        assert_eq!(w.at(0.0), 1.0);
+        assert_eq!(w.at(4.9), 1.0);
+        assert_eq!(w.at(5.1), 0.0);
+    }
+
+    #[test]
+    fn pwl_interpolates_and_clamps() {
+        let w = Waveform::Pwl(vec![(0.0, 0.0), (1.0, 2.0), (3.0, 2.0), (4.0, 0.0)]);
+        assert_eq!(w.at(-1.0), 0.0);
+        assert!((w.at(0.5) - 1.0).abs() < 1e-12);
+        assert_eq!(w.at(2.0), 2.0);
+        assert!((w.at(3.5) - 1.0).abs() < 1e-12);
+        assert_eq!(w.at(9.0), 0.0);
+    }
+
+    #[test]
+    fn sine_value() {
+        let w = Waveform::Sine { offset: 1.0, ampl: 2.0, freq: 1.0, td: 0.0 };
+        assert!((w.at(0.25) - 3.0).abs() < 1e-12);
+        assert!((w.at(0.75) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakpoints_cover_edges() {
+        let w = Waveform::Pulse { v1: 0.0, v2: 1.0, td: 1.0, tr: 0.5, tf: 0.5, pw: 1.0, period: 0.0 };
+        let bps = w.breakpoints(10.0);
+        assert_eq!(bps, vec![1.0, 1.5, 2.5, 3.0]);
+    }
+}

@@ -1,0 +1,212 @@
+//! Statistical machinery for SEMULATOR's error analysis.
+//!
+//! * [`erf`]/[`erfinv`] — error function and inverse (no libm dependency).
+//! * [`mse_bound`] — Theorem 4.1: the training-loss ceiling that guarantees
+//!   `P(|err| < 10^-s) > p` under the Lemma-4.2 Gaussian-error assumption.
+//!   (The theorem statement in the paper mixes up where the 1/2 sits; the
+//!   proof's final line — `(1/2)(10^-s / erf^-1(p))^2`, which evaluates to
+//!   the 6.7e-6 the experiments use for s=3, p=0.3 — is what we implement.)
+//! * [`Histogram`] — fixed-range binning for the Fig-7 error distributions.
+//! * [`moments`] — mean/var/skew/kurtosis, for empirically checking the
+//!   Gaussian-error lemma.
+
+pub mod special;
+
+pub use special::{erf, erfc, erfinv};
+
+/// Theorem 4.1: upper bound on the MSE loss such that
+/// `P(|Y - f(X)| < 10^-s) > p` when the error is zero-mean Gaussian.
+///
+/// `0.5 * (10^-s / erfinv(p))^2`; s = 3, p = 0.3 gives ~6.7e-6.
+pub fn mse_bound(s: f64, p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p), "p must be in (0,1)");
+    let tol = 10f64.powf(-s);
+    0.5 * (tol / erfinv(p)).powi(2)
+}
+
+/// Forward direction of the theorem: given an (assumed Gaussian, zero-mean)
+/// error variance `mse`, the probability that |err| < `tol`.
+pub fn p_within(mse: f64, tol: f64) -> f64 {
+    if mse <= 0.0 {
+        return 1.0;
+    }
+    erf(tol / (2.0 * mse).sqrt())
+}
+
+/// Empirical fraction of |errors| below `tol`.
+pub fn empirical_p_within(errors: &[f64], tol: f64) -> f64 {
+    if errors.is_empty() {
+        return 0.0;
+    }
+    errors.iter().filter(|e| e.abs() < tol).count() as f64 / errors.len() as f64
+}
+
+/// First four standardized moments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Moments {
+    pub n: usize,
+    pub mean: f64,
+    pub var: f64,
+    pub skew: f64,
+    /// Excess kurtosis (0 for a Gaussian).
+    pub kurtosis: f64,
+}
+
+/// Compute [`Moments`] of a sample.
+pub fn moments(xs: &[f64]) -> Moments {
+    let n = xs.len();
+    assert!(n > 1, "need at least two samples");
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let mut m2 = 0.0;
+    let mut m3 = 0.0;
+    let mut m4 = 0.0;
+    for &x in xs {
+        let d = x - mean;
+        m2 += d * d;
+        m3 += d * d * d;
+        m4 += d * d * d * d;
+    }
+    m2 /= n as f64;
+    m3 /= n as f64;
+    m4 /= n as f64;
+    let sd = m2.sqrt();
+    Moments {
+        n,
+        mean,
+        var: m2,
+        skew: if sd > 0.0 { m3 / (sd * sd * sd) } else { 0.0 },
+        kurtosis: if m2 > 0.0 { m4 / (m2 * m2) - 3.0 } else { 0.0 },
+    }
+}
+
+/// Fixed-range histogram (Fig 7's error distributions).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0 }
+    }
+
+    /// Build with a symmetric range of +-4 standard deviations around the mean.
+    pub fn of(xs: &[f64], bins: usize) -> Self {
+        let m = moments(xs);
+        let span = 4.0 * m.var.sqrt().max(1e-12);
+        let mut h = Self::new(m.mean - span, m.mean + span, bins);
+        h.add_all(xs);
+        h
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n_bins = self.counts.len();
+            let k = ((x - self.lo) / (self.hi - self.lo) * n_bins as f64) as usize;
+            self.counts[k.min(n_bins - 1)] += 1;
+        }
+    }
+
+    pub fn add_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Bin centers.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len()).map(|i| self.lo + w * (i as f64 + 0.5)).collect()
+    }
+
+    /// CSV: `center,count,density`.
+    pub fn to_csv(&self) -> String {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        let n = self.total().max(1) as f64;
+        let mut out = String::from("center,count,density\n");
+        for (c, &k) in self.centers().iter().zip(&self.counts) {
+            out.push_str(&format!("{c},{k},{}\n", k as f64 / (n * w)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn mse_bound_matches_paper_number() {
+        // s = 3, p = 0.3 -> ~6.7e-6 (paper Section 4.2).
+        let b = mse_bound(3.0, 0.3);
+        assert!((b - 6.7e-6).abs() < 0.2e-6, "bound {b}");
+    }
+
+    #[test]
+    fn bound_and_p_within_are_inverse() {
+        for (s, p) in [(3.0, 0.3), (2.0, 0.5), (4.0, 0.9)] {
+            let mse = mse_bound(s, p);
+            let p_back = p_within(mse, 10f64.powf(-s));
+            assert!((p_back - p).abs() < 1e-6, "s={s} p={p}: {p_back}");
+        }
+    }
+
+    #[test]
+    fn gaussian_sample_validates_theorem() {
+        // Draw Gaussian errors with variance exactly at the bound; the
+        // empirical P(|err| < 10^-s) must come out ~p.
+        let (s, p) = (3.0, 0.3);
+        let sigma = mse_bound(s, p).sqrt();
+        let mut rng = Rng::seed_from(42);
+        let xs: Vec<f64> = (0..200_000).map(|_| rng.normal() * sigma).collect();
+        let hat = empirical_p_within(&xs, 10f64.powf(-s));
+        assert!((hat - p).abs() < 0.01, "empirical {hat} vs {p}");
+    }
+
+    #[test]
+    fn moments_of_standard_normal() {
+        let mut rng = Rng::seed_from(7);
+        let xs: Vec<f64> = (0..100_000).map(|_| rng.normal()).collect();
+        let m = moments(&xs);
+        assert!(m.mean.abs() < 0.02);
+        assert!((m.var - 1.0).abs() < 0.03);
+        assert!(m.skew.abs() < 0.05);
+        assert!(m.kurtosis.abs() < 0.1);
+    }
+
+    #[test]
+    fn histogram_covers_all_samples() {
+        let mut h = Histogram::new(-1.0, 1.0, 10);
+        h.add_all(&[-2.0, -0.95, 0.0, 0.5, 0.999, 3.0]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 6);
+        assert_eq!(h.counts.iter().sum::<u64>(), 4);
+        let csv = h.to_csv();
+        assert!(csv.starts_with("center,count,density\n"));
+        assert_eq!(csv.lines().count(), 11);
+    }
+
+    #[test]
+    fn histogram_of_is_centered() {
+        let mut rng = Rng::seed_from(1);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.normal() + 5.0).collect();
+        let h = Histogram::of(&xs, 21);
+        let max_bin = h.counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0;
+        assert!((max_bin as isize - 10).abs() <= 2, "mode at {max_bin}");
+    }
+}

@@ -1,0 +1,119 @@
+//! Error function and inverse, implemented locally (offline environment —
+//! no libm crate). `erf` uses the Numerical-Recipes-style Chebyshev erfc
+//! approximation (~1e-7 relative); `erfinv` uses a rational initial guess
+//! refined by two Newton steps against our `erf`, giving near machine
+//! precision over (-1, 1).
+
+/// Complementary error function (positive and negative x).
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    // Chebyshev fit from Numerical Recipes (erfc ~ 1.2e-7 absolute).
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587 + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Error function.
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Inverse error function on (-1, 1).
+pub fn erfinv(p: f64) -> f64 {
+    assert!((-1.0..=1.0).contains(&p), "erfinv domain: {p}");
+    if p == 1.0 {
+        return f64::INFINITY;
+    }
+    if p == -1.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p == 0.0 {
+        return 0.0;
+    }
+    // Initial guess (Winitzki's approximation).
+    let a = 0.147;
+    let ln1mp2 = (1.0 - p * p).ln();
+    let term1 = 2.0 / (std::f64::consts::PI * a) + ln1mp2 / 2.0;
+    let mut x = (p.signum()) * ((term1 * term1 - ln1mp2 / a).sqrt() - term1).sqrt();
+    // Newton refinement: f(x) = erf(x) - p, f'(x) = 2/sqrt(pi) exp(-x^2).
+    let two_over_sqrt_pi = 2.0 / std::f64::consts::PI.sqrt();
+    for _ in 0..3 {
+        let err = erf(x) - p;
+        let deriv = two_over_sqrt_pi * (-x * x).exp();
+        if deriv.abs() < 1e-300 {
+            break;
+        }
+        x -= err / deriv;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // (x, erf(x)) reference pairs (Abramowitz & Stegun / scipy).
+        let table = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778),
+            (1.0, 0.8427007929),
+            (1.5, 0.9661051465),
+            (2.0, 0.9953222650),
+            (3.0, 0.9999779095),
+            (-1.0, -0.8427007929),
+        ];
+        for (x, want) in table {
+            let got = erf(x);
+            assert!((got - want).abs() < 2e-7, "erf({x}) = {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn erfc_symmetry() {
+        for x in [-2.0, -0.5, 0.0, 0.3, 1.7] {
+            assert!((erfc(x) + erfc(-x) - 2.0).abs() < 5e-7, "x={x}");
+            assert!((erf(x) + erfc(x) - 1.0).abs() < 1e-12, "x={x}"); // exact by construction
+        }
+    }
+
+    #[test]
+    fn erfinv_roundtrip() {
+        for p in [-0.999, -0.9, -0.3, -0.01, 0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 0.99, 0.9999] {
+            let x = erfinv(p);
+            let back = erf(x);
+            assert!((back - p).abs() < 1e-7, "p={p}: erf(erfinv(p)) = {back}");
+        }
+    }
+
+    #[test]
+    fn erfinv_reference_values() {
+        // scipy.special.erfinv reference.
+        let table = [(0.3, 0.2724627147), (0.5, 0.4769362762), (0.9, 1.1630871537)];
+        for (p, want) in table {
+            let got = erfinv(p);
+            assert!((got - want).abs() < 1e-6, "erfinv({p}) = {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn erfinv_extremes() {
+        assert_eq!(erfinv(1.0), f64::INFINITY);
+        assert_eq!(erfinv(-1.0), f64::NEG_INFINITY);
+        assert_eq!(erfinv(0.0), 0.0);
+    }
+}

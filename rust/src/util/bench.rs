@@ -1,0 +1,178 @@
+//! A small criterion-style benchmark harness.
+//!
+//! The offline environment has no criterion crate, so `cargo bench` targets
+//! (declared with `harness = false`) use this: warmup, timed iterations,
+//! robust statistics, and a one-line report compatible with the
+//! `name  time: [low mid high]` convention.
+
+use std::time::{Duration, Instant};
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Warmup wall-clock budget.
+    pub warmup: Duration,
+    /// Measurement wall-clock budget.
+    pub measure: Duration,
+    /// Minimum sample count regardless of budget.
+    pub min_samples: usize,
+    /// Maximum sample count (keeps very fast benches bounded).
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_samples: 10,
+            max_samples: 10_000,
+        }
+    }
+}
+
+/// Summary statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p05: Duration,
+    pub p95: Duration,
+    /// Mean iterations per second.
+    pub throughput: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  ({} samples, {:.1} it/s)",
+            self.name,
+            fmt_dur(self.p05),
+            fmt_dur(self.median),
+            fmt_dur(self.p95),
+            self.samples,
+            self.throughput,
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A named group of benchmarks sharing one config (mirrors criterion's API
+/// shape closely enough that benches read naturally).
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(BenchConfig::default())
+    }
+}
+
+impl Bencher {
+    pub fn new(config: BenchConfig) -> Self {
+        Self { config, results: Vec::new() }
+    }
+
+    /// Time `f`, which must perform one logical iteration per call and return
+    /// a value that is consumed (prevents dead-code elimination).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.config.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.config.measure || samples.len() < self.config.min_samples)
+            && samples.len() < self.config.max_samples
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples: n,
+            mean,
+            median: samples[n / 2],
+            p05: samples[n / 20],
+            p95: samples[(n * 19 / 20).min(n - 1)],
+            throughput: if mean.as_secs_f64() > 0.0 { 1.0 / mean.as_secs_f64() } else { f64::INFINITY },
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Ratio of two previously-run benchmarks' mean times (`a / b`), for
+    /// speedup summaries at the end of a bench binary.
+    pub fn speedup(&self, slow: &str, fast: &str) -> Option<f64> {
+        let find = |n: &str| self.results.iter().find(|r| r.name == n).map(|r| r.mean.as_secs_f64());
+        Some(find(slow)? / find(fast)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_samples: 5,
+            max_samples: 200,
+        }
+    }
+
+    #[test]
+    fn produces_ordered_percentiles() {
+        let mut b = Bencher::new(quick());
+        let s = b.bench("noop", || 1 + 1).clone();
+        assert!(s.p05 <= s.median && s.median <= s.p95);
+        assert!(s.samples >= 5);
+    }
+
+    #[test]
+    fn speedup_detects_slower_bench() {
+        let mut b = Bencher::new(quick());
+        b.bench("slow", || std::thread::sleep(Duration::from_micros(500)));
+        b.bench("fast", || std::hint::black_box(0u64));
+        let s = b.speedup("slow", "fast").unwrap();
+        assert!(s > 10.0, "speedup {s}");
+        assert!(b.speedup("slow", "missing").is_none());
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,136 @@
+//! Minimal command-line parsing (offline environment — no clap).
+//!
+//! Grammar: `semulator <command> [positional...] [--key value | --key=value
+//! | --switch]`. A `--name` token is a boolean switch when it is last or
+//! followed by another `--` token.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from raw tokens (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let mut out = Args::default();
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.insert(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.str_opt(name) {
+            Some(s) => s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn command_and_positional() {
+        let a = parse("train data.bin extra");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.positional, vec!["data.bin", "extra"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse("train --epochs 50 --lr=0.001");
+        assert_eq!(a.usize_or("epochs", 1).unwrap(), 50);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.001);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn switches() {
+        let a = parse("repro --verbose --preset ci --with-analytic");
+        assert!(a.has("verbose"));
+        assert!(a.has("with-analytic"));
+        assert_eq!(a.str_or("preset", "x"), "ci");
+        assert!(!a.has("preset"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --epochs abc");
+        assert!(a.usize_or("epochs", 1).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("t --variants cfg_a,cfg_b");
+        assert_eq!(a.list_or("variants", &["small"]), vec!["cfg_a", "cfg_b"]);
+        assert_eq!(a.list_or("other", &["small"]), vec!["small"]);
+    }
+}

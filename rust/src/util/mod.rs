@@ -1,0 +1,14 @@
+//! Zero-dependency utilities: deterministic RNG, JSON, a bench harness, and
+//! scoped-thread parallelism. The build environment is offline, so these
+//! replace the usual `rand` / `serde_json` / `criterion` / `rayon` stack.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+
+pub use bench::{BenchConfig, BenchStats, Bencher};
+pub use json::{parse as json_parse, Json, JsonError};
+pub use parallel::{default_workers, parallel_map};
+pub use rng::Rng;

@@ -1,0 +1,186 @@
+//! Full SPICE netlist construction for an analog computing block.
+//!
+//! This is the *golden* path: every 1T1R cell becomes a fixed-gate access
+//! transistor in series with an RRAM, tiles share global bitlines, and the
+//! PS32 peripheral from [`super::ps32`] hangs off each column pair. The
+//! resulting [`crate::spice::Circuit`] is solved by the generic MNA engine —
+//! slow but structure-free, used to validate the structured fast solver and
+//! as the SPICE baseline in the speed benchmarks.
+
+use crate::spice::{Circuit, NodeId, RramModel, GND};
+
+use super::config::{BlockConfig, CellInputs};
+use super::ps32::attach_ps32;
+
+/// A built block netlist with the nodes the caller needs to observe.
+#[derive(Debug, Clone)]
+pub struct BlockNetlist {
+    pub circuit: Circuit,
+    /// Read rail node (driven at `v_read`).
+    pub rail: NodeId,
+    /// Global bitline nodes, one per column.
+    pub bitlines: Vec<NodeId>,
+    /// MAC output nodes, one per column pair.
+    pub outputs: Vec<NodeId>,
+}
+
+/// Build the complete circuit for `cfg` with per-cell inputs `x`.
+///
+/// Layout: cell `(t, r, c)` is an access transistor from the shared read
+/// rail to an internal node, then an RRAM from that node to bitline `c`.
+/// The gate voltage is the activation input; the RRAM conductance is the
+/// weight input.
+pub fn build_block(cfg: &BlockConfig, x: &CellInputs) -> BlockNetlist {
+    cfg.validate().expect("invalid block config");
+    assert_eq!(x.v.len(), cfg.n_cells(), "activation vector length");
+    assert_eq!(x.g.len(), cfg.n_cells(), "conductance vector length");
+
+    let mut c = Circuit::new();
+    let rail = c.node("rail");
+    c.vdc(rail, GND, cfg.v_read);
+
+    let bitlines: Vec<NodeId> = (0..cfg.cols).map(|j| c.node(&format!("bl{j}"))).collect();
+
+    for t in 0..cfg.tiles {
+        for r in 0..cfg.rows {
+            for j in 0..cfg.cols {
+                let k = CellInputs::idx(cfg, t, r, j);
+                let m = c.fresh_node();
+                c.mosfet_fg(rail, m, x.v[k], cfg.cell.mos);
+                c.rram(m, bitlines[j], RramModel { g: x.g[k], alpha: cfg.cell.rram_alpha });
+            }
+        }
+    }
+
+    let outputs = attach_ps32(&mut c, cfg, &bitlines);
+    BlockNetlist { circuit: c, rail, bitlines, outputs }
+}
+
+/// Like [`build_block`], but with non-ideal bitlines: each column is a
+/// resistive ladder with `r_seg` ohms of wire between consecutive cells
+/// (row-major within a tile, tiles chained), and the sense node at the
+/// far (peripheral) end.
+///
+/// The structured fast solver assumes ideal wires (all cells of a column
+/// see the same bitline voltage); this builder exists to *quantify* that
+/// assumption: `r_seg` of a few ohms is typical for scaled metal, and the
+/// integration tests measure the output deviation it introduces (see
+/// `xbar_integration::parasitic_wire_effect_is_bounded`). Crossbars where
+/// the deviation matters need the golden path (or a ladder-aware fast
+/// solver — future work noted in DESIGN.md).
+pub fn build_block_parasitic(cfg: &BlockConfig, x: &CellInputs, r_seg: f64) -> BlockNetlist {
+    cfg.validate().expect("invalid block config");
+    assert!(r_seg >= 0.0, "wire resistance must be non-negative");
+    assert_eq!(x.v.len(), cfg.n_cells());
+    assert_eq!(x.g.len(), cfg.n_cells());
+
+    let mut c = Circuit::new();
+    let rail = c.node("rail");
+    c.vdc(rail, GND, cfg.v_read);
+
+    // Sense-end bitline nodes (what the peripheral sees).
+    let bitlines: Vec<NodeId> = (0..cfg.cols).map(|j| c.node(&format!("bl{j}"))).collect();
+
+    for j in 0..cfg.cols {
+        // Build the ladder from the sense end upward.
+        let mut tap = bitlines[j];
+        for t in 0..cfg.tiles {
+            for r in 0..cfg.rows {
+                let k = CellInputs::idx(cfg, t, r, j);
+                if r_seg > 0.0 {
+                    let next = c.fresh_node();
+                    c.resistor(tap, next, r_seg);
+                    tap = next;
+                }
+                let m = c.fresh_node();
+                c.mosfet_fg(rail, m, x.v[k], cfg.cell.mos);
+                c.rram(m, tap, RramModel { g: x.g[k], alpha: cfg.cell.rram_alpha });
+            }
+        }
+    }
+
+    let outputs = attach_ps32(&mut c, cfg, &bitlines);
+    BlockNetlist { circuit: c, rail, bitlines, outputs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spice::{dc_op, node_v, transient, NrOptions, TranOptions};
+
+    fn tiny() -> BlockConfig {
+        BlockConfig::with_dims(1, 2, 2)
+    }
+
+    fn inputs(cfg: &BlockConfig, v: f64, g_plus: f64, g_minus: f64) -> CellInputs {
+        let mut x = CellInputs::zeros(cfg);
+        for t in 0..cfg.tiles {
+            for r in 0..cfg.rows {
+                for j in 0..cfg.cols {
+                    let k = CellInputs::idx(cfg, t, r, j);
+                    x.v[k] = v;
+                    x.g[k] = if j % 2 == 0 { g_plus } else { g_minus };
+                }
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn netlist_counts() {
+        let cfg = tiny();
+        let x = CellInputs::zeros(&cfg);
+        let net = build_block(&cfg, &x);
+        // Nodes: gnd + rail + 2 bitlines + 4 internal + ps32(out + 2 rails).
+        assert_eq!(net.bitlines.len(), 2);
+        assert_eq!(net.outputs.len(), 1);
+        assert!(net.circuit.validate().is_ok());
+        // 4 cells -> 4 transistors + 4 RRAMs; sources: rail + 2 clamp rails.
+        assert_eq!(net.circuit.n_branches(), 3);
+    }
+
+    #[test]
+    fn dc_op_converges_on_tiny_block() {
+        let cfg = tiny();
+        let x = inputs(&cfg, 1.0, 5e-5, 1e-6);
+        let net = build_block(&cfg, &x);
+        let sol = dc_op(&net.circuit, &NrOptions::default()).unwrap();
+        // In DC (caps open) the bitlines float up to near the rail.
+        for &bl in &net.bitlines {
+            let v = node_v(&sol, bl);
+            assert!(v > 0.0 && v <= cfg.v_read + 1e-6, "bl at {v}");
+        }
+    }
+
+    #[test]
+    fn transient_output_polarity() {
+        // g+ >> g-: the + column charges faster, so the MAC output must go
+        // positive; swapping the conductances must flip the sign.
+        let cfg = tiny();
+        let run = |gp, gm| {
+            let x = inputs(&cfg, 1.0, gp, gm);
+            let net = build_block(&cfg, &x);
+            let mut opts = TranOptions::new(cfg.t_sense, cfg.h);
+            opts.uic = true;
+            opts.record = vec![net.outputs[0]];
+            let res = transient(&net.circuit, &opts, &NrOptions::default()).unwrap();
+            res.final_value(0)
+        };
+        let plus = run(9e-5, 2e-6);
+        let minus = run(2e-6, 9e-5);
+        assert!(plus > 1e-4, "expected positive output, got {plus}");
+        assert!((plus + minus).abs() < 0.02 * plus.abs().max(1e-9), "asymmetric: {plus} vs {minus}");
+    }
+
+    #[test]
+    fn zero_activation_gives_near_zero_output() {
+        let cfg = tiny();
+        let x = inputs(&cfg, 0.0, 9e-5, 1e-6); // gates off -> no current
+        let net = build_block(&cfg, &x);
+        let mut opts = TranOptions::new(cfg.t_sense, cfg.h);
+        opts.uic = true;
+        opts.record = vec![net.outputs[0]];
+        let res = transient(&net.circuit, &opts, &NrOptions::default()).unwrap();
+        assert!(res.final_value(0).abs() < 1e-3, "leak too big: {}", res.final_value(0));
+    }
+}

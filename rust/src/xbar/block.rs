@@ -1,0 +1,105 @@
+//! High-level analog computing block API: the paper's "MAC unit".
+//!
+//! [`AnalogBlock`] owns a configuration and exposes both simulation paths:
+//! the structure-exploiting fast solver (`simulate`) used for dataset
+//! generation and golden-path serving, and the generic MNA netlist solve
+//! (`simulate_golden`) used for cross-validation and as the honest SPICE
+//! cost baseline in the speed benchmarks.
+
+use crate::spice::{transient, NrOptions, SpiceError, TranOptions};
+
+use super::array::build_block;
+use super::config::{BlockConfig, CellInputs};
+use super::fast::FastSolver;
+
+/// An analog computing block (crossbar + PS32 peripheral).
+pub struct AnalogBlock {
+    fast: FastSolver,
+}
+
+impl AnalogBlock {
+    pub fn new(cfg: BlockConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        Ok(Self { fast: FastSolver::new(cfg) })
+    }
+
+    pub fn config(&self) -> &BlockConfig {
+        self.fast.config()
+    }
+
+    /// Fast structured solve: MAC output voltages at `t_sense`.
+    pub fn simulate(&self, x: &CellInputs) -> Vec<f64> {
+        self.fast.simulate(x)
+    }
+
+    /// Full-netlist MNA solve of the identical discretization. Slow
+    /// (dense LU over every cell-internal node); use for validation and
+    /// benchmarking, not dataset generation.
+    pub fn simulate_golden(&self, x: &CellInputs) -> Result<Vec<f64>, SpiceError> {
+        let cfg = self.config();
+        let net = build_block(cfg, x);
+        let mut opts = TranOptions::new(cfg.t_sense, cfg.h);
+        opts.uic = true;
+        opts.record = net.outputs.clone();
+        let nr = NrOptions { reltol: 1e-9, vabstol: 1e-12, ..NrOptions::default() };
+        let res = transient(&net.circuit, &opts, &nr)?;
+        Ok((0..net.outputs.len()).map(|k| res.final_value(k)).collect())
+    }
+
+    /// Number of outputs (MAC units).
+    pub fn n_outputs(&self) -> usize {
+        self.config().n_mac()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_inputs(cfg: &BlockConfig, rng: &mut Rng) -> CellInputs {
+        let n = cfg.n_cells();
+        let mut x = CellInputs::zeros(cfg);
+        for k in 0..n {
+            x.v[k] = rng.range(0.0, cfg.v_gate_max);
+            x.g[k] = rng.range(cfg.cell.g_min, cfg.cell.g_max);
+        }
+        x
+    }
+
+    #[test]
+    fn fast_and_golden_agree_on_random_small_blocks() {
+        let mut rng = Rng::seed_from(1234);
+        let cfg = BlockConfig::with_dims(2, 3, 2);
+        let block = AnalogBlock::new(cfg.clone()).unwrap();
+        for _ in 0..5 {
+            let x = random_inputs(&cfg, &mut rng);
+            let fast = block.simulate(&x);
+            let gold = block.simulate_golden(&x).unwrap();
+            for (f, g) in fast.iter().zip(gold.iter()) {
+                assert!((f - g).abs() < 1e-5, "fast {f} vs golden {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_are_bounded_by_clamp() {
+        let mut rng = Rng::seed_from(99);
+        let cfg = BlockConfig::small();
+        let block = AnalogBlock::new(cfg.clone()).unwrap();
+        for _ in 0..20 {
+            let x = random_inputs(&cfg, &mut rng);
+            for o in block.simulate(&x) {
+                assert!(o.abs() < cfg.periph.v_clamp + 1.2, "output {o} beyond clamp");
+                assert!(o.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_config() {
+        let mut cfg = BlockConfig::small();
+        cfg.cols = 5;
+        assert!(AnalogBlock::new(cfg).is_err());
+    }
+}

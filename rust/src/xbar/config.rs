@@ -1,0 +1,239 @@
+//! Configuration of an analog computing block (crossbar + PS32 peripheral).
+//!
+//! One block = `tiles` stacked crossbar tiles of `rows x cols` 1T1R cells,
+//! whose columns share global bitlines, plus one PS32-style differential
+//! charge-sense MAC unit per column pair. This mirrors the paper's input
+//! tensor layout `(C, D, H, W) = (features, tiles, rows, cols)` with C = 2
+//! features per cell (applied gate voltage, programmed conductance), and
+//! `cols / 2` voltage outputs (Table 1: W=2 -> 1 MAC, W=8 -> 4 MACs).
+
+use crate::spice::{DiodeModel, MosModel};
+
+/// Cell electrical parameters (shared by every cell in the array).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellParams {
+    /// Access transistor model.
+    pub mos: MosModel,
+    /// RRAM nonlinearity factor (1/V); conductance is per-cell data.
+    pub rram_alpha: f64,
+    /// Programmable conductance window (S).
+    pub g_min: f64,
+    pub g_max: f64,
+}
+
+impl Default for CellParams {
+    fn default() -> Self {
+        Self { mos: MosModel::access_nmos(), rram_alpha: 1.5, g_min: 1e-6, g_max: 1e-4 }
+    }
+}
+
+/// PS32 peripheral parameters (per MAC unit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeriphParams {
+    /// Bitline sense capacitance (F).
+    pub c_sense: f64,
+    /// Differential transconductance of the sense amplifier (S).
+    pub gm_amp: f64,
+    /// Output load resistance (Ohm) and capacitance (F).
+    pub r_load: f64,
+    pub c_load: f64,
+    /// Output clamp rail (V) and clamp diode model.
+    pub v_clamp: f64,
+    pub clamp: DiodeModel,
+}
+
+impl Default for PeriphParams {
+    fn default() -> Self {
+        Self {
+            c_sense: 100e-12,
+            gm_amp: 1e-3,
+            r_load: 5e3,
+            c_load: 20e-12,
+            v_clamp: 1.0,
+            clamp: DiodeModel::default(),
+        }
+    }
+}
+
+/// Full analog computing block configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockConfig {
+    /// Crossbar tiles stacked on shared bitlines (paper input dim D).
+    pub tiles: usize,
+    /// Rows per tile (paper input dim H).
+    pub rows: usize,
+    /// Columns = bitlines (paper input dim W); must be even (differential
+    /// +/- column pairs, one MAC output per pair).
+    pub cols: usize,
+    pub cell: CellParams,
+    pub periph: PeriphParams,
+    /// Read rail voltage applied to every cell drain (V).
+    pub v_read: f64,
+    /// Maximum activation (gate) voltage (V); inputs are normalized to
+    /// `[0, 1]` against this.
+    pub v_gate_max: f64,
+    /// Sense window (s) — the block's output is read at `t_sense`.
+    pub t_sense: f64,
+    /// Transient step (s).
+    pub h: f64,
+}
+
+impl BlockConfig {
+    /// Paper Table 1 row 1: inputs (2, 4, 64, 2), one MAC / one output.
+    pub fn paper_cfg_a() -> Self {
+        Self::with_dims(4, 64, 2)
+    }
+
+    /// Paper Table 1 row 2: inputs (2, 2, 64, 8), four MACs / four outputs.
+    pub fn paper_cfg_b() -> Self {
+        Self::with_dims(2, 64, 8)
+    }
+
+    /// Reduced block for single-core CI runs: inputs (2, 2, 16, 2).
+    pub fn small() -> Self {
+        Self::with_dims(2, 16, 2)
+    }
+
+    /// A block with the given (tiles, rows, cols) and default electricals.
+    pub fn with_dims(tiles: usize, rows: usize, cols: usize) -> Self {
+        Self {
+            tiles,
+            rows,
+            cols,
+            cell: CellParams::default(),
+            periph: PeriphParams::default(),
+            v_read: 0.2,
+            v_gate_max: 1.2,
+            t_sense: 200e-9,
+            h: 5e-9,
+        }
+    }
+
+    /// Number of MAC units / analog outputs.
+    pub fn n_mac(&self) -> usize {
+        self.cols / 2
+    }
+
+    /// Cells per block.
+    pub fn n_cells(&self) -> usize {
+        self.tiles * self.rows * self.cols
+    }
+
+    /// Input tensor shape `(C, D, H, W)` as in paper Table 1.
+    pub fn input_shape(&self) -> [usize; 4] {
+        [2, self.tiles, self.rows, self.cols]
+    }
+
+    /// Flat input feature count (`2 * tiles * rows * cols`).
+    pub fn n_features(&self) -> usize {
+        2 * self.n_cells()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.cols == 0 || self.cols % 2 != 0 {
+            return Err(format!("cols must be even and nonzero, got {}", self.cols));
+        }
+        if self.tiles == 0 || self.rows == 0 {
+            return Err("tiles and rows must be nonzero".into());
+        }
+        if self.cell.g_min <= 0.0 || self.cell.g_max <= self.cell.g_min {
+            return Err("need 0 < g_min < g_max".into());
+        }
+        if self.t_sense <= 0.0 || self.h <= 0.0 || self.h > self.t_sense {
+            return Err("need 0 < h <= t_sense".into());
+        }
+        Ok(())
+    }
+}
+
+/// Per-sample cell inputs in physical units, laid out `[tile][row][col]`
+/// flattened row-major (`t * rows * cols + r * cols + c`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellInputs {
+    /// Gate (activation) voltages, V.
+    pub v: Vec<f64>,
+    /// Programmed conductances, S.
+    pub g: Vec<f64>,
+}
+
+impl CellInputs {
+    pub fn zeros(cfg: &BlockConfig) -> Self {
+        let n = cfg.n_cells();
+        Self { v: vec![0.0; n], g: vec![cfg.cell.g_min; n] }
+    }
+
+    #[inline]
+    pub fn idx(cfg: &BlockConfig, tile: usize, row: usize, col: usize) -> usize {
+        debug_assert!(tile < cfg.tiles && row < cfg.rows && col < cfg.cols);
+        (tile * cfg.rows + row) * cfg.cols + col
+    }
+
+    /// Normalize into the network's input feature tensor layout
+    /// `(C=2, D, H, W)` flattened row-major, with voltage scaled by
+    /// `v_gate_max` and conductance min-max scaled over the G window.
+    pub fn normalized(&self, cfg: &BlockConfig) -> Vec<f32> {
+        let n = cfg.n_cells();
+        assert_eq!(self.v.len(), n);
+        assert_eq!(self.g.len(), n);
+        let mut out = Vec::with_capacity(2 * n);
+        for v in &self.v {
+            out.push((v / cfg.v_gate_max) as f32);
+        }
+        let span = cfg.cell.g_max - cfg.cell.g_min;
+        for g in &self.g {
+            out.push(((g - cfg.cell.g_min) / span) as f32);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shapes_match_table1() {
+        assert_eq!(BlockConfig::paper_cfg_a().input_shape(), [2, 4, 64, 2]);
+        assert_eq!(BlockConfig::paper_cfg_a().n_mac(), 1);
+        assert_eq!(BlockConfig::paper_cfg_b().input_shape(), [2, 2, 64, 8]);
+        assert_eq!(BlockConfig::paper_cfg_b().n_mac(), 4);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(BlockConfig::paper_cfg_a().validate().is_ok());
+        let mut bad = BlockConfig::small();
+        bad.cols = 3;
+        assert!(bad.validate().is_err());
+        let mut bad = BlockConfig::small();
+        bad.cell.g_max = bad.cell.g_min;
+        assert!(bad.validate().is_err());
+        let mut bad = BlockConfig::small();
+        bad.h = 1.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn indexing_is_row_major() {
+        let cfg = BlockConfig::with_dims(2, 3, 4);
+        assert_eq!(CellInputs::idx(&cfg, 0, 0, 0), 0);
+        assert_eq!(CellInputs::idx(&cfg, 0, 0, 3), 3);
+        assert_eq!(CellInputs::idx(&cfg, 0, 1, 0), 4);
+        assert_eq!(CellInputs::idx(&cfg, 1, 0, 0), 12);
+    }
+
+    #[test]
+    fn normalization_ranges() {
+        let cfg = BlockConfig::small();
+        let mut x = CellInputs::zeros(&cfg);
+        let n = cfg.n_cells();
+        x.v[0] = cfg.v_gate_max;
+        x.g[0] = cfg.cell.g_max;
+        let f = x.normalized(&cfg);
+        assert_eq!(f.len(), 2 * n);
+        assert!((f[0] - 1.0).abs() < 1e-6); // max voltage -> 1
+        assert!((f[n] - 1.0).abs() < 1e-6); // max conductance -> 1
+        assert!(f[1].abs() < 1e-6); // zero voltage -> 0
+        assert!(f[n + 1].abs() < 1e-6); // g_min -> 0
+    }
+}

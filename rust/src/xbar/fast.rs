@@ -1,0 +1,313 @@
+//! Structured two-level Newton solver for analog computing blocks.
+//!
+//! The generic MNA path ([`super::array`]) factors a dense Jacobian over
+//! every cell-internal node — O((cells)^3) per Newton step. This solver
+//! exploits the block's exact topology instead:
+//!
+//! 1. **Cell level** — given its bitline voltage, each 1T1R cell's internal
+//!    node satisfies a *scalar* current-continuity equation
+//!    `i_mos(v_rail, v_g, m) = i_rram(m - v_bl)`, solved by a bracketed
+//!    scalar Newton (warm-started across timesteps).
+//! 2. **Bitline level** — bitlines do not couple to each other or to the
+//!    output stage (the sense amplifier is a VCCS: infinite input
+//!    impedance), so each bitline's KCL with its sense capacitor is another
+//!    scalar Newton whose residual sums cell currents; `dI/dv_bl` comes from
+//!    the implicit-function theorem through the cell solve.
+//! 3. **Output level** — each MAC output with its RC load and clamp diodes
+//!    is a third scalar Newton.
+//!
+//! The result is O(cells) work per timestep with no matrix factorization at
+//! all, yet *exactly* the same fixed-step backward-Euler discretization as
+//! the generic engine — the two agree to Newton tolerance (see tests and
+//! `rust/tests/xbar_integration.rs`).
+
+use crate::spice::devices::{mos_eval, MosModel, RramModel};
+use crate::spice::DiodeModel;
+
+use super::config::{BlockConfig, CellInputs};
+
+/// Maximum Newton iterations for the scalar solves.
+const MAX_IT: usize = 60;
+
+/// Solve one cell: internal node voltage `m` such that the access-transistor
+/// current equals the RRAM current into the bitline. Returns
+/// `(i_into_bl, d i / d v_bl, m)`. `m_ws` is the warm start.
+#[inline]
+fn solve_cell(
+    mos: &MosModel,
+    rram: &RramModel,
+    v_rail: f64,
+    v_g: f64,
+    v_bl: f64,
+    m_ws: f64,
+) -> (f64, f64, f64) {
+    // Bracket: F(m) = i_mos - i_rram is strictly decreasing in m;
+    // F(min(bl, rail)) >= 0 >= F(max(bl, rail)).
+    let mut lo = v_bl.min(v_rail) - 0.5;
+    let mut hi = v_bl.max(v_rail) + 0.5;
+    let mut m = m_ws.clamp(lo, hi);
+    let mut f = 0.0;
+    let mut df = -1.0;
+    for _ in 0..MAX_IT {
+        let op = mos_eval(mos, v_rail, v_g, m);
+        let (ir, gr) = rram.eval(m - v_bl);
+        f = op.id - ir;
+        // dF/dm: transistor source moves with m (did/dvs = -gm - gds).
+        df = -(op.gm + op.gds) - gr;
+        if f.abs() < 1e-18 + 1e-12 * op.id.abs() {
+            break;
+        }
+        // Maintain the bracket (F decreasing: positive residual => root above).
+        if f > 0.0 {
+            lo = m;
+        } else {
+            hi = m;
+        }
+        let mut m_new = if df.abs() > 1e-300 { m - f / df } else { 0.5 * (lo + hi) };
+        if !(m_new > lo && m_new < hi) {
+            m_new = 0.5 * (lo + hi);
+        }
+        if (m_new - m).abs() < 1e-15 {
+            m = m_new;
+            break;
+        }
+        m = m_new;
+    }
+    let (ir, gr) = rram.eval(m - v_bl);
+    // Implicit function theorem: dm/dv_bl = -(dF/dv_bl)/(dF/dm) = -gr/df.
+    let dm_dbl = if df.abs() > 1e-300 { -gr / df } else { 0.0 };
+    let di_dbl = gr * (dm_dbl - 1.0);
+    let _ = f;
+    (ir, di_dbl, m)
+}
+
+/// Per-sample solver state (reused across timesteps for warm starts).
+pub struct FastSolver {
+    cfg: BlockConfig,
+    /// Cells regrouped per column: `per_col[j]` = indices into the flat
+    /// cell arrays, so the bitline loop walks memory contiguously.
+    per_col: Vec<Vec<usize>>,
+}
+
+impl FastSolver {
+    pub fn new(cfg: BlockConfig) -> Self {
+        cfg.validate().expect("invalid block config");
+        let mut per_col: Vec<Vec<usize>> = vec![Vec::with_capacity(cfg.tiles * cfg.rows); cfg.cols];
+        for t in 0..cfg.tiles {
+            for r in 0..cfg.rows {
+                for j in 0..cfg.cols {
+                    per_col[j].push(CellInputs::idx(&cfg, t, r, j));
+                }
+            }
+        }
+        Self { cfg, per_col }
+    }
+
+    pub fn config(&self) -> &BlockConfig {
+        &self.cfg
+    }
+
+    /// Simulate the block's sense transient and return the MAC output
+    /// voltages at `t_sense` (same backward-Euler discretization as the
+    /// generic engine with `uic = true`).
+    pub fn simulate(&self, x: &CellInputs) -> Vec<f64> {
+        self.simulate_opts(x, true)
+    }
+
+    /// `simulate` with the cross-timestep cell-Newton warm start togglable
+    /// (ablation for EXPERIMENTS.md §Perf; `warm_start = true` is the
+    /// production path and is what `simulate` uses).
+    pub fn simulate_opts(&self, x: &CellInputs, warm_start: bool) -> Vec<f64> {
+        let cfg = &self.cfg;
+        assert_eq!(x.v.len(), cfg.n_cells());
+        assert_eq!(x.g.len(), cfg.n_cells());
+        let p = &cfg.periph;
+        let n_steps = (cfg.t_sense / cfg.h).round().max(1.0) as usize;
+        let rram_models: Vec<RramModel> =
+            x.g.iter().map(|&g| RramModel { g, alpha: cfg.cell.rram_alpha }).collect();
+
+        let mut bl = vec![0.0f64; cfg.cols];
+        let mut out = vec![0.0f64; cfg.n_mac()];
+        let mut m_ws = vec![0.0f64; cfg.n_cells()];
+
+        for _ in 0..n_steps {
+            if !warm_start {
+                m_ws.iter_mut().for_each(|m| *m = 0.0);
+            }
+            // --- bitline level ------------------------------------------------
+            for j in 0..cfg.cols {
+                let bl_prev = bl[j];
+                let mut v = bl_prev; // warm start
+                let g_c = p.c_sense / cfg.h;
+                for _ in 0..MAX_IT {
+                    let mut i_sum = 0.0;
+                    let mut di_sum = 0.0;
+                    for &k in &self.per_col[j] {
+                        let (i, di, m) =
+                            solve_cell(&cfg.cell.mos, &rram_models[k], cfg.v_read, x.v[k], v, m_ws[k]);
+                        m_ws[k] = m;
+                        i_sum += i;
+                        di_sum += di;
+                    }
+                    let f = g_c * (v - bl_prev) - i_sum;
+                    let df = g_c - di_sum; // di_sum <= 0, so df > 0
+                    let dv = f / df;
+                    v -= dv;
+                    if dv.abs() < 1e-15 + 1e-10 * v.abs() {
+                        break;
+                    }
+                }
+                bl[j] = v;
+            }
+            // --- output level -------------------------------------------------
+            for m in 0..cfg.n_mac() {
+                let i_in = p.gm_amp * (bl[2 * m] - bl[2 * m + 1]);
+                out[m] = solve_output(p, out[m], i_in, cfg.h);
+            }
+        }
+        out
+    }
+}
+
+/// Backward-Euler step of the output stage: RC load + clamp diodes driven by
+/// the differential current `i_in`.
+#[inline]
+fn solve_output(p: &super::config::PeriphParams, out_prev: f64, i_in: f64, h: f64) -> f64 {
+    let g_c = p.c_load / h;
+    let g_l = 1.0 / p.r_load;
+    let clamp: &DiodeModel = &p.clamp;
+    let mut v = out_prev;
+    for _ in 0..MAX_IT {
+        let (i_up, g_up) = clamp.eval(v - p.v_clamp);
+        let (i_dn, g_dn) = clamp.eval(-p.v_clamp - v);
+        let f = g_c * (v - out_prev) + g_l * v - i_in + i_up - i_dn;
+        let df = g_c + g_l + g_up + g_dn;
+        let mut dv = f / df;
+        // Diode-friendly damping.
+        if dv.abs() > 0.3 {
+            dv = 0.3 * dv.signum();
+        }
+        v -= dv;
+        if dv.abs() < 1e-15 + 1e-10 * v.abs() {
+            break;
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spice::{transient, MosModel, NrOptions, TranOptions};
+    use crate::xbar::array::build_block;
+
+    fn fill(cfg: &BlockConfig, f: impl Fn(usize, usize, usize) -> (f64, f64)) -> CellInputs {
+        let mut x = CellInputs::zeros(cfg);
+        for t in 0..cfg.tiles {
+            for r in 0..cfg.rows {
+                for j in 0..cfg.cols {
+                    let k = CellInputs::idx(cfg, t, r, j);
+                    let (v, g) = f(t, r, j);
+                    x.v[k] = v;
+                    x.g[k] = g;
+                }
+            }
+        }
+        x
+    }
+
+    fn golden(cfg: &BlockConfig, x: &CellInputs) -> Vec<f64> {
+        let net = build_block(cfg, x);
+        let mut opts = TranOptions::new(cfg.t_sense, cfg.h);
+        opts.uic = true;
+        opts.record = net.outputs.clone();
+        let nr = NrOptions { reltol: 1e-9, vabstol: 1e-12, ..NrOptions::default() };
+        let res = transient(&net.circuit, &opts, &nr).unwrap();
+        (0..net.outputs.len()).map(|k| res.final_value(k)).collect()
+    }
+
+    #[test]
+    fn matches_generic_mna_on_tiny_block() {
+        let cfg = BlockConfig::with_dims(1, 2, 2);
+        let x = fill(&cfg, |_, r, j| {
+            let v = 0.4 + 0.3 * r as f64;
+            let g = if j % 2 == 0 { 6e-5 } else { 2e-5 };
+            (v, g)
+        });
+        let fast = FastSolver::new(cfg.clone()).simulate(&x);
+        let gold = golden(&cfg, &x);
+        assert_eq!(fast.len(), gold.len());
+        for (f, g) in fast.iter().zip(gold.iter()) {
+            assert!((f - g).abs() < 5e-6, "fast {f} vs golden {g}");
+        }
+    }
+
+    #[test]
+    fn matches_generic_mna_multi_mac() {
+        let cfg = BlockConfig::with_dims(1, 3, 4);
+        let x = fill(&cfg, |_, r, j| {
+            let v = 0.2 + 0.25 * ((r + j) % 4) as f64;
+            let g = 1e-6 + 2.3e-5 * ((r * 7 + j * 3) % 5) as f64;
+            (v, g)
+        });
+        let fast = FastSolver::new(cfg.clone()).simulate(&x);
+        let gold = golden(&cfg, &x);
+        for (f, g) in fast.iter().zip(gold.iter()) {
+            assert!((f - g).abs() < 5e-6, "fast {f} vs golden {g}");
+        }
+    }
+
+    #[test]
+    fn cell_solver_current_continuity() {
+        let mos = MosModel::access_nmos();
+        let rram = RramModel { g: 4e-5, alpha: 1.5 };
+        let (i, _, m) = solve_cell(&mos, &rram, 0.2, 0.9, 0.05, 0.0);
+        // The returned current must satisfy both device equations at m.
+        let op = mos_eval(&mos, 0.2, 0.9, m);
+        let (ir, _) = rram.eval(m - 0.05);
+        assert!((op.id - ir).abs() < 1e-12, "continuity {} vs {}", op.id, ir);
+        assert!((i - ir).abs() < 1e-18);
+        assert!(m > 0.05 && m < 0.2, "internal node {m} outside (bl, rail)");
+    }
+
+    #[test]
+    fn cell_solver_cutoff() {
+        let mos = MosModel::access_nmos(); // vth = 0.5
+        let rram = RramModel { g: 4e-5, alpha: 1.5 };
+        let (i, _, _) = solve_cell(&mos, &rram, 0.2, 0.3, 0.0, 0.1);
+        assert!(i.abs() < 1e-12, "cutoff cell leaks {i}");
+    }
+
+    #[test]
+    fn di_dbl_matches_finite_difference() {
+        let mos = MosModel::access_nmos();
+        let rram = RramModel { g: 4e-5, alpha: 1.5 };
+        let h = 1e-7;
+        for bl in [0.0, 0.05, 0.12] {
+            let (_, di, m) = solve_cell(&mos, &rram, 0.2, 1.0, bl, 0.1);
+            let (ip, _, _) = solve_cell(&mos, &rram, 0.2, 1.0, bl + h, m);
+            let (im, _, _) = solve_cell(&mos, &rram, 0.2, 1.0, bl - h, m);
+            let fd = (ip - im) / (2.0 * h);
+            assert!((di - fd).abs() < 1e-4 * (1.0 + fd.abs()), "bl={bl}: {di} vs {fd}");
+        }
+    }
+
+    #[test]
+    fn larger_activation_larger_output() {
+        let cfg = BlockConfig::small();
+        let solver = FastSolver::new(cfg.clone());
+        let lo = fill(&cfg, |_, _, j| (0.6, if j % 2 == 0 { 6e-5 } else { 1e-6 }));
+        let hi = fill(&cfg, |_, _, j| (1.1, if j % 2 == 0 { 6e-5 } else { 1e-6 }));
+        let o_lo = solver.simulate(&lo)[0];
+        let o_hi = solver.simulate(&hi)[0];
+        assert!(o_hi > o_lo, "monotone in activation: {o_lo} vs {o_hi}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = BlockConfig::small();
+        let solver = FastSolver::new(cfg.clone());
+        let x = fill(&cfg, |t, r, j| (0.3 + 0.1 * t as f64 + 0.02 * r as f64, 1e-6 + 1e-5 * j as f64));
+        assert_eq!(solver.simulate(&x), solver.simulate(&x));
+    }
+}

@@ -1,0 +1,20 @@
+//! Crossbar-array analog computing blocks: the system SEMULATOR emulates.
+//!
+//! * [`config`] — block geometry (tiles, rows, cols) and electrical
+//!   parameters, mirroring the paper's `(C, D, H, W)` input layout.
+//! * [`array`] — full SPICE netlist construction (golden path).
+//! * [`ps32`] — the differential charge-sense peripheral (one MAC per
+//!   column pair).
+//! * [`fast`] — structured two-level Newton solver, O(cells) per step.
+//! * [`block`] — the high-level `AnalogBlock` API.
+
+pub mod array;
+pub mod block;
+pub mod config;
+pub mod fast;
+pub mod ps32;
+
+pub use array::{build_block, BlockNetlist};
+pub use block::AnalogBlock;
+pub use config::{BlockConfig, CellInputs, CellParams, PeriphParams};
+pub use fast::FastSolver;

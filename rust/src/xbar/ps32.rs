@@ -1,0 +1,128 @@
+//! PS32-style differential charge-sense peripheral.
+//!
+//! The paper's analog computing unit (PS32, from the VCAM work [22]) is a
+//! custom accumulation circuit; its netlist is unpublished. We build the
+//! closest standard equivalent that preserves the behaviour SEMULATOR has to
+//! learn (DESIGN.md §Substitutions):
+//!
+//! * each bitline integrates its column current on a sense capacitor
+//!   (charge accumulation — the MAC "accumulate"),
+//! * each column *pair* (+ weights / - weights, paper Fig. 5) drives a
+//!   differential transconductance stage into an RC load (the MAC output is
+//!   a voltage), and
+//! * clamp diodes to +-`v_clamp` rails give the output stage a saturating
+//!   large-signal response.
+//!
+//! One MAC unit per column pair: W=2 -> 1 output, W=8 -> 4 outputs (Table 1).
+
+use crate::spice::{Circuit, NodeId, GND};
+
+use super::config::BlockConfig;
+
+/// Attach the peripheral to `bitlines`; returns the MAC output nodes.
+pub fn attach_ps32(c: &mut Circuit, cfg: &BlockConfig, bitlines: &[NodeId]) -> Vec<NodeId> {
+    assert_eq!(bitlines.len(), cfg.cols);
+    let p = &cfg.periph;
+
+    // Shared clamp rails.
+    let rail_p = c.node("clamp_p");
+    let rail_n = c.node("clamp_n");
+    c.vdc(rail_p, GND, p.v_clamp);
+    c.vdc(rail_n, GND, -p.v_clamp);
+
+    // Per-bitline sense capacitance.
+    for &bl in bitlines {
+        c.capacitor(bl, GND, p.c_sense);
+    }
+
+    // Per-pair differential stage.
+    let mut outs = Vec::with_capacity(cfg.n_mac());
+    for m in 0..cfg.n_mac() {
+        let blp = bitlines[2 * m];
+        let bln = bitlines[2 * m + 1];
+        let out = c.node(&format!("out{m}"));
+        // i(gnd -> out) = gm * (v(bl+) - v(bl-)): pushes the output up when
+        // the + column leads.
+        c.vccs(GND, out, blp, bln, p.gm_amp);
+        c.resistor(out, GND, p.r_load);
+        c.capacitor(out, GND, p.c_load);
+        // Saturation: clamp to +-(v_clamp + Vf).
+        c.diode(out, rail_p, p.clamp);
+        c.diode(rail_n, out, p.clamp);
+        outs.push(out);
+    }
+    outs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spice::{transient, NrOptions, TranOptions, Waveform};
+
+    /// Drive the peripheral with ideal current sources instead of a crossbar
+    /// to unit-test it in isolation.
+    fn peripheral_rig(i_plus: f64, i_minus: f64, cfg: &BlockConfig) -> (Circuit, Vec<NodeId>) {
+        let mut c = Circuit::new();
+        let blp = c.node("blp");
+        let bln = c.node("bln");
+        c.isource(GND, blp, Waveform::Dc(i_plus));
+        c.isource(GND, bln, Waveform::Dc(i_minus));
+        // Bleed resistors emulate the cell path impedance.
+        c.resistor(blp, GND, 1e6);
+        c.resistor(bln, GND, 1e6);
+        let outs = attach_ps32(&mut c, cfg, &[blp, bln]);
+        (c, outs)
+    }
+
+    fn sim_out(c: &Circuit, out: NodeId, cfg: &BlockConfig) -> f64 {
+        let mut opts = TranOptions::new(cfg.t_sense, cfg.h);
+        opts.uic = true;
+        opts.record = vec![out];
+        transient(c, &opts, &NrOptions::default()).unwrap().final_value(0)
+    }
+
+    #[test]
+    fn balanced_inputs_cancel() {
+        let cfg = BlockConfig::small();
+        let (c, outs) = peripheral_rig(50e-6, 50e-6, &cfg);
+        let v = sim_out(&c, outs[0], &cfg);
+        assert!(v.abs() < 1e-6, "balanced columns must cancel, got {v}");
+    }
+
+    #[test]
+    fn differential_gain_sign() {
+        let cfg = BlockConfig::small();
+        let (c, outs) = peripheral_rig(80e-6, 20e-6, &cfg);
+        let vp = sim_out(&c, outs[0], &cfg);
+        let (c2, outs2) = peripheral_rig(20e-6, 80e-6, &cfg);
+        let vn = sim_out(&c2, outs2[0], &cfg);
+        assert!(vp > 1e-3, "positive imbalance should give positive out, got {vp}");
+        assert!((vp + vn).abs() < 1e-3 * vp.abs().max(1e-9), "odd symmetry: {vp} vs {vn}");
+    }
+
+    #[test]
+    fn clamp_limits_large_swings() {
+        let cfg = BlockConfig::small();
+        // Hammer the + bitline hard; the clamp must keep the output near the
+        // rail plus one forward drop.
+        let (c, outs) = peripheral_rig(5e-3, 0.0, &cfg);
+        let v = sim_out(&c, outs[0], &cfg);
+        assert!(v < cfg.periph.v_clamp + 1.2, "clamp failed: {v}");
+    }
+
+    #[test]
+    fn one_output_per_pair() {
+        let cfg = BlockConfig::paper_cfg_b();
+        let mut c = Circuit::new();
+        let bls: Vec<NodeId> = (0..cfg.cols)
+            .map(|j| {
+                let n = c.node(&format!("b{j}"));
+                c.resistor(n, GND, 1e5);
+                n
+            })
+            .collect();
+        let outs = attach_ps32(&mut c, &cfg, &bls);
+        assert_eq!(outs.len(), 4);
+        assert!(c.validate().is_ok());
+    }
+}

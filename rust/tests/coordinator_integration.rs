@@ -1,0 +1,193 @@
+//! End-to-end coordinator tests: datagen -> train -> evaluate; batcher +
+//! router + TCP server round trips. Skipped without built artifacts.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use semulator::coordinator::{
+    evaluate_state, train, BatcherConfig, EmulatorService, LrSchedule, Metrics, Policy, Router,
+    Server, TrainConfig,
+};
+use semulator::datagen::{generate, GenConfig, SampleDist};
+use semulator::model::ModelState;
+use semulator::repro::block_for;
+use semulator::runtime::ArtifactStore;
+use semulator::util::{json_parse, Json, Rng};
+use semulator::xbar::AnalogBlock;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn train_on_real_spice_data_reduces_loss() {
+    let Some(dir) = artifact_dir() else { return };
+    let store = ArtifactStore::open(&dir).unwrap();
+    let ds = generate(&GenConfig::new(block_for("small").unwrap(), 512, 5));
+    let (train_ds, test_ds) = ds.split(0.125, 5);
+    let mut cfg = TrainConfig::new("small", 8);
+    cfg.lr = LrSchedule { base: 2e-3, halve_at: vec![6] };
+    cfg.eval_every = 0;
+    let (state, report) = train(&store, &cfg, &train_ds, &test_ds, |_| {}).unwrap();
+    let first = report.history.first().unwrap().train_loss;
+    let last = report.final_train_loss;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert_eq!(report.steps, 8 * train_ds.n.div_ceil(128));
+    // Evaluate the returned state independently; must match the report.
+    let stats = evaluate_state(&store, "small", &state, &test_ds).unwrap();
+    assert!((stats.mse - report.test.mse).abs() < 1e-9);
+    assert!(stats.mae > 0.0 && stats.mae.is_finite());
+}
+
+#[test]
+fn batcher_parallel_clients_agree_with_direct_forward() {
+    let Some(dir) = artifact_dir() else { return };
+    let store = ArtifactStore::open(&dir).unwrap();
+    let meta = store.meta.variant("small").unwrap().clone();
+    let state = ModelState::init(&meta, 1);
+    let metrics = Arc::new(Metrics::default());
+    let service = EmulatorService::spawn(
+        dir.clone(),
+        "small",
+        state.clone(),
+        BatcherConfig { max_batch: 16, max_wait: std::time::Duration::from_millis(2) },
+        metrics.clone(),
+    )
+    .unwrap();
+
+    // Direct single-sample answers via the repro helper for comparison.
+    let feat = meta.n_features();
+    let mk_features = |seed: u64| -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        (0..feat).map(|_| rng.uniform() as f32).collect()
+    };
+    let expected: Vec<Vec<f32>> = {
+        let ds = semulator::datagen::Dataset::new(
+            8,
+            feat,
+            meta.outputs,
+            (0..8).flat_map(mk_features).collect(),
+            vec![0.0; 8 * meta.outputs],
+        );
+        let preds = semulator::repro::predict_all(&store, "small", &state, &ds).unwrap();
+        (0..8).map(|i| preds[i * meta.outputs..(i + 1) * meta.outputs].to_vec()).collect()
+    };
+
+    // Hammer the batcher from 8 threads simultaneously.
+    let handle = service.handle();
+    let results: Vec<Vec<f32>> = std::thread::scope(|scope| {
+        let threads: Vec<_> = (0..8u64)
+            .map(|i| {
+                let h = handle.clone();
+                let f = mk_features(i);
+                scope.spawn(move || h.infer(f).unwrap())
+            })
+            .collect();
+        threads.into_iter().map(|t| t.join().unwrap()).collect()
+    });
+    for (got, want) in results.iter().zip(expected.iter()) {
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-5, "batcher {g} vs direct {w}");
+        }
+    }
+    assert_eq!(metrics.batched_requests.load(std::sync::atomic::Ordering::Relaxed), 8);
+    assert!(metrics.mean_batch_size() >= 1.0);
+}
+
+#[test]
+fn router_shadow_policy_and_tcp_server_roundtrip() {
+    let Some(dir) = artifact_dir() else { return };
+    let store = ArtifactStore::open(&dir).unwrap();
+    let meta = store.meta.variant("small").unwrap().clone();
+    let state = ModelState::init(&meta, 2);
+    let metrics = Arc::new(Metrics::default());
+    let service = EmulatorService::spawn(
+        dir.clone(),
+        "small",
+        state,
+        BatcherConfig::default(),
+        metrics.clone(),
+    )
+    .unwrap();
+    let block_cfg = block_for("small").unwrap();
+    let block = AnalogBlock::new(block_cfg.clone()).unwrap();
+    let router = Arc::new(Router::new(
+        block,
+        service.handle(),
+        Policy::Shadow { verify_frac: 1.0 },
+        metrics.clone(),
+        0,
+    ));
+    let server = Server::spawn("127.0.0.1:0", router, metrics.clone()).unwrap();
+
+    // Build one request in physical units.
+    let mut rng = Rng::seed_from(3);
+    let x = SampleDist::UniformIid.sample(&block_cfg, &mut rng);
+    let req = Json::obj(vec![("v", Json::arr_f64(&x.v)), ("g", Json::arr_f64(&x.g))]).to_string();
+
+    let mut stream = std::net::TcpStream::connect(server.addr).unwrap();
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let reply = json_parse(line.trim()).unwrap();
+    assert_eq!(reply.get("route").unwrap().as_str(), Some("emulated"));
+    let y = reply.get("y").unwrap().as_arr().unwrap();
+    assert_eq!(y.len(), block_cfg.n_mac());
+    // Shadow with verify_frac 1.0 must attach the deviation.
+    let dev = reply.get("verify_dev").unwrap().as_f64().unwrap();
+    assert!(dev.is_finite() && dev >= 0.0);
+
+    // Metrics query over the same connection.
+    stream.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let snap = json_parse(line.trim()).unwrap();
+    assert_eq!(snap.get("requests").unwrap().as_f64(), Some(1.0));
+    assert_eq!(snap.get("verified").unwrap().as_f64(), Some(1.0));
+
+    // Malformed request gets an error, not a hang.
+    stream.write_all(b"{\"v\": [1]}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"));
+}
+
+#[test]
+fn golden_policy_bypasses_emulator() {
+    let Some(dir) = artifact_dir() else { return };
+    let metrics = Arc::new(Metrics::default());
+    let meta = ArtifactStore::open(&dir).unwrap().meta.variant("small").unwrap().clone();
+    let service = EmulatorService::spawn(
+        dir,
+        "small",
+        ModelState::init(&meta, 0),
+        BatcherConfig::default(),
+        metrics.clone(),
+    )
+    .unwrap();
+    let block_cfg = block_for("small").unwrap();
+    let router = Router::new(
+        AnalogBlock::new(block_cfg.clone()).unwrap(),
+        service.handle(),
+        Policy::Golden,
+        metrics.clone(),
+        0,
+    );
+    let mut rng = Rng::seed_from(9);
+    let x = SampleDist::UniformIid.sample(&block_cfg, &mut rng);
+    let res = router.handle(&x).unwrap();
+    assert_eq!(res.route, semulator::coordinator::Route::Golden);
+    // The golden answer equals the block simulation exactly.
+    let direct = AnalogBlock::new(block_cfg).unwrap().simulate(&x);
+    assert_eq!(res.outputs, direct);
+    assert_eq!(metrics.emulated.load(std::sync::atomic::Ordering::Relaxed), 0);
+}

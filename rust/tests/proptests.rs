@@ -1,0 +1,216 @@
+//! Randomized property tests (seeded, deterministic — the offline
+//! environment has no proptest crate, so we drive properties with the
+//! crate's own RNG across many cases; failures print the case seed).
+
+use semulator::datagen::{Dataset, SampleDist};
+use semulator::spice::matrix::{solve, DMat};
+use semulator::spice::{dc_op, node_v, Circuit, NrOptions, RramModel, Waveform, GND};
+use semulator::stats::{erf, erfinv};
+use semulator::util::{json_parse, Json, Rng};
+use semulator::xbar::{AnalogBlock, BlockConfig};
+
+const CASES: u64 = 40;
+
+/// Property: LU solve residual ||Ax - b|| is tiny for random diagonally
+/// dominant systems of any size 1..=24.
+#[test]
+fn prop_lu_solve_residual() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from(1000 + case);
+        let n = 1 + rng.below(24);
+        let mut a = DMat::zeros_sq(n);
+        for i in 0..n {
+            let mut row_sum = 0.0;
+            for j in 0..n {
+                if i != j {
+                    let v = rng.range(-1.0, 1.0);
+                    a.set(i, j, v);
+                    row_sum += v.abs();
+                }
+            }
+            a.set(i, i, row_sum + rng.range(0.5, 2.0));
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.range(-5.0, 5.0)).collect();
+        let x = solve(&a, &b).unwrap_or_else(|e| panic!("case {case}: singular {e}"));
+        let mut r = vec![0.0; n];
+        a.matvec_into(&x, &mut r);
+        for i in 0..n {
+            assert!((r[i] - b[i]).abs() < 1e-8, "case {case}: residual row {i}");
+        }
+    }
+}
+
+/// Property: a random resistive divider network obeys superposition —
+/// doubling the source doubles every node voltage.
+#[test]
+fn prop_linear_circuit_superposition() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from(2000 + case);
+        let n_nodes = 2 + rng.below(6);
+        let build = |scale: f64, rng_seed: u64| {
+            let mut rng = Rng::seed_from(rng_seed);
+            let mut c = Circuit::new();
+            let nodes: Vec<_> = (0..n_nodes).map(|i| c.node(&format!("n{i}"))).collect();
+            c.vdc(nodes[0], GND, scale);
+            // Random spanning-ish resistor mesh (previous node -> ground
+            // guarantees connectivity).
+            for (i, &n) in nodes.iter().enumerate().skip(1) {
+                let prev = nodes[rng.below(i)];
+                c.resistor(prev, n, rng.range(1e2, 1e5));
+                c.resistor(n, GND, rng.range(1e3, 1e6));
+            }
+            let x = dc_op(&c, &NrOptions::default()).unwrap();
+            nodes.iter().map(|&nd| node_v(&x, nd)).collect::<Vec<_>>()
+        };
+        let v1 = build(1.0, 999 + case);
+        let v2 = build(2.0, 999 + case);
+        for (a, b) in v1.iter().zip(v2.iter()) {
+            assert!((2.0 * a - b).abs() < 1e-9, "case {case}: superposition {a} vs {b}");
+        }
+    }
+}
+
+/// Property: RRAM current is odd and monotone in voltage for any (g, alpha).
+#[test]
+fn prop_rram_monotone_odd() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from(3000 + case);
+        let m = RramModel { g: rng.range(1e-7, 1e-3), alpha: rng.range(0.0, 5.0) };
+        let mut prev = f64::NEG_INFINITY;
+        for k in -20..=20 {
+            let v = k as f64 * 0.1;
+            let (i, gd) = m.eval(v);
+            assert!(i >= prev, "case {case}: non-monotone at {v}");
+            assert!(gd >= 0.0);
+            let (i_neg, _) = m.eval(-v);
+            assert!((i + i_neg).abs() < 1e-15 * (1.0 + i.abs()), "case {case}: not odd at {v}");
+            prev = i;
+        }
+    }
+}
+
+/// Property: the waveform evaluator stays within [min(v1,v2), max(v1,v2)]
+/// for random pulse parameters, at all times.
+#[test]
+fn prop_pulse_bounded() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from(4000 + case);
+        let v1 = rng.range(-5.0, 5.0);
+        let v2 = rng.range(-5.0, 5.0);
+        let w = Waveform::Pulse {
+            v1,
+            v2,
+            td: rng.range(0.0, 1.0),
+            tr: rng.range(0.0, 0.5),
+            tf: rng.range(0.0, 0.5),
+            pw: rng.range(0.0, 2.0),
+            period: if rng.uniform() < 0.5 { 0.0 } else { rng.range(0.5, 3.0) },
+        };
+        let (lo, hi) = (v1.min(v2), v1.max(v2));
+        for k in 0..200 {
+            let t = k as f64 * 0.05;
+            let v = w.at(t);
+            assert!(v >= lo - 1e-12 && v <= hi + 1e-12, "case {case}: {v} outside [{lo},{hi}] at t={t}");
+        }
+    }
+}
+
+/// Property: dataset save/load roundtrips exactly for random shapes.
+#[test]
+fn prop_dataset_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("semprop_{}", std::process::id()));
+    for case in 0..10 {
+        let mut rng = Rng::seed_from(5000 + case);
+        let n = 1 + rng.below(50);
+        let d = 1 + rng.below(20);
+        let o = 1 + rng.below(4);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+        let y: Vec<f32> = (0..n * o).map(|_| rng.range(-1.0, 1.0) as f32).collect();
+        let ds = Dataset::new(n, d, o, x, y);
+        let path = dir.join(format!("c{case}.bin"));
+        ds.save(&path).unwrap();
+        assert_eq!(Dataset::load(&path).unwrap(), ds, "case {case}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Property: JSON writer output always re-parses to the same value.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.range(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let len = rng.below(8);
+                Json::Str((0..len).map(|_| ['a', 'b', '"', '\\', 'n', '\u{e9}', '\t'][rng.below(7)]).collect())
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..200 {
+        let mut rng = Rng::seed_from(6000 + case);
+        let v = random_json(&mut rng, 3);
+        let s = v.to_string();
+        let back = json_parse(&s).unwrap_or_else(|e| panic!("case {case}: {e} in {s}"));
+        assert_eq!(back, v, "case {case}: {s}");
+        let pretty = v.to_string_pretty();
+        assert_eq!(json_parse(&pretty).unwrap(), v, "case {case} pretty");
+    }
+}
+
+/// Property: erf/erfinv are inverse over random p, and erf is odd+monotone.
+#[test]
+fn prop_erf_inverse_monotone() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from(7000 + case);
+        let p = rng.range(-0.9999, 0.9999);
+        let x = erfinv(p);
+        assert!((erf(x) - p).abs() < 1e-6, "case {case}: p={p}");
+        let a = rng.range(-3.0, 3.0);
+        let b = a + rng.range(1e-6, 1.0);
+        assert!(erf(b) >= erf(a), "case {case}: erf not monotone");
+        assert!((erf(-a) + erf(a)).abs() < 5e-7, "case {case}: erf not odd");
+    }
+}
+
+/// Property: block outputs are invariant to the solver path for random tiny
+/// geometries (fast == golden within Newton tolerance).
+#[test]
+fn prop_fast_solver_equivalence_random_geometry() {
+    for case in 0..6 {
+        let mut rng = Rng::seed_from(8000 + case);
+        let cfg = BlockConfig::with_dims(1 + rng.below(2), 1 + rng.below(4), 2 * (1 + rng.below(2)));
+        let block = AnalogBlock::new(cfg.clone()).unwrap();
+        let x = SampleDist::UniformIid.sample(&cfg, &mut rng);
+        let fast = block.simulate(&x);
+        let gold = block.simulate_golden(&x).unwrap();
+        for (f, g) in fast.iter().zip(gold.iter()) {
+            assert!((f - g).abs() < 2e-5, "case {case} cfg {:?}: {f} vs {g}", cfg.input_shape());
+        }
+    }
+}
+
+/// Property: normalized features are within [0, 1] for any sampler.
+#[test]
+fn prop_normalization_bounds() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from(9000 + case);
+        let cfg = BlockConfig::with_dims(1 + rng.below(3), 1 + rng.below(8), 2);
+        let dist = match rng.below(3) {
+            0 => SampleDist::UniformIid,
+            1 => SampleDist::BinaryActs,
+            _ => SampleDist::SparseActs { p: rng.uniform() },
+        };
+        let x = dist.sample(&cfg, &mut rng);
+        for f in x.normalized(&cfg) {
+            assert!((-1e-6..=1.0 + 1e-6).contains(&(f as f64)), "case {case}: {f}");
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! PJRT runtime integration: load real artifacts, execute, check semantics.
+//! These tests require `make artifacts` to have run; they are skipped (with
+//! a message) otherwise so `cargo test` works on a fresh checkout.
+
+use std::path::PathBuf;
+
+use semulator::model::ModelState;
+use semulator::runtime::{lit_f32, lit_scalar, read_f32, ArtifactStore};
+
+fn artifacts() -> Option<ArtifactStore> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactStore::open(&dir).expect("opening artifact store"))
+}
+
+#[test]
+fn forward_executes_and_is_deterministic() {
+    let Some(store) = artifacts() else { return };
+    let meta = store.meta.variant("small").unwrap().clone();
+    let exe = store.executable("small", "fwd_b1").unwrap();
+    let state = ModelState::init(&meta, 7);
+    let params = state.to_literals().unwrap();
+    let mut dims = vec![1usize];
+    dims.extend_from_slice(&meta.input);
+    let x = lit_f32(&dims, &vec![0.25f32; meta.n_features()]).unwrap();
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.push(&x);
+    let y1 = read_f32(&exe.run(&inputs).unwrap()[0]).unwrap();
+    let y2 = read_f32(&exe.run(&inputs).unwrap()[0]).unwrap();
+    assert_eq!(y1.len(), meta.outputs);
+    assert_eq!(y1, y2);
+    assert!(y1.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn forward_batch_matches_b1() {
+    // The batched artifact must agree with the batch-1 artifact per row.
+    let Some(store) = artifacts() else { return };
+    let meta = store.meta.variant("small").unwrap().clone();
+    let state = ModelState::init(&meta, 3);
+    let params = state.to_literals().unwrap();
+    let feat = meta.n_features();
+    let b = meta.artifact("fwd_b64").unwrap().batch;
+    // Distinct rows.
+    let xs: Vec<f32> = (0..b * feat).map(|i| ((i % 97) as f32) / 97.0).collect();
+
+    let exe_b = store.executable("small", "fwd_b64").unwrap();
+    let mut dims = vec![b];
+    dims.extend_from_slice(&meta.input);
+    let x_lit = lit_f32(&dims, &xs).unwrap();
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.push(&x_lit);
+    let batched = read_f32(&exe_b.run(&inputs).unwrap()[0]).unwrap();
+
+    let exe_1 = store.executable("small", "fwd_b1").unwrap();
+    let mut dims1 = vec![1usize];
+    dims1.extend_from_slice(&meta.input);
+    for row in [0usize, 1, b / 2, b - 1] {
+        let x1 = lit_f32(&dims1, &xs[row * feat..(row + 1) * feat]).unwrap();
+        let mut inputs1: Vec<&xla::Literal> = params.iter().collect();
+        inputs1.push(&x1);
+        let y1 = read_f32(&exe_1.run(&inputs1).unwrap()[0]).unwrap();
+        for o in 0..meta.outputs {
+            let diff = (y1[o] - batched[row * meta.outputs + o]).abs();
+            assert!(diff < 1e-5, "row {row} out {o}: {diff}");
+        }
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_and_counts_steps() {
+    let Some(store) = artifacts() else { return };
+    let meta = store.meta.variant("small").unwrap().clone();
+    let am = meta.artifact("train").unwrap().clone();
+    let exe = store.executable("small", "train").unwrap();
+    let n_p = meta.n_param_arrays;
+
+    let mut params = ModelState::init(&meta, 0).to_literals().unwrap();
+    let mut m = ModelState::zeros_like(&meta).to_literals().unwrap();
+    let mut v = ModelState::zeros_like(&meta).to_literals().unwrap();
+    let mut step = lit_scalar(0.0);
+
+    let feat = meta.n_features();
+    let batch = am.batch;
+    let mut dims = vec![batch];
+    dims.extend_from_slice(&meta.input);
+    // Fixed synthetic batch: predict a linear functional of the features.
+    let xs: Vec<f32> = (0..batch * feat).map(|i| ((i * 31 % 101) as f32) / 101.0).collect();
+    let ys: Vec<f32> = (0..batch)
+        .map(|r| xs[r * feat..(r + 1) * feat].iter().sum::<f32>() / feat as f32 - 0.25)
+        .collect();
+    let x_lit = lit_f32(&dims, &xs).unwrap();
+    let y_lit = lit_f32(&[batch, meta.outputs], &ys).unwrap();
+    let lr = lit_scalar(3e-3);
+
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for it in 0..30 {
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(3 * n_p + 4);
+        inputs.extend(params.iter());
+        inputs.extend(m.iter());
+        inputs.extend(v.iter());
+        inputs.push(&step);
+        inputs.push(&x_lit);
+        inputs.push(&y_lit);
+        inputs.push(&lr);
+        let mut outs = exe.run(&inputs).unwrap();
+        assert_eq!(outs.len(), 3 * n_p + 2);
+        let loss = read_f32(&outs.pop().unwrap()).unwrap()[0];
+        step = outs.pop().unwrap();
+        let vs = outs.split_off(2 * n_p);
+        let ms = outs.split_off(n_p);
+        params = outs;
+        m = ms;
+        v = vs;
+        if it == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(last < 0.5 * first, "loss should halve on a fixed batch: {first} -> {last}");
+    assert_eq!(read_f32(&step).unwrap()[0], 30.0, "step counter");
+}
+
+#[test]
+fn eval_artifact_consistent_with_forward() {
+    let Some(store) = artifacts() else { return };
+    let meta = store.meta.variant("small").unwrap().clone();
+    let state = ModelState::init(&meta, 11);
+    let params = state.to_literals().unwrap();
+    let am = meta.artifact("eval").unwrap().clone();
+    let b = am.batch;
+    let feat = meta.n_features();
+    let xs: Vec<f32> = (0..b * feat).map(|i| ((i % 13) as f32) / 13.0).collect();
+    let ys = vec![0.05f32; b * meta.outputs];
+
+    let exe = store.executable("small", "eval").unwrap();
+    let mut dims = vec![b];
+    dims.extend_from_slice(&meta.input);
+    let x_lit = lit_f32(&dims, &xs).unwrap();
+    let y_lit = lit_f32(&[b, meta.outputs], &ys).unwrap();
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.push(&x_lit);
+    inputs.push(&y_lit);
+    let outs = exe.run(&inputs).unwrap();
+    let abs = read_f32(&outs[0]).unwrap();
+    let sq = read_f32(&outs[1]).unwrap();
+    assert_eq!(abs.len(), b * meta.outputs);
+    for (a, s) in abs.iter().zip(sq.iter()) {
+        assert!((a * a - s).abs() < 1e-6, "sq = abs^2 violated: {a} vs {s}");
+        assert!(*a >= 0.0);
+    }
+}

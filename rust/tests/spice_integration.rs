@@ -1,0 +1,179 @@
+//! Integration tests for the SPICE engine: multi-device circuits with
+//! known closed-form or qualitative behaviour.
+
+use semulator::spice::*;
+
+fn nr() -> NrOptions {
+    NrOptions::default()
+}
+
+#[test]
+fn wheatstone_bridge_balance() {
+    // Balanced bridge: no voltage across the detector resistor.
+    let mut c = Circuit::new();
+    let top = c.node("top");
+    let l = c.node("l");
+    let r = c.node("r");
+    c.vdc(top, GND, 10.0);
+    c.resistor(top, l, 1e3).resistor(l, GND, 2e3);
+    c.resistor(top, r, 2e3).resistor(r, GND, 4e3);
+    c.resistor(l, r, 5e2); // detector
+    let x = dc_op(&c, &nr()).unwrap();
+    assert!((node_v(&x, l) - node_v(&x, r)).abs() < 1e-9);
+}
+
+#[test]
+fn diode_bridge_rectifier_transient() {
+    // Full-wave rectifier with RC smoothing: output stays positive and
+    // ripples near the peak minus two diode drops.
+    let mut c = Circuit::new();
+    let acp = c.node("acp");
+    let acn = c.node("acn");
+    let outp = c.node("outp");
+    c.vsource(acp, acn, Waveform::Sine { offset: 0.0, ampl: 5.0, freq: 1e3, td: 0.0 });
+    let d = DiodeModel::default();
+    // Bridge: acp->outp, acn->outp, gnd->acp, gnd->acn (return path to GND).
+    c.diode(acp, outp, d);
+    c.diode(acn, outp, d);
+    c.diode(GND, acp, d);
+    c.diode(GND, acn, d);
+    c.resistor(outp, GND, 1e4);
+    c.capacitor(outp, GND, 2e-6);
+    let mut opts = TranOptions::new(5e-3, 5e-6);
+    opts.uic = true;
+    opts.record = vec![outp];
+    let res = transient(&c, &opts, &nr()).unwrap();
+    let late: Vec<f64> = res
+        .times
+        .iter()
+        .zip(&res.traces[0])
+        .filter(|(t, _)| **t > 2e-3)
+        .map(|(_, v)| *v)
+        .collect();
+    let vmin = late.iter().cloned().fold(f64::INFINITY, f64::min);
+    let vmax = late.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    assert!(vmin > 2.0, "rectified floor too low: {vmin}");
+    assert!(vmax < 5.0, "rectifier exceeded the source peak: {vmax}");
+    assert!(vmax - vmin < 1.0, "ripple too large: {}", vmax - vmin);
+}
+
+#[test]
+fn nmos_inverter_transfer_curve() {
+    // Resistor-load inverter: output falls monotonically as the input
+    // sweeps through threshold.
+    let model = MosModel { ty: MosType::Nmos, vth: 0.6, k: 5e-4, lambda: 0.01 };
+    let mut prev = f64::INFINITY;
+    for step in 0..=10 {
+        let vin = step as f64 * 0.2;
+        let mut c = Circuit::new();
+        let vdd = c.node("vdd");
+        let g = c.node("g");
+        let d = c.node("d");
+        c.vdc(vdd, GND, 2.0).vdc(g, GND, vin);
+        c.resistor(vdd, d, 2e4);
+        c.mosfet(d, g, GND, model);
+        let x = dc_op(&c, &nr()).unwrap();
+        let vout = node_v(&x, d);
+        assert!(vout <= prev + 1e-9, "non-monotone at vin={vin}: {vout} > {prev}");
+        prev = vout;
+    }
+    assert!(prev < 0.4, "inverter never pulled low: {prev}");
+}
+
+#[test]
+fn rram_crossbar_column_superposition_breaks_nonlinearly() {
+    // Two RRAM cells driving one column: with alpha > 0 the combined
+    // current is NOT the sum of individual currents at the shared node
+    // (the nonlinearity SEMULATOR must learn).
+    let run = |g1: Option<f64>, g2: Option<f64>| -> f64 {
+        let mut c = Circuit::new();
+        let r1 = c.node("r1");
+        let r2 = c.node("r2");
+        let col = c.node("col");
+        c.vdc(r1, GND, 0.3);
+        c.vdc(r2, GND, 0.3);
+        if let Some(g) = g1 {
+            c.rram(r1, col, RramModel { g, alpha: 2.0 });
+        }
+        if let Some(g) = g2 {
+            c.rram(r2, col, RramModel { g, alpha: 2.0 });
+        }
+        c.resistor(col, GND, 5e3);
+        let x = dc_op(&c, &NrOptions::default()).unwrap();
+        node_v(&x, col) / 5e3 // column current
+    };
+    let both = run(Some(5e-5), Some(5e-5));
+    let single = run(Some(5e-5), None);
+    assert!(both < 2.0 * single, "superposition should fail sublinearly: {both} vs 2*{single}");
+    assert!(both > 1.5 * single, "but must still grow with more cells");
+}
+
+#[test]
+fn gmin_stepping_rescues_hard_circuit() {
+    // Series diode stack straight across a supply: pure Newton from zero
+    // struggles; dc_op's continuation must converge anyway.
+    let mut c = Circuit::new();
+    let a = c.node("a");
+    let m1 = c.node("m1");
+    let m2 = c.node("m2");
+    c.vdc(a, GND, 3.0);
+    let d = DiodeModel { is: 1e-16, n_vt: 0.02585 };
+    c.diode(a, m1, d);
+    c.diode(m1, m2, d);
+    c.diode(m2, GND, d);
+    let x = dc_op(&c, &NrOptions::default()).unwrap();
+    // Three equal drops of ~1 V each.
+    assert!((node_v(&x, m1) - 2.0).abs() < 0.2, "m1 = {}", node_v(&x, m1));
+    assert!((node_v(&x, m2) - 1.0).abs() < 0.2, "m2 = {}", node_v(&x, m2));
+}
+
+#[test]
+fn transient_energy_conservation_rc() {
+    // Energy delivered by the source = energy in cap + resistor heat
+    // (backward Euler dissipates slightly; allow a few percent).
+    let mut c = Circuit::new();
+    let a = c.node("a");
+    let b = c.node("b");
+    c.vdc(a, GND, 1.0);
+    c.resistor(a, b, 1e3);
+    c.capacitor(b, GND, 1e-6);
+    let mut opts = TranOptions::new(10e-3, 5e-6);
+    opts.uic = true;
+    opts.record = vec![a, b];
+    let res = transient(&c, &opts, &nr()).unwrap();
+    // Integrate i = (va - vb)/R over time.
+    let mut e_src = 0.0;
+    let mut e_r = 0.0;
+    for k in 1..res.times.len() {
+        let dt = res.times[k] - res.times[k - 1];
+        let i = (res.traces[0][k] - res.traces[1][k]) / 1e3;
+        e_src += 1.0 * i * dt;
+        e_r += i * i * 1e3 * dt;
+    }
+    let vb_end = *res.traces[1].last().unwrap();
+    let e_c = 0.5 * 1e-6 * vb_end * vb_end;
+    assert!((e_src - (e_r + e_c)).abs() / e_src < 0.05, "energy: src {e_src} vs {e_r}+{e_c}");
+}
+
+#[test]
+fn long_rc_ladder_dc() {
+    // A 20-stage ladder still solves and decays monotonically.
+    let mut c = Circuit::new();
+    let mut prev = c.node("in");
+    c.vdc(prev, GND, 1.0);
+    let mut nodes = Vec::new();
+    for i in 0..20 {
+        let n = c.node(&format!("n{i}"));
+        c.resistor(prev, n, 1e3);
+        c.resistor(n, GND, 1e4);
+        nodes.push(n);
+        prev = n;
+    }
+    let x = dc_op(&c, &nr()).unwrap();
+    let mut last = 1.0;
+    for &n in &nodes {
+        let v = node_v(&x, n);
+        assert!(v < last && v > 0.0, "ladder must decay monotonically");
+        last = v;
+    }
+}

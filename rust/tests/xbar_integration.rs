@@ -1,0 +1,172 @@
+//! Integration tests for the analog block: fast-vs-golden agreement across
+//! geometries, physical sanity of the MAC behaviour, dataset generation.
+
+use semulator::datagen::{generate, GenConfig, SampleDist};
+use semulator::util::Rng;
+use semulator::xbar::{AnalogBlock, BlockConfig, CellInputs};
+
+fn random_inputs(cfg: &BlockConfig, seed: u64) -> CellInputs {
+    let mut rng = Rng::seed_from(seed);
+    SampleDist::UniformIid.sample(cfg, &mut rng)
+}
+
+#[test]
+fn fast_matches_golden_across_geometries() {
+    for (tiles, rows, cols) in [(1, 2, 2), (2, 2, 2), (1, 4, 4), (3, 2, 2)] {
+        let cfg = BlockConfig::with_dims(tiles, rows, cols);
+        let block = AnalogBlock::new(cfg.clone()).unwrap();
+        for seed in 0..3 {
+            let x = random_inputs(&cfg, seed + 100 * tiles as u64);
+            let fast = block.simulate(&x);
+            let gold = block.simulate_golden(&x).unwrap();
+            for (f, g) in fast.iter().zip(gold.iter()) {
+                assert!(
+                    (f - g).abs() < 2e-5,
+                    "({tiles},{rows},{cols}) seed {seed}: fast {f} vs golden {g}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mac_output_tracks_weight_difference() {
+    // Program + column at high G, - column at low G with full activation:
+    // output must exceed the reversed programming monotonically in the gap.
+    let cfg = BlockConfig::small();
+    let block = AnalogBlock::new(cfg.clone()).unwrap();
+    let program = |gp: f64, gm: f64| {
+        let mut x = CellInputs::zeros(&cfg);
+        for t in 0..cfg.tiles {
+            for r in 0..cfg.rows {
+                for j in 0..cfg.cols {
+                    let k = CellInputs::idx(&cfg, t, r, j);
+                    x.v[k] = 1.0;
+                    x.g[k] = if j % 2 == 0 { gp } else { gm };
+                }
+            }
+        }
+        block.simulate(&x)[0]
+    };
+    let strong = program(9e-5, 1e-6);
+    let weak = program(4e-5, 2e-5);
+    let neutral = program(5e-5, 5e-5);
+    assert!(strong > weak && weak > neutral.abs(), "{strong} > {weak} > |{neutral}|");
+    assert!(neutral.abs() < 1e-4, "balanced program should null out: {neutral}");
+}
+
+#[test]
+fn row_contribution_is_permutation_invariant() {
+    // Permuting rows within a column leaves every column current (and thus
+    // the output) unchanged — the physical symmetry Conv4Xbar exploits.
+    let cfg = BlockConfig::with_dims(1, 8, 2);
+    let block = AnalogBlock::new(cfg.clone()).unwrap();
+    let x = random_inputs(&cfg, 7);
+    let mut x_perm = x.clone();
+    let mut rng = Rng::seed_from(3);
+    let perm = rng.permutation(cfg.rows);
+    for (r_new, &r_old) in perm.iter().enumerate() {
+        for j in 0..cfg.cols {
+            let src = CellInputs::idx(&cfg, 0, r_old, j);
+            let dst = CellInputs::idx(&cfg, 0, r_new, j);
+            x_perm.v[dst] = x.v[src];
+            x_perm.g[dst] = x.g[src];
+        }
+    }
+    let a = block.simulate(&x);
+    let b = block.simulate(&x_perm);
+    for (ai, bi) in a.iter().zip(b.iter()) {
+        assert!((ai - bi).abs() < 1e-9, "row permutation changed output: {ai} vs {bi}");
+    }
+}
+
+#[test]
+fn tile_and_row_equivalence() {
+    // Splitting the same physical rows across tiles (shared bitlines) is
+    // electrically identical: (2 tiles x 4 rows) == (1 tile x 8 rows).
+    let cfg_a = BlockConfig::with_dims(2, 4, 2);
+    let cfg_b = BlockConfig::with_dims(1, 8, 2);
+    let xa = random_inputs(&cfg_a, 42);
+    // Same flat cell order: tile-major == row-major concatenation.
+    let xb = CellInputs { v: xa.v.clone(), g: xa.g.clone() };
+    let a = AnalogBlock::new(cfg_a).unwrap().simulate(&xa);
+    let b = AnalogBlock::new(cfg_b).unwrap().simulate(&xb);
+    for (ai, bi) in a.iter().zip(b.iter()) {
+        assert!((ai - bi).abs() < 1e-9, "tiling changed physics: {ai} vs {bi}");
+    }
+}
+
+#[test]
+fn four_mac_outputs_are_independent() {
+    // Driving only MAC 2's columns leaves the other outputs at ~0.
+    let cfg = BlockConfig::with_dims(1, 8, 8);
+    let block = AnalogBlock::new(cfg.clone()).unwrap();
+    let mut x = CellInputs::zeros(&cfg);
+    for r in 0..cfg.rows {
+        let k = CellInputs::idx(&cfg, 0, r, 4); // + column of MAC 2
+        x.v[k] = 1.1;
+        x.g[k] = 9e-5;
+    }
+    let y = block.simulate(&x);
+    assert_eq!(y.len(), 4);
+    assert!(y[2] > 1e-3, "target MAC silent: {:?}", y);
+    for (m, &v) in y.iter().enumerate() {
+        if m != 2 {
+            assert!(v.abs() < 1e-6, "MAC {m} leaked: {v}");
+        }
+    }
+}
+
+#[test]
+fn paper_cfg_a_fast_solver_runs() {
+    // Full-size Table-1 block solves quickly and gives bounded output.
+    let cfg = BlockConfig::paper_cfg_a();
+    let block = AnalogBlock::new(cfg.clone()).unwrap();
+    let x = random_inputs(&cfg, 0);
+    let t0 = std::time::Instant::now();
+    let y = block.simulate(&x);
+    assert_eq!(y.len(), 1);
+    assert!(y[0].is_finite() && y[0].abs() < cfg.periph.v_clamp + 1.2);
+    assert!(t0.elapsed().as_secs_f64() < 2.0, "fast solver too slow for datagen");
+}
+
+#[test]
+fn datagen_targets_have_usable_dynamic_range() {
+    // The regression targets must not collapse to a constant (otherwise the
+    // paper's mV-scale MAE would be trivial).
+    let cfg = GenConfig::new(BlockConfig::small(), 64, 9);
+    let ds = generate(&cfg);
+    let ys: Vec<f64> = (0..ds.n).map(|i| ds.targets(i)[0] as f64).collect();
+    let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+    let var = ys.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>() / ys.len() as f64;
+    assert!(var.sqrt() > 1e-3, "target std {:.3e} too small", var.sqrt());
+}
+
+#[test]
+fn parasitic_wire_effect_is_bounded() {
+    // Quantify the ideal-wire assumption the fast solver makes: with a few
+    // ohms of wire per cell the sense-end output must move only slightly;
+    // with hundreds of ohms the IR drop must visibly attenuate it.
+    use semulator::spice::{transient, NrOptions, TranOptions};
+    use semulator::xbar::array::{build_block, build_block_parasitic};
+
+    let cfg = BlockConfig::with_dims(1, 8, 2);
+    let x = random_inputs(&cfg, 11);
+    let run = |net: semulator::xbar::BlockNetlist| -> f64 {
+        let mut opts = TranOptions::new(cfg.t_sense, cfg.h);
+        opts.uic = true;
+        opts.record = net.outputs.clone();
+        transient(&net.circuit, &opts, &NrOptions::default()).unwrap().final_value(0)
+    };
+    let ideal = run(build_block(&cfg, &x));
+    let zero_seg = run(build_block_parasitic(&cfg, &x, 0.0));
+    assert!((ideal - zero_seg).abs() < 1e-9, "r_seg=0 must equal the ideal builder");
+
+    let mild = run(build_block_parasitic(&cfg, &x, 2.0));
+    let harsh = run(build_block_parasitic(&cfg, &x, 500.0));
+    let scale = ideal.abs().max(1e-3);
+    let mild_dev = (mild - ideal).abs() / scale;
+    let harsh_dev = (harsh - ideal).abs() / scale;
+    assert!(mild_dev < 0.02, "2-ohm segments should move output <2%, got {mild_dev}");
+    assert!(harsh_dev > mild_dev * 2.0, "500-ohm segments should dominate: {harsh_dev} vs {mild_dev}");
+}
