@@ -6,21 +6,30 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use semulator::coordinator::{BatcherConfig, EmulatorService, Metrics};
+use semulator::infer::{Arch, BackendKind};
 use semulator::model::ModelState;
 use semulator::runtime::ArtifactStore;
 use semulator::util::{BenchConfig, Bencher};
 
 fn main() {
+    // PJRT batching when artifacts exist; otherwise exercise the same
+    // policies on the artifact-free native backend.
     let dir = std::path::PathBuf::from("artifacts");
-    if !dir.join("meta.json").exists() {
-        println!("bench_batcher: artifacts not built (run `make artifacts`); skipping");
-        return;
-    }
-    let store = ArtifactStore::open(&dir).unwrap();
-    let meta = store.meta.variant("small").unwrap().clone();
+    let backend = if dir.join("meta.json").exists() {
+        BackendKind::Pjrt
+    } else {
+        println!("bench_batcher: artifacts not built; using the native backend");
+        BackendKind::Native
+    };
+    let meta = match backend {
+        BackendKind::Pjrt => {
+            ArtifactStore::open(&dir).unwrap().meta.variant("small").unwrap().clone()
+        }
+        BackendKind::Native => Arch::for_variant("small").unwrap().to_meta(),
+    };
     let state = ModelState::init(&meta, 0);
     let feat = meta.n_features();
-    println!("# bench_batcher — request round-trip through the dynamic batcher");
+    println!("# bench_batcher — request round-trip through the dynamic batcher ({backend})");
 
     let mut b = Bencher::new(BenchConfig {
         warmup: Duration::from_millis(300),
@@ -30,9 +39,12 @@ fn main() {
     });
 
     for (tag, cfg) in [
-        ("wait0", BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(0) }),
-        ("wait200us", BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(200) }),
-        ("wait2ms", BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) }),
+        ("wait0", BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(0), backend }),
+        (
+            "wait200us",
+            BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(200), backend },
+        ),
+        ("wait2ms", BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2), backend }),
     ] {
         let metrics = Arc::new(Metrics::default());
         let service =

@@ -1,0 +1,101 @@
+//! Native-engine inference benchmark: NativeEngine vs the PJRT artifacts
+//! vs the analytic expert baseline, across batch sizes {1, 32, 256, 4096}.
+//!
+//! The native rows need nothing but a parameter state — this bench runs
+//! (and demonstrates a batch-256 forward) with no PJRT artifacts loaded.
+//! PJRT rows appear only when `make artifacts` has produced `meta.json`
+//! and a real `xla` crate is linked; the analytic baseline gives the
+//! per-sample cost of the closed-form model the paper argues against.
+
+use std::time::Duration;
+
+use semulator::analytic::AnalyticModel;
+use semulator::datagen::SampleDist;
+use semulator::infer::{Arch, EmulatorBackend, NativeEngine, BUILTIN_VARIANTS};
+use semulator::model::ModelState;
+use semulator::repro::block_for;
+use semulator::runtime::PjrtBackend;
+use semulator::util::{BenchConfig, Bencher, Rng};
+
+const BATCHES: [usize; 4] = [1, 32, 256, 4096];
+
+fn main() {
+    let artifact_dir = std::path::PathBuf::from("artifacts");
+    let have_artifacts = artifact_dir.join("meta.json").exists();
+    if !have_artifacts {
+        println!("# (artifacts not built — PJRT comparison rows skipped; native rows need none)");
+    }
+    let mut b = Bencher::new(BenchConfig {
+        warmup: Duration::from_millis(200),
+        measure: Duration::from_secs(1),
+        min_samples: 10,
+        max_samples: 10_000,
+    });
+    println!("# bench_native_infer — forward cost per backend and batch size");
+
+    for &variant in BUILTIN_VARIANTS {
+        let arch = Arch::for_variant(variant).unwrap();
+        let meta = arch.to_meta();
+        let state = ModelState::init(&meta, 0);
+        let engine = NativeEngine::new(&arch, &state).unwrap();
+        let feat = arch.n_features();
+        let mut rng = Rng::seed_from(7);
+
+        // PJRT backend only where real artifacts (and a real xla) exist.
+        let pjrt = if have_artifacts {
+            match PjrtBackend::new(&artifact_dir, variant, &state) {
+                Ok(p) => Some(p),
+                Err(e) => {
+                    // e.g. meta.json present but the stub xla can't compile.
+                    println!("  (pjrt rows skipped for {variant}: {e:#})");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+
+        for batch in BATCHES {
+            let xs: Vec<f32> = (0..batch * feat).map(|_| rng.uniform() as f32).collect();
+            let native = b
+                .bench(&format!("{variant}/native/b{batch}"), || engine.forward(&xs).unwrap())
+                .clone();
+            println!(
+                "  -> native: {:.2} µs/sample at batch {batch}",
+                native.mean.as_secs_f64() * 1e6 / batch as f64
+            );
+            // Sanity: the timed path really produced a full, finite batch.
+            let y = engine.forward(&xs).unwrap();
+            assert_eq!(y.len(), batch * arch.outputs);
+            assert!(y.iter().all(|v| v.is_finite()));
+
+            if let Some(pjrt) = &pjrt {
+                let stats = b
+                    .bench(&format!("{variant}/pjrt/b{batch}"), || pjrt.forward_batch(&xs).unwrap())
+                    .clone();
+                println!(
+                    "  -> pjrt:   {:.2} µs/sample at batch {batch} (native speedup {:.2}x)",
+                    stats.mean.as_secs_f64() * 1e6 / batch as f64,
+                    stats.mean.as_secs_f64() / native.mean.as_secs_f64()
+                );
+            }
+        }
+
+        // Analytic expert baseline, per sample (physical inputs).
+        let block_cfg = block_for(variant).unwrap();
+        let model = AnalyticModel::new(block_cfg.clone());
+        let mut srng = Rng::seed_from(13);
+        let sample = SampleDist::UniformIid.sample(&block_cfg, &mut srng);
+        let stats = b.bench(&format!("{variant}/analytic/b1"), || model.predict(&sample)).clone();
+        println!("  -> analytic baseline: {:.2} µs/sample", stats.mean.as_secs_f64() * 1e6);
+        if let Some(speedup) =
+            b.speedup(&format!("{variant}/analytic/b1"), &format!("{variant}/native/b256"))
+        {
+            println!(
+                "  -> native at batch 256 is {:.1}x the analytic model's per-call rate \
+                 (native amortizes 256 samples per call)",
+                speedup * 256.0
+            );
+        }
+    }
+}

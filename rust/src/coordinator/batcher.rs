@@ -1,15 +1,19 @@
 //! Dynamic batching for emulation requests.
 //!
-//! The AOT forward executables have static batch shapes (1 and N); the
-//! batcher queues incoming requests, drains up to `max_batch` of them (or
-//! whatever arrived within `max_wait` of the first), pads to the executable
-//! batch, runs one PJRT call, and scatters the replies. Classic
+//! The batcher queues incoming requests, drains up to `max_batch` of them
+//! (or whatever arrived within `max_wait` of the first), runs one call on
+//! its [`EmulatorBackend`], and scatters the replies. Classic
 //! vLLM-router-style size/timeout policy, sized for a regression service.
+//!
+//! The backend is chosen per deployment via [`BatcherConfig::backend`]:
+//! `Pjrt` drives the AOT artifacts (static batch shapes, padded
+//! internally), `Native` drives the artifact-free packed-matmul engine —
+//! see `semulator::infer` for the trait and selection story.
 //!
 //! Threading note: the `xla` crate's handles are not `Send` (they share an
 //! internal `Rc`'d client), so the worker thread constructs its *own*
-//! [`ArtifactStore`]/PJRT client and owns every xla object; other threads
-//! only exchange plain `Vec<f32>` through channels.
+//! backend — and with it any PJRT client — and owns every xla object;
+//! other threads only exchange plain `Vec<f32>` through channels.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -18,8 +22,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::infer::{load_or_builtin_meta, BackendKind, EmulatorBackend, NativeEngine};
 use crate::model::ModelState;
-use crate::runtime::{lit_f32, read_f32, ArtifactStore, Executable};
+use crate::runtime::PjrtBackend;
 
 use super::metrics::Metrics;
 
@@ -29,18 +34,28 @@ pub struct EmuRequest {
     pub reply: Sender<Result<Vec<f32>, String>>,
 }
 
-/// Batching policy.
+/// Batching policy + backend selection.
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
-    /// Upper bound per PJRT call; clamped to the largest forward batch.
+    /// Upper bound per backend call; for PJRT this is additionally clamped
+    /// to the largest compiled forward batch.
     pub max_batch: usize,
     /// How long to hold the first request while more arrive.
     pub max_wait: Duration,
+    /// Which forward implementation the worker constructs.
+    pub backend: BackendKind,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 64, max_wait: Duration::from_micros(200) }
+        Self { max_batch: 64, max_wait: Duration::from_micros(200), backend: BackendKind::Pjrt }
+    }
+}
+
+impl BatcherConfig {
+    /// Default policy on the given backend.
+    pub fn with_backend(backend: BackendKind) -> Self {
+        Self { backend, ..Self::default() }
     }
 }
 
@@ -48,6 +63,7 @@ impl Default for BatcherConfig {
 #[derive(Clone)]
 pub struct EmulatorHandle {
     tx: Sender<EmuRequest>,
+    backend: BackendKind,
     n_features: usize,
     n_outputs: usize,
 }
@@ -71,9 +87,15 @@ impl EmulatorHandle {
     pub fn n_outputs(&self) -> usize {
         self.n_outputs
     }
+
+    /// Which backend answers requests sent through this handle.
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
 }
 
-/// The batcher service: a worker thread owning the PJRT client + params.
+/// The batcher service: a worker thread owning the backend (and, for PJRT,
+/// the client + params).
 pub struct EmulatorService {
     handle: EmulatorHandle,
     worker: Option<std::thread::JoinHandle<()>>,
@@ -81,8 +103,9 @@ pub struct EmulatorService {
 
 impl EmulatorService {
     /// Spawn the batching worker for `variant` with checkpointed parameters.
-    /// Blocks until the worker has compiled its executables (so startup
-    /// failures surface here, not on the first request).
+    /// Blocks until the worker has built its backend (so startup failures —
+    /// missing artifacts, layout mismatches — surface here, not on the
+    /// first request).
     pub fn spawn(
         artifact_dir: PathBuf,
         variant: &str,
@@ -93,12 +116,13 @@ impl EmulatorService {
         let (tx, rx) = channel::<EmuRequest>();
         let (init_tx, init_rx) = channel::<Result<(usize, usize), String>>();
         let variant_owned = variant.to_string();
+        let backend_kind = cfg.backend;
         let worker = std::thread::Builder::new()
             .name(format!("batcher-{variant}"))
             .spawn(move || {
                 match BatchWorker::init(&artifact_dir, &variant_owned, &params, &cfg) {
                     Ok(worker) => {
-                        let _ = init_tx.send(Ok((worker.n_features, worker.n_outputs)));
+                        let _ = init_tx.send(Ok((worker.n_features(), worker.n_outputs())));
                         worker.run(rx, metrics);
                     }
                     Err(e) => {
@@ -111,7 +135,10 @@ impl EmulatorService {
             .recv()
             .context("batcher worker died during init")?
             .map_err(anyhow::Error::msg)?;
-        Ok(Self { handle: EmulatorHandle { tx, n_features, n_outputs }, worker: Some(worker) })
+        Ok(Self {
+            handle: EmulatorHandle { tx, backend: backend_kind, n_features, n_outputs },
+            worker: Some(worker),
+        })
     }
 
     pub fn handle(&self) -> EmulatorHandle {
@@ -130,43 +157,37 @@ impl Drop for EmulatorService {
     }
 }
 
-/// Worker-thread state (owns all xla objects; never crosses threads).
+/// Worker-thread state (owns the backend; never crosses threads).
 struct BatchWorker {
-    exes: Vec<(usize, std::sync::Arc<Executable>)>,
-    params: Vec<xla::Literal>,
-    input_dims: Vec<usize>,
-    n_features: usize,
-    n_outputs: usize,
+    backend: Box<dyn EmulatorBackend>,
     max_batch: usize,
     max_wait: Duration,
 }
 
 impl BatchWorker {
-    fn init(dir: &std::path::Path, variant: &str, params: &ModelState, cfg: &BatcherConfig) -> Result<Self> {
-        let store = ArtifactStore::open(dir)?;
-        let meta = store.meta.variant(variant)?.clone();
-        let mut batch_kinds: Vec<(usize, String)> = meta
-            .artifacts
-            .iter()
-            .filter(|(k, _)| k.starts_with("fwd_b") && !k.ends_with("_ref"))
-            .map(|(k, a)| (a.batch, k.clone()))
-            .collect();
-        batch_kinds.sort();
-        anyhow::ensure!(!batch_kinds.is_empty(), "variant '{variant}' has no forward artifacts");
-        let exes = batch_kinds
-            .iter()
-            .map(|(b, k)| Ok((*b, store.executable(variant, k)?)))
-            .collect::<Result<Vec<_>>>()?;
-        let max_exe_batch = exes.last().unwrap().0;
-        Ok(Self {
-            exes,
-            params: params.to_literals()?,
-            input_dims: meta.input.clone(),
-            n_features: meta.n_features(),
-            n_outputs: meta.outputs,
-            max_batch: cfg.max_batch.min(max_exe_batch).max(1),
-            max_wait: cfg.max_wait,
-        })
+    fn init(
+        dir: &std::path::Path,
+        variant: &str,
+        params: &ModelState,
+        cfg: &BatcherConfig,
+    ) -> Result<Self> {
+        let backend: Box<dyn EmulatorBackend> = match cfg.backend {
+            BackendKind::Pjrt => Box::new(PjrtBackend::new(dir, variant, params)?),
+            BackendKind::Native => {
+                let meta = load_or_builtin_meta(dir, variant)?;
+                Box::new(NativeEngine::from_meta(&meta, params)?)
+            }
+        };
+        let cap = backend.max_batch().unwrap_or(usize::MAX);
+        Ok(Self { backend, max_batch: cfg.max_batch.min(cap).max(1), max_wait: cfg.max_wait })
+    }
+
+    fn n_features(&self) -> usize {
+        self.backend.n_features()
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.backend.n_outputs()
     }
 
     fn run(self, rx: Receiver<EmuRequest>, metrics: Arc<Metrics>) {
@@ -197,33 +218,14 @@ impl BatchWorker {
 
     fn run_batch(&self, pending: &[EmuRequest], metrics: &Metrics) {
         let k = pending.len();
-        // Smallest executable batch that fits all pending requests
-        // (max_batch is clamped to the largest, so one always fits).
-        let (exe_batch, exe) = self
-            .exes
-            .iter()
-            .find(|(b, _)| *b >= k)
-            .unwrap_or_else(|| self.exes.last().unwrap());
-        let exe_batch = *exe_batch;
-
-        // Pack, padding by repeating the first request.
-        let mut xb: Vec<f32> = Vec::with_capacity(exe_batch * self.n_features);
+        let n_features = self.n_features();
+        let n_outputs = self.n_outputs();
+        // Pack exactly k rows; the backend pads to its own shapes if any.
+        let mut xb: Vec<f32> = Vec::with_capacity(k * n_features);
         for r in pending {
             xb.extend_from_slice(&r.features);
         }
-        for _ in k..exe_batch {
-            xb.extend_from_slice(&pending[0].features);
-        }
-        let mut dims = vec![exe_batch];
-        dims.extend_from_slice(&self.input_dims);
-
-        let result = lit_f32(&dims, &xb)
-            .and_then(|x_lit| {
-                let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
-                inputs.push(&x_lit);
-                exe.run(&inputs)
-            })
-            .and_then(|outs| read_f32(&outs[0]));
+        let result = self.backend.forward_batch(&xb);
 
         metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         metrics.batched_requests.fetch_add(k as u64, std::sync::atomic::Ordering::Relaxed);
@@ -231,7 +233,7 @@ impl BatchWorker {
         match result {
             Ok(flat) => {
                 for (i, r) in pending.iter().enumerate() {
-                    let y = flat[i * self.n_outputs..(i + 1) * self.n_outputs].to_vec();
+                    let y = flat[i * n_outputs..(i + 1) * n_outputs].to_vec();
                     let _ = r.reply.send(Ok(y));
                 }
             }

@@ -65,8 +65,18 @@ impl LatencyHistogram {
 pub struct Metrics {
     pub requests: AtomicU64,
     pub emulated: AtomicU64,
+    /// Emulated requests answered by the native packed-matmul engine.
+    pub emulated_native: AtomicU64,
+    /// Emulated requests answered through PJRT.
+    pub emulated_pjrt: AtomicU64,
     pub golden: AtomicU64,
     pub verified: AtomicU64,
+    /// Shadow-verified requests that were also cross-checked on a second
+    /// emulator backend.
+    pub cross_checked: AtomicU64,
+    /// Cross-check attempts whose secondary backend failed (the request
+    /// itself still succeeded on the primary).
+    pub cross_failed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
     pub latency: LatencyHistogram,
@@ -90,8 +100,12 @@ impl Metrics {
         Json::obj(vec![
             ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
             ("emulated", Json::Num(self.emulated.load(Ordering::Relaxed) as f64)),
+            ("emulated_native", Json::Num(self.emulated_native.load(Ordering::Relaxed) as f64)),
+            ("emulated_pjrt", Json::Num(self.emulated_pjrt.load(Ordering::Relaxed) as f64)),
             ("golden", Json::Num(self.golden.load(Ordering::Relaxed) as f64)),
             ("verified", Json::Num(self.verified.load(Ordering::Relaxed) as f64)),
+            ("cross_checked", Json::Num(self.cross_checked.load(Ordering::Relaxed) as f64)),
+            ("cross_failed", Json::Num(self.cross_failed.load(Ordering::Relaxed) as f64)),
             ("mean_batch_size", Json::Num(self.mean_batch_size())),
             ("latency_mean_us", Json::Num(self.latency.mean_us())),
             ("latency_p50_us", Json::Num(self.latency.quantile_us(0.5) as f64)),

@@ -2,11 +2,14 @@
 //!
 //! * [`trainer`] — epoch/minibatch loop with the paper's LR-halving
 //!   schedule, driving the AOT train-step through PJRT.
-//! * [`batcher`] — dynamic batching of inference requests onto the static
-//!   PJRT batch shapes.
-//! * [`router`] — golden(SPICE)/emulated routing with shadow verification.
+//! * [`batcher`] — dynamic batching of inference requests onto a pluggable
+//!   emulator backend (native packed-matmul engine or PJRT artifacts,
+//!   chosen per deployment via `BatcherConfig::backend`).
+//! * [`router`] — golden(SPICE)/emulated routing with shadow verification
+//!   and optional native-vs-PJRT cross-checking; records the serving
+//!   backend per request.
 //! * [`server`] — TCP line-protocol front end.
-//! * [`metrics`] — counters and latency histograms.
+//! * [`metrics`] — counters (incl. per-backend) and latency histograms.
 
 pub mod batcher;
 pub mod metrics;
@@ -18,4 +21,7 @@ pub use batcher::{BatcherConfig, EmulatorHandle, EmulatorService};
 pub use metrics::{LatencyHistogram, Metrics};
 pub use router::{Policy, Route, RouteResult, Router};
 pub use server::Server;
-pub use trainer::{evaluate, evaluate_state, train, EpochLog, EvalStats, LrSchedule, TrainConfig, TrainReport};
+pub use trainer::{
+    evaluate, evaluate_native, evaluate_state, train, EpochLog, EvalStats, LrSchedule, TrainConfig,
+    TrainReport,
+};

@@ -2,15 +2,23 @@
 //!
 //! A simulation request carries *physical* cell inputs. The router decides
 //! whether it is answered by the neural emulator (fast path: normalize ->
-//! batcher -> PJRT forward) or by the SPICE-accurate solver (golden path),
-//! and optionally shadow-verifies a sampled fraction of emulated answers
-//! against the golden path — the deployment story the paper's "replace SPICE
-//! with a regressor" methodology implies.
+//! batcher -> backend forward) or by the SPICE-accurate solver (golden
+//! path), and optionally shadow-verifies a sampled fraction of emulated
+//! answers against the golden path — the deployment story the paper's
+//! "replace SPICE with a regressor" methodology implies.
+//!
+//! The emulator side is backend-agnostic (`infer::EmulatorBackend` behind
+//! an [`EmulatorHandle`]): the router records *which* backend served each
+//! request in [`Metrics`], and a deployment migrating between backends can
+//! attach a second handle ([`Router::with_cross_check`]) so every
+//! shadow-verified request is also answered by the other backend —
+//! native vs PJRT vs golden in one pass.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::infer::BackendKind;
 use crate::util::Rng;
 use crate::xbar::{AnalogBlock, CellInputs};
 
@@ -41,14 +49,22 @@ pub enum Route {
 pub struct RouteResult {
     pub outputs: Vec<f64>,
     pub route: Route,
+    /// Backend that produced `outputs` (None on the golden route).
+    pub backend: Option<BackendKind>,
     /// Max |emulated - golden| over outputs, when shadow verification ran.
     pub verify_dev: Option<f64>,
+    /// Max |primary - secondary| over outputs when the cross-check backend
+    /// also answered (shadow-verified requests only).
+    pub cross_dev: Option<f64>,
 }
 
 /// The router service (thread-safe via interior RNG lock).
 pub struct Router {
     block: AnalogBlock,
     emulator: EmulatorHandle,
+    /// Optional second emulator backend used to cross-check shadow-verified
+    /// requests (e.g. native vs PJRT during a migration).
+    cross: Option<EmulatorHandle>,
     policy: Policy,
     metrics: Arc<Metrics>,
     rng: std::sync::Mutex<Rng>,
@@ -62,7 +78,21 @@ impl Router {
         metrics: Arc<Metrics>,
         seed: u64,
     ) -> Self {
-        Self { block, emulator, policy, metrics, rng: std::sync::Mutex::new(Rng::seed_from(seed)) }
+        Self {
+            block,
+            emulator,
+            cross: None,
+            policy,
+            metrics,
+            rng: std::sync::Mutex::new(Rng::seed_from(seed)),
+        }
+    }
+
+    /// Attach a second emulator handle; every shadow-verified request is
+    /// also sent there and the native/PJRT deviation recorded.
+    pub fn with_cross_check(mut self, secondary: EmulatorHandle) -> Self {
+        self.cross = Some(secondary);
+        self
     }
 
     pub fn policy(&self) -> Policy {
@@ -76,43 +106,117 @@ impl Router {
         let result = match self.policy {
             Policy::Golden => {
                 Metrics::inc(&self.metrics.golden);
-                RouteResult { outputs: self.block.simulate(x), route: Route::Golden, verify_dev: None }
+                RouteResult {
+                    outputs: self.block.simulate(x),
+                    route: Route::Golden,
+                    backend: None,
+                    verify_dev: None,
+                    cross_dev: None,
+                }
             }
             Policy::Emulator => {
-                Metrics::inc(&self.metrics.emulated);
-                let y = self.emulate(x)?;
-                RouteResult { outputs: y, route: Route::Emulated, verify_dev: None }
+                let y = self.emulate(x.normalized(self.block.config()))?;
+                RouteResult {
+                    outputs: y,
+                    route: Route::Emulated,
+                    backend: Some(self.emulator.backend()),
+                    verify_dev: None,
+                    cross_dev: None,
+                }
             }
             Policy::Shadow { verify_frac } => {
-                Metrics::inc(&self.metrics.emulated);
-                let y = self.emulate(x)?;
                 let verify = { self.rng.lock().unwrap().uniform() } < verify_frac;
-                let verify_dev = if verify {
+                let features = x.normalized(self.block.config());
+                // Keep a copy only when the cross-check will actually run.
+                let cross_features =
+                    if verify { self.cross.as_ref().map(|_| features.clone()) } else { None };
+                let y = self.emulate(features)?;
+                let (verify_dev, cross_dev) = if verify {
                     Metrics::inc(&self.metrics.verified);
                     let golden = self.block.simulate(x);
-                    Some(
-                        y.iter()
-                            .zip(&golden)
-                            .map(|(a, b)| (a - b).abs())
-                            .fold(0.0f64, f64::max),
-                    )
+                    let dev = max_abs_dev(&y, &golden);
+                    let cross_dev = match (&self.cross, cross_features) {
+                        (Some(secondary), Some(feats)) => self.cross_check(&y, secondary, feats),
+                        _ => None,
+                    };
+                    (Some(dev), cross_dev)
                 } else {
-                    None
+                    (None, None)
                 };
-                RouteResult { outputs: y, route: Route::Emulated, verify_dev }
+                RouteResult {
+                    outputs: y,
+                    route: Route::Emulated,
+                    backend: Some(self.emulator.backend()),
+                    verify_dev,
+                    cross_dev,
+                }
             }
         };
         self.metrics.latency.record(t0.elapsed());
         Ok(result)
     }
 
-    fn emulate(&self, x: &CellInputs) -> Result<Vec<f64>> {
-        let features = x.normalized(self.block.config());
+    /// Counted forward through the primary emulator handle.
+    fn emulate(&self, features: Vec<f32>) -> Result<Vec<f64>> {
+        Metrics::inc(&self.metrics.emulated);
+        match self.emulator.backend() {
+            BackendKind::Native => Metrics::inc(&self.metrics.emulated_native),
+            BackendKind::Pjrt => Metrics::inc(&self.metrics.emulated_pjrt),
+        }
         let y = self.emulator.infer(features)?;
         Ok(y.into_iter().map(|v| v as f64).collect())
     }
 
+    /// Best-effort secondary-backend comparison: the primary already
+    /// answered, so a cross-check failure is counted and logged, never
+    /// propagated into the request.
+    fn cross_check(&self, y: &[f64], secondary: &EmulatorHandle, features: Vec<f32>) -> Option<f64> {
+        match secondary.infer(features) {
+            Ok(other) => {
+                Metrics::inc(&self.metrics.cross_checked);
+                let other: Vec<f64> = other.into_iter().map(|v| v as f64).collect();
+                Some(max_abs_dev(y, &other))
+            }
+            Err(e) => {
+                Metrics::inc(&self.metrics.cross_failed);
+                eprintln!(
+                    "cross-check backend ({}) failed: {e:#}",
+                    secondary.backend()
+                );
+                None
+            }
+        }
+    }
+
     pub fn block(&self) -> &AnalogBlock {
         &self.block
+    }
+}
+
+/// Max |a - b| over outputs, NaN-propagating: a NaN anywhere must surface
+/// as NaN, not be masked to 0.0 by `f64::max` (a broken emulator is
+/// exactly when the deviation report matters most).
+fn max_abs_dev(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f64, |acc, d| {
+        // f64::max ignores NaN operands, so propagate explicitly (and keep
+        // an already-NaN accumulator NaN).
+        if d.is_nan() || acc.is_nan() {
+            f64::NAN
+        } else {
+            acc.max(d)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::max_abs_dev;
+
+    #[test]
+    fn max_abs_dev_propagates_nan() {
+        assert_eq!(max_abs_dev(&[1.0, 2.0], &[1.5, 1.0]), 1.0);
+        assert!(max_abs_dev(&[f64::NAN, 2.0], &[1.0, 2.0]).is_nan());
+        assert!(max_abs_dev(&[1.0, 2.0], &[1.0, f64::NAN]).is_nan());
+        assert_eq!(max_abs_dev(&[], &[]), 0.0);
     }
 }

@@ -4,11 +4,16 @@
 //!
 //! ```text
 //! -> {"v": [..n_cells gate volts..], "g": [..n_cells siemens..]}
-//! <- {"y": [..MAC output volts..], "route": "emulated", "us": 1234}
+//! <- {"y": [..MAC output volts..], "route": "emulated",
+//!     "backend": "native", "us": 1234}
 //! -> {"cmd": "metrics"}
-//! <- {"requests": ..., "latency_p50_us": ...}
+//! <- {"requests": ..., "emulated_native": ..., "latency_p50_us": ...}
 //! -> {"cmd": "shutdown"}
 //! ```
+//!
+//! Emulated replies name the serving backend (`native` | `pjrt`); shadow-
+//! verified replies add `verify_dev` (vs golden SPICE) and, when a
+//! cross-check backend is attached, `cross_dev` (vs the other emulator).
 //!
 //! Built on `std::net` + a thread per connection; the heavy lifting is the
 //! shared [`Router`] (which serializes through the batcher anyway).
@@ -155,8 +160,14 @@ fn process_line(
             }),
         ),
     ];
+    if let Some(backend) = res.backend {
+        obj.push(("backend".to_string(), Json::Str(backend.as_str().into())));
+    }
     if let Some(dev) = res.verify_dev {
         obj.push(("verify_dev".to_string(), Json::Num(dev)));
+    }
+    if let Some(dev) = res.cross_dev {
+        obj.push(("cross_dev".to_string(), Json::Num(dev)));
     }
     Ok(Some(obj))
 }

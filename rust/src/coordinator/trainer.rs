@@ -1,6 +1,11 @@
 //! The training coordinator: epochs, minibatches, the paper's LR-halving
 //! schedule, periodic eval, checkpointing — all driving the AOT-compiled
 //! train-step executable through PJRT. Python is not involved.
+//!
+//! Training requires the PJRT train-step artifact; *evaluation* does not —
+//! [`evaluate_native`] scores a checkpoint through the artifact-free
+//! `infer::NativeEngine`, so `semulator eval --backend native` works on
+//! machines with no compiled artifacts at all.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -8,8 +13,9 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::datagen::Dataset;
+use crate::infer::NativeEngine;
 use crate::model::ModelState;
-use crate::runtime::{lit_f32, lit_scalar, read_f32, ArtifactStore};
+use crate::runtime::{lit_f32, lit_scalar, read_f32, ArtifactStore, VariantMeta};
 use crate::util::Rng;
 
 /// Learning-rate schedule: constant base rate halved at the given epoch
@@ -267,6 +273,41 @@ pub fn evaluate_state(
     evaluate(store, variant, &state.to_literals()?, ds)
 }
 
+/// Evaluate a host-side checkpoint on the native engine — no PJRT, no
+/// artifacts, no padding (the engine takes exact batch sizes).
+pub fn evaluate_native(meta: &VariantMeta, state: &ModelState, ds: &Dataset) -> Result<EvalStats> {
+    anyhow::ensure!(ds.d == meta.n_features(), "dataset features {} vs meta {}", ds.d, meta.n_features());
+    anyhow::ensure!(ds.o == meta.outputs, "dataset outputs {} vs meta {}", ds.o, meta.outputs);
+    let engine = NativeEngine::from_meta(meta, state)?;
+    const CHUNK: usize = 1024;
+    let mut abs_sum = 0.0f64;
+    let mut sq_sum = 0.0f64;
+    let mut n_half = 0usize;
+    let mut count = 0usize;
+    let mut row = 0usize;
+    while row < ds.n {
+        let take = CHUNK.min(ds.n - row);
+        let preds = engine.forward(&ds.x[row * ds.d..(row + take) * ds.d])?;
+        let targets = &ds.y[row * ds.o..(row + take) * ds.o];
+        for (p, t) in preds.iter().zip(targets) {
+            let e = (*p - *t).abs() as f64;
+            abs_sum += e;
+            sq_sum += e * e;
+            if e < 0.5e-3 {
+                n_half += 1;
+            }
+        }
+        count += take * ds.o;
+        row += take;
+    }
+    Ok(EvalStats {
+        n: count,
+        mae: abs_sum / count.max(1) as f64,
+        mse: sq_sum / count.max(1) as f64,
+        p_halfmv: n_half as f64 / count.max(1) as f64,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,6 +327,30 @@ mod tests {
         // Paper: 2000 epochs, halved at 1000, 1500, 1800.
         let s = LrSchedule::paper_scaled(1e-3, 2000);
         assert_eq!(s.halve_at, vec![1000, 1500, 1800]);
+    }
+
+    #[test]
+    fn evaluate_native_scores_without_artifacts() {
+        let meta = crate::infer::Arch::for_variant("small").unwrap().to_meta();
+        let state = ModelState::init(&meta, 2);
+        let (n, d, o) = (10usize, meta.n_features(), meta.outputs);
+        let mut rng = Rng::seed_from(7);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.uniform() as f32).collect();
+        let y = vec![0.0f32; n * o];
+        let ds = Dataset::new(n, d, o, x.clone(), y);
+        let stats = evaluate_native(&meta, &state, &ds).unwrap();
+        assert_eq!(stats.n, n * o);
+        assert!(stats.mae.is_finite() && stats.mse >= 0.0);
+        assert!((0.0..=1.0).contains(&stats.p_halfmv));
+        // Against a direct engine forward: with zero targets, MAE is the
+        // mean |prediction|.
+        let engine = crate::infer::NativeEngine::from_meta(&meta, &state).unwrap();
+        let preds = engine.forward(&x).unwrap();
+        let mae: f64 = preds.iter().map(|p| p.abs() as f64).sum::<f64>() / (n * o) as f64;
+        assert!((stats.mae - mae).abs() < 1e-9);
+        // Shape mismatches are rejected.
+        let bad = Dataset::new(n, d + 1, o, vec![0.0; n * (d + 1)], vec![0.0; n * o]);
+        assert!(evaluate_native(&meta, &state, &bad).is_err());
     }
 
     #[test]

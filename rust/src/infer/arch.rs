@@ -1,0 +1,448 @@
+//! Rust mirror of the SEMULATOR network architectures (paper Table 2).
+//!
+//! `python/compile/arch.py` remains the source of truth for the *artifact*
+//! path; this module re-declares the same layer stacks so the native
+//! inference engine can run without any Python-produced metadata, and can
+//! also *reconstruct* an [`Arch`] from an `artifacts/meta.json`
+//! ([`Arch::from_meta`]) so checkpoints trained against real artifacts are
+//! served natively. Conv layers use VALID padding; the Conv4Xbar trunk
+//! reads disjoint patches (stride == kernel), and the final conv's stride
+//! is the one degree of freedom recovered from the first dense layer's
+//! fan-in (see the cfg_b note in arch.py).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Meta, ParamSpec, VariantMeta};
+
+/// The variants with a built-in architecture (usable with no artifacts).
+pub const BUILTIN_VARIANTS: &[&str] = &["small", "cfg_a", "cfg_b"];
+
+/// One layer of the regression network.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Layer {
+    /// 3-D convolution over `(C, D, H, W)`, VALID padding, optional CELU.
+    Conv { cin: usize, cout: usize, k: [usize; 3], s: [usize; 3], celu: bool },
+    /// Reshape `(C, D, H, W)` row-major into a flat feature vector.
+    Flatten,
+    /// Fully connected `cin -> cout`, optional CELU.
+    Dense { cin: usize, cout: usize, celu: bool },
+}
+
+/// A full network architecture: input tensor shape, output count, layers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Arch {
+    pub name: String,
+    /// Input tensor shape `(C, D, H, W)`, no batch dim.
+    pub input: [usize; 4],
+    pub outputs: usize,
+    pub layers: Vec<Layer>,
+}
+
+fn conv(cin: usize, cout: usize, k: [usize; 3], s: [usize; 3]) -> Layer {
+    Layer::Conv { cin, cout, k, s, celu: true }
+}
+
+fn dense(cin: usize, cout: usize, celu: bool) -> Layer {
+    Layer::Dense { cin, cout, celu }
+}
+
+/// The shared Conv4Xbar trunk of Table 2: per-cell 1x1x1 features, then
+/// column-wise (H) reductions, then the cross-column (W) mix.
+fn xbar_stack(head_h: &[(usize, usize)], last_w_kernel: usize, last_w_stride: usize) -> Vec<Layer> {
+    let mut layers = vec![conv(2, 16, [1, 1, 1], [1, 1, 1])];
+    let mut cin = 16;
+    for &(cout, kh) in head_h {
+        layers.push(conv(cin, cout, [1, kh, 1], [1, kh, 1]));
+        cin = cout;
+    }
+    layers.push(conv(cin, 32, [1, 1, last_w_kernel], [1, 1, last_w_stride]));
+    layers
+}
+
+impl Arch {
+    /// The built-in architecture for a known variant (`small`, `cfg_a`,
+    /// `cfg_b`) — mirrors `python/compile/arch.py` exactly, including the
+    /// cfg_b last-conv stride (1,1,2) that makes its Linear(256, 32)
+    /// type-check.
+    pub fn for_variant(name: &str) -> Result<Arch> {
+        let arch = match name {
+            "cfg_a" => {
+                let mut layers = xbar_stack(&[(8, 2), (4, 4), (32, 8)], 2, 1);
+                layers.push(Layer::Flatten);
+                layers.push(dense(128, 32, true));
+                layers.push(dense(32, 16, true));
+                layers.push(dense(16, 1, false));
+                Arch { name: name.into(), input: [2, 4, 64, 2], outputs: 1, layers }
+            }
+            "cfg_b" => {
+                let mut layers = xbar_stack(&[(8, 2), (4, 4), (32, 8)], 2, 2);
+                layers.push(Layer::Flatten);
+                layers.push(dense(256, 32, true));
+                layers.push(dense(32, 16, true));
+                layers.push(dense(16, 4, false));
+                Arch { name: name.into(), input: [2, 2, 64, 8], outputs: 4, layers }
+            }
+            "small" => {
+                let mut layers = xbar_stack(&[(8, 2), (32, 8)], 2, 1);
+                layers.push(Layer::Flatten);
+                layers.push(dense(64, 32, true));
+                layers.push(dense(32, 16, true));
+                layers.push(dense(16, 1, false));
+                Arch { name: name.into(), input: [2, 2, 16, 2], outputs: 1, layers }
+            }
+            other => bail!(
+                "no built-in architecture for variant '{other}' (have: {})",
+                BUILTIN_VARIANTS.join(" | ")
+            ),
+        };
+        arch.validate().with_context(|| format!("built-in arch '{name}'"))?;
+        Ok(arch)
+    }
+
+    /// Features per sample (product of input dims).
+    pub fn n_features(&self) -> usize {
+        self.input.iter().product()
+    }
+
+    /// Shape-check the layer stack; returns the flattened feature count.
+    pub fn validate(&self) -> Result<usize> {
+        let mut c = self.input[0];
+        let mut spatial = [self.input[1], self.input[2], self.input[3]];
+        let mut flat = 0usize;
+        let mut seen_flatten = false;
+        for (i, ly) in self.layers.iter().enumerate() {
+            match ly {
+                Layer::Conv { cin, cout, k, s, .. } => {
+                    anyhow::ensure!(!seen_flatten, "layer {i}: conv after flatten");
+                    anyhow::ensure!(*cin == c, "layer {i}: conv cin {cin} != incoming {c}");
+                    spatial = conv_out_shape(spatial, *k, *s)
+                        .with_context(|| format!("layer {i}: conv {k:?}/{s:?} on {spatial:?}"))?;
+                    c = *cout;
+                }
+                Layer::Flatten => {
+                    anyhow::ensure!(!seen_flatten, "layer {i}: repeated flatten");
+                    seen_flatten = true;
+                    flat = c * spatial[0] * spatial[1] * spatial[2];
+                    c = flat;
+                }
+                Layer::Dense { cin, cout, .. } => {
+                    anyhow::ensure!(seen_flatten, "layer {i}: dense before flatten");
+                    anyhow::ensure!(*cin == c, "layer {i}: dense cin {cin} != incoming {c}");
+                    c = *cout;
+                }
+            }
+        }
+        anyhow::ensure!(c == self.outputs, "final width {c} != outputs {}", self.outputs);
+        Ok(flat)
+    }
+
+    /// Ordered parameter descriptors (name, shape, Kaiming-uniform bound) —
+    /// identical naming/ordering to `python/compile/arch.py::param_specs`
+    /// (indices enumerate *layers*, so flatten skips an index).
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        let mut specs = Vec::new();
+        for (i, ly) in self.layers.iter().enumerate() {
+            match ly {
+                Layer::Conv { cin, cout, k, .. } => {
+                    let fan_in = cin * k[0] * k[1] * k[2];
+                    let bound = (1.0 / fan_in as f64).sqrt();
+                    specs.push(ParamSpec {
+                        name: format!("conv{i}.w"),
+                        shape: vec![*cout, *cin, k[0], k[1], k[2]],
+                        bound,
+                    });
+                    specs.push(ParamSpec { name: format!("conv{i}.b"), shape: vec![*cout], bound });
+                }
+                Layer::Dense { cin, cout, .. } => {
+                    let bound = (1.0 / *cin as f64).sqrt();
+                    specs.push(ParamSpec {
+                        name: format!("dense{i}.w"),
+                        shape: vec![*cin, *cout],
+                        bound,
+                    });
+                    specs.push(ParamSpec { name: format!("dense{i}.b"), shape: vec![*cout], bound });
+                }
+                Layer::Flatten => {}
+            }
+        }
+        specs
+    }
+
+    /// Synthesize a [`VariantMeta`] (empty artifact table) so everything
+    /// downstream of the meta — `ModelState::init`, checkpoints, the native
+    /// engine — works with no `meta.json` on disk.
+    pub fn to_meta(&self) -> VariantMeta {
+        let params = self.param_specs();
+        let n_parameters = params.iter().map(|p| p.numel()).sum();
+        VariantMeta {
+            name: self.name.clone(),
+            input: self.input.to_vec(),
+            outputs: self.outputs,
+            n_param_arrays: params.len(),
+            n_parameters,
+            params,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    /// Reconstruct the architecture from a variant's parameter layout.
+    ///
+    /// Kernel sizes live in the conv weight shapes; strides do not. The
+    /// trunk rule (stride == kernel, the Conv4Xbar disjoint-patch read)
+    /// fixes every conv except the last, whose stride is solved against the
+    /// first dense layer's fan-in. Fails loudly on layouts outside the
+    /// conv*-flatten-dense* family.
+    pub fn from_meta(meta: &VariantMeta) -> Result<Arch> {
+        anyhow::ensure!(meta.input.len() == 4, "expected rank-4 input, got {:?}", meta.input);
+        anyhow::ensure!(meta.params.len() % 2 == 0, "expected (weight, bias) parameter pairs");
+        let input = [meta.input[0], meta.input[1], meta.input[2], meta.input[3]];
+
+        // Pass 1: type each (weight, bias) pair.
+        enum Raw {
+            Conv { cout: usize, cin: usize, k: [usize; 3] },
+            Dense { cin: usize, cout: usize },
+        }
+        let mut raw = Vec::new();
+        for pair in meta.params.chunks(2) {
+            let (w, b) = (&pair[0], &pair[1]);
+            anyhow::ensure!(b.shape.len() == 1, "'{}' is not a bias vector", b.name);
+            match w.shape.len() {
+                5 => {
+                    anyhow::ensure!(b.shape[0] == w.shape[0], "'{}' bias/cout mismatch", b.name);
+                    raw.push(Raw::Conv {
+                        cout: w.shape[0],
+                        cin: w.shape[1],
+                        k: [w.shape[2], w.shape[3], w.shape[4]],
+                    });
+                }
+                2 => {
+                    anyhow::ensure!(b.shape[0] == w.shape[1], "'{}' bias/cout mismatch", b.name);
+                    raw.push(Raw::Dense { cin: w.shape[0], cout: w.shape[1] });
+                }
+                _ => bail!("'{}' rank {} is neither conv nor dense", w.name, w.shape.len()),
+            }
+        }
+        let n_conv = raw.iter().take_while(|r| matches!(r, Raw::Conv { .. })).count();
+        anyhow::ensure!(
+            raw[n_conv..].iter().all(|r| matches!(r, Raw::Dense { .. })),
+            "parameter layout is not conv*-then-dense*"
+        );
+        let first_dense_cin = raw[n_conv..].first().map(|r| match r {
+            Raw::Dense { cin, .. } => *cin,
+            Raw::Conv { .. } => unreachable!(),
+        });
+
+        // Pass 2: assign strides while tracking the spatial shape.
+        let mut layers = Vec::with_capacity(raw.len() + 1);
+        let mut c = input[0];
+        let mut spatial = [input[1], input[2], input[3]];
+        for (j, r) in raw.iter().enumerate() {
+            match r {
+                Raw::Conv { cout, cin, k } => {
+                    anyhow::ensure!(*cin == c, "conv {j}: cin {cin} != incoming {c}");
+                    let s = if j + 1 < n_conv {
+                        *k // trunk: disjoint patches
+                    } else {
+                        match first_dense_cin {
+                            None => *k,
+                            Some(flat) => solve_last_stride(spatial, *k, *cout, flat)
+                                .with_context(|| format!("conv {j} (last before flatten)"))?,
+                        }
+                    };
+                    spatial = conv_out_shape(spatial, *k, s)
+                        .with_context(|| format!("conv {j}: {k:?}/{s:?} on {spatial:?}"))?;
+                    c = *cout;
+                    layers.push(Layer::Conv { cin: *cin, cout: *cout, k: *k, s, celu: true });
+                }
+                Raw::Dense { cin, cout } => {
+                    if j == n_conv {
+                        layers.push(Layer::Flatten);
+                        c = c * spatial[0] * spatial[1] * spatial[2];
+                    }
+                    anyhow::ensure!(*cin == c, "dense {j}: cin {cin} != incoming {c}");
+                    let last = j + 1 == raw.len();
+                    layers.push(Layer::Dense { cin: *cin, cout: *cout, celu: !last });
+                    c = *cout;
+                }
+            }
+        }
+        anyhow::ensure!(
+            c == meta.outputs,
+            "reconstructed width {c} != meta outputs {}",
+            meta.outputs
+        );
+        let arch = Arch { name: meta.name.clone(), input, outputs: meta.outputs, layers };
+        let specs = arch.param_specs();
+        anyhow::ensure!(specs.len() == meta.params.len(), "parameter count drifted");
+        for (a, b) in specs.iter().zip(&meta.params) {
+            anyhow::ensure!(a.shape == b.shape, "'{}' shape {:?} != meta {:?}", b.name, a.shape, b.shape);
+        }
+        Ok(arch)
+    }
+}
+
+/// VALID-padding output shape: `floor((in - k) / s) + 1` per dim.
+fn conv_out_shape(inp: [usize; 3], k: [usize; 3], s: [usize; 3]) -> Result<[usize; 3]> {
+    let mut out = [0usize; 3];
+    for d in 0..3 {
+        anyhow::ensure!(s[d] >= 1, "stride {:?} has a zero component", s);
+        anyhow::ensure!(k[d] >= 1 && k[d] <= inp[d], "kernel {:?} exceeds input {:?}", k, inp);
+        out[d] = (inp[d] - k[d]) / s[d] + 1;
+    }
+    Ok(out)
+}
+
+/// Solve the last conv's stride so that `cout * prod(out_spatial)` equals
+/// the first dense layer's fan-in. Dims with `k == 1` keep stride 1; dims
+/// fully covered by the kernel produce a single patch for any stride; at
+/// most one remaining dim may need solving.
+fn solve_last_stride(inp: [usize; 3], k: [usize; 3], cout: usize, flat: usize) -> Result<[usize; 3]> {
+    anyhow::ensure!(flat % cout == 0, "flatten size {flat} not divisible by cout {cout}");
+    let target = flat / cout;
+    let mut s = [0usize; 3];
+    let mut known = 1usize;
+    let mut free: Option<usize> = None;
+    for d in 0..3 {
+        if k[d] == 1 {
+            s[d] = 1;
+            known *= inp[d];
+        } else if k[d] == inp[d] {
+            // Kernel covers the whole dim: a single patch for any stride;
+            // arch.py writes stride 1 here (cfg_a/small last conv).
+            s[d] = 1;
+        } else if free.is_none() {
+            free = Some(d);
+        } else {
+            bail!("stride is ambiguous: two unconstrained dims in kernel {k:?} on {inp:?}");
+        }
+    }
+    match free {
+        None => {
+            anyhow::ensure!(known == target, "spatial {known} != required {target}");
+        }
+        Some(d) => {
+            anyhow::ensure!(target % known == 0, "required {target} not divisible by {known}");
+            let need = target / known;
+            anyhow::ensure!(need >= 1, "need at least one output position");
+            let span = inp[d] - k[d];
+            let candidates: Vec<usize> =
+                (1..=inp[d]).filter(|&cand| span / cand + 1 == need).collect();
+            match (candidates.as_slice(), need) {
+                ([], _) => bail!("no stride yields {need} outputs from in {} k {}", inp[d], k[d]),
+                // need == 1 reads the single patch at offset 0 whatever the
+                // stride is — every candidate is semantically identical.
+                (_, 1) => s[d] = candidates[0],
+                ([only], _) => s[d] = *only,
+                // Distinct strides with the same output count sample
+                // *different* patches; guessing would serve silently wrong
+                // predictions. meta.json does not record strides, so refuse.
+                (many, _) => bail!(
+                    "stride is ambiguous: {many:?} all yield {need} outputs from in {} k {} \
+                     (use a built-in architecture, or record strides in the meta)",
+                    inp[d],
+                    k[d]
+                ),
+            }
+        }
+    }
+    Ok(s)
+}
+
+/// Load the variant's metadata from `dir/meta.json` when present, else fall
+/// back to the built-in architecture (native-only deployments need no
+/// artifacts at all).
+pub fn load_or_builtin_meta(dir: &Path, variant: &str) -> Result<VariantMeta> {
+    if dir.join("meta.json").exists() {
+        Ok(Meta::load(dir)?.variant(variant)?.clone())
+    } else {
+        Ok(Arch::for_variant(variant)?.to_meta())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_archs_validate_with_expected_flatten() {
+        for (name, flat, outputs) in [("small", 64, 1), ("cfg_a", 128, 1), ("cfg_b", 256, 4)] {
+            let a = Arch::for_variant(name).unwrap();
+            assert_eq!(a.validate().unwrap(), flat, "{name}");
+            assert_eq!(a.outputs, outputs, "{name}");
+        }
+        assert!(Arch::for_variant("nope").is_err());
+    }
+
+    #[test]
+    fn param_spec_names_match_python_layout() {
+        // small: 4 convs (layers 0-3), flatten (4), dense 5/6/7.
+        let a = Arch::for_variant("small").unwrap();
+        let names: Vec<String> = a.param_specs().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names[0], "conv0.w");
+        assert_eq!(names[7], "conv3.b");
+        assert_eq!(names[8], "dense5.w");
+        assert_eq!(names[13], "dense7.b");
+        let meta = a.to_meta();
+        assert_eq!(meta.n_param_arrays, 14); // 4 convs + 3 denses, (w, b) each
+        assert_eq!(meta.n_parameters, meta.params.iter().map(|p| p.numel()).sum::<usize>());
+    }
+
+    #[test]
+    fn from_meta_roundtrips_builtin_archs() {
+        // The stride-inference path must recover every built-in arch
+        // exactly — including cfg_b's non-kernel last-conv stride (1,1,2).
+        for name in ["small", "cfg_a", "cfg_b"] {
+            let a = Arch::for_variant(name).unwrap();
+            let back = Arch::from_meta(&a.to_meta()).unwrap();
+            assert_eq!(a, back, "{name}");
+        }
+    }
+
+    #[test]
+    fn from_meta_rejects_foreign_layouts() {
+        let mut meta = Arch::for_variant("small").unwrap().to_meta();
+        meta.params[0].shape = vec![16, 2, 1]; // rank-3 weight
+        assert!(Arch::from_meta(&meta).is_err());
+        let mut meta2 = Arch::for_variant("small").unwrap().to_meta();
+        meta2.outputs = 9;
+        assert!(Arch::from_meta(&meta2).is_err());
+    }
+
+    #[test]
+    fn from_meta_refuses_ambiguous_last_stride() {
+        // in=6, k=2, need 2 outputs: strides 3 and 4 both give
+        // floor(4/s)+1 == 2 but sample different patches — must bail, not
+        // guess (meta.json does not record strides).
+        let spec = |name: &str, shape: Vec<usize>| ParamSpec { name: name.into(), shape, bound: 0.5 };
+        let meta = VariantMeta {
+            name: "ambig".into(),
+            input: vec![1, 1, 1, 6],
+            outputs: 1,
+            n_param_arrays: 4,
+            n_parameters: 2 + 1 + 2 + 1,
+            params: vec![
+                spec("conv0.w", vec![1, 1, 1, 1, 2]),
+                spec("conv0.b", vec![1]),
+                spec("dense2.w", vec![2, 1]),
+                spec("dense2.b", vec![1]),
+            ],
+            artifacts: BTreeMap::new(),
+        };
+        let err = Arch::from_meta(&meta).unwrap_err();
+        assert!(format!("{err:#}").contains("ambiguous"), "{err:#}");
+    }
+
+    #[test]
+    fn builtin_meta_fallback_without_artifacts() {
+        let dir = std::env::temp_dir().join(format!("semarch_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let meta = load_or_builtin_meta(&dir, "small").unwrap();
+        assert_eq!(meta.input, vec![2, 2, 16, 2]);
+        assert!(meta.artifacts.is_empty());
+        assert!(load_or_builtin_meta(&dir, "huge").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

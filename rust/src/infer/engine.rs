@@ -1,0 +1,342 @@
+//! The native inference engine: SEMULATOR forward passes straight from a
+//! [`ModelState`], no PJRT, no artifacts.
+//!
+//! Build-time packing turns every layer into one [`matmul_nt`] call:
+//!
+//! * conv weights `(Cout, Cin, kD, kH, kW)` are row-major, so they already
+//!   are the packed `(Cout, K = Cin*kD*kH*kW)` left operand; a precomputed
+//!   gather table turns each sample into the `(P, K)` patch matrix
+//!   (im2col), and the product lands channel-major `(Cout, P)` — exactly
+//!   the next layer's `(C, D', H', W')` row-major input, so flatten is
+//!   free.
+//! * dense weights `(K, N)` are pre-transposed once to `(N, K)`.
+//!
+//! Bias + CELU run as a fused single-pass epilogue. Batches are split into
+//! contiguous chunks executed on `util::parallel` scoped threads; dense
+//! layers batch whole chunks, convs run per sample within a chunk.
+
+use anyhow::{Context, Result};
+
+use crate::model::ModelState;
+use crate::runtime::VariantMeta;
+use crate::util::{default_workers, parallel_map};
+
+use super::arch::{Arch, Layer};
+use super::kernels::{bias_celu_cols, bias_celu_rows, matmul_nt};
+use super::{BackendKind, EmulatorBackend};
+
+/// Below this many samples per worker, extra threads cost more than they
+/// save (the small variant's forward is ~µs per sample).
+const MIN_CHUNK: usize = 16;
+
+enum Packed {
+    Conv {
+        cout: usize,
+        /// Patch width `Cin * kD * kH * kW`.
+        k: usize,
+        /// Output spatial positions `D' * H' * W'`.
+        p: usize,
+        /// `p * k` input indices: `gather[pp * k + q]` is the sample-local
+        /// source of patch row `pp`, column `q`.
+        gather: Vec<u32>,
+        w: Vec<f32>,
+        b: Vec<f32>,
+        celu: bool,
+        in_len: usize,
+        out_len: usize,
+    },
+    Dense {
+        k: usize,
+        n: usize,
+        /// `(n, k)` pre-transposed weight.
+        wt: Vec<f32>,
+        b: Vec<f32>,
+        celu: bool,
+    },
+}
+
+/// Pure-Rust [`EmulatorBackend`]: packed weights + gather tables.
+pub struct NativeEngine {
+    name: String,
+    layers: Vec<Packed>,
+    n_features: usize,
+    n_outputs: usize,
+    workers: usize,
+}
+
+impl NativeEngine {
+    /// Pack `state` for `arch`. Validates that the parameter layout matches
+    /// the architecture before touching any data.
+    pub fn new(arch: &Arch, state: &ModelState) -> Result<Self> {
+        arch.validate().with_context(|| format!("arch '{}'", arch.name))?;
+        let specs = arch.param_specs();
+        anyhow::ensure!(
+            specs.len() == state.arrays.len(),
+            "state has {} parameter arrays, arch '{}' wants {}",
+            state.arrays.len(),
+            arch.name,
+            specs.len()
+        );
+        for ((spec, sspec), arr) in specs.iter().zip(&state.specs).zip(&state.arrays) {
+            anyhow::ensure!(
+                spec.shape == sspec.shape && spec.numel() == arr.len(),
+                "array '{}': state shape {:?} != arch shape {:?}",
+                sspec.name,
+                sspec.shape,
+                spec.shape
+            );
+        }
+
+        let mut layers = Vec::new();
+        let mut c = arch.input[0];
+        let mut dims = [arch.input[1], arch.input[2], arch.input[3]];
+        let mut pi = 0usize;
+        for ly in &arch.layers {
+            match ly {
+                Layer::Conv { cin, cout, k, s, celu } => {
+                    let (w, b) = (&state.arrays[pi], &state.arrays[pi + 1]);
+                    pi += 2;
+                    let [d_in, h_in, w_in] = dims;
+                    let od = (d_in - k[0]) / s[0] + 1;
+                    let oh = (h_in - k[1]) / s[1] + 1;
+                    let ow = (w_in - k[2]) / s[2] + 1;
+                    let kq = cin * k[0] * k[1] * k[2];
+                    let p = od * oh * ow;
+                    let in_len = c * d_in * h_in * w_in;
+                    let mut gather = Vec::with_capacity(p * kq);
+                    for zd in 0..od {
+                        for zh in 0..oh {
+                            for zw in 0..ow {
+                                for ci in 0..*cin {
+                                    for kd in 0..k[0] {
+                                        for kh in 0..k[1] {
+                                            for kw in 0..k[2] {
+                                                let xi = ((ci * d_in + zd * s[0] + kd) * h_in
+                                                    + zh * s[1]
+                                                    + kh)
+                                                    * w_in
+                                                    + zw * s[2]
+                                                    + kw;
+                                                gather.push(xi as u32);
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    layers.push(Packed::Conv {
+                        cout: *cout,
+                        k: kq,
+                        p,
+                        gather,
+                        w: w.clone(),
+                        b: b.clone(),
+                        celu: *celu,
+                        in_len,
+                        out_len: cout * p,
+                    });
+                    c = *cout;
+                    dims = [od, oh, ow];
+                }
+                Layer::Flatten => {
+                    // Channel-major conv output row-major == flat layout.
+                    c *= dims[0] * dims[1] * dims[2];
+                    dims = [1, 1, 1];
+                }
+                Layer::Dense { cin, cout, celu } => {
+                    let (w, b) = (&state.arrays[pi], &state.arrays[pi + 1]);
+                    pi += 2;
+                    layers.push(Packed::Dense {
+                        k: *cin,
+                        n: *cout,
+                        wt: super::kernels::transpose_pack(w, *cin, *cout),
+                        b: b.clone(),
+                        celu: *celu,
+                    });
+                    c = *cout;
+                }
+            }
+        }
+        Ok(Self {
+            name: arch.name.clone(),
+            layers,
+            n_features: arch.n_features(),
+            n_outputs: arch.outputs,
+            workers: default_workers(),
+        })
+    }
+
+    /// Build from a [`VariantMeta`] (reconstructing the architecture from
+    /// the parameter layout — see [`Arch::from_meta`]).
+    pub fn from_meta(meta: &VariantMeta, state: &ModelState) -> Result<Self> {
+        Self::new(&Arch::from_meta(meta)?, state)
+    }
+
+    /// Override the worker-thread count (default: all cores).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.name
+    }
+
+    /// Forward a batch laid out `batch * n_features` batch-major; returns
+    /// `batch * n_outputs`. Splits the batch over scoped worker threads.
+    pub fn forward(&self, x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            !x.is_empty() && x.len() % self.n_features == 0,
+            "input length {} is not a nonzero multiple of {} features",
+            x.len(),
+            self.n_features
+        );
+        let batch = x.len() / self.n_features;
+        let tasks = self.workers.min(batch.div_ceil(MIN_CHUNK)).max(1);
+        if tasks <= 1 {
+            return Ok(self.forward_chunk(x));
+        }
+        let per = batch.div_ceil(tasks);
+        let n_tasks = batch.div_ceil(per);
+        let parts = parallel_map(n_tasks, n_tasks, |t| {
+            let lo = t * per;
+            let hi = ((t + 1) * per).min(batch);
+            self.forward_chunk(&x[lo * self.n_features..hi * self.n_features])
+        });
+        let mut out = Vec::with_capacity(batch * self.n_outputs);
+        for part in parts {
+            out.extend_from_slice(&part);
+        }
+        Ok(out)
+    }
+
+    /// Single-threaded forward over a chunk of whole samples.
+    fn forward_chunk(&self, x: &[f32]) -> Vec<f32> {
+        let n = x.len() / self.n_features;
+        let mut cur = x.to_vec();
+        let mut patch: Vec<f32> = Vec::new();
+        for ly in &self.layers {
+            match ly {
+                Packed::Conv { cout, k, p, gather, w, b, celu, in_len, out_len } => {
+                    let mut next = vec![0.0f32; n * out_len];
+                    patch.clear();
+                    patch.resize(p * k, 0.0);
+                    for s in 0..n {
+                        let sample = &cur[s * in_len..(s + 1) * in_len];
+                        for (dst, &src) in patch.iter_mut().zip(gather.iter()) {
+                            *dst = sample[src as usize];
+                        }
+                        let out = &mut next[s * out_len..(s + 1) * out_len];
+                        matmul_nt(w, &patch, *cout, *p, *k, out);
+                        bias_celu_rows(out, *cout, *p, b, *celu);
+                    }
+                    cur = next;
+                }
+                Packed::Dense { k, n: nu, wt, b, celu } => {
+                    let mut next = vec![0.0f32; n * nu];
+                    matmul_nt(&cur, wt, n, *nu, *k, &mut next);
+                    bias_celu_cols(&mut next, n, *nu, b, *celu);
+                    cur = next;
+                }
+            }
+        }
+        cur
+    }
+}
+
+impl EmulatorBackend for NativeEngine {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+
+    fn forward_batch(&self, inputs: &[f32]) -> Result<Vec<f32>> {
+        self.forward(inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::reference;
+    use crate::util::Rng;
+
+    fn random_inputs(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        (0..n).map(|_| rng.range(-0.2, 1.2) as f32).collect()
+    }
+
+    #[test]
+    fn matches_reference_on_all_builtin_variants() {
+        for (vi, name) in ["small", "cfg_a", "cfg_b"].into_iter().enumerate() {
+            let arch = Arch::for_variant(name).unwrap();
+            let state = ModelState::init(&arch.to_meta(), 11 + vi as u64);
+            let engine = NativeEngine::new(&arch, &state).unwrap();
+            let x = random_inputs(3 * arch.n_features(), 50 + vi as u64);
+            let got = engine.forward(&x).unwrap();
+            let want = reference::forward(&arch, &state, &x).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-5, "{name}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_is_row_independent() {
+        let arch = Arch::for_variant("small").unwrap();
+        let state = ModelState::init(&arch.to_meta(), 3);
+        let engine = NativeEngine::new(&arch, &state).unwrap();
+        let nf = arch.n_features();
+        let x = random_inputs(5 * nf, 9);
+        let batched = engine.forward(&x).unwrap();
+        for row in 0..5 {
+            let one = engine.forward(&x[row * nf..(row + 1) * nf]).unwrap();
+            for (a, b) in one.iter().zip(&batched[row * arch.outputs..(row + 1) * arch.outputs]) {
+                assert!((a - b).abs() <= 1e-6, "row {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let arch = Arch::for_variant("small").unwrap();
+        let state = ModelState::init(&arch.to_meta(), 5);
+        let nf = arch.n_features();
+        let x = random_inputs(64 * nf, 21);
+        let serial = NativeEngine::new(&arch, &state).unwrap().with_workers(1);
+        let parallel = NativeEngine::new(&arch, &state).unwrap().with_workers(4);
+        assert_eq!(serial.forward(&x).unwrap(), parallel.forward(&x).unwrap());
+    }
+
+    #[test]
+    fn rejects_mismatched_state() {
+        let arch = Arch::for_variant("small").unwrap();
+        let other = ModelState::init(&Arch::for_variant("cfg_a").unwrap().to_meta(), 0);
+        assert!(NativeEngine::new(&arch, &other).is_err());
+        let engine = NativeEngine::new(&arch, &ModelState::init(&arch.to_meta(), 0)).unwrap();
+        assert!(engine.forward(&[0.0; 7]).is_err());
+        assert!(engine.forward(&[]).is_err());
+    }
+
+    #[test]
+    fn backend_trait_surface() {
+        let arch = Arch::for_variant("small").unwrap();
+        let state = ModelState::init(&arch.to_meta(), 1);
+        let engine: Box<dyn EmulatorBackend> = Box::new(NativeEngine::new(&arch, &state).unwrap());
+        assert_eq!(engine.kind(), BackendKind::Native);
+        assert_eq!(engine.n_features(), 128); // (2, 2, 16, 2)
+        assert_eq!(engine.n_outputs(), 1);
+        assert_eq!(engine.max_batch(), None);
+        let y = engine.forward_batch(&vec![0.4f32; 2 * 128]).unwrap();
+        assert_eq!(y.len(), 2);
+    }
+}

@@ -1,0 +1,113 @@
+//! Native inference: a zero-dependency execution engine for the SEMULATOR
+//! regression network, plus the [`EmulatorBackend`] abstraction that lets
+//! the serving stack choose its forward implementation per deployment.
+//!
+//! The paper's pitch is that a regression network answers MAC queries
+//! orders of magnitude faster than SPICE — but funneling every forward
+//! through the PJRT runtime caps throughput at design-space-exploration
+//! scale and binds serving to compiled artifacts. This layer executes the
+//! network directly from a [`crate::model::ModelState`]:
+//!
+//! * [`arch`] — Rust mirror of the Table-2 layer stacks, plus
+//!   reconstruction from `meta.json` parameter layouts.
+//! * [`kernels`] — packed/tiled f32 matmul with fused bias+CELU epilogues.
+//! * [`engine`] — [`NativeEngine`]: load-time weight packing (conv im2col
+//!   gather tables, pre-transposed dense weights) and thread-parallel
+//!   batched execution.
+//! * [`reference`] — the naive loop-nest oracle the engine is tested
+//!   against.
+//!
+//! Backends are selected by [`BackendKind`]: the dynamic batcher
+//! (`coordinator::batcher`) constructs either a [`NativeEngine`] or the
+//! PJRT-backed `runtime::PjrtBackend` behind the same trait, the router
+//! records which one served each request, and its shadow path can
+//! cross-check one backend against the other and against golden SPICE.
+
+pub mod arch;
+pub mod engine;
+pub mod kernels;
+pub mod reference;
+
+pub use arch::{load_or_builtin_meta, Arch, Layer, BUILTIN_VARIANTS};
+pub use engine::NativeEngine;
+
+use anyhow::Result;
+
+/// Which forward-pass implementation a deployment runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust packed-matmul engine ([`NativeEngine`]); needs no
+    /// compiled artifacts, only a parameter state.
+    Native,
+    /// AOT-compiled HLO executed through the PJRT runtime
+    /// (`runtime::PjrtBackend`); needs `make artifacts` and a real `xla`
+    /// crate behind it.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(Self::Native),
+            "pjrt" | "xla" => Ok(Self::Pjrt),
+            other => anyhow::bail!("unknown backend '{other}' (native | pjrt)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Native => "native",
+            Self::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A batched forward-pass implementation the serving stack can drive.
+///
+/// Implementations own everything they need (parameters, compiled
+/// executables, scratch policy). They are constructed *inside* the thread
+/// that runs them — the PJRT handles are not `Send` — so the trait
+/// deliberately carries no `Send` bound.
+pub trait EmulatorBackend {
+    /// Which implementation this is (for metrics/routing labels).
+    fn kind(&self) -> BackendKind;
+
+    /// Normalized features per sample.
+    fn n_features(&self) -> usize;
+
+    /// Outputs (MAC voltages) per sample.
+    fn n_outputs(&self) -> usize;
+
+    /// Largest batch worth submitting in one call, if the implementation
+    /// has a preference (e.g. the largest compiled PJRT batch shape).
+    /// `None` means unbounded.
+    fn max_batch(&self) -> Option<usize> {
+        None
+    }
+
+    /// Run `inputs` (`k * n_features`, batch-major, any `k >= 1`) and
+    /// return `k * n_outputs` predictions. Implementations pad internally
+    /// if they only support fixed shapes.
+    fn forward_batch(&self, inputs: &[f32]) -> Result<Vec<f32>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_and_prints() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::Native.to_string(), "native");
+        assert_eq!(BackendKind::Pjrt.as_str(), "pjrt");
+    }
+}

@@ -1,0 +1,144 @@
+//! Naive forward pass: the correctness oracle for the packed engine.
+//!
+//! Direct loop-nest convolutions and dense layers over `(C, D, H, W)`
+//! row-major tensors, mirroring `python/compile/kernels/ref.py` (VALID
+//! padding, CELU alpha = 1). Deliberately unoptimized and allocation-happy;
+//! the parity proptests hold [`crate::infer::NativeEngine`] to this within
+//! float tolerance, and the per-output accumulation order matches the
+//! packed kernels so agreement is tight.
+
+use anyhow::Result;
+
+use crate::model::ModelState;
+
+use super::arch::{Arch, Layer};
+use super::kernels::celu;
+
+/// Forward `x` (`batch * n_features`, batch-major) through `arch` with the
+/// parameters in `state`; returns `batch * outputs` predictions.
+pub fn forward(arch: &Arch, state: &ModelState, x: &[f32]) -> Result<Vec<f32>> {
+    let nf = arch.n_features();
+    anyhow::ensure!(nf > 0 && x.len() % nf == 0, "input is not whole samples of {nf} features");
+    let batch = x.len() / nf;
+    let specs = arch.param_specs();
+    anyhow::ensure!(
+        specs.len() == state.arrays.len(),
+        "state has {} arrays, arch wants {}",
+        state.arrays.len(),
+        specs.len()
+    );
+    for (spec, arr) in specs.iter().zip(&state.arrays) {
+        anyhow::ensure!(spec.numel() == arr.len(), "array '{}' size mismatch", spec.name);
+    }
+
+    let mut out = Vec::with_capacity(batch * arch.outputs);
+    for s in 0..batch {
+        let y = forward_one(arch, state, &x[s * nf..(s + 1) * nf])?;
+        out.extend_from_slice(&y);
+    }
+    Ok(out)
+}
+
+fn forward_one(arch: &Arch, state: &ModelState, x: &[f32]) -> Result<Vec<f32>> {
+    let mut c = arch.input[0];
+    let mut dims = [arch.input[1], arch.input[2], arch.input[3]];
+    let mut cur = x.to_vec();
+    let mut p = 0usize; // parameter-array cursor
+    for ly in &arch.layers {
+        match ly {
+            Layer::Conv { cin, cout, k, s, celu: act } => {
+                let (w, b) = (&state.arrays[p], &state.arrays[p + 1]);
+                p += 2;
+                let [d_in, h_in, w_in] = dims;
+                let od = (d_in - k[0]) / s[0] + 1;
+                let oh = (h_in - k[1]) / s[1] + 1;
+                let ow = (w_in - k[2]) / s[2] + 1;
+                let mut next = vec![0.0f32; cout * od * oh * ow];
+                for co in 0..*cout {
+                    for zd in 0..od {
+                        for zh in 0..oh {
+                            for zw in 0..ow {
+                                let mut acc = 0.0f32;
+                                for ci in 0..*cin {
+                                    for kd in 0..k[0] {
+                                        for kh in 0..k[1] {
+                                            for kw in 0..k[2] {
+                                                let wi = ((((co * cin + ci) * k[0] + kd) * k[1]
+                                                    + kh)
+                                                    * k[2])
+                                                    + kw;
+                                                let xi = ((ci * d_in + zd * s[0] + kd) * h_in
+                                                    + zh * s[1]
+                                                    + kh)
+                                                    * w_in
+                                                    + zw * s[2]
+                                                    + kw;
+                                                acc += w[wi] * cur[xi];
+                                            }
+                                        }
+                                    }
+                                }
+                                let z = acc + b[co];
+                                next[((co * od + zd) * oh + zh) * ow + zw] =
+                                    if *act { celu(z) } else { z };
+                            }
+                        }
+                    }
+                }
+                cur = next;
+                c = *cout;
+                dims = [od, oh, ow];
+            }
+            Layer::Flatten => {
+                // (C, D, H, W) row-major is already the flat layout.
+                c *= dims[0] * dims[1] * dims[2];
+                dims = [1, 1, 1];
+            }
+            Layer::Dense { cin, cout, celu: act } => {
+                let (w, b) = (&state.arrays[p], &state.arrays[p + 1]);
+                p += 2;
+                anyhow::ensure!(cur.len() == *cin, "dense input width");
+                let mut next = vec![0.0f32; *cout];
+                for (n, nx) in next.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for (kk, cv) in cur.iter().enumerate() {
+                        acc += cv * w[kk * cout + n];
+                    }
+                    let z = acc + b[n];
+                    *nx = if *act { celu(z) } else { z };
+                }
+                cur = next;
+                c = *cout;
+            }
+        }
+    }
+    anyhow::ensure!(c == arch.outputs && cur.len() == arch.outputs, "output width");
+    Ok(cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_runs_all_builtin_variants() {
+        for name in ["small", "cfg_a", "cfg_b"] {
+            let arch = Arch::for_variant(name).unwrap();
+            let meta = arch.to_meta();
+            let state = ModelState::init(&meta, 42);
+            let x = vec![0.3f32; 2 * arch.n_features()];
+            let y = forward(&arch, &state, &x).unwrap();
+            assert_eq!(y.len(), 2 * arch.outputs, "{name}");
+            assert!(y.iter().all(|v| v.is_finite()), "{name}");
+            // Identical rows produce identical outputs.
+            assert_eq!(y[..arch.outputs], y[arch.outputs..], "{name}");
+        }
+    }
+
+    #[test]
+    fn rejects_ragged_input() {
+        let arch = Arch::for_variant("small").unwrap();
+        let state = ModelState::init(&arch.to_meta(), 0);
+        assert!(forward(&arch, &state, &vec![0.0f32; 7]).is_err());
+    }
+}

@@ -12,18 +12,38 @@
 //! * [`model`] — the SEMULATOR network config mirrored from the python side,
 //!   parameter layout and checkpoints.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts.
+//! * [`infer`] — the native inference engine: packed-matmul forward passes
+//!   straight from a parameter state, plus the `EmulatorBackend` trait both
+//!   forward paths implement.
 //! * [`coordinator`] — training loop, dynamic batcher, golden/emulated
 //!   request router, metrics.
 //! * [`analytic`] — the human-expert analytical baseline the paper argues
 //!   against.
 //! * [`stats`] — Theorem 4.1 error-bound machinery and histograms.
 //! * [`repro`] — one entrypoint per paper table/figure.
+//!
+//! ## Choosing a forward path
+//!
+//! The regression network can be executed two ways, selected per
+//! deployment behind one trait ([`infer::EmulatorBackend`]):
+//!
+//! | backend  | needs                         | built by                    |
+//! |----------|-------------------------------|-----------------------------|
+//! | `native` | a checkpoint (or fresh init)  | [`infer::NativeEngine`]     |
+//! | `pjrt`   | `make artifacts` + real `xla` | [`runtime::PjrtBackend`]    |
+//!
+//! The serving CLI exposes this as `--backend native|pjrt` (and
+//! `--cross-check` to shadow one against the other); the dynamic batcher,
+//! router and metrics all carry the selection through. In offline builds
+//! (vendored stub `xla` crate) the native backend is the only executable
+//! one — PJRT paths parse metadata but refuse to compile.
 
 pub mod analytic;
 pub mod util;
 
 pub mod coordinator;
 pub mod datagen;
+pub mod infer;
 pub mod model;
 pub mod repro;
 pub mod runtime;

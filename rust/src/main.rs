@@ -16,10 +16,11 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use semulator::coordinator::{
-    evaluate_state, train, BatcherConfig, EmulatorService, LrSchedule, Metrics, Policy, Router,
-    Server, TrainConfig,
+    evaluate_native, evaluate_state, train, BatcherConfig, EmulatorService, LrSchedule, Metrics,
+    Policy, Router, Server, TrainConfig,
 };
 use semulator::datagen::{generate_to, Dataset, GenConfig, SampleDist};
+use semulator::infer::{load_or_builtin_meta, Arch, BackendKind, BUILTIN_VARIANTS};
 use semulator::model::ModelState;
 use semulator::repro;
 use semulator::runtime::ArtifactStore;
@@ -62,13 +63,34 @@ const USAGE: &str = "usage: semulator <info|datagen|train|eval|serve|repro> [opt
   info                                   list artifacts and variants
   datagen  --variant V --n N --out FILE  generate a SPICE dataset
   train    --variant V --data FILE       train SEMULATOR (PJRT train step)
-  eval     --variant V --data FILE --ckpt FILE
-  serve    --variant V --ckpt FILE --addr HOST:PORT [--policy emulator|golden|shadow]
+  eval     --variant V --data FILE --ckpt FILE [--backend pjrt|native]
+  serve    --variant V --ckpt FILE --addr HOST:PORT
+           [--policy emulator|golden|shadow] [--backend native|pjrt] [--cross-check]
   repro    <table1|fig4|fig5|fig6|fig7|bound|speed|all> [--preset ci|small|paper]
-common:    --artifacts DIR (default artifacts)   --work DIR (default runs)";
+common:    --artifacts DIR (default artifacts)   --work DIR (default runs)
+backends:  'native' executes the regression network in-process from the
+           checkpoint alone (no PJRT artifacts needed; the serve default);
+           'pjrt' runs the AOT-compiled HLO artifacts. --cross-check also
+           spawns the other backend and reports native-vs-pjrt deviation
+           on every shadow-verified request.";
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let store = ArtifactStore::open(&artifact_dir(args))?;
+    let dir = artifact_dir(args);
+    if !dir.join("meta.json").exists() {
+        println!(
+            "no artifacts at {} — native-only deployment; built-in architectures:",
+            dir.display()
+        );
+        for &name in BUILTIN_VARIANTS {
+            let meta = Arch::for_variant(name)?.to_meta();
+            println!(
+                "variant {name}: input {:?}, outputs {}, {} parameters in {} arrays",
+                meta.input, meta.outputs, meta.n_parameters, meta.n_param_arrays
+            );
+        }
+        return Ok(());
+    }
+    let store = ArtifactStore::open(&dir)?;
     println!("platform: {}", store.runtime().platform());
     for (name, v) in &store.meta.variants {
         println!(
@@ -159,13 +181,26 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let variant = args.str_or("variant", "small");
-    let store = ArtifactStore::open(&artifact_dir(args))?;
+    let backend = BackendKind::parse(&args.str_or("backend", "pjrt"))?;
     let ds = Dataset::load(Path::new(args.str_opt("data").context("--data FILE required")?))?;
-    let meta = store.meta.variant(&variant)?;
-    let state = ModelState::load(Path::new(args.str_opt("ckpt").context("--ckpt FILE required")?), meta)?;
-    let stats = evaluate_state(&store, &variant, &state, &ds)?;
+    let ckpt = Path::new(args.str_opt("ckpt").context("--ckpt FILE required")?);
+    let stats = match backend {
+        BackendKind::Native => {
+            // Artifact-free path: meta from disk when present, else the
+            // built-in architecture.
+            let meta = load_or_builtin_meta(&artifact_dir(args), &variant)?;
+            let state = ModelState::load(ckpt, &meta)?;
+            evaluate_native(&meta, &state, &ds)?
+        }
+        BackendKind::Pjrt => {
+            let store = ArtifactStore::open(&artifact_dir(args))?;
+            let meta = store.meta.variant(&variant)?;
+            let state = ModelState::load(ckpt, meta)?;
+            evaluate_state(&store, &variant, &state, &ds)?
+        }
+    };
     println!(
-        "n {}  MAE {:.4}mV  mse {:.4e}  P(|err|<0.5mV) {:.3}",
+        "backend {backend}  n {}  MAE {:.4}mV  mse {:.4e}  P(|err|<0.5mV) {:.3}",
         stats.n,
         stats.mae * 1e3,
         stats.mse,
@@ -177,8 +212,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let variant = args.str_or("variant", "small");
     let dir = artifact_dir(args);
-    let store = ArtifactStore::open(&dir)?;
-    let meta = store.meta.variant(&variant)?.clone();
+    let backend = BackendKind::parse(&args.str_or("backend", "native"))?;
+    // The native backend needs no artifacts; fall back to the built-in
+    // architecture when meta.json is absent.
+    let meta = load_or_builtin_meta(&dir, &variant)?;
     let state = ModelState::load(
         Path::new(args.str_opt("ckpt").context("--ckpt FILE required (train first)")?),
         &meta,
@@ -193,14 +230,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batcher_cfg = BatcherConfig {
         max_batch: args.usize_or("max-batch", 64)?,
         max_wait: std::time::Duration::from_micros(args.u64_or("max-wait-us", 200)?),
+        backend,
     };
-    let service = EmulatorService::spawn(dir, &variant, state, batcher_cfg, metrics.clone())?;
+    let service = EmulatorService::spawn(
+        dir.clone(),
+        &variant,
+        state.clone(),
+        batcher_cfg.clone(),
+        metrics.clone(),
+    )?;
     let block = AnalogBlock::new(repro::block_for(&variant)?).map_err(anyhow::Error::msg)?;
-    let router = Arc::new(Router::new(block, service.handle(), policy, metrics.clone(), 0));
+    let mut router = Router::new(block, service.handle(), policy, metrics.clone(), 0);
+    // --cross-check: stand up the *other* backend too (same batching
+    // policy); every shadow-verified request then reports the
+    // native-vs-pjrt deviation.
+    let _cross_service = if args.has("cross-check") {
+        let other = match backend {
+            BackendKind::Native => BackendKind::Pjrt,
+            BackendKind::Pjrt => BackendKind::Native,
+        };
+        let cfg2 = BatcherConfig { backend: other, ..batcher_cfg };
+        // Dedicated metrics: the secondary's batch/latency traffic must not
+        // blend into the serving backend's numbers (router-level counters
+        // like cross_checked still land on the shared `metrics`).
+        let svc = EmulatorService::spawn(dir, &variant, state, cfg2, Arc::new(Metrics::default()))?;
+        router = router.with_cross_check(svc.handle());
+        Some(svc)
+    } else {
+        None
+    };
+    let router = Arc::new(router);
     let addr = args.str_or("addr", "127.0.0.1:7070");
     let server = Server::spawn(&addr, router, metrics)?;
     println!(
-        "serving {variant} on {} (policy {policy:?}); send {{\"cmd\":\"shutdown\"}} to stop",
+        "serving {variant} on {} (policy {policy:?}, backend {backend}); \
+         send {{\"cmd\":\"shutdown\"}} to stop",
         server.addr
     );
     // Block until the acceptor exits (shutdown command) — dropping joins.

@@ -1,0 +1,133 @@
+//! [`EmulatorBackend`] implementation over the AOT-compiled PJRT forward
+//! artifacts.
+//!
+//! Owns its own [`ArtifactStore`] (and therefore its own PJRT client): the
+//! `xla` crate's handles are not `Send`, so a backend is constructed inside
+//! whatever thread drives it (see `coordinator::batcher`). Requests are
+//! padded up to the smallest compiled batch shape that fits, and batches
+//! larger than the biggest artifact are processed in slices, so callers see
+//! the same any-`k` contract as the native engine.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::infer::{BackendKind, EmulatorBackend};
+use crate::model::ModelState;
+
+use super::artifacts::ArtifactStore;
+use super::client::{lit_f32, read_f32, Executable};
+
+/// PJRT-backed forward path: compiled executables + parameter literals.
+pub struct PjrtBackend {
+    // Keeps the PJRT client (and compiled executables) alive.
+    #[allow(dead_code)]
+    store: ArtifactStore,
+    /// `(batch, executable)` ladder, ascending by batch.
+    exes: Vec<(usize, Arc<Executable>)>,
+    params: Vec<xla::Literal>,
+    input_dims: Vec<usize>,
+    n_features: usize,
+    n_outputs: usize,
+}
+
+impl PjrtBackend {
+    /// Compile every non-ablation forward artifact of `variant` under
+    /// `artifact_dir` and stage `state` as device literals.
+    pub fn new(artifact_dir: &Path, variant: &str, state: &ModelState) -> Result<Self> {
+        let store = ArtifactStore::open(artifact_dir)?;
+        let meta = store.meta.variant(variant)?.clone();
+        let mut batch_kinds: Vec<(usize, String)> = meta
+            .artifacts
+            .iter()
+            .filter(|(k, _)| k.starts_with("fwd_b") && !k.ends_with("_ref"))
+            .map(|(k, a)| (a.batch, k.clone()))
+            .collect();
+        batch_kinds.sort();
+        anyhow::ensure!(
+            !batch_kinds.is_empty(),
+            "variant '{variant}' has no forward artifacts (run `make artifacts`, or use the native backend)"
+        );
+        let exes = batch_kinds
+            .iter()
+            .map(|(b, k)| Ok((*b, store.executable(variant, k)?)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            params: state.to_literals()?,
+            input_dims: meta.input.clone(),
+            n_features: meta.n_features(),
+            n_outputs: meta.outputs,
+            exes,
+            store,
+        })
+    }
+
+    /// Largest compiled batch shape.
+    pub fn largest_batch(&self) -> usize {
+        self.exes.last().map(|(b, _)| *b).unwrap_or(1)
+    }
+
+    /// Run exactly one compiled call for `rows` samples (`rows <=
+    /// largest_batch()`), padding by repeating the final row.
+    fn run_padded(&self, xs: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let (exe_batch, exe) = self
+            .exes
+            .iter()
+            .find(|(b, _)| *b >= rows)
+            .unwrap_or_else(|| self.exes.last().expect("nonempty ladder"));
+        let exe_batch = *exe_batch;
+        let mut xb = Vec::with_capacity(exe_batch * self.n_features);
+        xb.extend_from_slice(xs);
+        let last = &xs[(rows - 1) * self.n_features..];
+        for _ in rows..exe_batch {
+            xb.extend_from_slice(last);
+        }
+        let mut dims = vec![exe_batch];
+        dims.extend_from_slice(&self.input_dims);
+        let x_lit = lit_f32(&dims, &xb)?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&x_lit);
+        let outs = exe.run(&inputs).with_context(|| format!("PJRT forward b{exe_batch}"))?;
+        let flat = read_f32(&outs[0])?;
+        Ok(flat[..rows * self.n_outputs].to_vec())
+    }
+}
+
+impl EmulatorBackend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+
+    fn max_batch(&self) -> Option<usize> {
+        Some(self.largest_batch())
+    }
+
+    fn forward_batch(&self, inputs: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            !inputs.is_empty() && inputs.len() % self.n_features == 0,
+            "input length {} is not a nonzero multiple of {} features",
+            inputs.len(),
+            self.n_features
+        );
+        let k = inputs.len() / self.n_features;
+        let cap = self.largest_batch();
+        let mut out = Vec::with_capacity(k * self.n_outputs);
+        let mut done = 0usize;
+        while done < k {
+            let take = cap.min(k - done);
+            let xs = &inputs[done * self.n_features..(done + take) * self.n_features];
+            out.extend_from_slice(&self.run_padded(xs, take)?);
+            done += take;
+        }
+        Ok(out)
+    }
+}

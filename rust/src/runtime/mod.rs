@@ -3,9 +3,17 @@
 //! Python never runs at serve/train time — `make artifacts` lowered the
 //! JAX/Pallas model to HLO text once; this module compiles those files on
 //! the in-process PJRT CPU client and exposes typed entry points.
+//!
+//! This is one of two interchangeable forward paths: [`PjrtBackend`] wraps
+//! the compiled forward artifacts behind the `infer::EmulatorBackend`
+//! trait, next to the artifact-free `infer::NativeEngine`. Deployments
+//! pick per-process (`--backend pjrt|native`); builds on the vendored
+//! stub `xla` crate can parse metadata but only serve natively.
 
 pub mod artifacts;
+pub mod backend;
 pub mod client;
 
 pub use artifacts::{ArtifactMeta, ArtifactStore, Meta, ParamSpec, VariantMeta};
+pub use backend::PjrtBackend;
 pub use client::{lit_f32, lit_scalar, literal_dims, read_f32, Executable, Runtime};

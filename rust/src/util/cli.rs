@@ -3,6 +3,13 @@
 //! Grammar: `semulator <command> [positional...] [--key value | --key=value
 //! | --switch]`. A `--name` token is a boolean switch when it is last or
 //! followed by another `--` token.
+//!
+//! Deployment-relevant options (full usage text in `main.rs`):
+//! `--backend native|pjrt` selects the emulator forward path for
+//! `serve`/`eval` (`native` = in-process packed-matmul engine, no
+//! artifacts required; `pjrt` = AOT-compiled HLO), and the `--cross-check`
+//! switch additionally spawns the other backend so shadow-verified
+//! requests report the native-vs-pjrt deviation.
 
 use std::collections::{BTreeMap, BTreeSet};
 

@@ -7,6 +7,12 @@
 //!   column pair).
 //! * [`fast`] — structured two-level Newton solver, O(cells) per step.
 //! * [`block`] — the high-level `AnalogBlock` API.
+//!
+//! At serve time a block is the *golden* reference the coordinator routes
+//! against; its learned stand-ins live behind `infer::EmulatorBackend`
+//! (the native packed-matmul engine or the PJRT artifacts), and the
+//! router's shadow path checks emulated answers back against
+//! `AnalogBlock::simulate`.
 
 pub mod array;
 pub mod block;

@@ -1,5 +1,7 @@
 //! End-to-end coordinator tests: datagen -> train -> evaluate; batcher +
-//! router + TCP server round trips. Skipped without built artifacts.
+//! router + TCP server round trips. PJRT-path tests are skipped without
+//! built artifacts; the native-backend tests run everywhere (the native
+//! engine needs no artifacts at all).
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::PathBuf;
@@ -10,6 +12,7 @@ use semulator::coordinator::{
     Server, TrainConfig,
 };
 use semulator::datagen::{generate, GenConfig, SampleDist};
+use semulator::infer::{Arch, BackendKind, NativeEngine};
 use semulator::model::ModelState;
 use semulator::repro::block_for;
 use semulator::runtime::ArtifactStore;
@@ -57,7 +60,11 @@ fn batcher_parallel_clients_agree_with_direct_forward() {
         dir.clone(),
         "small",
         state.clone(),
-        BatcherConfig { max_batch: 16, max_wait: std::time::Duration::from_millis(2) },
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: std::time::Duration::from_millis(2),
+            ..BatcherConfig::default()
+        },
         metrics.clone(),
     )
     .unwrap();
@@ -159,6 +166,167 @@ fn router_shadow_policy_and_tcp_server_roundtrip() {
     line.clear();
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("error"));
+}
+
+/// A directory with no meta.json: forces the built-in-architecture path.
+fn empty_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("semnoart_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn native_batcher_serves_without_artifacts() {
+    // The whole point of the native backend: batcher -> router -> TCP
+    // server works on a checkout with zero compiled artifacts.
+    let dir = empty_dir("batcher");
+    let meta = Arch::for_variant("small").unwrap().to_meta();
+    let state = ModelState::init(&meta, 4);
+    let metrics = Arc::new(Metrics::default());
+    let service = EmulatorService::spawn(
+        dir.clone(),
+        "small",
+        state.clone(),
+        BatcherConfig::with_backend(BackendKind::Native),
+        metrics.clone(),
+    )
+    .unwrap();
+    let handle = service.handle();
+    assert_eq!(handle.backend(), BackendKind::Native);
+
+    // Batcher answers must equal a direct engine forward exactly.
+    let engine = NativeEngine::from_meta(&meta, &state).unwrap();
+    let mut rng = Rng::seed_from(11);
+    for _ in 0..4 {
+        let features: Vec<f32> = (0..meta.n_features()).map(|_| rng.uniform() as f32).collect();
+        let got = handle.infer(features.clone()).unwrap();
+        let want = engine.forward(&features).unwrap();
+        assert_eq!(got, want);
+    }
+    assert_eq!(metrics.batched_requests.load(std::sync::atomic::Ordering::Relaxed), 4);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn native_router_and_server_roundtrip_without_artifacts() {
+    let dir = empty_dir("server");
+    let meta = Arch::for_variant("small").unwrap().to_meta();
+    let metrics = Arc::new(Metrics::default());
+    let service = EmulatorService::spawn(
+        dir.clone(),
+        "small",
+        ModelState::init(&meta, 9),
+        BatcherConfig::with_backend(BackendKind::Native),
+        metrics.clone(),
+    )
+    .unwrap();
+    let block_cfg = block_for("small").unwrap();
+    let router = Arc::new(Router::new(
+        AnalogBlock::new(block_cfg.clone()).unwrap(),
+        service.handle(),
+        Policy::Shadow { verify_frac: 1.0 },
+        metrics.clone(),
+        0,
+    ));
+    let server = Server::spawn("127.0.0.1:0", router, metrics.clone()).unwrap();
+
+    let mut rng = Rng::seed_from(5);
+    let x = SampleDist::UniformIid.sample(&block_cfg, &mut rng);
+    let req = Json::obj(vec![("v", Json::arr_f64(&x.v)), ("g", Json::arr_f64(&x.g))]).to_string();
+    let mut stream = std::net::TcpStream::connect(server.addr).unwrap();
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let reply = json_parse(line.trim()).unwrap();
+    assert_eq!(reply.get("route").unwrap().as_str(), Some("emulated"));
+    // The reply names the serving backend; shadow verify always ran.
+    assert_eq!(reply.get("backend").unwrap().as_str(), Some("native"));
+    assert!(reply.get("verify_dev").unwrap().as_f64().unwrap().is_finite());
+    assert_eq!(reply.get("y").unwrap().as_arr().unwrap().len(), block_cfg.n_mac());
+
+    // Per-backend metrics counters distinguish the implementations.
+    stream.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let snap = json_parse(line.trim()).unwrap();
+    assert_eq!(snap.get("emulated_native").unwrap().as_f64(), Some(1.0));
+    assert_eq!(snap.get("emulated_pjrt").unwrap().as_f64(), Some(0.0));
+    assert_eq!(snap.get("verified").unwrap().as_f64(), Some(1.0));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cross_check_between_two_native_backends_agrees() {
+    // Cross-check plumbing: attach a second emulator handle with identical
+    // weights; the recorded native-vs-secondary deviation must be ~0 and
+    // the cross_checked counter must advance. (With real artifacts the
+    // secondary would be the PJRT backend.)
+    let dir = empty_dir("cross");
+    let meta = Arch::for_variant("small").unwrap().to_meta();
+    let state = ModelState::init(&meta, 21);
+    let metrics = Arc::new(Metrics::default());
+    let primary = EmulatorService::spawn(
+        dir.clone(),
+        "small",
+        state.clone(),
+        BatcherConfig::with_backend(BackendKind::Native),
+        metrics.clone(),
+    )
+    .unwrap();
+    let secondary = EmulatorService::spawn(
+        dir.clone(),
+        "small",
+        state,
+        BatcherConfig::with_backend(BackendKind::Native),
+        metrics.clone(),
+    )
+    .unwrap();
+    let block_cfg = block_for("small").unwrap();
+    let router = Router::new(
+        AnalogBlock::new(block_cfg.clone()).unwrap(),
+        primary.handle(),
+        Policy::Shadow { verify_frac: 1.0 },
+        metrics.clone(),
+        3,
+    )
+    .with_cross_check(secondary.handle());
+
+    let mut rng = Rng::seed_from(31);
+    let x = SampleDist::UniformIid.sample(&block_cfg, &mut rng);
+    let res = router.handle(&x).unwrap();
+    assert_eq!(res.backend, Some(BackendKind::Native));
+    assert!(res.verify_dev.unwrap().is_finite());
+    assert!(res.cross_dev.unwrap() < 1e-12, "identical weights must agree");
+    assert_eq!(metrics.cross_checked.load(std::sync::atomic::Ordering::Relaxed), 1);
+
+    // Best-effort contract: a secondary that rejects requests (here: a
+    // cfg_a engine whose feature width can't accept small-block inputs)
+    // must not fail the request — the primary's answer still flows,
+    // cross_dev is just absent and cross_failed counts the miss.
+    let mismatched = EmulatorService::spawn(
+        dir.clone(),
+        "cfg_a",
+        ModelState::init(&Arch::for_variant("cfg_a").unwrap().to_meta(), 0),
+        BatcherConfig::with_backend(BackendKind::Native),
+        metrics.clone(),
+    )
+    .unwrap();
+    let router2 = Router::new(
+        AnalogBlock::new(block_cfg.clone()).unwrap(),
+        primary.handle(),
+        Policy::Shadow { verify_frac: 1.0 },
+        metrics.clone(),
+        3,
+    )
+    .with_cross_check(mismatched.handle());
+    let res = router2.handle(&x).unwrap();
+    assert_eq!(res.route, semulator::coordinator::Route::Emulated);
+    assert!(res.verify_dev.is_some());
+    assert!(res.cross_dev.is_none());
+    assert_eq!(metrics.cross_failed.load(std::sync::atomic::Ordering::Relaxed), 1);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -3,6 +3,9 @@
 //! crate's own RNG across many cases; failures print the case seed).
 
 use semulator::datagen::{Dataset, SampleDist};
+use semulator::infer::{reference, Arch, NativeEngine};
+use semulator::model::ModelState;
+use semulator::runtime::PjrtBackend;
 use semulator::spice::matrix::{solve, DMat};
 use semulator::spice::{dc_op, node_v, Circuit, NrOptions, RramModel, Waveform, GND};
 use semulator::stats::{erf, erfinv};
@@ -193,6 +196,75 @@ fn prop_fast_solver_equivalence_random_geometry() {
         let gold = block.simulate_golden(&x).unwrap();
         for (f, g) in fast.iter().zip(gold.iter()) {
             assert!((f - g).abs() < 2e-5, "case {case} cfg {:?}: {f} vs {g}", cfg.input_shape());
+        }
+    }
+}
+
+/// Property: the packed native engine matches the naive reference forward
+/// on random `ModelState`s, batch sizes and inputs, for every built-in
+/// architecture — the engine's core correctness signal (the reference
+/// mirrors `python/compile/kernels/ref.py` op for op).
+#[test]
+fn prop_native_engine_matches_reference() {
+    for case in 0..20 {
+        let mut rng = Rng::seed_from(10_000 + case);
+        let variant = ["small", "cfg_a", "cfg_b"][rng.below(3)];
+        let arch = Arch::for_variant(variant).unwrap();
+        let state = ModelState::init(&arch.to_meta(), 77 ^ case);
+        let engine = NativeEngine::new(&arch, &state)
+            .unwrap_or_else(|e| panic!("case {case} ({variant}): {e:#}"));
+        let batch = 1 + rng.below(6);
+        let x: Vec<f32> =
+            (0..batch * arch.n_features()).map(|_| rng.range(-0.2, 1.2) as f32).collect();
+        let got = engine.forward(&x).unwrap();
+        let want = reference::forward(&arch, &state, &x).unwrap();
+        assert_eq!(got.len(), batch * arch.outputs);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-4,
+                "case {case} ({variant}) out {i}: native {g} vs reference {w}"
+            );
+        }
+    }
+}
+
+/// Property: the native engine matches the AOT-compiled PJRT forward
+/// within 1e-4 on random `ModelState`s. Needs `make artifacts` *and* a
+/// real `xla` crate; skipped (with the reason) when either is missing so
+/// `cargo test` stays clean on a fresh offline checkout.
+#[test]
+fn prop_native_engine_matches_pjrt_forward() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping native-vs-pjrt parity: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let meta = semulator::runtime::Meta::load(&dir).unwrap().variant("small").unwrap().clone();
+    for case in 0..8 {
+        let mut rng = Rng::seed_from(11_000 + case);
+        let state = ModelState::init(&meta, 500 + case);
+        let pjrt = match PjrtBackend::new(&dir, "small", &state) {
+            Ok(p) => p,
+            Err(e) => {
+                // Stub-xla builds parse the meta but cannot compile HLO.
+                eprintln!("skipping native-vs-pjrt parity: {e:#}");
+                return;
+            }
+        };
+        let engine = NativeEngine::from_meta(&meta, &state).unwrap();
+        let batch = 1 + rng.below(8);
+        let x: Vec<f32> =
+            (0..batch * meta.n_features()).map(|_| rng.uniform() as f32).collect();
+        use semulator::infer::EmulatorBackend;
+        let native = engine.forward(&x).unwrap();
+        let compiled = pjrt.forward_batch(&x).unwrap();
+        assert_eq!(native.len(), compiled.len());
+        for (i, (n, p)) in native.iter().zip(&compiled).enumerate() {
+            assert!(
+                (n - p).abs() <= 1e-4,
+                "case {case} out {i}: native {n} vs pjrt {p} (dev {})",
+                (n - p).abs()
+            );
         }
     }
 }

@@ -1,0 +1,221 @@
+//! Offline stub of the `xla` crate (PJRT bindings).
+//!
+//! The container image does not ship the XLA C++ runtime, so this vendored
+//! crate keeps the workspace compiling and the *host-side* data path fully
+//! functional while making the accelerator path fail loudly:
+//!
+//! * [`Literal`] is a complete host implementation (f32 arrays with shape,
+//!   scalars, tuples) — checkpoints, batch packing and every unit test that
+//!   moves plain buffers around work unchanged.
+//! * [`PjRtClient::compile`] and everything downstream of it return
+//!   [`Error`] — there is no compiler or device behind them. Deployments
+//!   without the real crate must use the native inference engine
+//!   (`semulator::infer::NativeEngine`, CLI `--backend native`).
+//!
+//! Swapping the real `xla` crate back in is a one-line `[patch]` in the
+//! workspace manifest; the API surface here matches the subset the
+//! workspace uses.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (mirrors `xla::Error` closely enough for `?`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable: semulator was built against the bundled stub `xla` crate \
+         (offline image without the XLA runtime); use the native backend \
+         (`--backend native` / BackendKind::Native) or patch in the real xla crate"
+    ))
+}
+
+/// Element types readable out of a [`Literal`] via [`Literal::to_vec`].
+pub trait NativeElement: Sized + Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeElement for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// Host-side literal: an f32 array with shape, or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    F32 { dims: Vec<i64>, data: Vec<f32> },
+    Tuple(Vec<Literal>),
+}
+
+/// Array shape (dims only; the workspace is f32-everywhere).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal::F32 { dims: vec![data.len() as i64], data: data.to_vec() }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal::F32 { dims: vec![], data: vec![v] }
+    }
+
+    /// Reshape without copying semantics beyond the element count check.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::F32 { data, .. } => {
+                let n: i64 = dims.iter().product();
+                if n < 0 || n as usize != data.len() {
+                    return Err(Error(format!(
+                        "reshape to {:?} ({} elements) from {} elements",
+                        dims,
+                        n,
+                        data.len()
+                    )));
+                }
+                Ok(Literal::F32 { dims: dims.to_vec(), data: data.clone() })
+            }
+            Literal::Tuple(_) => Err(Error("cannot reshape a tuple literal".into())),
+        }
+    }
+
+    /// Read the elements back to host, flattened row-major.
+    pub fn to_vec<T: NativeElement>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::F32 { data, .. } => Ok(data.iter().map(|&v| T::from_f32(v)).collect()),
+            Literal::Tuple(_) => Err(Error("to_vec on a tuple literal".into())),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::F32 { dims, .. } => Ok(ArrayShape { dims: dims.clone() }),
+            Literal::Tuple(_) => Err(Error("array_shape on a tuple literal".into())),
+        }
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            lit @ Literal::F32 { .. } => Ok(vec![lit]),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: retains the text so parse errors surface early).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text artifact. I/O errors surface here; nothing is
+    /// actually parsed — compilation is where the stub gives up.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("reading {}: {e}", path.as_ref().display())))?;
+        Ok(Self { text })
+    }
+}
+
+/// Computation handle (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// PJRT client (stub). Construction succeeds so metadata-only paths (e.g.
+/// `semulator info`, artifact registry parsing) keep working; `compile`
+/// is where the missing runtime is reported.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu (no PJRT runtime)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PJRT compilation"))
+    }
+}
+
+/// Compiled executable handle (stub; unreachable through the stub client).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PJRT device-to-host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+        let s = Literal::scalar(2.5);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![2.5]);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+    }
+
+    #[test]
+    fn tuple_decomposition() {
+        let t = Literal::Tuple(vec![Literal::scalar(1.0), Literal::scalar(2.0)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+    }
+
+    #[test]
+    fn pjrt_paths_fail_loudly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let err = client.compile(&XlaComputation).unwrap_err();
+        assert!(err.to_string().contains("--backend native"));
+    }
+}
