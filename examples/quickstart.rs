@@ -11,7 +11,7 @@ use semulator::model::ModelState;
 use semulator::repro::predict_all;
 use semulator::runtime::ArtifactStore;
 use semulator::util::Rng;
-use semulator::xbar::{AnalogBlock, BlockConfig, CellInputs};
+use semulator::xbar::{AnalogBlock, BlockConfig, CellInputs, NonIdealSpec};
 
 fn main() -> anyhow::Result<()> {
     // 1. An analog computing block: 2 tiles x 16 rows x 2 columns of 1T1R
@@ -31,6 +31,18 @@ fn main() -> anyhow::Result<()> {
     let golden = block.simulate_golden(&x).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!("fast structured solver: {:.6} V", fast[0]);
     println!("golden full-MNA SPICE : {:.6} V (|diff| {:.2e} V)", golden[0], (fast[0] - golden[0]).abs());
+
+    // 2b. The same read on a non-ideal device: 5% programming spread, IR
+    //     drop along the bitlines, rare stuck cells (preset "mild"). The
+    //     CLI exposes this axis as `datagen --nonideal <preset>` (perturbed
+    //     training data) and `eval --backend native --nonideal <preset>`
+    //     (robustness sweep of the emulator vs the perturbed golden block).
+    let pert_block = AnalogBlock::new(
+        cfg.clone().with_nonideal(NonIdealSpec::preset("mild").map_err(anyhow::Error::msg)?),
+    )
+    .map_err(anyhow::Error::msg)?;
+    let pert = pert_block.simulate(&x);
+    println!("mild non-ideal device    : {:.6} V (shift {:+.2e} V)", pert[0], pert[0] - fast[0]);
 
     // 3. A small training dataset straight from the simulator.
     let ds = generate(&GenConfig { dist: SampleDist::UniformIid, ..GenConfig::new(cfg.clone(), 256, 7) });

@@ -6,6 +6,12 @@
 //! ```sh
 //! make artifacts && cargo run --release --example serve_emulator
 //! ```
+//!
+//! Robustness-eval flow: the production CLI can run this same stack with
+//! the golden shadow block perturbed by a device non-ideality scenario
+//! (`semulator serve ... --nonideal mild`), and sweep a trained checkpoint
+//! against the perturbed golden block offline with
+//! `semulator eval --backend native --nonideal harsh --probe 256 ...`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;

@@ -41,7 +41,18 @@ pub fn generate(cfg: &GenConfig) -> Dataset {
     let rows: Vec<(Vec<f32>, Vec<f32>)> = parallel_map(cfg.n_samples, cfg.n_workers, |i| {
         let mut rng = Rng::seed_from(seeds[i]);
         let x = cfg.dist.sample(&cfg.block, &mut rng);
-        let y = block.simulate(&x);
+        // Frozen non-idealities (variation, faults, drift, IR drop) are
+        // applied inside the block; per-read cycle noise is drawn here from
+        // the per-sample stream so runs stay byte-reproducible and
+        // worker-count independent. Features record the *programmed*
+        // (clean) inputs — the emulator learns the device as deployed.
+        let y = if cfg.block.nonideal.read_noise > 0.0 {
+            let mut x_read = x.clone();
+            cfg.block.nonideal.apply_read_noise(&cfg.block, &mut x_read, &mut rng);
+            block.simulate(&x_read)
+        } else {
+            block.simulate(&x)
+        };
         (x.normalized(&cfg.block), y.iter().map(|&v| v as f32).collect())
     });
 
@@ -65,6 +76,7 @@ pub fn generate_to(cfg: &GenConfig, path: &Path) -> Result<Dataset> {
         ("n_samples", Json::Num(cfg.n_samples as f64)),
         ("seed", Json::Num(cfg.seed as f64)),
         ("dist", Json::Str(cfg.dist.tag())),
+        ("nonideal", cfg.block.nonideal.to_json()),
         (
             "block",
             Json::obj(vec![
@@ -123,6 +135,28 @@ mod tests {
         let meta: crate::util::Json =
             crate::util::json_parse(&std::fs::read_to_string(path.with_extension("meta.json")).unwrap()).unwrap();
         assert_eq!(meta.get("block").unwrap().get("input_shape").unwrap().as_usize_vec(), Some(vec![2, 1, 2, 2]));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn meta_scenario_tags_roundtrip() {
+        use crate::xbar::NonIdealSpec;
+        let dir = std::env::temp_dir().join(format!("semgen_meta_{}", std::process::id()));
+        let path = dir.join("ds.bin");
+        let mut cfg = GenConfig::new(BlockConfig::with_dims(1, 2, 2), 2, 1);
+        cfg.dist = SampleDist::SparseActs { p: 0.25 };
+        cfg.block.nonideal =
+            NonIdealSpec { var_sigma: 0.05, read_noise: 0.01, seed: 9, ..NonIdealSpec::default() };
+        generate_to(&cfg, &path).unwrap();
+        let meta: Json = crate::util::json_parse(
+            &std::fs::read_to_string(path.with_extension("meta.json")).unwrap(),
+        )
+        .unwrap();
+        // Scenario provenance survives the disk round-trip exactly.
+        let dist = SampleDist::parse(meta.get("dist").unwrap().as_str().unwrap()).unwrap();
+        assert_eq!(dist, cfg.dist);
+        let spec = NonIdealSpec::from_json(meta.get("nonideal").unwrap()).unwrap();
+        assert_eq!(spec, cfg.block.nonideal);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -23,12 +23,37 @@ pub enum SampleDist {
 }
 
 impl SampleDist {
-    /// Stable tag for file names / meta.
+    /// Stable tag for file names / meta. Round-trips through
+    /// [`Self::parse`] exactly (`{}` prints the shortest f64 repr that
+    /// parses back to the same value, so `sparse` tags are lossless —
+    /// the old `{p:.2}` format truncated the probability).
     pub fn tag(&self) -> String {
         match self {
             SampleDist::UniformIid => "uniform".into(),
             SampleDist::BinaryActs => "binary".into(),
-            SampleDist::SparseActs { p } => format!("sparse{p:.2}"),
+            SampleDist::SparseActs { p } => format!("sparse{p}"),
+        }
+    }
+
+    /// Parse a tag (or CLI `--dist` value) back into a distribution.
+    /// Inverse of [`Self::tag`]; bare `sparse` defaults to `p = 0.5`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "uniform" => Ok(SampleDist::UniformIid),
+            "binary" => Ok(SampleDist::BinaryActs),
+            _ if s.starts_with("sparse") => {
+                let rest = &s["sparse".len()..];
+                if rest.is_empty() {
+                    return Ok(SampleDist::SparseActs { p: 0.5 });
+                }
+                let p: f64 =
+                    rest.parse().map_err(|_| format!("bad sparse probability in '{s}'"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("sparse probability must be in [0, 1], got {p}"));
+                }
+                Ok(SampleDist::SparseActs { p })
+            }
+            other => Err(format!("unknown sample distribution '{other}' (uniform | binary | sparseP)")),
         }
     }
 
@@ -102,6 +127,30 @@ mod tests {
     #[test]
     fn tags_are_stable() {
         assert_eq!(SampleDist::UniformIid.tag(), "uniform");
-        assert_eq!(SampleDist::SparseActs { p: 0.5 }.tag(), "sparse0.50");
+        assert_eq!(SampleDist::BinaryActs.tag(), "binary");
+        assert_eq!(SampleDist::SparseActs { p: 0.5 }.tag(), "sparse0.5");
+    }
+
+    #[test]
+    fn tags_roundtrip_through_parse() {
+        for dist in [
+            SampleDist::UniformIid,
+            SampleDist::BinaryActs,
+            SampleDist::SparseActs { p: 0.5 },
+            SampleDist::SparseActs { p: 0.73 },
+            // A probability with no short decimal repr must still survive.
+            SampleDist::SparseActs { p: 1.0 / 3.0 },
+        ] {
+            assert_eq!(SampleDist::parse(&dist.tag()).unwrap(), dist, "{}", dist.tag());
+        }
+    }
+
+    #[test]
+    fn parse_handles_cli_forms_and_garbage() {
+        assert_eq!(SampleDist::parse("sparse").unwrap(), SampleDist::SparseActs { p: 0.5 });
+        assert_eq!(SampleDist::parse("sparse0.7").unwrap(), SampleDist::SparseActs { p: 0.7 });
+        assert!(SampleDist::parse("sparsely").is_err());
+        assert!(SampleDist::parse("sparse1.5").is_err());
+        assert!(SampleDist::parse("gaussian").is_err());
     }
 }

@@ -20,12 +20,13 @@ use semulator::coordinator::{
     Policy, Router, Server, TrainConfig,
 };
 use semulator::datagen::{generate_to, Dataset, GenConfig, SampleDist};
-use semulator::infer::{load_or_builtin_meta, Arch, BackendKind, BUILTIN_VARIANTS};
+use semulator::infer::{load_or_builtin_meta, Arch, BackendKind, NativeEngine, BUILTIN_VARIANTS};
 use semulator::model::ModelState;
 use semulator::repro;
 use semulator::runtime::ArtifactStore;
 use semulator::util::cli::Args;
-use semulator::xbar::AnalogBlock;
+use semulator::util::Rng;
+use semulator::xbar::{AnalogBlock, CellInputs, NonIdealSpec};
 
 fn main() {
     let args = Args::from_env();
@@ -37,6 +38,19 @@ fn main() {
 
 fn artifact_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+/// Resolve `--nonideal <preset>` (+ optional `--nonideal-seed N`) into a
+/// device non-ideality scenario, or `None` when the flag is absent.
+fn nonideal_from_args(args: &Args) -> Result<Option<NonIdealSpec>> {
+    match args.str_opt("nonideal") {
+        None => Ok(None),
+        Some(preset) => {
+            let mut spec = NonIdealSpec::preset(preset).map_err(anyhow::Error::msg)?;
+            spec.seed = args.u64_or("nonideal-seed", 0)?;
+            Ok(Some(spec))
+        }
+    }
 }
 
 fn work_dir(args: &Args) -> PathBuf {
@@ -62,17 +76,28 @@ fn dispatch(args: &Args) -> Result<()> {
 const USAGE: &str = "usage: semulator <info|datagen|train|eval|serve|repro> [options]
   info                                   list artifacts and variants
   datagen  --variant V --n N --out FILE  generate a SPICE dataset
+           [--dist uniform|binary|sparseP] [--nonideal ideal|mild|harsh]
   train    --variant V --data FILE       train SEMULATOR (PJRT train step)
   eval     --variant V --data FILE --ckpt FILE [--backend pjrt|native]
+           [--nonideal ideal|mild|harsh [--probe N]]
   serve    --variant V --ckpt FILE --addr HOST:PORT
            [--policy emulator|golden|shadow] [--backend native|pjrt] [--cross-check]
+           [--nonideal ideal|mild|harsh]  (frozen effects on the golden shadow)
   repro    <table1|fig4|fig5|fig6|fig7|bound|speed|all> [--preset ci|small|paper]
 common:    --artifacts DIR (default artifacts)   --work DIR (default runs)
 backends:  'native' executes the regression network in-process from the
            checkpoint alone (no PJRT artifacts needed; the serve default);
            'pjrt' runs the AOT-compiled HLO artifacts. --cross-check also
            spawns the other backend and reports native-vs-pjrt deviation
-           on every shadow-verified request.";
+           on every shadow-verified request.
+nonideal:  device non-ideality scenario presets (programming variation,
+           read noise, bitline IR drop, stuck-at faults, retention drift;
+           --nonideal-seed N picks the frozen device instance). For datagen
+           the golden outputs come from the perturbed block; for eval
+           (native backend) the emulator is robustness-swept against the
+           perturbed golden block over the first --probe dataset rows.
+           Per-read cycle noise is drawn in datagen and the eval sweep;
+           the serve shadow applies the frozen effects only.";
 
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = artifact_dir(args);
@@ -113,24 +138,22 @@ fn cmd_datagen(args: &Args) -> Result<()> {
             .map(String::from)
             .unwrap_or_else(|| format!("runs/data/{variant}_n{n}_s{seed}.bin")),
     );
-    let dist = match args.str_or("dist", "uniform").as_str() {
-        "uniform" => SampleDist::UniformIid,
-        "binary" => SampleDist::BinaryActs,
-        s if s.starts_with("sparse") => {
-            SampleDist::SparseActs { p: s.trim_start_matches("sparse").parse().unwrap_or(0.5) }
-        }
-        other => anyhow::bail!("unknown dist '{other}'"),
-    };
+    let dist = SampleDist::parse(&args.str_or("dist", "uniform")).map_err(anyhow::Error::msg)?;
     let mut cfg = GenConfig::new(repro::block_for(&variant)?, n, seed);
     cfg.dist = dist;
+    if let Some(spec) = nonideal_from_args(args)? {
+        cfg.block.nonideal = spec;
+    }
     cfg.n_workers = args.usize_or("workers", semulator::util::default_workers())?;
     let t0 = std::time::Instant::now();
     let ds = generate_to(&cfg, &out)?;
     println!(
-        "generated {} samples ({} features -> {} outputs) in {:.1}s -> {}",
+        "generated {} samples ({} features -> {} outputs, dist {}, nonideal {}) in {:.1}s -> {}",
         ds.n,
         ds.d,
         ds.o,
+        cfg.dist.tag(),
+        args.str_or("nonideal", "ideal"),
         t0.elapsed().as_secs_f64(),
         out.display()
     );
@@ -182,21 +205,28 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let variant = args.str_or("variant", "small");
     let backend = BackendKind::parse(&args.str_or("backend", "pjrt"))?;
+    // Reject bad flag combinations before any expensive work.
+    let nonideal = nonideal_from_args(args)?;
+    anyhow::ensure!(
+        nonideal.is_none() || matches!(backend, BackendKind::Native),
+        "--nonideal robustness sweep runs on the native engine (use --backend native)"
+    );
     let ds = Dataset::load(Path::new(args.str_opt("data").context("--data FILE required")?))?;
     let ckpt = Path::new(args.str_opt("ckpt").context("--ckpt FILE required")?);
-    let stats = match backend {
+    let (stats, native_ctx) = match backend {
         BackendKind::Native => {
             // Artifact-free path: meta from disk when present, else the
             // built-in architecture.
             let meta = load_or_builtin_meta(&artifact_dir(args), &variant)?;
             let state = ModelState::load(ckpt, &meta)?;
-            evaluate_native(&meta, &state, &ds)?
+            let stats = evaluate_native(&meta, &state, &ds)?;
+            (stats, Some((meta, state)))
         }
         BackendKind::Pjrt => {
             let store = ArtifactStore::open(&artifact_dir(args))?;
             let meta = store.meta.variant(&variant)?;
             let state = ModelState::load(ckpt, meta)?;
-            evaluate_state(&store, &variant, &state, &ds)?
+            (evaluate_state(&store, &variant, &state, &ds)?, None)
         }
     };
     println!(
@@ -206,6 +236,47 @@ fn cmd_eval(args: &Args) -> Result<()> {
         stats.mse,
         stats.p_halfmv
     );
+    // Robustness sweep: replay dataset rows through a *perturbed* golden
+    // block (frozen effects inside the block, per-read cycle noise drawn
+    // here from a seeded stream) and report how far the (ideally-trained)
+    // native emulator drifts from it, next to the intrinsic golden shift
+    // the scenario itself introduces.
+    if let Some(spec) = nonideal {
+        let (meta, state) = native_ctx.expect("native backend ensured above");
+        let engine = NativeEngine::from_meta(&meta, &state)?;
+        let ideal_cfg = repro::block_for(&variant)?;
+        let pert_cfg = ideal_cfg.clone().with_nonideal(spec);
+        let ideal = AnalogBlock::new(ideal_cfg.clone()).map_err(anyhow::Error::msg)?;
+        let pert = AnalogBlock::new(pert_cfg).map_err(anyhow::Error::msg)?;
+        // Dedicated read-noise stream, decorrelated from the frozen-device
+        // draws (which use the spec seed through a different constant).
+        let mut noise_rng = Rng::seed_from(spec.seed ^ 0xE7A1_5EED_E7A1_5EED);
+        let n_probe = args.usize_or("probe", 128)?.min(ds.n);
+        anyhow::ensure!(n_probe > 0, "--nonideal robustness sweep needs a non-empty dataset");
+        let mut mae_engine = 0.0f64;
+        let mut mae_shift = 0.0f64;
+        for i in 0..n_probe {
+            let x = CellInputs::from_normalized(&ideal_cfg, ds.features(i));
+            let y_ideal = ideal.simulate(&x);
+            let mut x_read = x.clone();
+            spec.apply_read_noise(&ideal_cfg, &mut x_read, &mut noise_rng);
+            let y_pert = pert.simulate(&x_read);
+            let pred = engine.forward(ds.features(i))?;
+            for k in 0..ds.o {
+                mae_engine += (pred[k] as f64 - y_pert[k]).abs();
+                mae_shift += (y_pert[k] - y_ideal[k]).abs();
+            }
+        }
+        let denom = (n_probe * ds.o) as f64;
+        println!(
+            "nonideal '{}' (seed {}): probe {n_probe}  emulator-vs-perturbed MAE {:.4}mV  \
+             golden shift MAE {:.4}mV",
+            args.str_or("nonideal", "?"),
+            spec.seed,
+            mae_engine / denom * 1e3,
+            mae_shift / denom * 1e3,
+        );
+    }
     Ok(())
 }
 
@@ -239,7 +310,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batcher_cfg.clone(),
         metrics.clone(),
     )?;
-    let block = AnalogBlock::new(repro::block_for(&variant)?).map_err(anyhow::Error::msg)?;
+    // --nonideal: the golden shadow block runs the perturbed scenario
+    // (frozen effects — variation, faults, drift, IR drop; per-read cycle
+    // noise is a datagen/eval concern), so shadow-verified requests measure
+    // the emulator against the device as deployed, not the idealized one.
+    let mut block_cfg = repro::block_for(&variant)?;
+    if let Some(spec) = nonideal_from_args(args)? {
+        block_cfg.nonideal = spec;
+    }
+    let block = AnalogBlock::new(block_cfg).map_err(anyhow::Error::msg)?;
     let mut router = Router::new(block, service.handle(), policy, metrics.clone(), 0);
     // --cross-check: stand up the *other* backend too (same batching
     // policy); every shadow-verified request then reports the

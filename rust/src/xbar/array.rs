@@ -30,7 +30,17 @@ pub struct BlockNetlist {
 /// rail to an internal node, then an RRAM from that node to bitline `c`.
 /// The gate voltage is the activation input; the RRAM conductance is the
 /// weight input.
+///
+/// When the config's non-ideality scenario specifies wire resistance
+/// (`cfg.nonideal.r_wire > 0`), the bitlines become resistive ladders —
+/// see [`build_block_parasitic`]. Conductance-level non-idealities
+/// (variation, faults, drift) are *not* applied here; they perturb the
+/// inputs upstream in [`super::fast::FastSolver`] / `AnalogBlock` so the
+/// netlist stays a pure function of `(cfg, x)`.
 pub fn build_block(cfg: &BlockConfig, x: &CellInputs) -> BlockNetlist {
+    if cfg.nonideal.r_wire > 0.0 {
+        return build_block_parasitic(cfg, x, cfg.nonideal.r_wire);
+    }
     cfg.validate().expect("invalid block config");
     assert_eq!(x.v.len(), cfg.n_cells(), "activation vector length");
     assert_eq!(x.g.len(), cfg.n_cells(), "conductance vector length");
@@ -61,13 +71,13 @@ pub fn build_block(cfg: &BlockConfig, x: &CellInputs) -> BlockNetlist {
 /// (row-major within a tile, tiles chained), and the sense node at the
 /// far (peripheral) end.
 ///
-/// The structured fast solver assumes ideal wires (all cells of a column
-/// see the same bitline voltage); this builder exists to *quantify* that
-/// assumption: `r_seg` of a few ohms is typical for scaled metal, and the
-/// integration tests measure the output deviation it introduces (see
-/// `xbar_integration::parasitic_wire_effect_is_bounded`). Crossbars where
-/// the deviation matters need the golden path (or a ladder-aware fast
-/// solver — future work noted in DESIGN.md).
+/// This is the golden netlist for the IR-drop scenario
+/// (`NonIdealSpec::r_wire`): `r_seg` of a few ohms is typical for scaled
+/// metal, and the integration tests measure the output deviation it
+/// introduces (see `xbar_integration::parasitic_wire_effect_is_bounded`).
+/// The structured fast solver handles the same ladder topology with a
+/// tridiagonal per-column Newton (`FastSolver`); the two paths agree to
+/// Newton tolerance on the identical discretization.
 pub fn build_block_parasitic(cfg: &BlockConfig, x: &CellInputs, r_seg: f64) -> BlockNetlist {
     cfg.validate().expect("invalid block config");
     assert!(r_seg >= 0.0, "wire resistance must be non-negative");

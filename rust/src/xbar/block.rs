@@ -5,6 +5,13 @@
 //! generation and golden-path serving, and the generic MNA netlist solve
 //! (`simulate_golden`) used for cross-validation and as the honest SPICE
 //! cost baseline in the speed benchmarks.
+//!
+//! Both paths honour the config's non-ideality scenario
+//! ([`super::nonideal::NonIdealSpec`]): the frozen per-device conductance
+//! perturbation is applied to the inputs before either solve, and wire
+//! resistance switches both solvers to the resistive-ladder topology — so
+//! a perturbed `AnalogBlock` is the "perturbed golden block" the router's
+//! shadow path and the robustness-eval CLI check the emulator against.
 
 use crate::spice::{transient, NrOptions, SpiceError, TranOptions};
 
@@ -34,10 +41,12 @@ impl AnalogBlock {
 
     /// Full-netlist MNA solve of the identical discretization. Slow
     /// (dense LU over every cell-internal node); use for validation and
-    /// benchmarking, not dataset generation.
+    /// benchmarking, not dataset generation. Applies the same frozen
+    /// non-ideal transform as `simulate` so the two paths stay comparable.
     pub fn simulate_golden(&self, x: &CellInputs) -> Result<Vec<f64>, SpiceError> {
         let cfg = self.config();
-        let net = build_block(cfg, x);
+        let xr = self.fast.apply_nonideal(x);
+        let net = build_block(cfg, &xr);
         let mut opts = TranOptions::new(cfg.t_sense, cfg.h);
         opts.uic = true;
         opts.record = net.outputs.clone();
@@ -100,6 +109,39 @@ mod tests {
     fn rejects_invalid_config() {
         let mut cfg = BlockConfig::small();
         cfg.cols = 5;
+        assert!(AnalogBlock::new(cfg).is_err());
+    }
+
+    #[test]
+    fn fast_and_golden_agree_on_nonideal_blocks() {
+        use crate::xbar::NonIdealSpec;
+        let mut rng = Rng::seed_from(4242);
+        let mut cfg = BlockConfig::with_dims(1, 3, 2);
+        cfg.nonideal = NonIdealSpec {
+            var_sigma: 0.1,
+            r_wire: 10.0,
+            p_stuck_on: 0.1,
+            p_stuck_off: 0.1,
+            drift_nu: 0.02,
+            t_age: 1e3,
+            ..NonIdealSpec::default()
+        };
+        let block = AnalogBlock::new(cfg.clone()).unwrap();
+        for _ in 0..3 {
+            let x = random_inputs(&cfg, &mut rng);
+            let fast = block.simulate(&x);
+            let gold = block.simulate_golden(&x).unwrap();
+            for (f, g) in fast.iter().zip(gold.iter()) {
+                assert!((f - g).abs() < 2e-5, "non-ideal fast {f} vs golden {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_nonideal_spec() {
+        use crate::xbar::NonIdealSpec;
+        let mut cfg = BlockConfig::small();
+        cfg.nonideal = NonIdealSpec { var_sigma: -1.0, ..NonIdealSpec::default() };
         assert!(AnalogBlock::new(cfg).is_err());
     }
 }

@@ -9,6 +9,8 @@
 
 use crate::spice::{DiodeModel, MosModel};
 
+use super::nonideal::NonIdealSpec;
+
 /// Cell electrical parameters (shared by every cell in the array).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CellParams {
@@ -76,6 +78,9 @@ pub struct BlockConfig {
     pub t_sense: f64,
     /// Transient step (s).
     pub h: f64,
+    /// Device non-ideality scenario ([`super::nonideal`]); the all-zero
+    /// default is the ideal device and is an exact no-op.
+    pub nonideal: NonIdealSpec,
 }
 
 impl BlockConfig {
@@ -106,7 +111,14 @@ impl BlockConfig {
             v_gate_max: 1.2,
             t_sense: 200e-9,
             h: 5e-9,
+            nonideal: NonIdealSpec::default(),
         }
+    }
+
+    /// `self` with the given non-ideality scenario (builder-style).
+    pub fn with_nonideal(mut self, spec: NonIdealSpec) -> Self {
+        self.nonideal = spec;
+        self
     }
 
     /// Number of MAC units / analog outputs.
@@ -142,6 +154,7 @@ impl BlockConfig {
         if self.t_sense <= 0.0 || self.h <= 0.0 || self.h > self.t_sense {
             return Err("need 0 < h <= t_sense".into());
         }
+        self.nonideal.validate()?;
         Ok(())
     }
 }
@@ -184,6 +197,21 @@ impl CellInputs {
             out.push(((g - cfg.cell.g_min) / span) as f32);
         }
         out
+    }
+
+    /// Inverse of [`Self::normalized`]: recover physical-unit cell inputs
+    /// from a normalized feature row (used by the robustness-eval flow to
+    /// replay dataset rows through a perturbed golden block).
+    pub fn from_normalized(cfg: &BlockConfig, feats: &[f32]) -> Self {
+        let n = cfg.n_cells();
+        assert_eq!(feats.len(), 2 * n, "feature row length");
+        let span = cfg.cell.g_max - cfg.cell.g_min;
+        let mut x = CellInputs::zeros(cfg);
+        for k in 0..n {
+            x.v[k] = feats[k] as f64 * cfg.v_gate_max;
+            x.g[k] = cfg.cell.g_min + feats[n + k] as f64 * span;
+        }
+        x
     }
 }
 
@@ -235,5 +263,27 @@ mod tests {
         assert!((f[n] - 1.0).abs() < 1e-6); // max conductance -> 1
         assert!(f[1].abs() < 1e-6); // zero voltage -> 0
         assert!(f[n + 1].abs() < 1e-6); // g_min -> 0
+    }
+
+    #[test]
+    fn normalization_roundtrips() {
+        let cfg = BlockConfig::small();
+        let mut x = CellInputs::zeros(&cfg);
+        for k in 0..cfg.n_cells() {
+            x.v[k] = 0.1 + 0.001 * k as f64;
+            x.g[k] = cfg.cell.g_min + (cfg.cell.g_max - cfg.cell.g_min) * 0.01 * (k % 100) as f64;
+        }
+        let back = CellInputs::from_normalized(&cfg, &x.normalized(&cfg));
+        for k in 0..cfg.n_cells() {
+            assert!((back.v[k] - x.v[k]).abs() < 1e-6, "v[{k}]");
+            assert!((back.g[k] - x.g[k]).abs() < 1e-9, "g[{k}]");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_nonideal() {
+        let mut cfg = BlockConfig::small();
+        cfg.nonideal.p_stuck_on = 1.5;
+        assert!(cfg.validate().is_err());
     }
 }

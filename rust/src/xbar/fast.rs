@@ -20,11 +20,23 @@
 //! all, yet *exactly* the same fixed-step backward-Euler discretization as
 //! the generic engine — the two agree to Newton tolerance (see tests and
 //! `rust/tests/xbar_integration.rs`).
+//!
+//! **Non-ideal scenarios** ([`super::nonideal`]): the solver freezes the
+//! config's per-device conductance perturbation (variation, faults, drift)
+//! once at construction and applies it before every solve. When the
+//! scenario adds bitline wire resistance (`r_wire > 0`), step 2 is replaced
+//! by a *ladder* Newton: each column becomes a chain of tap nodes joined by
+//! `r_wire` segments with the sense capacitor at the peripheral end, and
+//! the column's KCL system is tridiagonal — solved by the Thomas algorithm
+//! in O(cells) per Newton iteration, still matrix-factorization-free, and
+//! still exactly the discretization of the golden parasitic netlist
+//! ([`super::array::build_block_parasitic`]).
 
 use crate::spice::devices::{mos_eval, MosModel, RramModel};
 use crate::spice::DiodeModel;
 
 use super::config::{BlockConfig, CellInputs};
+use super::nonideal::DeviceRealization;
 
 /// Maximum Newton iterations for the scalar solves.
 const MAX_IT: usize = 60;
@@ -85,13 +97,19 @@ fn solve_cell(
 pub struct FastSolver {
     cfg: BlockConfig,
     /// Cells regrouped per column: `per_col[j]` = indices into the flat
-    /// cell arrays, so the bitline loop walks memory contiguously.
+    /// cell arrays, so the bitline loop walks memory contiguously. The
+    /// order (tile-major, then row) is also the ladder tap order in the
+    /// resistive-bitline scenario, matching `build_block_parasitic`.
     per_col: Vec<Vec<usize>>,
+    /// Frozen per-device conductance perturbation from `cfg.nonideal`
+    /// (`None` for ideal configs — the ideal path is an exact no-op).
+    realization: Option<DeviceRealization>,
 }
 
 impl FastSolver {
     pub fn new(cfg: BlockConfig) -> Self {
         cfg.validate().expect("invalid block config");
+        let realization = cfg.nonideal.realize(&cfg);
         let mut per_col: Vec<Vec<usize>> = vec![Vec::with_capacity(cfg.tiles * cfg.rows); cfg.cols];
         for t in 0..cfg.tiles {
             for r in 0..cfg.rows {
@@ -100,16 +118,27 @@ impl FastSolver {
                 }
             }
         }
-        Self { cfg, per_col }
+        Self { cfg, per_col, realization }
     }
 
     pub fn config(&self) -> &BlockConfig {
         &self.cfg
     }
 
+    /// The frozen non-ideal conductance transform this solver applies
+    /// before every solve (identity clone for ideal configs). Public so
+    /// the golden MNA path and tests can perturb inputs identically.
+    pub fn apply_nonideal(&self, x: &CellInputs) -> CellInputs {
+        match &self.realization {
+            Some(r) => r.apply(&self.cfg, x),
+            None => x.clone(),
+        }
+    }
+
     /// Simulate the block's sense transient and return the MAC output
     /// voltages at `t_sense` (same backward-Euler discretization as the
-    /// generic engine with `uic = true`).
+    /// generic engine with `uic = true`). Applies the config's frozen
+    /// non-idealities to the programmed conductances first.
     pub fn simulate(&self, x: &CellInputs) -> Vec<f64> {
         self.simulate_opts(x, true)
     }
@@ -118,6 +147,25 @@ impl FastSolver {
     /// (ablation for EXPERIMENTS.md §Perf; `warm_start = true` is the
     /// production path and is what `simulate` uses).
     pub fn simulate_opts(&self, x: &CellInputs, warm_start: bool) -> Vec<f64> {
+        match &self.realization {
+            Some(r) => {
+                let xr = r.apply(&self.cfg, x);
+                self.solve(&xr, warm_start)
+            }
+            None => self.solve(x, warm_start),
+        }
+    }
+
+    fn solve(&self, x: &CellInputs, warm_start: bool) -> Vec<f64> {
+        if self.cfg.nonideal.r_wire > 0.0 {
+            self.solve_ladder(x, warm_start)
+        } else {
+            self.solve_flat(x, warm_start)
+        }
+    }
+
+    /// Ideal-wire path: one scalar Newton per bitline per timestep.
+    fn solve_flat(&self, x: &CellInputs, warm_start: bool) -> Vec<f64> {
         let cfg = &self.cfg;
         assert_eq!(x.v.len(), cfg.n_cells());
         assert_eq!(x.g.len(), cfg.n_cells());
@@ -163,6 +211,103 @@ impl FastSolver {
             for m in 0..cfg.n_mac() {
                 let i_in = p.gm_amp * (bl[2 * m] - bl[2 * m + 1]);
                 out[m] = solve_output(p, out[m], i_in, cfg.h);
+            }
+        }
+        out
+    }
+
+    /// Resistive-bitline path: each column is a ladder of tap nodes
+    /// (`v[0]` = sense end with the `c_sense` capacitor, `v[1..]` = one tap
+    /// per cell in `per_col` order) joined by `r_wire` segments. The
+    /// column's KCL system is tridiagonal; each Newton iteration evaluates
+    /// the cell currents at their taps and does one Thomas solve — O(cells)
+    /// per iteration, same backward-Euler discretization as the golden
+    /// `build_block_parasitic` netlist.
+    fn solve_ladder(&self, x: &CellInputs, warm_start: bool) -> Vec<f64> {
+        let cfg = &self.cfg;
+        assert_eq!(x.v.len(), cfg.n_cells());
+        assert_eq!(x.g.len(), cfg.n_cells());
+        let p = &cfg.periph;
+        let g_r = 1.0 / cfg.nonideal.r_wire;
+        let g_c = p.c_sense / cfg.h;
+        let n_steps = (cfg.t_sense / cfg.h).round().max(1.0) as usize;
+        let rram_models: Vec<RramModel> =
+            x.g.iter().map(|&g| RramModel { g, alpha: cfg.cell.rram_alpha }).collect();
+
+        // Ladder length: sense node + one tap per cell of the column.
+        let m = cfg.tiles * cfg.rows + 1;
+        let mut v_col = vec![vec![0.0f64; m]; cfg.cols];
+        let mut out = vec![0.0f64; cfg.n_mac()];
+        let mut m_ws = vec![0.0f64; cfg.n_cells()];
+        // Newton scratch: residual, Jacobian diagonal, Thomas work arrays.
+        let mut f = vec![0.0f64; m];
+        let mut diag = vec![0.0f64; m];
+        let mut cp = vec![0.0f64; m];
+        let mut delta = vec![0.0f64; m];
+
+        for _ in 0..n_steps {
+            if !warm_start {
+                m_ws.iter_mut().for_each(|w| *w = 0.0);
+            }
+            for j in 0..cfg.cols {
+                let v = &mut v_col[j];
+                let v0_prev = v[0];
+                for _ in 0..MAX_IT {
+                    // Assemble. Off-diagonals are all -g_r; only the
+                    // diagonal and residual vary per node.
+                    f[0] = g_c * (v[0] - v0_prev) - g_r * (v[1] - v[0]);
+                    diag[0] = g_c + g_r;
+                    for (c_idx, &k) in self.per_col[j].iter().enumerate() {
+                        let node = c_idx + 1;
+                        let (i_c, di_c, mm) = solve_cell(
+                            &cfg.cell.mos,
+                            &rram_models[k],
+                            cfg.v_read,
+                            x.v[k],
+                            v[node],
+                            m_ws[k],
+                        );
+                        m_ws[k] = mm;
+                        // KCL at the tap: wire current toward the sense end
+                        // minus wire current arriving from the far side
+                        // minus the cell current entering here.
+                        let toward_sense = g_r * (v[node] - v[node - 1]);
+                        let from_far = if node + 1 < m { g_r * (v[node + 1] - v[node]) } else { 0.0 };
+                        f[node] = toward_sense - from_far - i_c;
+                        // di_c <= 0, so the diagonal stays positive and the
+                        // tridiagonal system is strictly diagonally dominant.
+                        diag[node] = if node + 1 < m { 2.0 * g_r - di_c } else { g_r - di_c };
+                    }
+                    // Thomas solve of J * delta = -F with sub/super
+                    // diagonals equal to -g_r.
+                    cp[0] = -g_r / diag[0];
+                    delta[0] = -f[0] / diag[0];
+                    for i in 1..m {
+                        let denom = diag[i] + g_r * cp[i - 1];
+                        cp[i] = if i + 1 < m { -g_r / denom } else { 0.0 };
+                        delta[i] = (-f[i] + g_r * delta[i - 1]) / denom;
+                    }
+                    for i in (0..m - 1).rev() {
+                        let next = delta[i + 1];
+                        delta[i] -= cp[i] * next;
+                    }
+                    let mut converged = true;
+                    for i in 0..m {
+                        v[i] += delta[i];
+                        if delta[i].abs() > 1e-15 + 1e-10 * v[i].abs() {
+                            converged = false;
+                        }
+                    }
+                    if converged {
+                        break;
+                    }
+                }
+            }
+            // Output stage sees the sense-end node of each column, exactly
+            // as the peripheral hangs off `bl` in the parasitic netlist.
+            for mac in 0..cfg.n_mac() {
+                let i_in = p.gm_amp * (v_col[2 * mac][0] - v_col[2 * mac + 1][0]);
+                out[mac] = solve_output(p, out[mac], i_in, cfg.h);
             }
         }
         out
@@ -309,5 +454,57 @@ mod tests {
         let solver = FastSolver::new(cfg.clone());
         let x = fill(&cfg, |t, r, j| (0.3 + 0.1 * t as f64 + 0.02 * r as f64, 1e-6 + 1e-5 * j as f64));
         assert_eq!(solver.simulate(&x), solver.simulate(&x));
+    }
+
+    #[test]
+    fn ladder_matches_generic_mna_on_resistive_bitlines() {
+        // The tridiagonal ladder Newton against the golden parasitic
+        // netlist (build_block dispatches on r_wire), same discretization.
+        for (dims, r_wire) in [((1, 2, 2), 5.0), ((2, 3, 2), 20.0), ((1, 3, 4), 50.0)] {
+            let mut cfg = BlockConfig::with_dims(dims.0, dims.1, dims.2);
+            cfg.nonideal.r_wire = r_wire;
+            let x = fill(&cfg, |t, r, j| {
+                let v = 0.25 + 0.2 * ((t + r + j) % 5) as f64;
+                let g = 1e-6 + 1.9e-5 * ((r * 5 + j * 2 + t) % 5) as f64;
+                (v, g)
+            });
+            let fast = FastSolver::new(cfg.clone()).simulate(&x);
+            let gold = golden(&cfg, &x);
+            assert_eq!(fast.len(), gold.len());
+            for (f, g) in fast.iter().zip(gold.iter()) {
+                assert!((f - g).abs() < 2e-5, "{dims:?} r={r_wire}: ladder {f} vs golden {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn ladder_with_tiny_wire_approaches_flat_solver() {
+        let cfg_flat = BlockConfig::with_dims(1, 4, 2);
+        let mut cfg_ladder = cfg_flat.clone();
+        cfg_ladder.nonideal.r_wire = 1e-3; // micro-ohm wires: physically ideal
+        let x = fill(&cfg_flat, |_, r, j| (0.8 - 0.05 * r as f64, if j % 2 == 0 { 6e-5 } else { 8e-6 }));
+        let flat = FastSolver::new(cfg_flat).simulate(&x);
+        let ladder = FastSolver::new(cfg_ladder).simulate(&x);
+        for (a, b) in flat.iter().zip(ladder.iter()) {
+            assert!((a - b).abs() < 1e-6, "flat {a} vs tiny-wire ladder {b}");
+        }
+    }
+
+    #[test]
+    fn frozen_variation_changes_output_and_is_stable() {
+        use crate::xbar::nonideal::NonIdealSpec;
+        let cfg = BlockConfig::small();
+        let mut cfg_var = cfg.clone();
+        cfg_var.nonideal = NonIdealSpec { var_sigma: 0.2, ..NonIdealSpec::default() };
+        let x = fill(&cfg, |_, r, j| (0.9, 1e-6 + 1e-5 * ((r + j) % 8) as f64));
+        let ideal = FastSolver::new(cfg).simulate(&x);
+        let solver = FastSolver::new(cfg_var);
+        let pert = solver.simulate(&x);
+        assert!(
+            ideal.iter().zip(&pert).any(|(a, b)| (a - b).abs() > 1e-6),
+            "20% conductance spread must move the MAC output: {ideal:?} vs {pert:?}"
+        );
+        // Frozen: the same solver gives the same answer every read.
+        assert_eq!(pert, solver.simulate(&x));
     }
 }

@@ -5,7 +5,10 @@
 //! * [`array`] — full SPICE netlist construction (golden path).
 //! * [`ps32`] — the differential charge-sense peripheral (one MAC per
 //!   column pair).
-//! * [`fast`] — structured two-level Newton solver, O(cells) per step.
+//! * [`fast`] — structured two-level Newton solver, O(cells) per step
+//!   (with a tridiagonal ladder variant for resistive bitlines).
+//! * [`nonideal`] — device non-ideality scenarios: programming variation,
+//!   read noise, wire IR drop, stuck-at faults, retention drift.
 //! * [`block`] — the high-level `AnalogBlock` API.
 //!
 //! At serve time a block is the *golden* reference the coordinator routes
@@ -18,9 +21,11 @@ pub mod array;
 pub mod block;
 pub mod config;
 pub mod fast;
+pub mod nonideal;
 pub mod ps32;
 
 pub use array::{build_block, BlockNetlist};
 pub use block::AnalogBlock;
 pub use config::{BlockConfig, CellInputs, CellParams, PeriphParams};
 pub use fast::FastSolver;
+pub use nonideal::{DeviceRealization, NonIdealSpec};

@@ -1,0 +1,419 @@
+//! Device non-idealities: the scenario axis the ideal crossbar model hides.
+//!
+//! Real crossbar MAC blocks deviate from the ideal cell model in ways that
+//! are first-class simulation knobs in circuit-level simulators (IMAC-Sim's
+//! interconnect parasitics and device variation; LASANA's perturbed-scenario
+//! validation of surrogate models). [`NonIdealSpec`] captures the five
+//! effects we model and lives on [`BlockConfig`], so every consumer of a
+//! block — dataset generation, the serve-time golden shadow path, the
+//! robustness-eval CLI — sees the same perturbed device:
+//!
+//! * **Programming variation** (`var_sigma`) — each cell's programmed
+//!   conductance lands at `g * exp(sigma * z)`, `z ~ N(0,1)`: the standard
+//!   lognormal spread of analog RRAM write-verify loops. Frozen per device
+//!   instance (seeded by `seed`), identical across reads.
+//! * **Stuck-at faults** (`p_stuck_on` / `p_stuck_off`) — a cell is stuck
+//!   at `g_max` / `g_min` regardless of programming. Frozen per device.
+//! * **Retention drift** (`drift_nu`, `t_age`) — time-dependent conductance
+//!   decay `g * (1 + t_age)^(-nu)` (power-law retention loss, `t_age` in
+//!   seconds since programming). Deterministic.
+//! * **Read / cycle noise** (`read_noise`) — per-read multiplicative
+//!   Gaussian conductance fluctuation, drawn fresh each read from a
+//!   caller-supplied RNG (see [`NonIdealSpec::apply_read_noise`]); dataset
+//!   generation draws it from the per-sample stream so runs stay
+//!   byte-reproducible.
+//! * **Wire resistance / IR drop** (`r_wire`) — each bitline becomes a
+//!   resistive ladder with `r_wire` ohms between consecutive cells. The
+//!   golden netlist gains the ladder segments
+//!   ([`super::array::build_block_parasitic`]) and the structured fast
+//!   solver switches to a tridiagonal ladder Newton
+//!   ([`super::fast::FastSolver`]) with the identical discretization.
+//!
+//! All frozen effects clamp the effective conductance to the physical
+//! programming window `[g_min, g_max]`. A spec with every magnitude at zero
+//! is an *exact* no-op: no draws, no arithmetic, bit-identical outputs.
+//!
+//! Presets (`ideal`, `mild`, `harsh`) are exposed on the CLI as
+//! `datagen --nonideal <preset>` (perturbed training data) and
+//! `eval --nonideal <preset>` (robustness sweep of the native emulator
+//! against the perturbed golden block).
+
+use crate::util::{json::Json, Rng};
+
+use super::config::{BlockConfig, CellInputs};
+
+/// Stream-separation constant for the frozen per-device draws (keeps them
+/// decorrelated from dataset sample seeds that may share small integers).
+const DEVICE_STREAM: u64 = 0x0DE7_1CE5_0DE7_1CE5;
+
+/// Non-ideality scenario specification. Lives on [`BlockConfig::nonideal`];
+/// the all-zero default is the ideal device.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct NonIdealSpec {
+    /// Lognormal programming-variation sigma on `ln G` (dimensionless).
+    pub var_sigma: f64,
+    /// Per-read multiplicative conductance noise std (fraction of G).
+    pub read_noise: f64,
+    /// Bitline wire resistance per cell segment (ohm); 0 = ideal wires.
+    pub r_wire: f64,
+    /// Probability a cell is stuck at `g_max`.
+    pub p_stuck_on: f64,
+    /// Probability a cell is stuck at `g_min`.
+    pub p_stuck_off: f64,
+    /// Retention-drift exponent `nu` in `g * (1 + t_age)^(-nu)`.
+    pub drift_nu: f64,
+    /// Time since programming (s); drift is active when `> 0`.
+    pub t_age: f64,
+    /// Seed of the frozen per-device draws (variation and fault map).
+    /// Must be `<= 2^53` so it survives the f64-based `meta.json`
+    /// round-trip exactly (enforced by [`Self::validate`]).
+    pub seed: u64,
+}
+
+impl NonIdealSpec {
+    /// The ideal device: every magnitude zero.
+    pub fn ideal() -> Self {
+        Self::default()
+    }
+
+    /// Named scenario presets for the CLI and tests.
+    ///
+    /// * `ideal` / `none` — no perturbation.
+    /// * `mild` — scaled-metal wires (2 ohm/cell), 5% programming spread,
+    ///   1% read noise, rare faults, light retention loss.
+    /// * `harsh` — long lines (20 ohm/cell), 20% spread, 5% read noise,
+    ///   percent-level faults, heavy retention loss.
+    pub fn preset(name: &str) -> Result<Self, String> {
+        Ok(match name {
+            "ideal" | "none" => Self::default(),
+            "mild" => Self {
+                var_sigma: 0.05,
+                read_noise: 0.01,
+                r_wire: 2.0,
+                p_stuck_on: 0.001,
+                p_stuck_off: 0.002,
+                drift_nu: 0.01,
+                t_age: 1e3,
+                seed: 0,
+            },
+            "harsh" => Self {
+                var_sigma: 0.2,
+                read_noise: 0.05,
+                r_wire: 20.0,
+                p_stuck_on: 0.01,
+                p_stuck_off: 0.02,
+                drift_nu: 0.05,
+                t_age: 1e4,
+                seed: 0,
+            },
+            other => {
+                return Err(format!("unknown non-ideality preset '{other}' (ideal | mild | harsh)"))
+            }
+        })
+    }
+
+    /// Whether every effect is off (the spec is an exact no-op).
+    pub fn is_ideal(&self) -> bool {
+        self.var_sigma == 0.0
+            && self.read_noise == 0.0
+            && self.r_wire == 0.0
+            && self.p_stuck_on == 0.0
+            && self.p_stuck_off == 0.0
+            && !self.drift_active()
+    }
+
+    fn drift_active(&self) -> bool {
+        self.drift_nu > 0.0 && self.t_age > 0.0
+    }
+
+    /// Whether any *frozen* (per-device, read-independent) effect is on.
+    pub fn has_frozen_effects(&self) -> bool {
+        self.var_sigma > 0.0 || self.p_stuck_on > 0.0 || self.p_stuck_off > 0.0 || self.drift_active()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let nonneg = [
+            ("var_sigma", self.var_sigma),
+            ("read_noise", self.read_noise),
+            ("r_wire", self.r_wire),
+            ("drift_nu", self.drift_nu),
+            ("t_age", self.t_age),
+        ];
+        for (name, v) in nonneg {
+            if !(v >= 0.0) || !v.is_finite() {
+                return Err(format!("nonideal.{name} must be finite and >= 0, got {v}"));
+            }
+        }
+        for (name, p) in [("p_stuck_on", self.p_stuck_on), ("p_stuck_off", self.p_stuck_off)] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("nonideal.{name} must be in [0, 1], got {p}"));
+            }
+        }
+        if self.p_stuck_on + self.p_stuck_off > 1.0 {
+            return Err("nonideal fault probabilities must sum to <= 1".into());
+        }
+        if self.seed > (1u64 << 53) {
+            return Err(format!(
+                "nonideal.seed {} exceeds 2^53 and would not round-trip through meta.json",
+                self.seed
+            ));
+        }
+        Ok(())
+    }
+
+    /// Freeze the per-device draws (variation factors and fault map) for
+    /// `cfg`. Returns `None` when no frozen effect is on, so the ideal path
+    /// stays an exact no-op.
+    pub fn realize(&self, cfg: &BlockConfig) -> Option<DeviceRealization> {
+        if !self.has_frozen_effects() {
+            return None;
+        }
+        let n = cfg.n_cells();
+        let mut rng = Rng::seed_from(self.seed ^ DEVICE_STREAM);
+        let drift = if self.drift_active() { (1.0 + self.t_age).powf(-self.drift_nu) } else { 1.0 };
+        let mut g_scale = Vec::with_capacity(n);
+        let mut stuck = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Always draw both variates so the realization of every knob is
+            // stable under toggling the others.
+            let z = rng.normal();
+            let u = rng.uniform();
+            let var = if self.var_sigma > 0.0 { (self.var_sigma * z).exp() } else { 1.0 };
+            g_scale.push(var * drift);
+            stuck.push(if u < self.p_stuck_on {
+                Some(cfg.cell.g_max)
+            } else if u < self.p_stuck_on + self.p_stuck_off {
+                Some(cfg.cell.g_min)
+            } else {
+                None
+            });
+        }
+        Some(DeviceRealization { g_scale, stuck })
+    }
+
+    /// Apply the frozen effects to `x` (convenience over [`Self::realize`]
+    /// for tests and one-off calls; solvers cache the realization).
+    pub fn apply_frozen(&self, cfg: &BlockConfig, x: &CellInputs) -> CellInputs {
+        match self.realize(cfg) {
+            Some(r) => r.apply(cfg, x),
+            None => x.clone(),
+        }
+    }
+
+    /// Apply per-read cycle noise in place, drawing from `rng`. A no-op
+    /// (zero draws) when `read_noise == 0`.
+    pub fn apply_read_noise(&self, cfg: &BlockConfig, x: &mut CellInputs, rng: &mut Rng) {
+        if self.read_noise <= 0.0 {
+            return;
+        }
+        let (g_min, g_max) = (cfg.cell.g_min, cfg.cell.g_max);
+        for g in x.g.iter_mut() {
+            *g = (*g * (1.0 + self.read_noise * rng.normal())).clamp(g_min, g_max);
+        }
+    }
+
+    // ---- meta.json round-trip -------------------------------------------
+
+    /// Scenario tag for artifact metadata; parses back via
+    /// [`Self::from_json`].
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("var_sigma", Json::Num(self.var_sigma)),
+            ("read_noise", Json::Num(self.read_noise)),
+            ("r_wire", Json::Num(self.r_wire)),
+            ("p_stuck_on", Json::Num(self.p_stuck_on)),
+            ("p_stuck_off", Json::Num(self.p_stuck_off)),
+            ("drift_nu", Json::Num(self.drift_nu)),
+            ("t_age", Json::Num(self.t_age)),
+            // Seeds are small in practice; f64 is exact up to 2^53.
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let num = |key: &str| -> Result<f64, String> {
+            j.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("nonideal meta: missing numeric '{key}'"))
+        };
+        let spec = Self {
+            var_sigma: num("var_sigma")?,
+            read_noise: num("read_noise")?,
+            r_wire: num("r_wire")?,
+            p_stuck_on: num("p_stuck_on")?,
+            p_stuck_off: num("p_stuck_off")?,
+            drift_nu: num("drift_nu")?,
+            t_age: num("t_age")?,
+            seed: num("seed")? as u64,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// A frozen per-device realization of a [`NonIdealSpec`]: the concrete
+/// variation factors and fault map one physical block instance would have.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceRealization {
+    /// Per-cell multiplicative conductance factor (variation x drift).
+    pub g_scale: Vec<f64>,
+    /// Per-cell stuck fault: `Some(g)` pins the cell at `g`.
+    pub stuck: Vec<Option<f64>>,
+}
+
+impl DeviceRealization {
+    /// Apply to raw cell inputs; effective conductances are clamped to the
+    /// programming window `[g_min, g_max]`.
+    pub fn apply(&self, cfg: &BlockConfig, x: &CellInputs) -> CellInputs {
+        assert_eq!(x.g.len(), self.g_scale.len(), "realization built for another geometry");
+        let (g_min, g_max) = (cfg.cell.g_min, cfg.cell.g_max);
+        let mut out = x.clone();
+        for (k, g) in out.g.iter_mut().enumerate() {
+            *g = match self.stuck[k] {
+                Some(pinned) => pinned,
+                None => (*g * self.g_scale[k]).clamp(g_min, g_max),
+            };
+        }
+        out
+    }
+
+    /// Number of stuck cells (diagnostics).
+    pub fn n_faults(&self) -> usize {
+        self.stuck.iter().filter(|s| s.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(cfg: &BlockConfig, seed: u64) -> CellInputs {
+        let mut rng = Rng::seed_from(seed);
+        let mut x = CellInputs::zeros(cfg);
+        for k in 0..cfg.n_cells() {
+            x.v[k] = rng.range(0.0, cfg.v_gate_max);
+            x.g[k] = rng.range(cfg.cell.g_min, cfg.cell.g_max);
+        }
+        x
+    }
+
+    #[test]
+    fn ideal_spec_is_exact_noop() {
+        let cfg = BlockConfig::small();
+        let x = inputs(&cfg, 1);
+        let spec = NonIdealSpec { seed: 99, ..NonIdealSpec::default() };
+        assert!(spec.is_ideal());
+        assert!(spec.realize(&cfg).is_none());
+        assert_eq!(spec.apply_frozen(&cfg, &x), x);
+        let mut noisy = x.clone();
+        spec.apply_read_noise(&cfg, &mut noisy, &mut Rng::seed_from(5));
+        assert_eq!(noisy, x);
+    }
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for name in ["ideal", "none", "mild", "harsh"] {
+            let spec = NonIdealSpec::preset(name).unwrap();
+            spec.validate().unwrap();
+        }
+        assert!(NonIdealSpec::preset("nope").is_err());
+        assert!(NonIdealSpec::preset("mild").unwrap().has_frozen_effects());
+        assert!(!NonIdealSpec::preset("ideal").unwrap().has_frozen_effects());
+    }
+
+    #[test]
+    fn validation_rejects_bad_fields() {
+        let bad = NonIdealSpec { var_sigma: -0.1, ..NonIdealSpec::default() };
+        assert!(bad.validate().is_err());
+        let bad = NonIdealSpec { p_stuck_on: 0.7, p_stuck_off: 0.6, ..NonIdealSpec::default() };
+        assert!(bad.validate().is_err());
+        let bad = NonIdealSpec { r_wire: f64::NAN, ..NonIdealSpec::default() };
+        assert!(bad.validate().is_err());
+        // Seeds past 2^53 would silently corrupt meta.json provenance.
+        let bad = NonIdealSpec { seed: (1u64 << 53) + 1, ..NonIdealSpec::default() };
+        assert!(bad.validate().is_err());
+        let ok = NonIdealSpec { seed: 1u64 << 53, ..NonIdealSpec::default() };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn realization_is_deterministic_in_seed() {
+        let cfg = BlockConfig::small();
+        let spec = NonIdealSpec { var_sigma: 0.1, p_stuck_on: 0.05, ..NonIdealSpec::default() };
+        let a = spec.realize(&cfg).unwrap();
+        let b = spec.realize(&cfg).unwrap();
+        assert_eq!(a, b);
+        let other = NonIdealSpec { seed: 1, ..spec };
+        assert_ne!(other.realize(&cfg).unwrap().g_scale, a.g_scale);
+    }
+
+    #[test]
+    fn applied_conductances_stay_in_window() {
+        let cfg = BlockConfig::small();
+        let x = inputs(&cfg, 3);
+        let spec = NonIdealSpec {
+            var_sigma: 1.0, // huge spread to force clamping
+            p_stuck_on: 0.2,
+            p_stuck_off: 0.2,
+            drift_nu: 0.1,
+            t_age: 1e5,
+            ..NonIdealSpec::default()
+        };
+        let y = spec.apply_frozen(&cfg, &x);
+        for &g in &y.g {
+            assert!(g >= cfg.cell.g_min && g <= cfg.cell.g_max, "g {g} escaped the window");
+        }
+    }
+
+    #[test]
+    fn all_stuck_on_pins_every_cell() {
+        let cfg = BlockConfig::small();
+        let x = inputs(&cfg, 4);
+        let spec = NonIdealSpec { p_stuck_on: 1.0, ..NonIdealSpec::default() };
+        let y = spec.apply_frozen(&cfg, &x);
+        assert!(y.g.iter().all(|&g| g == cfg.cell.g_max));
+        assert_eq!(spec.realize(&cfg).unwrap().n_faults(), cfg.n_cells());
+        // Activations untouched.
+        assert_eq!(y.v, x.v);
+    }
+
+    #[test]
+    fn drift_decays_toward_zero_conductance() {
+        let cfg = BlockConfig::small();
+        let x = inputs(&cfg, 5);
+        let spec = NonIdealSpec { drift_nu: 0.05, t_age: 1e4, ..NonIdealSpec::default() };
+        let y = spec.apply_frozen(&cfg, &x);
+        for (g0, g1) in x.g.iter().zip(&y.g) {
+            assert!(g1 <= g0, "drift must not increase conductance: {g0} -> {g1}");
+            assert!(*g1 >= cfg.cell.g_min);
+        }
+    }
+
+    #[test]
+    fn read_noise_perturbs_with_rng_and_is_reproducible() {
+        let cfg = BlockConfig::small();
+        let spec = NonIdealSpec { read_noise: 0.05, ..NonIdealSpec::default() };
+        let x = inputs(&cfg, 6);
+        let mut a = x.clone();
+        spec.apply_read_noise(&cfg, &mut a, &mut Rng::seed_from(7));
+        assert_ne!(a, x);
+        let mut b = x.clone();
+        spec.apply_read_noise(&cfg, &mut b, &mut Rng::seed_from(7));
+        assert_eq!(a, b);
+        for &g in &a.g {
+            assert!(g >= cfg.cell.g_min && g <= cfg.cell.g_max);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = NonIdealSpec { seed: 42, ..NonIdealSpec::preset("harsh").unwrap() };
+        let back = NonIdealSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec, back);
+        // Reparse through the serializer too (what meta.json actually does).
+        let text = spec.to_json().to_string_pretty();
+        let parsed = crate::util::json_parse(&text).unwrap();
+        assert_eq!(NonIdealSpec::from_json(&parsed).unwrap(), spec);
+        assert!(NonIdealSpec::from_json(&Json::Null).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! Integration tests for the non-ideal crossbar scenario axis: exact
+//! no-op guarantees, fast-vs-golden parity on perturbed blocks, dataset
+//! determinism down to the byte level, scenario-tag provenance, and the
+//! `--nonideal` CLI surface. All run with zero artifacts.
+
+use std::path::PathBuf;
+
+use semulator::datagen::{generate, generate_to, Dataset, GenConfig, SampleDist};
+use semulator::util::{json_parse, Rng};
+use semulator::xbar::{AnalogBlock, BlockConfig, CellInputs, NonIdealSpec};
+
+fn random_inputs(cfg: &BlockConfig, seed: u64) -> CellInputs {
+    let mut rng = Rng::seed_from(seed);
+    SampleDist::UniformIid.sample(cfg, &mut rng)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("semnonideal_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn zero_magnitude_spec_is_exact_noop_on_simulate() {
+    let ideal_cfg = BlockConfig::small();
+    // Same geometry, spec present but every magnitude zero (seed set, so a
+    // lazy implementation that draws anyway would diverge).
+    let zeroed_cfg = ideal_cfg.clone().with_nonideal(NonIdealSpec { seed: 12345, ..NonIdealSpec::default() });
+    let a = AnalogBlock::new(ideal_cfg.clone()).unwrap();
+    let b = AnalogBlock::new(zeroed_cfg).unwrap();
+    for seed in 0..3 {
+        let x = random_inputs(&ideal_cfg, seed);
+        // Bitwise identical, not merely close.
+        assert_eq!(a.simulate(&x), b.simulate(&x), "seed {seed}");
+    }
+}
+
+#[test]
+fn perturbed_golden_macs_differ_from_ideal() {
+    // The acceptance check: a --nonideal preset measurably changes block
+    // outputs on the same inputs.
+    let ideal_cfg = BlockConfig::small();
+    let pert_cfg = ideal_cfg.clone().with_nonideal(NonIdealSpec::preset("mild").unwrap());
+    let ideal = AnalogBlock::new(ideal_cfg.clone()).unwrap();
+    let pert = AnalogBlock::new(pert_cfg).unwrap();
+    let mut max_dev = 0.0f64;
+    for seed in 0..4 {
+        let x = random_inputs(&ideal_cfg, 100 + seed);
+        for (a, b) in ideal.simulate(&x).iter().zip(pert.simulate(&x).iter()) {
+            max_dev = max_dev.max((a - b).abs());
+            assert!(b.is_finite());
+        }
+    }
+    assert!(max_dev > 1e-6, "mild scenario barely moved the MACs: max dev {max_dev:.3e} V");
+}
+
+#[test]
+fn fast_and_golden_agree_across_nonideal_scenarios() {
+    // FastSolver (ladder Newton + frozen perturbation) vs the full-MNA
+    // parasitic netlist, per scenario knob and combined.
+    let specs = [
+        NonIdealSpec { r_wire: 10.0, ..NonIdealSpec::default() },
+        NonIdealSpec { var_sigma: 0.15, ..NonIdealSpec::default() },
+        NonIdealSpec { p_stuck_on: 0.15, p_stuck_off: 0.15, ..NonIdealSpec::default() },
+        NonIdealSpec { drift_nu: 0.05, t_age: 1e4, ..NonIdealSpec::default() },
+        NonIdealSpec {
+            var_sigma: 0.1,
+            r_wire: 25.0,
+            p_stuck_on: 0.05,
+            p_stuck_off: 0.05,
+            drift_nu: 0.02,
+            t_age: 1e3,
+            seed: 7,
+            ..NonIdealSpec::default()
+        },
+    ];
+    for (si, spec) in specs.iter().enumerate() {
+        let cfg = BlockConfig::with_dims(2, 3, 2).with_nonideal(*spec);
+        let block = AnalogBlock::new(cfg.clone()).unwrap();
+        for seed in 0..2 {
+            let x = random_inputs(&cfg, 1000 + seed);
+            let fast = block.simulate(&x);
+            let gold = block.simulate_golden(&x).unwrap();
+            for (f, g) in fast.iter().zip(gold.iter()) {
+                assert!(
+                    (f - g).abs() < 2e-5,
+                    "spec {si} seed {seed}: fast {f} vs golden {g}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn datagen_is_byte_identical_for_same_seed_and_spec() {
+    let spec = NonIdealSpec {
+        var_sigma: 0.05,
+        read_noise: 0.02,
+        r_wire: 2.0,
+        p_stuck_on: 0.01,
+        ..NonIdealSpec::default()
+    };
+    let base = GenConfig {
+        n_workers: 1,
+        ..GenConfig::new(BlockConfig::with_dims(1, 3, 2).with_nonideal(spec), 6, 11)
+    };
+
+    // Same seed + same spec: identical datasets regardless of worker count.
+    let a = generate(&base);
+    let b = generate(&GenConfig { n_workers: 4, ..base.clone() });
+    assert_eq!(a, b);
+
+    // ... and byte-identical files on disk.
+    let dir = tmp_dir("det");
+    let pa = dir.join("a.bin");
+    let pb = dir.join("b.bin");
+    generate_to(&base, &pa).unwrap();
+    generate_to(&base, &pb).unwrap();
+    let bytes_a = std::fs::read(&pa).unwrap();
+    let bytes_b = std::fs::read(&pb).unwrap();
+    assert!(!bytes_a.is_empty());
+    assert_eq!(bytes_a, bytes_b, "two runs must serialize to identical bytes");
+
+    // Different dataset seed: different draws.
+    let c = generate(&GenConfig { seed: 12, ..base.clone() });
+    assert_ne!(a, c);
+
+    // Different *device* seed (same dataset seed): same features, different
+    // golden outputs — the frozen variation pattern moved.
+    let mut other_device = base.clone();
+    other_device.block.nonideal.seed = 99;
+    let d = generate(&other_device);
+    assert_eq!(a.x, d.x, "features are sampled before the device perturbation");
+    assert_ne!(a.y, d.y, "a different device instance must give different outputs");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn read_noise_moves_targets_but_not_features() {
+    let base = GenConfig { n_workers: 1, ..GenConfig::new(BlockConfig::with_dims(1, 3, 2), 6, 21) };
+    let mut noisy = base.clone();
+    noisy.block.nonideal.read_noise = 0.05;
+    let clean = generate(&base);
+    let perturbed = generate(&noisy);
+    assert_eq!(clean.x, perturbed.x);
+    assert_ne!(clean.y, perturbed.y);
+}
+
+#[test]
+fn scenario_tags_roundtrip_through_meta_json() {
+    let dir = tmp_dir("meta");
+    let path = dir.join("ds.bin");
+    let spec = NonIdealSpec { seed: 5, ..NonIdealSpec::preset("harsh").unwrap() };
+    let mut cfg = GenConfig::new(BlockConfig::with_dims(1, 2, 2).with_nonideal(spec), 2, 3);
+    cfg.dist = SampleDist::SparseActs { p: 0.35 };
+    cfg.n_workers = 1;
+    generate_to(&cfg, &path).unwrap();
+
+    let meta = json_parse(&std::fs::read_to_string(path.with_extension("meta.json")).unwrap()).unwrap();
+    let dist_tag = meta.get("dist").unwrap().as_str().unwrap().to_string();
+    assert_eq!(SampleDist::parse(&dist_tag).unwrap(), cfg.dist);
+    let parsed = NonIdealSpec::from_json(meta.get("nonideal").unwrap()).unwrap();
+    assert_eq!(parsed, spec);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_datagen_accepts_nonideal_preset_and_changes_outputs() {
+    let dir = tmp_dir("cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |out: &std::path::Path, extra: &[&str]| {
+        let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_semulator"));
+        cmd.args(["datagen", "--variant", "small", "--n", "4", "--seed", "3", "--workers", "1"])
+            .arg("--out")
+            .arg(out)
+            .args(extra);
+        let status = cmd.status().expect("spawn semulator");
+        assert!(status.success(), "datagen {extra:?} failed");
+    };
+    let ideal_path = dir.join("ideal.bin");
+    let pert_path = dir.join("mild.bin");
+    run(&ideal_path, &[]);
+    run(&pert_path, &["--nonideal", "mild"]);
+
+    let ideal = Dataset::load(&ideal_path).unwrap();
+    let pert = Dataset::load(&pert_path).unwrap();
+    assert_eq!(ideal.x, pert.x, "same sampling seed: features must match");
+    assert_ne!(ideal.y, pert.y, "--nonideal mild must change the golden MACs");
+
+    // The perturbed run's meta records the scenario.
+    let meta = json_parse(&std::fs::read_to_string(pert_path.with_extension("meta.json")).unwrap()).unwrap();
+    let spec = NonIdealSpec::from_json(meta.get("nonideal").unwrap()).unwrap();
+    assert_eq!(spec, NonIdealSpec::preset("mild").unwrap());
+
+    // Unknown presets are rejected.
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_semulator"))
+        .args(["datagen", "--variant", "small", "--n", "2", "--nonideal", "bogus"])
+        .arg("--out")
+        .arg(dir.join("x.bin"))
+        .status()
+        .unwrap();
+    assert!(!status.success());
+
+    std::fs::remove_dir_all(&dir).ok();
+}

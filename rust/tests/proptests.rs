@@ -10,7 +10,7 @@ use semulator::spice::matrix::{solve, DMat};
 use semulator::spice::{dc_op, node_v, Circuit, NrOptions, RramModel, Waveform, GND};
 use semulator::stats::{erf, erfinv};
 use semulator::util::{json_parse, Json, Rng};
-use semulator::xbar::{AnalogBlock, BlockConfig};
+use semulator::xbar::{AnalogBlock, BlockConfig, NonIdealSpec};
 
 const CASES: u64 = 40;
 
@@ -264,6 +264,75 @@ fn prop_native_engine_matches_pjrt_forward() {
                 (n - p).abs() <= 1e-4,
                 "case {case} out {i}: native {n} vs pjrt {p} (dev {})",
                 (n - p).abs()
+            );
+        }
+    }
+}
+
+/// Property: for random non-ideality specs, applied conductances always
+/// stay inside the programming window `[g_min, g_max]` (stuck-at faults
+/// and variation clamp), and a spec with every magnitude zero is an exact
+/// no-op regardless of its seed.
+#[test]
+fn prop_nonideal_apply_clamps_and_zero_spec_is_noop() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from(12_000 + case);
+        let cfg = BlockConfig::with_dims(1 + rng.below(2), 1 + rng.below(6), 2);
+        let x = SampleDist::UniformIid.sample(&cfg, &mut rng);
+        let spec = NonIdealSpec {
+            var_sigma: rng.range(0.0, 1.5),
+            p_stuck_on: rng.range(0.0, 0.4),
+            p_stuck_off: rng.range(0.0, 0.4),
+            drift_nu: rng.range(0.0, 0.1),
+            t_age: rng.range(0.0, 1e5),
+            seed: rng.next_u64(),
+            ..NonIdealSpec::default()
+        };
+        let y = spec.apply_frozen(&cfg, &x);
+        for (k, &g) in y.g.iter().enumerate() {
+            assert!(
+                g >= cfg.cell.g_min && g <= cfg.cell.g_max,
+                "case {case}: g[{k}] = {g} escaped [{}, {}]",
+                cfg.cell.g_min,
+                cfg.cell.g_max
+            );
+        }
+        assert_eq!(y.v, x.v, "case {case}: activations must never be touched");
+
+        let zero = NonIdealSpec { seed: rng.next_u64(), ..NonIdealSpec::default() };
+        assert!(zero.is_ideal());
+        assert_eq!(zero.apply_frozen(&cfg, &x), x, "case {case}: zero spec not a no-op");
+    }
+}
+
+/// Property: the ladder fast solver matches the golden parasitic MNA
+/// netlist for random tiny geometries, wire resistances and frozen
+/// perturbations — the structured solver handles the augmented topology
+/// rather than falling back.
+#[test]
+fn prop_fast_ladder_equivalence_random_nonideal() {
+    for case in 0..4 {
+        let mut rng = Rng::seed_from(13_000 + case);
+        let spec = NonIdealSpec {
+            r_wire: rng.range(1.0, 60.0),
+            var_sigma: rng.range(0.0, 0.3),
+            p_stuck_on: rng.range(0.0, 0.1),
+            p_stuck_off: rng.range(0.0, 0.1),
+            seed: case,
+            ..NonIdealSpec::default()
+        };
+        let cfg = BlockConfig::with_dims(1 + rng.below(2), 1 + rng.below(4), 2 * (1 + rng.below(2)))
+            .with_nonideal(spec);
+        let block = AnalogBlock::new(cfg.clone()).unwrap();
+        let x = SampleDist::UniformIid.sample(&cfg, &mut rng);
+        let fast = block.simulate(&x);
+        let gold = block.simulate_golden(&x).unwrap();
+        for (f, g) in fast.iter().zip(gold.iter()) {
+            assert!(
+                (f - g).abs() < 2e-5,
+                "case {case} cfg {:?} r_wire {:.1}: ladder {f} vs golden {g}",
+                cfg.input_shape(),
+                cfg.nonideal.r_wire
             );
         }
     }
