@@ -13,12 +13,10 @@
 //! make artifacts && cargo run --release --example e2e_train [-- n_samples epochs]
 //! ```
 
-use std::sync::Arc;
 use std::time::Instant;
 
-use semulator::coordinator::{
-    train, BatcherConfig, EmulatorService, LrSchedule, Metrics, Policy, Router, TrainConfig,
-};
+use semulator::api::{Deployment, MacRequest, VariantDef};
+use semulator::coordinator::{train, LrSchedule, Policy, TrainConfig};
 use semulator::datagen::{generate, GenConfig, SampleDist};
 use semulator::repro::{predict_all, signed_errors};
 use semulator::runtime::ArtifactStore;
@@ -101,36 +99,27 @@ fn main() -> anyhow::Result<()> {
     println!("      P(|err|<1mV) = {:.3}", empirical_p_within(&errs, 1e-3));
 
     // ---- 4. serving -------------------------------------------------------
-    println!("[4/4] serving: batcher + shadow router, 256-request burst ...");
-    let metrics = Arc::new(Metrics::default());
-    let service = EmulatorService::spawn(
-        "artifacts".into(),
-        variant,
-        state,
-        BatcherConfig::default(),
-        metrics.clone(),
-    )?;
-    let router = Arc::new(Router::new(
-        AnalogBlock::new(block_cfg.clone()).map_err(anyhow::Error::msg)?,
-        service.handle(),
-        Policy::Shadow { verify_frac: 0.05 },
-        metrics.clone(),
-        0,
-    ));
+    println!("[4/4] serving: Deployment facade (shadow policy), 256-request burst ...");
+    let deployment = Deployment::builder()
+        .variant(VariantDef::new(variant).state(state))
+        .policy(Policy::Shadow { verify_frac: 0.05 })
+        .build()?;
     let n_req = 256;
     let mut rng = Rng::seed_from(99);
-    let requests: Vec<_> = (0..n_req).map(|_| SampleDist::UniformIid.sample(&block_cfg, &mut rng)).collect();
+    let requests: Vec<_> = (0..n_req)
+        .map(|_| MacRequest::new(variant, SampleDist::UniformIid.sample(&block_cfg, &mut rng)))
+        .collect();
     let t0 = Instant::now();
     let mut max_dev: f64 = 0.0;
     std::thread::scope(|scope| {
         let threads: Vec<_> = requests
             .chunks(n_req / 8)
             .map(|chunk| {
-                let router = router.clone();
+                let deployment = &deployment;
                 scope.spawn(move || {
                     let mut dev: f64 = 0.0;
-                    for x in chunk {
-                        let r = router.handle(x).expect("request failed");
+                    for req in chunk {
+                        let r = deployment.submit(req).expect("request failed");
                         if let Some(d) = r.verify_dev {
                             dev = dev.max(d);
                         }
@@ -144,12 +133,13 @@ fn main() -> anyhow::Result<()> {
         }
     });
     let wall = t0.elapsed().as_secs_f64();
+    let metrics = deployment.variant_metrics(variant)?;
     println!(
         "      {} requests in {:.2}s -> {:.0} req/s (mean batch {:.1}, p50 {} us, p95 {} us)",
         n_req,
         wall,
         n_req as f64 / wall,
-        metrics.mean_batch_size(),
+        deployment.batch_metrics().mean_batch_size(),
         metrics.latency.quantile_us(0.5),
         metrics.latency.quantile_us(0.95)
     );
@@ -158,8 +148,8 @@ fn main() -> anyhow::Result<()> {
     // Golden throughput for comparison.
     let block = AnalogBlock::new(block_cfg).map_err(anyhow::Error::msg)?;
     let t0 = Instant::now();
-    for x in requests.iter().take(64) {
-        std::hint::black_box(block.simulate(x));
+    for req in requests.iter().take(64) {
+        std::hint::black_box(block.simulate(&req.inputs));
     }
     let golden_rate = 64.0 / t0.elapsed().as_secs_f64();
     println!(

@@ -1,15 +1,14 @@
 //! Quickstart: simulate an analog MAC block, generate a tiny SPICE dataset,
-//! and (if `make artifacts` has run) push a batch through the AOT-compiled
-//! neural emulator.
+//! and serve the neural emulator through the `api::Deployment` facade —
+//! no compiled artifacts needed for any step.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
+use semulator::api::{Deployment, MacRequest, VariantDef};
+use semulator::coordinator::Policy;
 use semulator::datagen::{generate, GenConfig, SampleDist};
-use semulator::model::ModelState;
-use semulator::repro::predict_all;
-use semulator::runtime::ArtifactStore;
 use semulator::util::Rng;
 use semulator::xbar::{AnalogBlock, BlockConfig, CellInputs, NonIdealSpec};
 
@@ -49,21 +48,20 @@ fn main() -> anyhow::Result<()> {
     println!("dataset: {} samples, {} features -> {} outputs", ds.n, ds.d, ds.o);
     println!("target mean |V|: {:.4}", ds.target_mean_abs()[0]);
 
-    // 4. The neural emulator (needs artifacts; harmless to skip).
-    let dir = std::path::Path::new("artifacts");
-    if dir.join("meta.json").exists() {
-        let store = ArtifactStore::open(dir)?;
-        let meta = store.meta.variant("small")?.clone();
-        let state = ModelState::init(&meta, 0); // untrained weights — shapes demo
-        let preds = predict_all(&store, "small", &state, &ds)?;
-        println!(
-            "emulator (untrained, batch via PJRT): first prediction {:.6} V over {} samples",
-            preds[0],
-            ds.n
-        );
-        println!("-> train it: cargo run --release -- train --variant small --data <dataset>");
-    } else {
-        println!("artifacts/ not built — run `make artifacts` to enable the neural emulator");
-    }
+    // 4. The neural emulator behind the serving facade: one Deployment,
+    //    one typed request, shadow-verified against the golden block.
+    //    (Untrained weights — a shapes/wiring demo; train for accuracy.)
+    let dep = Deployment::builder()
+        .variant(VariantDef::new("small").init_seed(0))
+        .policy(Policy::Shadow { verify_frac: 1.0 })
+        .build()?;
+    let resp = dep.submit(&MacRequest::new("small", x.clone()))?;
+    println!(
+        "emulator (untrained, via Deployment): {:.6} V, route {:?}, |emul - golden| = {:.4} V",
+        resp.outputs[0],
+        resp.route,
+        resp.verify_dev.unwrap_or(f64::NAN)
+    );
+    println!("-> train it: cargo run --release -- train --variant small --data <dataset>");
     Ok(())
 }

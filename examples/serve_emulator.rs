@@ -1,38 +1,31 @@
-//! Serving demo: stand up the TCP simulation server on an ephemeral port,
-//! drive it with concurrent clients speaking the JSON line protocol, and
-//! print the server-side metrics — the "SEMULATOR as a SPICE replacement
-//! service" deployment story.
+//! Serving demo: one `api::Deployment` hosting *two named variants* of
+//! the same trained network — the ideal device and a mild non-ideal
+//! corner — behind the TCP line protocol, driven by concurrent clients
+//! that pick their variant per request. Prints the per-variant metrics.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_emulator
+//! cargo run --release --example serve_emulator      # no artifacts needed
 //! ```
 //!
-//! Robustness-eval flow: the production CLI can run this same stack with
-//! the golden shadow block perturbed by a device non-ideality scenario
-//! (`semulator serve ... --nonideal mild`), and sweep a trained checkpoint
-//! against the perturbed golden block offline with
-//! `semulator eval --backend native --nonideal harsh --probe 256 ...`.
+//! All the wiring this example used to do by hand (batcher + router +
+//! metrics plumbing) now lives in `Deployment::builder()`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
-use semulator::coordinator::{BatcherConfig, EmulatorService, Metrics, Policy, Router, Server};
+use semulator::api::{Deployment, VariantDef};
+use semulator::coordinator::{Policy, Server};
 use semulator::datagen::SampleDist;
 use semulator::model::ModelState;
 use semulator::repro::block_for;
-use semulator::runtime::ArtifactStore;
 use semulator::util::{json_parse, Json, Rng};
-use semulator::xbar::AnalogBlock;
+use semulator::xbar::NonIdealSpec;
 
 fn main() -> anyhow::Result<()> {
-    let variant = "small";
-    let dir = std::path::PathBuf::from("artifacts");
-    let store = ArtifactStore::open(&dir)?;
-    let meta = store.meta.variant(variant)?.clone();
-
     // Use a trained checkpoint when available, else fresh weights (the
     // protocol demo does not depend on accuracy).
+    let meta = semulator::infer::load_or_builtin_meta(std::path::Path::new("artifacts"), "small")?;
     let ckpt = std::path::Path::new("runs/ckpt/e2e_small.ckpt");
     let state = if ckpt.exists() {
         println!("using trained checkpoint {}", ckpt.display());
@@ -42,21 +35,25 @@ fn main() -> anyhow::Result<()> {
         ModelState::init(&meta, 0)
     };
 
-    let metrics = Arc::new(Metrics::default());
-    let service =
-        EmulatorService::spawn(dir, variant, state, BatcherConfig::default(), metrics.clone())?;
-    let block_cfg = block_for(variant)?;
-    let router = Arc::new(Router::new(
-        AnalogBlock::new(block_cfg.clone()).map_err(anyhow::Error::msg)?,
-        service.handle(),
-        Policy::Shadow { verify_frac: 0.1 },
-        metrics.clone(),
-        7,
-    ));
-    let server = Server::spawn("127.0.0.1:0", router, metrics.clone())?;
-    println!("server listening on {}", server.addr);
+    // One process, two named variants: the same network shadow-verified
+    // against the ideal golden block and against a mild device corner.
+    let deployment = Arc::new(
+        Deployment::builder()
+            .variant(VariantDef::new("small").state(state.clone()))
+            .variant(
+                VariantDef::new("small_mild")
+                    .arch("small")
+                    .nonideal(NonIdealSpec::preset("mild").map_err(anyhow::Error::msg)?)
+                    .state(state),
+            )
+            .policy(Policy::Shadow { verify_frac: 0.1 })
+            .seed(7)
+            .build()?,
+    );
+    let server = Server::spawn("127.0.0.1:0", deployment.clone())?;
+    println!("server listening on {} (variants: {})", server.addr, deployment.variants().join(", "));
 
-    // 4 concurrent clients x 16 requests each.
+    // 4 concurrent clients x 16 requests each, alternating variants.
     let addr = server.addr;
     std::thread::scope(|scope| {
         for client in 0..4u64 {
@@ -67,29 +64,44 @@ fn main() -> anyhow::Result<()> {
                 let mut stream = stream;
                 let cfg = block_for("small").unwrap();
                 for i in 0..16 {
+                    let variant = if (client + i) % 2 == 0 { "small" } else { "small_mild" };
                     let x = SampleDist::UniformIid.sample(&cfg, &mut rng);
-                    let req =
-                        Json::obj(vec![("v", Json::arr_f64(&x.v)), ("g", Json::arr_f64(&x.g))]);
+                    let req = Json::obj(vec![
+                        ("variant", Json::Str(variant.into())),
+                        ("v", Json::arr_f64(&x.v)),
+                        ("g", Json::arr_f64(&x.g)),
+                    ]);
                     stream.write_all(req.to_string().as_bytes()).unwrap();
                     stream.write_all(b"\n").unwrap();
                     let mut line = String::new();
                     reader.read_line(&mut line).unwrap();
                     let reply = json_parse(line.trim()).unwrap();
-                    if client == 0 && i == 0 {
-                        println!("sample reply: {}", line.trim());
+                    if client == 0 && i < 2 {
+                        println!("sample reply ({variant}): {}", line.trim());
                     }
                     assert!(reply.get("y").is_some(), "bad reply: {line}");
+                    assert_eq!(reply.get("variant").unwrap().as_str(), Some(variant));
                 }
             });
         }
     });
 
-    // Ask the server for its metrics over the wire.
+    // Ask the server for its metrics over the wire: per-variant counters
+    // under "variants", deployment-wide sums at the top level.
     let mut stream = TcpStream::connect(server.addr)?;
     stream.write_all(b"{\"cmd\":\"metrics\"}\n")?;
     let mut line = String::new();
     BufReader::new(stream.try_clone()?).read_line(&mut line)?;
-    println!("server metrics: {}", line.trim());
-    println!("local snapshot: {}", metrics.snapshot().to_string_pretty());
+    let snap = json_parse(line.trim()).map_err(anyhow::Error::msg)?;
+    println!("total requests: {:?}", snap.get("requests").and_then(|v| v.as_f64()));
+    for variant in deployment.variants() {
+        let v = snap.get("variants").and_then(|m| m.get(variant));
+        println!(
+            "  {variant}: requests {:?}, verified {:?}",
+            v.and_then(|m| m.get("requests")).and_then(|x| x.as_f64()),
+            v.and_then(|m| m.get("verified")).and_then(|x| x.as_f64()),
+        );
+    }
+    println!("local snapshot: {}", deployment.metrics_json().to_string_pretty());
     Ok(())
 }

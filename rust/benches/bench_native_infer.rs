@@ -1,5 +1,8 @@
 //! Native-engine inference benchmark: NativeEngine vs the PJRT artifacts
-//! vs the analytic expert baseline, across batch sizes {1, 32, 256, 4096}.
+//! vs the analytic expert baseline, across batch sizes {1, 32, 256, 4096},
+//! plus a `Deployment::submit_many` lane showing the serving-facade
+//! overhead (typed requests + normalize + batcher channel round trip) over
+//! the raw `NativeEngine::forward_batch`.
 //!
 //! The native rows need nothing but a parameter state — this bench runs
 //! (and demonstrates a batch-256 forward) with no PJRT artifacts loaded.
@@ -10,6 +13,8 @@
 use std::time::Duration;
 
 use semulator::analytic::AnalyticModel;
+use semulator::api::{Deployment, MacRequest, VariantDef};
+use semulator::coordinator::Policy;
 use semulator::datagen::SampleDist;
 use semulator::infer::{Arch, EmulatorBackend, NativeEngine, BUILTIN_VARIANTS};
 use semulator::model::ModelState;
@@ -71,13 +76,55 @@ fn main() {
 
             if let Some(pjrt) = &pjrt {
                 let stats = b
-                    .bench(&format!("{variant}/pjrt/b{batch}"), || pjrt.forward_batch(&xs).unwrap())
+                    .bench(&format!("{variant}/pjrt/b{batch}"), || {
+                        pjrt.forward_batch(0, &xs).unwrap()
+                    })
                     .clone();
                 println!(
                     "  -> pjrt:   {:.2} µs/sample at batch {batch} (native speedup {:.2}x)",
                     stats.mean.as_secs_f64() * 1e6 / batch as f64,
                     stats.mean.as_secs_f64() / native.mean.as_secs_f64()
                 );
+            }
+        }
+
+        // Facade lane: the same forwards submitted as typed requests
+        // through Deployment::submit_many (emulator-only policy, no
+        // shadow sims) — measures what serving costs over the raw engine.
+        let dep = Deployment::builder()
+            .variant(VariantDef::new(variant).state(state.clone()))
+            .policy(Policy::Emulator)
+            // Cap at the largest lane so every submit_many is one backend
+            // call, and drop the batching hold — a synchronous caller can
+            // never add rows during the wait, so any max_wait would be
+            // measured as pure idle time, not facade overhead.
+            .max_batch(*BATCHES.iter().max().unwrap())
+            .max_wait(Duration::ZERO)
+            .build()
+            .unwrap();
+        let block_cfg = block_for(variant).unwrap();
+        let mut frng = Rng::seed_from(17);
+        for batch in BATCHES {
+            let reqs: Vec<MacRequest> = (0..batch)
+                .map(|_| {
+                    MacRequest::new(variant, SampleDist::UniformIid.sample(&block_cfg, &mut frng))
+                })
+                .collect();
+            let raw_name = format!("{variant}/native/b{batch}");
+            let stats = b
+                .bench(&format!("{variant}/deployment/b{batch}"), || {
+                    dep.submit_many(&reqs).unwrap()
+                })
+                .clone();
+            let facade_us = stats.mean.as_secs_f64() * 1e6 / batch as f64;
+            match b.speedup(&format!("{variant}/deployment/b{batch}"), &raw_name) {
+                Some(ratio) => println!(
+                    "  -> deployment::submit_many: {facade_us:.2} µs/sample at batch {batch} \
+                     ({ratio:.2}x the raw engine)"
+                ),
+                None => println!(
+                    "  -> deployment::submit_many: {facade_us:.2} µs/sample at batch {batch}"
+                ),
             }
         }
 

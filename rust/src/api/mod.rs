@@ -1,0 +1,687 @@
+//! The public serving API: one [`Deployment`] hosting many named variants
+//! behind typed requests.
+//!
+//! The paper's deployment story — replace SPICE with a regression network
+//! *per analog computing block* — only pays off when many block/scenario
+//! configurations are explorable behind one uniform front-end. This layer
+//! is that front-end: a [`Deployment`] owns the batcher, one golden
+//! [`Router`] per named variant, and per-variant metrics, and is built
+//! declaratively through [`DeploymentBuilder`]:
+//!
+//! ```no_run
+//! use semulator::api::{Deployment, MacRequest, VariantDef};
+//! use semulator::coordinator::Policy;
+//! use semulator::xbar::{CellInputs, NonIdealSpec};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let dep = Deployment::builder()
+//!     .variant(VariantDef::new("cfg_a"))
+//!     .variant(
+//!         VariantDef::new("cfg_a_harsh")
+//!             .arch("cfg_a")
+//!             .nonideal(NonIdealSpec::preset("harsh").map_err(anyhow::Error::msg)?),
+//!     )
+//!     .policy(Policy::Shadow { verify_frac: 0.1 })
+//!     .build()?;
+//! let block = dep.block_config("cfg_a")?.clone();
+//! let y = dep.submit(&MacRequest::new("cfg_a", CellInputs::zeros(&block)))?;
+//! println!("{:?} via {:?}", y.outputs, y.route);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Requests are typed ([`MacRequest`] in physical units, [`MacResponse`]
+//! with route/backend/deviation metadata) and enter one at a time
+//! ([`Deployment::submit`]) or amortized ([`Deployment::submit_many`]: all
+//! emulated rows of a variant travel to the backend as one batched call).
+//! The TCP line protocol (`coordinator::server`) and the `serve`/`eval`
+//! CLI are thin shells over this type.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::{BatcherConfig, EmulatorService, ServeVariant};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::{Policy, Route, Router};
+use crate::infer::{load_or_builtin_meta, BackendKind};
+use crate::model::ModelState;
+use crate::repro::block_for;
+use crate::util::Json;
+use crate::xbar::{AnalogBlock, BlockConfig, CellInputs, NonIdealSpec};
+
+/// Declaration of one named variant of a deployment: a deployment-local
+/// label wrapping an architecture, a golden block (optionally perturbed by
+/// a non-ideality scenario), and a parameter state.
+#[derive(Clone)]
+pub struct VariantDef {
+    name: String,
+    arch: String,
+    block: Option<BlockConfig>,
+    nonideal: Option<NonIdealSpec>,
+    state: Option<ModelState>,
+    init_seed: u64,
+}
+
+impl VariantDef {
+    /// A variant labelled `name`, serving the architecture of the same
+    /// name (override with [`Self::arch`] to alias, e.g. a scenario label
+    /// `"cfg_a_harsh"` wrapping the `cfg_a` network).
+    pub fn new(name: impl Into<String>) -> Self {
+        let name = name.into();
+        Self { arch: name.clone(), name, block: None, nonideal: None, state: None, init_seed: 0 }
+    }
+
+    /// Artifact / built-in architecture variant this label wraps.
+    pub fn arch(mut self, arch: impl Into<String>) -> Self {
+        self.arch = arch.into();
+        self
+    }
+
+    /// Golden block configuration (default: the arch's canonical block).
+    pub fn block(mut self, cfg: BlockConfig) -> Self {
+        self.block = Some(cfg);
+        self
+    }
+
+    /// Device non-ideality scenario applied to the golden block.
+    pub fn nonideal(mut self, spec: NonIdealSpec) -> Self {
+        self.nonideal = Some(spec);
+        self
+    }
+
+    /// Checkpointed parameters (default: fresh Kaiming init from
+    /// [`Self::init_seed`], useful for protocol demos and tests).
+    pub fn state(mut self, state: ModelState) -> Self {
+        self.state = Some(state);
+        self
+    }
+
+    /// Seed for the fresh-init fallback when no checkpoint is attached.
+    pub fn init_seed(mut self, seed: u64) -> Self {
+        self.init_seed = seed;
+        self
+    }
+
+    /// The deployment-local label.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Per-request options (see [`MacRequest::opts`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RequestOpts {
+    /// Override the deployment routing policy for this request only
+    /// (e.g. [`Policy::Golden`] for an audit probe).
+    pub policy: Option<Policy>,
+}
+
+/// One typed MAC simulation request in physical units.
+#[derive(Debug, Clone)]
+pub struct MacRequest {
+    /// Which named variant answers.
+    pub variant: String,
+    /// Gate voltages + conductances for every cell of the block.
+    pub inputs: CellInputs,
+    pub opts: RequestOpts,
+}
+
+impl MacRequest {
+    pub fn new(variant: impl Into<String>, inputs: CellInputs) -> Self {
+        Self { variant: variant.into(), inputs, opts: RequestOpts::default() }
+    }
+
+    /// Force the golden (SPICE-accurate) path for this request.
+    pub fn golden(mut self) -> Self {
+        self.opts.policy = Some(Policy::Golden);
+        self
+    }
+}
+
+/// One typed MAC simulation response.
+#[derive(Debug, Clone)]
+pub struct MacResponse {
+    /// The variant that answered.
+    pub variant: String,
+    /// MAC output voltages.
+    pub outputs: Vec<f64>,
+    /// Which path produced `outputs`.
+    pub route: Route,
+    /// Backend that produced `outputs` (None on the golden route).
+    pub backend: Option<BackendKind>,
+    /// Max |emulated - golden| over outputs, when shadow verification ran.
+    pub verify_dev: Option<f64>,
+    /// Max |primary - secondary| over outputs when a cross-check backend
+    /// also answered.
+    pub cross_dev: Option<f64>,
+    /// Wall time of the submission (for [`Deployment::submit_many`], the
+    /// whole batch's wall time, reported on every row of the batch).
+    pub latency: Duration,
+}
+
+/// Builder for [`Deployment`] — declare variants, pick backend/policy,
+/// `build()` to spawn the serving stack.
+pub struct DeploymentBuilder {
+    variants: Vec<VariantDef>,
+    backend: BackendKind,
+    policy: Policy,
+    artifact_dir: PathBuf,
+    max_batch: usize,
+    max_wait: Duration,
+    seed: u64,
+    cross_check: bool,
+}
+
+impl Default for DeploymentBuilder {
+    fn default() -> Self {
+        Self {
+            variants: Vec::new(),
+            backend: BackendKind::Native,
+            policy: Policy::Shadow { verify_frac: 0.05 },
+            artifact_dir: PathBuf::from("artifacts"),
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            seed: 0,
+            cross_check: false,
+        }
+    }
+}
+
+impl DeploymentBuilder {
+    /// Add one named variant (labels must be unique).
+    pub fn variant(mut self, def: VariantDef) -> Self {
+        self.variants.push(def);
+        self
+    }
+
+    /// Forward implementation: `Native` (default, artifact-free,
+    /// multi-variant) or `Pjrt` (opt-in, needs artifacts + a real `xla`,
+    /// single-variant).
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Routing policy shared by every variant (default:
+    /// `Shadow { verify_frac: 0.05 }`); override per request via
+    /// [`RequestOpts`].
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Where `meta.json` + compiled artifacts live (default `artifacts`;
+    /// built-in architectures are used when absent).
+    pub fn artifact_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifact_dir = dir.into();
+        self
+    }
+
+    /// Upper bound on rows per backend call (default 64).
+    pub fn max_batch(mut self, rows: usize) -> Self {
+        self.max_batch = rows;
+        self
+    }
+
+    /// How long the batcher holds the first request while more arrive
+    /// (default 200 µs).
+    pub fn max_wait(mut self, wait: Duration) -> Self {
+        self.max_wait = wait;
+        self
+    }
+
+    /// Seed for the routers' shadow-sampling RNGs (variant `i` uses
+    /// `seed + i`).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Also stand up the *other* backend and cross-check every
+    /// shadow-verified request against it (single-variant deployments
+    /// only — the PJRT side is a single-variant shim).
+    pub fn cross_check(mut self, enabled: bool) -> Self {
+        self.cross_check = enabled;
+        self
+    }
+
+    /// Validate the declaration and spawn the serving stack: one batcher
+    /// worker for all variants, one golden router + metrics per variant.
+    pub fn build(self) -> Result<Deployment> {
+        anyhow::ensure!(
+            !self.variants.is_empty(),
+            "deployment needs at least one variant (DeploymentBuilder::variant)"
+        );
+        for (i, v) in self.variants.iter().enumerate() {
+            anyhow::ensure!(!v.name.is_empty(), "variant label must be non-empty");
+            anyhow::ensure!(
+                !self.variants[..i].iter().any(|o| o.name == v.name),
+                "duplicate variant label '{}'",
+                v.name
+            );
+        }
+        anyhow::ensure!(
+            !(self.backend == BackendKind::Pjrt && self.variants.len() > 1),
+            "the PJRT backend is a single-variant shim; {} variants requested \
+             (use the native backend for multi-variant serving)",
+            self.variants.len()
+        );
+        anyhow::ensure!(
+            !(self.cross_check && self.variants.len() > 1),
+            "cross-check requires a single-variant deployment (the secondary \
+             PJRT backend is a single-variant shim)"
+        );
+
+        // Resolve every variant's meta, golden block, and parameters up
+        // front so declaration errors name the variant.
+        let mut specs = Vec::with_capacity(self.variants.len());
+        let mut blocks = Vec::with_capacity(self.variants.len());
+        for v in &self.variants {
+            let meta = load_or_builtin_meta(&self.artifact_dir, &v.arch)
+                .with_context(|| format!("variant '{}' (arch '{}')", v.name, v.arch))?;
+            let mut block_cfg = match &v.block {
+                Some(b) => b.clone(),
+                None => block_for(&v.arch).with_context(|| {
+                    format!(
+                        "variant '{}': no canonical block for arch '{}' — \
+                         supply one via VariantDef::block",
+                        v.name, v.arch
+                    )
+                })?,
+            };
+            if let Some(spec) = v.nonideal {
+                block_cfg.nonideal = spec;
+            }
+            anyhow::ensure!(
+                block_cfg.n_features() == meta.n_features(),
+                "variant '{}': block has {} features but network '{}' expects {}",
+                v.name,
+                block_cfg.n_features(),
+                v.arch,
+                meta.n_features()
+            );
+            anyhow::ensure!(
+                block_cfg.n_mac() == meta.outputs,
+                "variant '{}': block has {} MAC outputs but network '{}' expects {}",
+                v.name,
+                block_cfg.n_mac(),
+                v.arch,
+                meta.outputs
+            );
+            let state = match &v.state {
+                Some(s) => s.clone(),
+                None => ModelState::init(&meta, v.init_seed),
+            };
+            specs.push(ServeVariant {
+                name: v.name.clone(),
+                arch: v.arch.clone(),
+                meta,
+                state,
+            });
+            blocks.push(block_cfg);
+        }
+
+        let batch_metrics = Arc::new(Metrics::default());
+        let cfg = BatcherConfig {
+            max_batch: self.max_batch,
+            max_wait: self.max_wait,
+            backend: self.backend,
+        };
+        let service = EmulatorService::spawn_multi(
+            self.artifact_dir.clone(),
+            specs.clone(),
+            cfg.clone(),
+            batch_metrics.clone(),
+        )?;
+        let cross_service = if self.cross_check {
+            let other = match self.backend {
+                BackendKind::Native => BackendKind::Pjrt,
+                BackendKind::Pjrt => BackendKind::Native,
+            };
+            // Dedicated metrics: the secondary's batch/latency traffic must
+            // not blend into the serving backend's numbers (router-level
+            // cross_checked/cross_failed still land per variant).
+            Some(EmulatorService::spawn_multi(
+                self.artifact_dir.clone(),
+                specs,
+                BatcherConfig { backend: other, ..cfg },
+                Arc::new(Metrics::default()),
+            )?)
+        } else {
+            None
+        };
+
+        let mut entries = Vec::with_capacity(blocks.len());
+        let mut index = BTreeMap::new();
+        for (i, block_cfg) in blocks.into_iter().enumerate() {
+            let name = self.variants[i].name.clone();
+            let metrics = Arc::new(Metrics::default());
+            let block = AnalogBlock::new(block_cfg)
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("variant '{name}': golden block"))?;
+            let mut router = Router::new(
+                block,
+                service.handle_for(i)?,
+                self.policy,
+                metrics.clone(),
+                self.seed.wrapping_add(i as u64),
+            );
+            if let Some(cs) = &cross_service {
+                router = router.with_cross_check(cs.handle_for(i)?);
+            }
+            index.insert(name.clone(), i);
+            entries.push(Entry { name, router, metrics });
+        }
+        Ok(Deployment {
+            entries,
+            index,
+            service,
+            cross_service,
+            batch_metrics,
+            backend: self.backend,
+            policy: self.policy,
+        })
+    }
+}
+
+struct Entry {
+    name: String,
+    router: Router,
+    metrics: Arc<Metrics>,
+}
+
+/// A running multi-variant serving stack: the one way to stand up and talk
+/// to the system (the TCP server and CLI are shells over it).
+pub struct Deployment {
+    // Field order is drop order: entries hold batcher handles (channel
+    // senders) and must go before the services, whose Drop joins the
+    // worker threads that exit only once every sender is gone.
+    entries: Vec<Entry>,
+    index: BTreeMap<String, usize>,
+    service: EmulatorService,
+    #[allow(dead_code)] // held for its worker thread + Drop join
+    cross_service: Option<EmulatorService>,
+    /// Batcher-level metrics (batches, rows, drain latency), shared by
+    /// every variant of the primary backend.
+    batch_metrics: Arc<Metrics>,
+    backend: BackendKind,
+    policy: Policy,
+}
+
+impl Deployment {
+    pub fn builder() -> DeploymentBuilder {
+        DeploymentBuilder::default()
+    }
+
+    /// Served variant labels, in declaration order.
+    pub fn variants(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// The label requests may omit: `Some` iff exactly one variant is
+    /// served.
+    pub fn default_variant(&self) -> Option<&str> {
+        match self.entries.as_slice() {
+            [only] => Some(only.name.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    fn entry_index(&self, variant: &str) -> Result<usize> {
+        self.index.get(variant).copied().ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown variant '{variant}' (serving: {})",
+                self.variants().join(", ")
+            )
+        })
+    }
+
+    fn entry(&self, variant: &str) -> Result<&Entry> {
+        Ok(&self.entries[self.entry_index(variant)?])
+    }
+
+    /// One variant's golden-router (escape hatch for harnesses).
+    pub fn router(&self, variant: &str) -> Result<&Router> {
+        Ok(&self.entry(variant)?.router)
+    }
+
+    /// One variant's golden block configuration (e.g. to build
+    /// [`CellInputs`] of the right geometry).
+    pub fn block_config(&self, variant: &str) -> Result<&BlockConfig> {
+        Ok(self.entry(variant)?.router.block().config())
+    }
+
+    /// Validate a request's geometry against its variant's block.
+    fn check_inputs(&self, entry: &Entry, inputs: &CellInputs) -> Result<()> {
+        let n = entry.router.block().config().n_cells();
+        anyhow::ensure!(
+            inputs.v.len() == n && inputs.g.len() == n,
+            "variant '{}': expected {n} cells, got v[{}] / g[{}]",
+            entry.name,
+            inputs.v.len(),
+            inputs.g.len()
+        );
+        Ok(())
+    }
+
+    /// Submit one typed request and wait for the typed reply.
+    pub fn submit(&self, req: &MacRequest) -> Result<MacResponse> {
+        let entry = self.entry(&req.variant)?;
+        self.check_inputs(entry, &req.inputs)?;
+        let t0 = Instant::now();
+        let r = entry.router.handle_with(&req.inputs, req.opts.policy)?;
+        Ok(MacResponse {
+            variant: entry.name.clone(),
+            outputs: r.outputs,
+            route: r.route,
+            backend: r.backend,
+            verify_dev: r.verify_dev,
+            cross_dev: r.cross_dev,
+            latency: t0.elapsed(),
+        })
+    }
+
+    /// Submit a batch of typed requests with amortized backend entry:
+    /// requests are grouped by (variant, opts) and each group's emulated
+    /// rows travel to the backend as *one* batched call. Replies come back
+    /// in submission order.
+    pub fn submit_many(&self, reqs: &[MacRequest]) -> Result<Vec<MacResponse>> {
+        // Group while preserving submission order within each group.
+        let mut groups: Vec<(usize, RequestOpts, Vec<usize>)> = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            let entry_idx = self.entry_index(&req.variant)?;
+            self.check_inputs(&self.entries[entry_idx], &req.inputs)?;
+            match groups.iter_mut().find(|(e, o, _)| *e == entry_idx && *o == req.opts) {
+                Some((_, _, members)) => members.push(i),
+                None => groups.push((entry_idx, req.opts, vec![i])),
+            }
+        }
+        let mut out: Vec<Option<MacResponse>> = (0..reqs.len()).map(|_| None).collect();
+        for (entry_idx, opts, members) in groups {
+            let entry = &self.entries[entry_idx];
+            let xs: Vec<&CellInputs> = members.iter().map(|&i| &reqs[i].inputs).collect();
+            let t0 = Instant::now();
+            let results = entry.router.handle_many_with(&xs, opts.policy)?;
+            let latency = t0.elapsed();
+            for (&i, r) in members.iter().zip(results) {
+                out[i] = Some(MacResponse {
+                    variant: entry.name.clone(),
+                    outputs: r.outputs,
+                    route: r.route,
+                    backend: r.backend,
+                    verify_dev: r.verify_dev,
+                    cross_dev: r.cross_dev,
+                    latency,
+                });
+            }
+        }
+        Ok(out.into_iter().map(|r| r.expect("every request answered")).collect())
+    }
+
+    /// Metrics snapshot: top-level counters summed over every variant,
+    /// batcher stats, plus a `"variants"` object with each variant's full
+    /// per-variant snapshot (counters + latency percentiles).
+    pub fn metrics_json(&self) -> Json {
+        let mut totals: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for e in &self.entries {
+            for (k, v) in e.metrics.counters() {
+                *totals.entry(k).or_insert(0) += v;
+            }
+        }
+        let mut top: Vec<(String, Json)> = totals
+            .into_iter()
+            // Router metrics never touch the batcher pair; drop the
+            // always-zero keys in favor of the batcher-level stats below.
+            .filter(|(k, _)| *k != "batches" && *k != "batched_requests")
+            .map(|(k, v)| (k.to_string(), Json::Num(v as f64)))
+            .collect();
+        top.push(("mean_batch_size".into(), Json::Num(self.batch_metrics.mean_batch_size())));
+        top.push((
+            "batches".into(),
+            Json::Num(self.batch_metrics.batches.load(std::sync::atomic::Ordering::Relaxed) as f64),
+        ));
+        top.push((
+            "batched_requests".into(),
+            Json::Num(
+                self.batch_metrics.batched_requests.load(std::sync::atomic::Ordering::Relaxed)
+                    as f64,
+            ),
+        ));
+        let variants: BTreeMap<String, Json> =
+            self.entries.iter().map(|e| (e.name.clone(), e.metrics.snapshot())).collect();
+        top.push(("variants".into(), Json::Obj(variants)));
+        Json::Obj(top.into_iter().collect())
+    }
+
+    /// Batcher-level metrics of the primary backend (drain sizes/latency).
+    pub fn batch_metrics(&self) -> &Metrics {
+        &self.batch_metrics
+    }
+
+    /// Per-variant metrics (counters + request latency) for one variant.
+    pub fn variant_metrics(&self, variant: &str) -> Result<Arc<Metrics>> {
+        Ok(self.entry(variant)?.metrics.clone())
+    }
+
+    /// Shapes of every served variant, in declaration order.
+    pub fn variant_shapes(&self) -> &[crate::infer::VariantShape] {
+        self.service.variants()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::Arch;
+
+    fn small_def(name: &str) -> VariantDef {
+        VariantDef::new(name).arch("small")
+    }
+
+    #[test]
+    fn builder_rejects_empty_and_duplicates() {
+        let err = Deployment::builder().build().unwrap_err();
+        assert!(format!("{err:#}").contains("at least one variant"), "{err:#}");
+        let err = Deployment::builder()
+            .variant(small_def("a"))
+            .variant(small_def("a"))
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate variant label"), "{err:#}");
+    }
+
+    #[test]
+    fn builder_rejects_multi_variant_pjrt_and_cross_check() {
+        let err = Deployment::builder()
+            .variant(small_def("a"))
+            .variant(small_def("b"))
+            .backend(BackendKind::Pjrt)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("single-variant shim"), "{err:#}");
+        let err = Deployment::builder()
+            .variant(small_def("a"))
+            .variant(small_def("b"))
+            .cross_check(true)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("cross-check"), "{err:#}");
+    }
+
+    #[test]
+    fn builder_rejects_block_geometry_mismatch() {
+        // A cfg_b-sized block under a small network: feature mismatch.
+        let err = Deployment::builder()
+            .variant(small_def("a").block(BlockConfig::paper_cfg_b()))
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("features"), "{err:#}");
+    }
+
+    #[test]
+    fn submit_validates_variant_and_geometry() {
+        let dep = Deployment::builder()
+            .variant(small_def("only"))
+            .policy(Policy::Emulator)
+            .build()
+            .unwrap();
+        assert_eq!(dep.variants(), vec!["only"]);
+        assert_eq!(dep.default_variant(), Some("only"));
+        let block = dep.block_config("only").unwrap().clone();
+        let err = dep
+            .submit(&MacRequest::new("nope", CellInputs::zeros(&block)))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown variant"), "{err:#}");
+        let err = dep
+            .submit(&MacRequest::new("only", CellInputs { v: vec![0.0; 3], g: vec![0.0; 3] }))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("expected"), "{err:#}");
+        // A well-formed request answers with the emulator.
+        let resp = dep.submit(&MacRequest::new("only", CellInputs::zeros(&block))).unwrap();
+        assert_eq!(resp.route, Route::Emulated);
+        assert_eq!(resp.backend, Some(BackendKind::Native));
+        assert_eq!(resp.outputs.len(), block.n_mac());
+        // ... and the golden override bypasses it.
+        let resp = dep
+            .submit(&MacRequest::new("only", CellInputs::zeros(&block)).golden())
+            .unwrap();
+        assert_eq!(resp.route, Route::Golden);
+        assert_eq!(resp.backend, None);
+    }
+
+    #[test]
+    fn two_variants_dispatch_to_their_own_checkpoints() {
+        let meta = Arch::for_variant("small").unwrap().to_meta();
+        let dep = Deployment::builder()
+            .variant(small_def("a").state(ModelState::init(&meta, 1)))
+            .variant(small_def("b").state(ModelState::init(&meta, 2)))
+            .policy(Policy::Emulator)
+            .build()
+            .unwrap();
+        assert_eq!(dep.default_variant(), None);
+        let block = dep.block_config("a").unwrap().clone();
+        let mut x = CellInputs::zeros(&block);
+        x.v.iter_mut().for_each(|v| *v = 0.3);
+        let ya = dep.submit(&MacRequest::new("a", x.clone())).unwrap();
+        let yb = dep.submit(&MacRequest::new("b", x)).unwrap();
+        // Different checkpoints must answer differently.
+        assert_ne!(ya.outputs, yb.outputs);
+        let snap = dep.metrics_json();
+        let vars = snap.get("variants").unwrap();
+        assert_eq!(vars.get("a").unwrap().get("requests").unwrap().as_f64(), Some(1.0));
+        assert_eq!(vars.get("b").unwrap().get("requests").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("requests").unwrap().as_f64(), Some(2.0));
+    }
+}

@@ -1,20 +1,34 @@
 //! Dynamic batching for emulation requests.
 //!
-//! The batcher queues incoming requests, drains up to `max_batch` of them
-//! (or whatever arrived within `max_wait` of the first), runs one call on
-//! its [`EmulatorBackend`], and scatters the replies. Classic
+//! The batcher queues incoming requests, drains up to `max_batch` rows of
+//! them (or whatever arrived within `max_wait` of the first), groups the
+//! drain by served variant, runs one call per variant on its
+//! [`EmulatorBackend`], and scatters the replies. Classic
 //! vLLM-router-style size/timeout policy, sized for a regression service.
 //!
+//! One worker thread serves *every* variant of a deployment: requests name
+//! their variant ([`EmuRequest::variant`]) and may carry several rows
+//! ([`EmulatorHandle::infer_many`] amortizes the channel round trip for
+//! batched entry — `api::Deployment::submit_many` rides on it).
+//!
 //! The backend is chosen per deployment via [`BatcherConfig::backend`]:
-//! `Pjrt` drives the AOT artifacts (static batch shapes, padded
-//! internally), `Native` drives the artifact-free packed-matmul engine —
-//! see `semulator::infer` for the trait and selection story.
+//! `Native` (the default) drives the artifact-free packed-matmul engines —
+//! a [`NativeRegistry`] of one engine per variant — and `Pjrt` is strictly
+//! opt-in: it drives the AOT artifacts (static batch shapes, padded
+//! internally), needs `make artifacts` plus a real `xla` crate, and serves
+//! exactly one variant per process. See `semulator::infer` for the trait
+//! and selection story.
+//!
+//! Prefer standing this up through [`crate::api::Deployment`] — the
+//! builder owns the meta/state/metrics wiring and the golden routers;
+//! direct construction remains supported for harnesses and benches.
 //!
 //! Threading note: the `xla` crate's handles are not `Send` (they share an
 //! internal `Rc`'d client), so the worker thread constructs its *own*
 //! backend — and with it any PJRT client — and owns every xla object;
 //! other threads only exchange plain `Vec<f32>` through channels.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -22,14 +36,21 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::infer::{load_or_builtin_meta, BackendKind, EmulatorBackend, NativeEngine};
+use crate::infer::{
+    load_or_builtin_meta, BackendKind, EmulatorBackend, NativeRegistry, VariantId, VariantShape,
+};
 use crate::model::ModelState;
-use crate::runtime::PjrtBackend;
+use crate::runtime::{PjrtBackend, VariantMeta};
 
 use super::metrics::Metrics;
 
-/// One queued request: normalized features and the reply channel.
+/// One queued request: one or more rows of normalized features for one
+/// served variant, and the reply channel.
 pub struct EmuRequest {
+    /// Which served variant answers ([`VariantShape`] index).
+    pub variant: VariantId,
+    /// Sample rows in this request (`features.len() == rows * n_features`).
+    pub rows: usize,
     pub features: Vec<f32>,
     pub reply: Sender<Result<Vec<f32>, String>>,
 }
@@ -37,18 +58,21 @@ pub struct EmuRequest {
 /// Batching policy + backend selection.
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
-    /// Upper bound per backend call; for PJRT this is additionally clamped
-    /// to the largest compiled forward batch.
+    /// Upper bound on *rows* per backend call; for PJRT this is
+    /// additionally clamped to the largest compiled forward batch.
     pub max_batch: usize,
     /// How long to hold the first request while more arrive.
     pub max_wait: Duration,
-    /// Which forward implementation the worker constructs.
+    /// Which forward implementation the worker constructs. Defaults to
+    /// `Native` (artifact-free, works in offline builds); `Pjrt` is
+    /// strictly opt-in and errors cleanly where only the vendored `xla`
+    /// stub is linked.
     pub backend: BackendKind,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_batch: 64, max_wait: Duration::from_micros(200), backend: BackendKind::Pjrt }
+        Self { max_batch: 64, max_wait: Duration::from_micros(200), backend: BackendKind::Native }
     }
 }
 
@@ -59,29 +83,67 @@ impl BatcherConfig {
     }
 }
 
-/// Handle for submitting requests to a running batcher (clone freely).
+/// Everything the worker needs to stand up one served variant: the
+/// deployment-local label, the artifact/architecture variant it wraps,
+/// its metadata and checkpointed parameters.
+#[derive(Clone)]
+pub struct ServeVariant {
+    /// Deployment-local label requests address (unique per service).
+    pub name: String,
+    /// Artifact / built-in architecture variant name (`small` | `cfg_a` |
+    /// ...); several labels may wrap the same architecture.
+    pub arch: String,
+    pub meta: VariantMeta,
+    pub state: ModelState,
+}
+
+/// Handle for submitting requests to one served variant of a running
+/// batcher (clone freely; all handles share the worker thread).
 #[derive(Clone)]
 pub struct EmulatorHandle {
     tx: Sender<EmuRequest>,
     backend: BackendKind,
+    variant: VariantId,
+    name: Arc<str>,
     n_features: usize,
     n_outputs: usize,
 }
 
 impl EmulatorHandle {
-    /// Submit one request and wait for the reply.
+    /// Submit one sample and wait for the reply.
     pub fn infer(&self, features: Vec<f32>) -> Result<Vec<f32>> {
+        self.infer_many(features, 1)
+    }
+
+    /// Submit `rows` samples as *one* queued request and wait for the
+    /// concatenated reply (`rows * n_outputs`). The whole request reaches
+    /// the backend in a single `forward_batch` call (possibly alongside
+    /// other queued requests for the same variant) — the amortized entry
+    /// point `api::Deployment::submit_many` builds on.
+    pub fn infer_many(&self, features: Vec<f32>, rows: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(rows > 0, "need at least one row");
         anyhow::ensure!(
-            features.len() == self.n_features,
-            "expected {} features, got {}",
+            features.len() == rows * self.n_features,
+            "variant '{}': expected {} x {} features, got {}",
+            self.name,
+            rows,
             self.n_features,
             features.len()
         );
         let (tx, rx) = channel();
         self.tx
-            .send(EmuRequest { features, reply: tx })
+            .send(EmuRequest { variant: self.variant, rows, features, reply: tx })
             .map_err(|_| anyhow::anyhow!("batcher shut down"))?;
         rx.recv().context("batcher dropped reply")?.map_err(anyhow::Error::msg)
+    }
+
+    /// Served variant label this handle addresses.
+    pub fn variant_name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
     }
 
     pub fn n_outputs(&self) -> usize {
@@ -95,17 +157,18 @@ impl EmulatorHandle {
 }
 
 /// The batcher service: a worker thread owning the backend (and, for PJRT,
-/// the client + params).
+/// the client + params) for every served variant.
 pub struct EmulatorService {
-    handle: EmulatorHandle,
+    tx: Sender<EmuRequest>,
+    backend: BackendKind,
+    shapes: Vec<VariantShape>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl EmulatorService {
-    /// Spawn the batching worker for `variant` with checkpointed parameters.
-    /// Blocks until the worker has built its backend (so startup failures —
-    /// missing artifacts, layout mismatches — surface here, not on the
-    /// first request).
+    /// Spawn the batching worker for a single `variant` with checkpointed
+    /// parameters, resolving metadata from `artifact_dir` (or the built-in
+    /// architecture). Convenience wrapper over [`Self::spawn_multi`].
     pub fn spawn(
         artifact_dir: PathBuf,
         variant: &str,
@@ -113,44 +176,94 @@ impl EmulatorService {
         cfg: BatcherConfig,
         metrics: Arc<Metrics>,
     ) -> Result<Self> {
+        let meta = load_or_builtin_meta(&artifact_dir, variant)?;
+        let spec = ServeVariant {
+            name: variant.to_string(),
+            arch: variant.to_string(),
+            meta,
+            state: params,
+        };
+        Self::spawn_multi(artifact_dir, vec![spec], cfg, metrics)
+    }
+
+    /// Spawn one batching worker serving every variant in `specs`. Blocks
+    /// until the worker has built its backend (so startup failures —
+    /// missing artifacts, layout mismatches, duplicate labels — surface
+    /// here, not on the first request).
+    pub fn spawn_multi(
+        artifact_dir: PathBuf,
+        specs: Vec<ServeVariant>,
+        cfg: BatcherConfig,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self> {
+        anyhow::ensure!(!specs.is_empty(), "need at least one variant to serve");
         let (tx, rx) = channel::<EmuRequest>();
-        let (init_tx, init_rx) = channel::<Result<(usize, usize), String>>();
-        let variant_owned = variant.to_string();
+        let (init_tx, init_rx) = channel::<Result<Vec<VariantShape>, String>>();
         let backend_kind = cfg.backend;
+        let thread_name = format!("batcher-{}", specs[0].name);
         let worker = std::thread::Builder::new()
-            .name(format!("batcher-{variant}"))
-            .spawn(move || {
-                match BatchWorker::init(&artifact_dir, &variant_owned, &params, &cfg) {
-                    Ok(worker) => {
-                        let _ = init_tx.send(Ok((worker.n_features(), worker.n_outputs())));
-                        worker.run(rx, metrics);
-                    }
-                    Err(e) => {
-                        let _ = init_tx.send(Err(format!("{e:#}")));
-                    }
+            .name(thread_name)
+            .spawn(move || match BatchWorker::init(&artifact_dir, &specs, &cfg) {
+                Ok(worker) => {
+                    let _ = init_tx.send(Ok(worker.shapes().to_vec()));
+                    worker.run(rx, metrics);
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(format!("{e:#}")));
                 }
             })
             .context("spawning batcher thread")?;
-        let (n_features, n_outputs) = init_rx
+        let shapes = init_rx
             .recv()
             .context("batcher worker died during init")?
             .map_err(anyhow::Error::msg)?;
-        Ok(Self {
-            handle: EmulatorHandle { tx, backend: backend_kind, n_features, n_outputs },
-            worker: Some(worker),
+        Ok(Self { tx, backend: backend_kind, shapes, worker: Some(worker) })
+    }
+
+    /// Shapes of every served variant, in [`VariantId`] order.
+    pub fn variants(&self) -> &[VariantShape] {
+        &self.shapes
+    }
+
+    /// Handle for the first served variant (the only one for
+    /// single-variant deployments).
+    pub fn handle(&self) -> EmulatorHandle {
+        self.handle_for(0).expect("service serves at least one variant")
+    }
+
+    /// Handle for one served variant by id.
+    pub fn handle_for(&self, variant: VariantId) -> Result<EmulatorHandle> {
+        let shape = self.shapes.get(variant).ok_or_else(|| {
+            anyhow::anyhow!("variant id {variant} out of range ({} served)", self.shapes.len())
+        })?;
+        Ok(EmulatorHandle {
+            tx: self.tx.clone(),
+            backend: self.backend,
+            variant,
+            name: Arc::from(shape.name.as_str()),
+            n_features: shape.n_features,
+            n_outputs: shape.n_outputs,
         })
     }
 
-    pub fn handle(&self) -> EmulatorHandle {
-        self.handle.clone()
+    /// Handle for one served variant by label.
+    pub fn handle_named(&self, name: &str) -> Result<EmulatorHandle> {
+        let id = self.shapes.iter().position(|s| s.name == name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown variant '{name}' (serving: {})",
+                self.shapes.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", ")
+            )
+        })?;
+        self.handle_for(id)
     }
 }
 
 impl Drop for EmulatorService {
     fn drop(&mut self) {
-        // Replace the handle's sender so the worker's receiver disconnects.
+        // Replace the sender so the worker's receiver disconnects once
+        // every outstanding handle clone is gone too.
         let (dead, _) = channel();
-        self.handle.tx = dead;
+        self.tx = dead;
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -160,34 +273,40 @@ impl Drop for EmulatorService {
 /// Worker-thread state (owns the backend; never crosses threads).
 struct BatchWorker {
     backend: Box<dyn EmulatorBackend>,
+    /// Published shapes: backend geometry under the deployment labels.
+    shapes: Vec<VariantShape>,
     max_batch: usize,
     max_wait: Duration,
 }
 
 impl BatchWorker {
-    fn init(
-        dir: &std::path::Path,
-        variant: &str,
-        params: &ModelState,
-        cfg: &BatcherConfig,
-    ) -> Result<Self> {
+    fn init(dir: &std::path::Path, specs: &[ServeVariant], cfg: &BatcherConfig) -> Result<Self> {
         let backend: Box<dyn EmulatorBackend> = match cfg.backend {
-            BackendKind::Pjrt => Box::new(PjrtBackend::new(dir, variant, params)?),
+            BackendKind::Pjrt => {
+                anyhow::ensure!(
+                    specs.len() == 1,
+                    "the PJRT backend is a single-variant shim; {} variants requested \
+                     (use the native backend for multi-variant serving)",
+                    specs.len()
+                );
+                let s = &specs[0];
+                Box::new(PjrtBackend::new_labeled(dir, &s.arch, &s.name, &s.state)?)
+            }
             BackendKind::Native => {
-                let meta = load_or_builtin_meta(dir, variant)?;
-                Box::new(NativeEngine::from_meta(&meta, params)?)
+                let mut reg = NativeRegistry::new();
+                for s in specs {
+                    reg.register(&s.name, &s.meta, &s.state)?;
+                }
+                Box::new(reg)
             }
         };
+        let shapes = backend.variants().to_vec();
         let cap = backend.max_batch().unwrap_or(usize::MAX);
-        Ok(Self { backend, max_batch: cfg.max_batch.min(cap).max(1), max_wait: cfg.max_wait })
+        Ok(Self { backend, shapes, max_batch: cfg.max_batch.min(cap).max(1), max_wait: cfg.max_wait })
     }
 
-    fn n_features(&self) -> usize {
-        self.backend.n_features()
-    }
-
-    fn n_outputs(&self) -> usize {
-        self.backend.n_outputs()
+    fn shapes(&self) -> &[VariantShape] {
+        &self.shapes
     }
 
     fn run(self, rx: Receiver<EmuRequest>, metrics: Arc<Metrics>) {
@@ -198,48 +317,90 @@ impl BatchWorker {
                 Err(_) => return,
             };
             let t0 = Instant::now();
+            let mut rows = first.rows;
             let mut pending = vec![first];
             let deadline = t0 + self.max_wait;
-            while pending.len() < self.max_batch {
+            while rows < self.max_batch {
                 let now = Instant::now();
                 if now >= deadline {
                     break;
                 }
                 match rx.recv_timeout(deadline - now) {
-                    Ok(r) => pending.push(r),
+                    Ok(r) => {
+                        rows += r.rows;
+                        pending.push(r);
+                    }
                     Err(RecvTimeoutError::Timeout) => break,
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
-            self.run_batch(&pending, &metrics);
+            self.run_drain(&pending, &metrics);
             metrics.latency.record(t0.elapsed());
         }
     }
 
-    fn run_batch(&self, pending: &[EmuRequest], metrics: &Metrics) {
-        let k = pending.len();
-        let n_features = self.n_features();
-        let n_outputs = self.n_outputs();
-        // Pack exactly k rows; the backend pads to its own shapes if any.
-        let mut xb: Vec<f32> = Vec::with_capacity(k * n_features);
-        for r in pending {
-            xb.extend_from_slice(&r.features);
+    /// Execute one drained queue: group requests by variant (stable
+    /// order), one backend call per variant, scatter replies per request.
+    fn run_drain(&self, pending: &[EmuRequest], metrics: &Metrics) {
+        let mut groups: BTreeMap<VariantId, Vec<usize>> = BTreeMap::new();
+        for (i, r) in pending.iter().enumerate() {
+            groups.entry(r.variant).or_default().push(i);
         }
-        let result = self.backend.forward_batch(&xb);
-
-        metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        metrics.batched_requests.fetch_add(k as u64, std::sync::atomic::Ordering::Relaxed);
-
-        match result {
-            Ok(flat) => {
-                for (i, r) in pending.iter().enumerate() {
-                    let y = flat[i * n_outputs..(i + 1) * n_outputs].to_vec();
-                    let _ = r.reply.send(Ok(y));
+        for (variant, members) in groups {
+            let Some(shape) = self.shapes.get(variant) else {
+                for &i in &members {
+                    let _ = pending[i]
+                        .reply
+                        .send(Err(format!("variant id {variant} out of range")));
                 }
+                continue;
+            };
+            let n_outputs = shape.n_outputs;
+            let n_features = shape.n_features;
+            let rows: usize = members.iter().map(|&i| pending[i].rows).sum();
+            // Pack exactly `rows` rows; the backend pads to its own shapes
+            // if any.
+            let mut xb: Vec<f32> = Vec::with_capacity(rows * n_features);
+            for &i in &members {
+                xb.extend_from_slice(&pending[i].features);
             }
-            Err(e) => {
-                for r in pending {
-                    let _ = r.reply.send(Err(format!("emulator failure: {e:#}")));
+            // `max_batch` is a true per-call row cap: a multi-row request
+            // (infer_many) can exceed it, in which case the group is fed to
+            // the backend in max_batch-row slices (one `batches` tick per
+            // call) and the outputs re-concatenated before scattering.
+            let result: Result<Vec<f32>> = (|| {
+                let mut flat = Vec::with_capacity(rows * n_outputs);
+                let mut done = 0usize;
+                while done < rows {
+                    let take = self.max_batch.min(rows - done);
+                    let part = self
+                        .backend
+                        .forward_batch(variant, &xb[done * n_features..(done + take) * n_features])?;
+                    flat.extend_from_slice(&part);
+                    done += take;
+                    metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    metrics
+                        .batched_requests
+                        .fetch_add(take as u64, std::sync::atomic::Ordering::Relaxed);
+                }
+                Ok(flat)
+            })();
+
+            match result {
+                Ok(flat) => {
+                    let mut row0 = 0usize;
+                    for &i in &members {
+                        let r = &pending[i];
+                        let y = flat[row0 * n_outputs..(row0 + r.rows) * n_outputs].to_vec();
+                        row0 += r.rows;
+                        let _ = r.reply.send(Ok(y));
+                    }
+                }
+                Err(e) => {
+                    for &i in &members {
+                        let _ =
+                            pending[i].reply.send(Err(format!("emulator failure: {e:#}")));
+                    }
                 }
             }
         }

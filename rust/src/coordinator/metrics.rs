@@ -87,6 +87,26 @@ impl Metrics {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Name/value pairs of every counter (not the latency histogram) —
+    /// the aggregation surface `api::Deployment` sums per-variant metrics
+    /// over. Latency histograms stay per-instance; percentiles of a sum
+    /// are not the sum of percentiles.
+    pub fn counters(&self) -> [(&'static str, u64); 10] {
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        [
+            ("requests", ld(&self.requests)),
+            ("emulated", ld(&self.emulated)),
+            ("emulated_native", ld(&self.emulated_native)),
+            ("emulated_pjrt", ld(&self.emulated_pjrt)),
+            ("golden", ld(&self.golden)),
+            ("verified", ld(&self.verified)),
+            ("cross_checked", ld(&self.cross_checked)),
+            ("cross_failed", ld(&self.cross_failed)),
+            ("batches", ld(&self.batches)),
+            ("batched_requests", ld(&self.batched_requests)),
+        ]
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -138,6 +158,26 @@ mod tests {
         let h = LatencyHistogram::default();
         assert_eq!(h.quantile_us(0.9), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn counters_track_snapshot() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests);
+        Metrics::inc(&m.requests);
+        Metrics::inc(&m.golden);
+        let c: std::collections::BTreeMap<_, _> = m.counters().into_iter().collect();
+        assert_eq!(c["requests"], 2);
+        assert_eq!(c["golden"], 1);
+        assert_eq!(c["emulated"], 0);
+        // Every counter key also appears in the JSON snapshot except the
+        // batcher raw pair (snapshot reports mean_batch_size instead).
+        let snap = m.snapshot();
+        for (k, _) in m.counters() {
+            if k != "batches" && k != "batched_requests" {
+                assert!(snap.get(k).is_some(), "snapshot missing {k}");
+            }
+        }
     }
 
     #[test]

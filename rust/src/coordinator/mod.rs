@@ -2,14 +2,21 @@
 //!
 //! * [`trainer`] — epoch/minibatch loop with the paper's LR-halving
 //!   schedule, driving the AOT train-step through PJRT.
-//! * [`batcher`] — dynamic batching of inference requests onto a pluggable
-//!   emulator backend (native packed-matmul engine or PJRT artifacts,
-//!   chosen per deployment via `BatcherConfig::backend`).
+//! * [`batcher`] — dynamic batching of variant-addressed inference
+//!   requests onto a pluggable emulator backend (native multi-checkpoint
+//!   registry by default; PJRT artifacts opt-in).
 //! * [`router`] — golden(SPICE)/emulated routing with shadow verification
-//!   and optional native-vs-PJRT cross-checking; records the serving
-//!   backend per request.
-//! * [`server`] — TCP line-protocol front end.
-//! * [`metrics`] — counters (incl. per-backend) and latency histograms.
+//!   and optional cross-backend checking; one router per served variant.
+//! * [`server`] — TCP line-protocol front end over an `api::Deployment`.
+//! * [`metrics`] — counters (incl. per-backend) and latency histograms,
+//!   instantiated per variant by the deployment.
+//!
+//! Deployments should be stood up through `semulator::api::Deployment`,
+//! which owns all the wiring below (batcher worker, per-variant routers
+//! and metrics, cross-check services). Direct [`batcher`]/[`router`]
+//! construction is a legacy/harness surface: it remains supported for
+//! benches and focused tests, but new serving code should not reach for
+//! it.
 
 pub mod batcher;
 pub mod metrics;
@@ -17,7 +24,7 @@ pub mod router;
 pub mod server;
 pub mod trainer;
 
-pub use batcher::{BatcherConfig, EmulatorHandle, EmulatorService};
+pub use batcher::{BatcherConfig, EmulatorHandle, EmulatorService, ServeVariant};
 pub use metrics::{LatencyHistogram, Metrics};
 pub use router::{Policy, Route, RouteResult, Router};
 pub use server::Server;

@@ -13,7 +13,14 @@
 //! attach a second handle ([`Router::with_cross_check`]) so every
 //! shadow-verified request is also answered by the other backend —
 //! native vs PJRT vs golden in one pass.
+//!
+//! One router serves one deployment variant. Prefer standing routers up
+//! through [`crate::api::Deployment`], which builds one per named variant
+//! (with per-variant metrics) and fronts them with typed
+//! `MacRequest`/`MacResponse` submission; direct construction remains
+//! supported for harnesses and benches.
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -99,11 +106,18 @@ impl Router {
         self.policy
     }
 
-    /// Handle one simulation request.
+    /// Handle one simulation request under the router's policy.
     pub fn handle(&self, x: &CellInputs) -> Result<RouteResult> {
+        self.handle_with(x, None)
+    }
+
+    /// Handle one simulation request, optionally overriding the routing
+    /// policy for just this request (e.g. a caller forcing the golden
+    /// path for an audit probe).
+    pub fn handle_with(&self, x: &CellInputs, policy: Option<Policy>) -> Result<RouteResult> {
         Metrics::inc(&self.metrics.requests);
         let t0 = std::time::Instant::now();
-        let result = match self.policy {
+        let result = match policy.unwrap_or(self.policy) {
             Policy::Golden => {
                 Metrics::inc(&self.metrics.golden);
                 RouteResult {
@@ -154,6 +168,92 @@ impl Router {
         };
         self.metrics.latency.record(t0.elapsed());
         Ok(result)
+    }
+
+    /// Handle a batch of requests for this variant with one amortized
+    /// emulator call.
+    ///
+    /// Row-for-row equivalent to calling [`Self::handle_with`] per input
+    /// (golden simulation, shadow sampling and cross-checking stay
+    /// per-row), except that every emulated row travels to the backend as
+    /// a single batched request — the amortized entry
+    /// `api::Deployment::submit_many` builds on. Latency is recorded once
+    /// for the whole batch.
+    pub fn handle_many_with(
+        &self,
+        xs: &[&CellInputs],
+        policy: Option<Policy>,
+    ) -> Result<Vec<RouteResult>> {
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let policy = policy.unwrap_or(self.policy);
+        let t0 = std::time::Instant::now();
+        self.metrics.requests.fetch_add(xs.len() as u64, Ordering::Relaxed);
+        if matches!(policy, Policy::Golden) {
+            self.metrics.golden.fetch_add(xs.len() as u64, Ordering::Relaxed);
+            let out = xs
+                .iter()
+                .map(|x| RouteResult {
+                    outputs: self.block.simulate(x),
+                    route: Route::Golden,
+                    backend: None,
+                    verify_dev: None,
+                    cross_dev: None,
+                })
+                .collect();
+            self.metrics.latency.record(t0.elapsed());
+            return Ok(out);
+        }
+        let cfg = self.block.config();
+        let k = xs.len();
+        let nf = self.emulator.n_features();
+        let mut flat: Vec<f32> = Vec::with_capacity(k * nf);
+        for x in xs {
+            flat.extend_from_slice(&x.normalized(cfg));
+        }
+        self.metrics.emulated.fetch_add(k as u64, Ordering::Relaxed);
+        match self.emulator.backend() {
+            BackendKind::Native => {
+                self.metrics.emulated_native.fetch_add(k as u64, Ordering::Relaxed)
+            }
+            BackendKind::Pjrt => self.metrics.emulated_pjrt.fetch_add(k as u64, Ordering::Relaxed),
+        };
+        let y = self.emulator.infer_many(flat, k)?;
+        let n_out = self.emulator.n_outputs();
+        let mut results = Vec::with_capacity(k);
+        for (i, x) in xs.iter().enumerate() {
+            let yi: Vec<f64> = y[i * n_out..(i + 1) * n_out].iter().map(|v| *v as f64).collect();
+            let verify = match policy {
+                Policy::Shadow { verify_frac } => {
+                    { self.rng.lock().unwrap().uniform() } < verify_frac
+                }
+                _ => false,
+            };
+            let (verify_dev, cross_dev) = if verify {
+                Metrics::inc(&self.metrics.verified);
+                let golden = self.block.simulate(x);
+                let dev = max_abs_dev(&yi, &golden);
+                // Reuse the row's already-normalized features from `flat`
+                // rather than re-normalizing per verified row.
+                let cross = self
+                    .cross
+                    .as_ref()
+                    .and_then(|sec| self.cross_check(&yi, sec, flat[i * nf..(i + 1) * nf].to_vec()));
+                (Some(dev), cross)
+            } else {
+                (None, None)
+            };
+            results.push(RouteResult {
+                outputs: yi,
+                route: Route::Emulated,
+                backend: Some(self.emulator.backend()),
+                verify_dev,
+                cross_dev,
+            });
+        }
+        self.metrics.latency.record(t0.elapsed());
+        Ok(results)
     }
 
     /// Counted forward through the primary emulator handle.

@@ -1,22 +1,32 @@
-//! TCP line-protocol simulation server.
+//! TCP line-protocol front end over a [`Deployment`].
 //!
-//! One JSON object per line in, one per line out:
+//! One JSON object per line in, one per line out. Requests name the served
+//! variant (optional when the deployment hosts exactly one):
 //!
 //! ```text
-//! -> {"v": [..n_cells gate volts..], "g": [..n_cells siemens..]}
-//! <- {"y": [..MAC output volts..], "route": "emulated",
+//! -> {"variant": "cfg_a", "v": [..n_cells gate volts..], "g": [..siemens..]}
+//! <- {"y": [..MAC output volts..], "variant": "cfg_a", "route": "emulated",
 //!     "backend": "native", "us": 1234}
+//! -> {"cmd": "variants"}
+//! <- {"variants": ["cfg_a", "cfg_a_harsh"], "backend": "native", "us": 3}
 //! -> {"cmd": "metrics"}
-//! <- {"requests": ..., "emulated_native": ..., "latency_p50_us": ...}
+//! <- {"requests": ..., "variants": {"cfg_a": {...}, ...}, "us": 5}
 //! -> {"cmd": "shutdown"}
 //! ```
 //!
 //! Emulated replies name the serving backend (`native` | `pjrt`); shadow-
 //! verified replies add `verify_dev` (vs golden SPICE) and, when a
 //! cross-check backend is attached, `cross_dev` (vs the other emulator).
+//! `metrics` reports deployment-wide counters plus a per-variant
+//! breakdown.
+//!
+//! Robustness contract: malformed JSON, wrong-length `v`/`g`, unknown
+//! `cmd` and unknown `variant` all produce a structured
+//! `{"error": "..."}` reply on the same connection — the connection only
+//! closes on client EOF, transport errors, or `shutdown`.
 //!
 //! Built on `std::net` + a thread per connection; the heavy lifting is the
-//! shared [`Router`] (which serializes through the batcher anyway).
+//! shared [`Deployment`] (which serializes through its batcher anyway).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -25,11 +35,9 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::api::{Deployment, MacRequest};
 use crate::util::{json_parse, Json};
 use crate::xbar::CellInputs;
-
-use super::metrics::Metrics;
-use super::router::Router;
 
 /// A running server (join on drop).
 pub struct Server {
@@ -39,8 +47,9 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve.
-    pub fn spawn(addr: &str, router: Arc<Router>, metrics: Arc<Metrics>) -> Result<Self> {
+    /// Bind `addr` (e.g. "127.0.0.1:0" for an ephemeral port) and serve
+    /// the deployment.
+    pub fn spawn(addr: &str, deployment: Arc<Deployment>) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -52,11 +61,15 @@ impl Server {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         stream.set_nonblocking(false).ok();
-                        let router = router.clone();
-                        let metrics = metrics.clone();
+                        // Bounded reads so idle connections poll the stop
+                        // flag — a shutdown must not hang on open clients.
+                        stream
+                            .set_read_timeout(Some(std::time::Duration::from_millis(100)))
+                            .ok();
+                        let deployment = deployment.clone();
                         let stop3 = stop2.clone();
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, &router, &metrics, &stop3);
+                            let _ = handle_conn(stream, &deployment, &stop3);
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -78,6 +91,15 @@ impl Server {
             let _ = t.join();
         }
     }
+
+    /// Block until the acceptor exits on its own — i.e. a client sent
+    /// `{"cmd": "shutdown"}` or the listener failed. (Dropping instead
+    /// *initiates* shutdown; this waits for one.)
+    pub fn wait(mut self) {
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
 }
 
 impl Drop for Server {
@@ -86,27 +108,43 @@ impl Drop for Server {
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    router: &Router,
-    metrics: &Metrics,
-    stop: &AtomicBool,
-) -> Result<()> {
+fn handle_conn(stream: TcpStream, deployment: &Deployment, stop: &AtomicBool) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        // Read one full line; read timeouts (see the accept loop) only
+        // pause the read so the stop flag gets polled — an idle client
+        // must not keep a shut-down server alive. `read_line` appends, so
+        // a partial line survives the timeout and completes on retry.
+        loop {
+            match reader.read_line(&mut line) {
+                Ok(0) => return Ok(()), // client closed
+                Ok(_) => break,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if stop.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
         }
         let t0 = std::time::Instant::now();
-        let reply = match process_line(line.trim(), router, metrics, stop) {
+        let reply = match process_line(line.trim(), deployment, stop) {
             Ok(Some(mut obj)) => {
                 obj.push(("us".to_string(), Json::Num(t0.elapsed().as_micros() as f64)));
                 Json::Obj(obj.into_iter().collect()).to_string()
             }
             Ok(None) => return Ok(()), // shutdown
+            // Every application-level failure (bad JSON, bad geometry,
+            // unknown cmd/variant, emulator failure) stays on-connection
+            // as a structured error reply.
             Err(e) => Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
         };
         writer.write_all(reply.as_bytes())?;
@@ -117,26 +155,52 @@ fn handle_conn(
 
 fn process_line(
     line: &str,
-    router: &Router,
-    metrics: &Metrics,
+    deployment: &Deployment,
     stop: &AtomicBool,
 ) -> Result<Option<Vec<(String, Json)>>> {
     let msg = json_parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
     if let Some(cmd) = msg.get("cmd").and_then(|c| c.as_str()) {
         return match cmd {
             "metrics" => {
-                let snap = metrics.snapshot();
+                let snap = deployment.metrics_json();
                 let obj = snap.as_obj().unwrap().clone().into_iter().collect();
                 Ok(Some(obj))
             }
+            "variants" => Ok(Some(vec![
+                (
+                    "variants".to_string(),
+                    Json::Arr(
+                        deployment
+                            .variants()
+                            .into_iter()
+                            .map(|v| Json::Str(v.to_string()))
+                            .collect(),
+                    ),
+                ),
+                ("backend".to_string(), Json::Str(deployment.backend().as_str().into())),
+            ])),
             "shutdown" => {
                 stop.store(true, Ordering::Relaxed);
                 Ok(None)
             }
-            other => anyhow::bail!("unknown command '{other}'"),
+            other => anyhow::bail!("unknown command '{other}' (metrics | variants | shutdown)"),
         };
     }
-    let cfg = router.block().config();
+    // A MAC request: resolve the variant (optional for single-variant
+    // deployments), then parse the cell arrays against its geometry.
+    let variant = match msg.get("variant").and_then(|v| v.as_str()) {
+        Some(v) => v.to_string(),
+        None => deployment
+            .default_variant()
+            .with_context(|| {
+                format!(
+                    "\"variant\" is required when serving several variants ({})",
+                    deployment.variants().join(", ")
+                )
+            })?
+            .to_string(),
+    };
+    let cfg = deployment.block_config(&variant)?;
     let n = cfg.n_cells();
     let parse_arr = |key: &str| -> Result<Vec<f64>> {
         let arr = msg
@@ -149,9 +213,10 @@ fn process_line(
             .collect()
     };
     let x = CellInputs { v: parse_arr("v")?, g: parse_arr("g")? };
-    let res = router.handle(&x)?;
+    let res = deployment.submit(&MacRequest::new(variant, x))?;
     let mut obj = vec![
         ("y".to_string(), Json::arr_f64(&res.outputs)),
+        ("variant".to_string(), Json::Str(res.variant)),
         (
             "route".to_string(),
             Json::Str(match res.route {

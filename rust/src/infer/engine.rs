@@ -23,7 +23,7 @@ use crate::util::{default_workers, parallel_map};
 
 use super::arch::{Arch, Layer};
 use super::kernels::{bias_celu_cols, bias_celu_rows, matmul_nt};
-use super::{BackendKind, EmulatorBackend};
+use super::{BackendKind, EmulatorBackend, VariantId, VariantShape};
 
 /// Below this many samples per worker, extra threads cost more than they
 /// save (the small variant's forward is ~µs per sample).
@@ -56,11 +56,16 @@ enum Packed {
 }
 
 /// Pure-Rust [`EmulatorBackend`]: packed weights + gather tables.
+///
+/// One engine executes one `(architecture, checkpoint)` pair; as a backend
+/// it therefore serves exactly one variant (id 0). Deployments hosting
+/// several named variants stack engines in a
+/// [`NativeRegistry`](super::NativeRegistry).
 pub struct NativeEngine {
-    name: String,
+    /// Single-entry shape table: the one source of the engine's
+    /// name/geometry (the v2 backend contract is slice-based).
+    shape: [VariantShape; 1],
     layers: Vec<Packed>,
-    n_features: usize,
-    n_outputs: usize,
     workers: usize,
 }
 
@@ -159,10 +164,12 @@ impl NativeEngine {
             }
         }
         Ok(Self {
-            name: arch.name.clone(),
+            shape: [VariantShape {
+                name: arch.name.clone(),
+                n_features: arch.n_features(),
+                n_outputs: arch.outputs,
+            }],
             layers,
-            n_features: arch.n_features(),
-            n_outputs: arch.outputs,
             workers: default_workers(),
         })
     }
@@ -180,19 +187,30 @@ impl NativeEngine {
     }
 
     pub fn variant(&self) -> &str {
-        &self.name
+        &self.shape[0].name
+    }
+
+    /// Normalized features per sample.
+    pub fn n_features(&self) -> usize {
+        self.shape[0].n_features
+    }
+
+    /// Outputs (MAC voltages) per sample.
+    pub fn n_outputs(&self) -> usize {
+        self.shape[0].n_outputs
     }
 
     /// Forward a batch laid out `batch * n_features` batch-major; returns
     /// `batch * n_outputs`. Splits the batch over scoped worker threads.
     pub fn forward(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let n_features = self.n_features();
         anyhow::ensure!(
-            !x.is_empty() && x.len() % self.n_features == 0,
+            !x.is_empty() && x.len() % n_features == 0,
             "input length {} is not a nonzero multiple of {} features",
             x.len(),
-            self.n_features
+            n_features
         );
-        let batch = x.len() / self.n_features;
+        let batch = x.len() / n_features;
         let tasks = self.workers.min(batch.div_ceil(MIN_CHUNK)).max(1);
         if tasks <= 1 {
             return Ok(self.forward_chunk(x));
@@ -202,9 +220,9 @@ impl NativeEngine {
         let parts = parallel_map(n_tasks, n_tasks, |t| {
             let lo = t * per;
             let hi = ((t + 1) * per).min(batch);
-            self.forward_chunk(&x[lo * self.n_features..hi * self.n_features])
+            self.forward_chunk(&x[lo * n_features..hi * n_features])
         });
-        let mut out = Vec::with_capacity(batch * self.n_outputs);
+        let mut out = Vec::with_capacity(batch * self.n_outputs());
         for part in parts {
             out.extend_from_slice(&part);
         }
@@ -213,7 +231,7 @@ impl NativeEngine {
 
     /// Single-threaded forward over a chunk of whole samples.
     fn forward_chunk(&self, x: &[f32]) -> Vec<f32> {
-        let n = x.len() / self.n_features;
+        let n = x.len() / self.n_features();
         let mut cur = x.to_vec();
         let mut patch: Vec<f32> = Vec::new();
         for ly in &self.layers {
@@ -250,15 +268,15 @@ impl EmulatorBackend for NativeEngine {
         BackendKind::Native
     }
 
-    fn n_features(&self) -> usize {
-        self.n_features
+    fn variants(&self) -> &[VariantShape] {
+        &self.shape
     }
 
-    fn n_outputs(&self) -> usize {
-        self.n_outputs
-    }
-
-    fn forward_batch(&self, inputs: &[f32]) -> Result<Vec<f32>> {
+    fn forward_batch(&self, variant: VariantId, inputs: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            variant == 0,
+            "NativeEngine serves a single variant (id 0), got {variant}"
+        );
         self.forward(inputs)
     }
 }
@@ -333,10 +351,18 @@ mod tests {
         let state = ModelState::init(&arch.to_meta(), 1);
         let engine: Box<dyn EmulatorBackend> = Box::new(NativeEngine::new(&arch, &state).unwrap());
         assert_eq!(engine.kind(), BackendKind::Native);
-        assert_eq!(engine.n_features(), 128); // (2, 2, 16, 2)
-        assert_eq!(engine.n_outputs(), 1);
+        let shapes = engine.variants();
+        assert_eq!(shapes.len(), 1);
+        assert_eq!(shapes[0].name, "small");
+        assert_eq!(shapes[0].n_features, 128); // (2, 2, 16, 2)
+        assert_eq!(shapes[0].n_outputs, 1);
+        assert_eq!(engine.variant_id("small").unwrap(), 0);
+        assert!(engine.variant_id("nope").is_err());
+        assert_eq!(engine.shape(0).unwrap().n_outputs, 1);
+        assert!(engine.shape(1).is_err());
         assert_eq!(engine.max_batch(), None);
-        let y = engine.forward_batch(&vec![0.4f32; 2 * 128]).unwrap();
+        let y = engine.forward_batch(0, &vec![0.4f32; 2 * 128]).unwrap();
         assert_eq!(y.len(), 2);
+        assert!(engine.forward_batch(1, &vec![0.4f32; 128]).is_err());
     }
 }

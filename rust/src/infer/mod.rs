@@ -16,20 +16,28 @@
 //!   batched execution.
 //! * [`reference`] — the naive loop-nest oracle the engine is tested
 //!   against.
+//! * [`registry`] — [`NativeRegistry`]: several named checkpoints behind
+//!   one backend, so one process serves many variants.
 //!
 //! Backends are selected by [`BackendKind`]: the dynamic batcher
-//! (`coordinator::batcher`) constructs either a [`NativeEngine`] or the
-//! PJRT-backed `runtime::PjrtBackend` behind the same trait, the router
-//! records which one served each request, and its shadow path can
-//! cross-check one backend against the other and against golden SPICE.
+//! (`coordinator::batcher`) constructs either a [`NativeRegistry`] (one or
+//! more [`NativeEngine`]s) or the PJRT-backed `runtime::PjrtBackend`
+//! behind the same trait, the router records which one served each
+//! request, and its shadow path can cross-check one backend against the
+//! other and against golden SPICE. The trait is *variant-addressed*: every
+//! forward names the served variant by [`VariantId`], so a single backend
+//! (and a single batcher thread) can host several block/scenario
+//! emulators — the contract `semulator::api::Deployment` is built on.
 
 pub mod arch;
 pub mod engine;
 pub mod kernels;
 pub mod reference;
+pub mod registry;
 
 pub use arch::{load_or_builtin_meta, Arch, Layer, BUILTIN_VARIANTS};
 pub use engine::NativeEngine;
+pub use registry::NativeRegistry;
 
 use anyhow::Result;
 
@@ -68,21 +76,44 @@ impl std::fmt::Display for BackendKind {
     }
 }
 
-/// A batched forward-pass implementation the serving stack can drive.
+/// Index of a served variant within a backend (position in
+/// [`EmulatorBackend::variants`]).
+pub type VariantId = usize;
+
+/// Static per-variant shape information a backend publishes: the
+/// deployment-local variant label and the sample geometry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VariantShape {
+    /// Deployment-local variant label (e.g. `"cfg_a"`, `"cfg_a_harsh"`).
+    pub name: String,
+    /// Normalized features per sample.
+    pub n_features: usize,
+    /// Outputs (MAC voltages) per sample.
+    pub n_outputs: usize,
+}
+
+/// A batched, variant-addressed forward-pass implementation the serving
+/// stack can drive (v2 contract).
+///
+/// One backend serves one or more *named variants* — independent
+/// (architecture, checkpoint) pairs — so a single process (and a single
+/// batcher thread) can host several block/scenario emulators at once.
+/// Every forward names its variant by [`VariantId`], an index into
+/// [`variants`](Self::variants).
 ///
 /// Implementations own everything they need (parameters, compiled
 /// executables, scratch policy). They are constructed *inside* the thread
 /// that runs them — the PJRT handles are not `Send` — so the trait
-/// deliberately carries no `Send` bound.
+/// deliberately carries no `Send` bound. [`NativeRegistry`] is the
+/// multi-variant implementation; `runtime::PjrtBackend` adapts via a
+/// single-variant shim (always exactly one entry in `variants()`).
 pub trait EmulatorBackend {
     /// Which implementation this is (for metrics/routing labels).
     fn kind(&self) -> BackendKind;
 
-    /// Normalized features per sample.
-    fn n_features(&self) -> usize;
-
-    /// Outputs (MAC voltages) per sample.
-    fn n_outputs(&self) -> usize;
+    /// The named variants this backend serves; [`VariantId`]s index this
+    /// slice. Never empty for a servable backend.
+    fn variants(&self) -> &[VariantShape];
 
     /// Largest batch worth submitting in one call, if the implementation
     /// has a preference (e.g. the largest compiled PJRT batch shape).
@@ -91,10 +122,30 @@ pub trait EmulatorBackend {
         None
     }
 
-    /// Run `inputs` (`k * n_features`, batch-major, any `k >= 1`) and
-    /// return `k * n_outputs` predictions. Implementations pad internally
-    /// if they only support fixed shapes.
-    fn forward_batch(&self, inputs: &[f32]) -> Result<Vec<f32>>;
+    /// Run `inputs` (`k * n_features`, batch-major, any `k >= 1`) through
+    /// the given variant and return `k * n_outputs` predictions.
+    /// Implementations pad internally if they only support fixed shapes.
+    fn forward_batch(&self, variant: VariantId, inputs: &[f32]) -> Result<Vec<f32>>;
+
+    /// Shape of one served variant (errors on an out-of-range id).
+    fn shape(&self, variant: VariantId) -> Result<&VariantShape> {
+        self.variants().get(variant).ok_or_else(|| {
+            anyhow::anyhow!(
+                "variant id {variant} out of range ({} variant(s) served)",
+                self.variants().len()
+            )
+        })
+    }
+
+    /// Resolve a variant label to its [`VariantId`].
+    fn variant_id(&self, name: &str) -> Result<VariantId> {
+        self.variants().iter().position(|s| s.name == name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown variant '{name}' (serving: {})",
+                self.variants().iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,138 @@
+//! Multi-checkpoint registry: several named [`NativeEngine`]s behind one
+//! [`EmulatorBackend`].
+//!
+//! The paper replaces SPICE with a regressor *per analog computing block*;
+//! a deployment therefore wants many `(architecture, checkpoint)` pairs —
+//! device corners, non-ideality scenarios, block geometries — servable
+//! from one process. The registry is that collection: variants are
+//! registered under deployment-local labels (which need not match the
+//! architecture name — `"cfg_a_harsh"` can wrap the `cfg_a` network), and
+//! the batcher addresses them by [`VariantId`] through the v2 backend
+//! contract.
+
+use anyhow::{Context, Result};
+
+use crate::model::ModelState;
+use crate::runtime::VariantMeta;
+
+use super::engine::NativeEngine;
+use super::{BackendKind, EmulatorBackend, VariantId, VariantShape};
+
+/// One or more named native engines served through a single backend.
+#[derive(Default)]
+pub struct NativeRegistry {
+    engines: Vec<NativeEngine>,
+    shapes: Vec<VariantShape>,
+}
+
+impl NativeRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pack `state` for `meta`'s architecture and serve it under `name`.
+    /// Labels are deployment-local: they must be unique within the
+    /// registry but are otherwise free (the architecture name lives in
+    /// `meta`). Returns the new variant's id.
+    pub fn register(
+        &mut self,
+        name: &str,
+        meta: &VariantMeta,
+        state: &ModelState,
+    ) -> Result<VariantId> {
+        anyhow::ensure!(!name.is_empty(), "variant label must be non-empty");
+        anyhow::ensure!(
+            !self.shapes.iter().any(|s| s.name == name),
+            "variant '{name}' is already registered"
+        );
+        let engine = NativeEngine::from_meta(meta, state)
+            .with_context(|| format!("building native engine for variant '{name}'"))?;
+        self.shapes.push(VariantShape {
+            name: name.to_string(),
+            n_features: meta.n_features(),
+            n_outputs: meta.outputs,
+        });
+        self.engines.push(engine);
+        Ok(self.engines.len() - 1)
+    }
+
+    /// Number of registered variants.
+    pub fn len(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.engines.is_empty()
+    }
+
+    /// Direct access to one variant's engine (e.g. for offline evaluation).
+    pub fn engine(&self, variant: VariantId) -> Option<&NativeEngine> {
+        self.engines.get(variant)
+    }
+}
+
+impl EmulatorBackend for NativeRegistry {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn variants(&self) -> &[VariantShape] {
+        &self.shapes
+    }
+
+    fn forward_batch(&self, variant: VariantId, inputs: &[f32]) -> Result<Vec<f32>> {
+        // `shapes` and `engines` are index-aligned; the trait's shape()
+        // default provides the canonical out-of-range error.
+        self.shape(variant)?;
+        self.engines[variant].forward(inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::Arch;
+
+    #[test]
+    fn registry_serves_independent_variants() {
+        let small = Arch::for_variant("small").unwrap().to_meta();
+        let cfg_a = Arch::for_variant("cfg_a").unwrap().to_meta();
+        let s_small = ModelState::init(&small, 1);
+        let s_cfg_a = ModelState::init(&cfg_a, 2);
+        let mut reg = NativeRegistry::new();
+        assert!(reg.is_empty());
+        assert_eq!(reg.register("ideal", &small, &s_small).unwrap(), 0);
+        assert_eq!(reg.register("big", &cfg_a, &s_cfg_a).unwrap(), 1);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.kind(), BackendKind::Native);
+        assert_eq!(reg.variant_id("big").unwrap(), 1);
+        assert!(reg.variant_id("nope").is_err());
+        assert_eq!(reg.shape(0).unwrap().n_features, 128);
+        assert_eq!(reg.shape(1).unwrap().n_features, 1024); // (2, 4, 64, 2)
+
+        // Each id answers with its own engine, matching a direct forward.
+        let x_small = vec![0.3f32; 128];
+        let got = reg.forward_batch(0, &x_small).unwrap();
+        let want = NativeEngine::from_meta(&small, &s_small).unwrap().forward(&x_small).unwrap();
+        assert_eq!(got, want);
+        let x_a = vec![0.3f32; 1024];
+        let got_a = reg.forward_batch(1, &x_a).unwrap();
+        let want_a = NativeEngine::from_meta(&cfg_a, &s_cfg_a).unwrap().forward(&x_a).unwrap();
+        assert_eq!(got_a, want_a);
+        assert!(reg.forward_batch(2, &x_a).is_err());
+    }
+
+    #[test]
+    fn registry_rejects_duplicate_and_empty_labels() {
+        let meta = Arch::for_variant("small").unwrap().to_meta();
+        let state = ModelState::init(&meta, 0);
+        let mut reg = NativeRegistry::new();
+        reg.register("a", &meta, &state).unwrap();
+        let err = reg.register("a", &meta, &state).unwrap_err();
+        assert!(format!("{err:#}").contains("already registered"), "{err:#}");
+        assert!(reg.register("", &meta, &state).is_err());
+        // The same *checkpoint* under two labels is fine (scenario aliases).
+        reg.register("b", &meta, &state).unwrap();
+        assert_eq!(reg.len(), 2);
+    }
+}

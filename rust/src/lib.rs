@@ -13,34 +13,82 @@
 //!   parameter layout and checkpoints.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts.
 //! * [`infer`] — the native inference engine: packed-matmul forward passes
-//!   straight from a parameter state, plus the `EmulatorBackend` trait both
-//!   forward paths implement.
+//!   straight from a parameter state, the variant-addressed
+//!   `EmulatorBackend` trait both forward paths implement, and the
+//!   multi-checkpoint `NativeRegistry`.
+//! * [`api`] — **the serving API**: `Deployment` / `DeploymentBuilder`,
+//!   typed `MacRequest` / `MacResponse`, multi-variant sessions.
 //! * [`coordinator`] — training loop, dynamic batcher, golden/emulated
-//!   request router, metrics.
+//!   request router, TCP front end, metrics (the machinery `api` wires).
 //! * [`analytic`] — the human-expert analytical baseline the paper argues
 //!   against.
 //! * [`stats`] — Theorem 4.1 error-bound machinery and histograms.
 //! * [`repro`] — one entrypoint per paper table/figure.
 //!
+//! ## Standing up a deployment
+//!
+//! [`api::Deployment`] is the way to serve the system: it hosts any number
+//! of *named variants* — independent (architecture, checkpoint, golden
+//! block, non-ideality scenario) tuples — behind one batcher thread, one
+//! golden router per variant, and per-variant metrics:
+//!
+//! ```no_run
+//! use semulator::api::{Deployment, MacRequest, VariantDef};
+//! use semulator::coordinator::Policy;
+//! use semulator::xbar::{CellInputs, NonIdealSpec};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let dep = Deployment::builder()
+//!     .variant(VariantDef::new("cfg_a")) // ideal device
+//!     .variant(
+//!         VariantDef::new("cfg_a_harsh") // same network, harsh device corner
+//!             .arch("cfg_a")
+//!             .nonideal(NonIdealSpec::preset("harsh").map_err(anyhow::Error::msg)?),
+//!     )
+//!     .policy(Policy::Shadow { verify_frac: 0.05 })
+//!     .build()?;
+//! let block = dep.block_config("cfg_a")?.clone();
+//! let resp = dep.submit(&MacRequest::new("cfg_a_harsh", CellInputs::zeros(&block)))?;
+//! println!("{:?} answered by {:?}", resp.outputs, resp.backend);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Typed requests enter one at a time ([`api::Deployment::submit`]) or
+//! amortized ([`api::Deployment::submit_many`] — all emulated rows of a
+//! variant reach the backend as one batched call). The same deployment
+//! speaks the TCP line protocol through [`coordinator::Server`], where
+//! requests name their variant:
+//!
+//! ```text
+//! -> {"variant": "cfg_a_harsh", "v": [..gate volts..], "g": [..siemens..]}
+//! <- {"y": [..MAC volts..], "variant": "cfg_a_harsh", "route": "emulated",
+//!     "backend": "native", "us": 41}
+//! -> {"cmd": "metrics"}
+//! <- {"requests": 1, ..., "variants": {"cfg_a": {...}, "cfg_a_harsh": {...}}}
+//! ```
+//!
 //! ## Choosing a forward path
 //!
-//! The regression network can be executed two ways, selected per
-//! deployment behind one trait ([`infer::EmulatorBackend`]):
+//! Under the facade, the regression network can be executed two ways,
+//! selected per deployment behind one variant-addressed trait
+//! ([`infer::EmulatorBackend`]):
 //!
-//! | backend  | needs                         | built by                    |
-//! |----------|-------------------------------|-----------------------------|
-//! | `native` | a checkpoint (or fresh init)  | [`infer::NativeEngine`]     |
-//! | `pjrt`   | `make artifacts` + real `xla` | [`runtime::PjrtBackend`]    |
+//! | backend  | needs                         | built by                     | variants      |
+//! |----------|-------------------------------|------------------------------|---------------|
+//! | `native` | a checkpoint (or fresh init)  | [`infer::NativeRegistry`]    | any number    |
+//! | `pjrt`   | `make artifacts` + real `xla` | [`runtime::PjrtBackend`]     | exactly one   |
 //!
-//! The serving CLI exposes this as `--backend native|pjrt` (and
-//! `--cross-check` to shadow one against the other); the dynamic batcher,
-//! router and metrics all carry the selection through. In offline builds
-//! (vendored stub `xla` crate) the native backend is the only executable
-//! one — PJRT paths parse metadata but refuse to compile.
+//! `native` is the default everywhere; `pjrt` is strictly opt-in
+//! (`DeploymentBuilder::backend`, CLI `--backend pjrt`) and errors cleanly
+//! in offline builds (vendored stub `xla` crate). `--cross-check` /
+//! `DeploymentBuilder::cross_check` shadows one backend with the other on
+//! every shadow-verified request.
 
 pub mod analytic;
 pub mod util;
 
+pub mod api;
 pub mod coordinator;
 pub mod datagen;
 pub mod infer;

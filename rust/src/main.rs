@@ -15,12 +15,12 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use semulator::api::{Deployment, MacRequest, VariantDef};
 use semulator::coordinator::{
-    evaluate_native, evaluate_state, train, BatcherConfig, EmulatorService, LrSchedule, Metrics,
-    Policy, Router, Server, TrainConfig,
+    evaluate_native, evaluate_state, train, LrSchedule, Policy, Server, TrainConfig,
 };
 use semulator::datagen::{generate_to, Dataset, GenConfig, SampleDist};
-use semulator::infer::{load_or_builtin_meta, Arch, BackendKind, NativeEngine, BUILTIN_VARIANTS};
+use semulator::infer::{load_or_builtin_meta, Arch, BackendKind, BUILTIN_VARIANTS};
 use semulator::model::ModelState;
 use semulator::repro;
 use semulator::runtime::ArtifactStore;
@@ -78,16 +78,25 @@ const USAGE: &str = "usage: semulator <info|datagen|train|eval|serve|repro> [opt
   datagen  --variant V --n N --out FILE  generate a SPICE dataset
            [--dist uniform|binary|sparseP] [--nonideal ideal|mild|harsh]
   train    --variant V --data FILE       train SEMULATOR (PJRT train step)
-  eval     --variant V --data FILE --ckpt FILE [--backend pjrt|native]
+  eval     --variant V --data FILE --ckpt FILE [--backend native|pjrt]
            [--nonideal ideal|mild|harsh [--probe N]]
-  serve    --variant V --ckpt FILE --addr HOST:PORT
+  serve    --variants SPEC[,SPEC...] --addr HOST:PORT  [--ckpt FILE | --fresh]
            [--policy emulator|golden|shadow] [--backend native|pjrt] [--cross-check]
-           [--nonideal ideal|mild|harsh]  (frozen effects on the golden shadow)
+           SPEC = label[=arch][+nonideal][@ckpt]; --variant V serves one
   repro    <table1|fig4|fig5|fig6|fig7|bound|speed|all> [--preset ci|small|paper]
 common:    --artifacts DIR (default artifacts)   --work DIR (default runs)
+serve:     one process hosts every SPEC as a named variant of one
+           api::Deployment: requests pick theirs with a \"variant\" field
+           (optional when serving one), and {\"cmd\":\"metrics\"} reports
+           per-variant counters. Example — ideal and harsh device corners
+           of the same trained network:
+             serve --variants cfg_a,cfg_a_harsh=cfg_a+harsh --ckpt a.ckpt
+           '@FILE' pins a checkpoint per variant; --fresh permits serving
+           fresh-init weights (protocol demos).
 backends:  'native' executes the regression network in-process from the
-           checkpoint alone (no PJRT artifacts needed; the serve default);
-           'pjrt' runs the AOT-compiled HLO artifacts. --cross-check also
+           checkpoint alone (no PJRT artifacts needed; the default) and
+           hosts any number of variants; 'pjrt' runs the AOT-compiled HLO
+           artifacts (strictly opt-in, single-variant). --cross-check also
            spawns the other backend and reports native-vs-pjrt deviation
            on every shadow-verified request.
 nonideal:  device non-ideality scenario presets (programming variation,
@@ -97,7 +106,8 @@ nonideal:  device non-ideality scenario presets (programming variation,
            (native backend) the emulator is robustness-swept against the
            perturbed golden block over the first --probe dataset rows.
            Per-read cycle noise is drawn in datagen and the eval sweep;
-           the serve shadow applies the frozen effects only.";
+           a serve variant's '+preset' (or the global --nonideal) applies
+           the frozen effects to that variant's golden shadow block.";
 
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = artifact_dir(args);
@@ -213,14 +223,14 @@ fn cmd_eval(args: &Args) -> Result<()> {
     );
     let ds = Dataset::load(Path::new(args.str_opt("data").context("--data FILE required")?))?;
     let ckpt = Path::new(args.str_opt("ckpt").context("--ckpt FILE required")?);
-    let (stats, native_ctx) = match backend {
+    let (stats, native_state) = match backend {
         BackendKind::Native => {
             // Artifact-free path: meta from disk when present, else the
             // built-in architecture.
             let meta = load_or_builtin_meta(&artifact_dir(args), &variant)?;
             let state = ModelState::load(ckpt, &meta)?;
             let stats = evaluate_native(&meta, &state, &ds)?;
-            (stats, Some((meta, state)))
+            (stats, Some(state))
         }
         BackendKind::Pjrt => {
             let store = ArtifactStore::open(&artifact_dir(args))?;
@@ -239,31 +249,43 @@ fn cmd_eval(args: &Args) -> Result<()> {
     // Robustness sweep: replay dataset rows through a *perturbed* golden
     // block (frozen effects inside the block, per-read cycle noise drawn
     // here from a seeded stream) and report how far the (ideally-trained)
-    // native emulator drifts from it, next to the intrinsic golden shift
-    // the scenario itself introduces.
+    // emulator drifts from it, next to the intrinsic golden shift the
+    // scenario itself introduces. The emulator forwards go through the
+    // serving facade — one emulator-only Deployment, one amortized
+    // submit_many — so the sweep measures exactly what serving would.
     if let Some(spec) = nonideal {
-        let (meta, state) = native_ctx.expect("native backend ensured above");
-        let engine = NativeEngine::from_meta(&meta, &state)?;
+        let state = native_state.expect("native backend ensured above");
         let ideal_cfg = repro::block_for(&variant)?;
         let pert_cfg = ideal_cfg.clone().with_nonideal(spec);
         let ideal = AnalogBlock::new(ideal_cfg.clone()).map_err(anyhow::Error::msg)?;
         let pert = AnalogBlock::new(pert_cfg).map_err(anyhow::Error::msg)?;
+        let dep = Deployment::builder()
+            .artifact_dir(artifact_dir(args))
+            .variant(VariantDef::new(variant.as_str()).state(state))
+            .policy(Policy::Emulator)
+            .build()?;
         // Dedicated read-noise stream, decorrelated from the frozen-device
         // draws (which use the spec seed through a different constant).
         let mut noise_rng = Rng::seed_from(spec.seed ^ 0xE7A1_5EED_E7A1_5EED);
         let n_probe = args.usize_or("probe", 128)?.min(ds.n);
         anyhow::ensure!(n_probe > 0, "--nonideal robustness sweep needs a non-empty dataset");
+        let mut reqs = Vec::with_capacity(n_probe);
+        let mut xs_read = Vec::with_capacity(n_probe);
+        for i in 0..n_probe {
+            let x = CellInputs::from_normalized(&ideal_cfg, ds.features(i));
+            let mut x_read = x.clone();
+            spec.apply_read_noise(&ideal_cfg, &mut x_read, &mut noise_rng);
+            xs_read.push(x_read);
+            reqs.push(MacRequest::new(variant.clone(), x));
+        }
+        let preds = dep.submit_many(&reqs)?;
         let mut mae_engine = 0.0f64;
         let mut mae_shift = 0.0f64;
         for i in 0..n_probe {
-            let x = CellInputs::from_normalized(&ideal_cfg, ds.features(i));
-            let y_ideal = ideal.simulate(&x);
-            let mut x_read = x.clone();
-            spec.apply_read_noise(&ideal_cfg, &mut x_read, &mut noise_rng);
-            let y_pert = pert.simulate(&x_read);
-            let pred = engine.forward(ds.features(i))?;
+            let y_ideal = ideal.simulate(&reqs[i].inputs);
+            let y_pert = pert.simulate(&xs_read[i]);
             for k in 0..ds.o {
-                mae_engine += (pred[k] as f64 - y_pert[k]).abs();
+                mae_engine += (preds[i].outputs[k] - y_pert[k]).abs();
                 mae_shift += (y_pert[k] - y_ideal[k]).abs();
             }
         }
@@ -280,74 +302,111 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `label[=arch][+nonideal][@ckpt]` -> a [`VariantDef`] for the serve
+/// deployment. The global `--ckpt` is the fallback checkpoint; a missing
+/// checkpoint is an error unless `--fresh` permits init weights.
+fn parse_variant_spec(
+    dir: &Path,
+    spec: &str,
+    default_ckpt: Option<&str>,
+    global_nonideal: Option<NonIdealSpec>,
+    nonideal_seed: u64,
+    allow_fresh: bool,
+) -> Result<VariantDef> {
+    let (head, ckpt) = match spec.split_once('@') {
+        Some((h, c)) => (h, Some(c)),
+        None => (spec, None),
+    };
+    let (head, preset) = match head.split_once('+') {
+        Some((h, p)) => (h, Some(p)),
+        None => (head, None),
+    };
+    let (label, arch) = match head.split_once('=') {
+        Some((l, a)) => (l, a),
+        None => (head, head),
+    };
+    anyhow::ensure!(
+        !label.is_empty() && !arch.is_empty(),
+        "bad variant spec '{spec}' (expected label[=arch][+nonideal][@ckpt])"
+    );
+    let mut def = VariantDef::new(label).arch(arch);
+    match preset {
+        Some(p) => {
+            let mut s = NonIdealSpec::preset(p).map_err(anyhow::Error::msg)?;
+            s.seed = nonideal_seed;
+            def = def.nonideal(s);
+        }
+        None => {
+            if let Some(g) = global_nonideal {
+                def = def.nonideal(g);
+            }
+        }
+    }
+    match ckpt.or(default_ckpt) {
+        Some(path) => {
+            let meta = load_or_builtin_meta(dir, arch)?;
+            def = def.state(ModelState::load(Path::new(path), &meta)?);
+        }
+        None => anyhow::ensure!(
+            allow_fresh,
+            "variant '{label}': no checkpoint (give --ckpt FILE, an '@FILE' \
+             suffix, or --fresh to serve fresh-init weights)"
+        ),
+    }
+    Ok(def)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    let variant = args.str_or("variant", "small");
     let dir = artifact_dir(args);
     let backend = BackendKind::parse(&args.str_or("backend", "native"))?;
-    // The native backend needs no artifacts; fall back to the built-in
-    // architecture when meta.json is absent.
-    let meta = load_or_builtin_meta(&dir, &variant)?;
-    let state = ModelState::load(
-        Path::new(args.str_opt("ckpt").context("--ckpt FILE required (train first)")?),
-        &meta,
-    )?;
     let policy = match args.str_or("policy", "shadow").as_str() {
         "emulator" => Policy::Emulator,
         "golden" => Policy::Golden,
         "shadow" => Policy::Shadow { verify_frac: args.f64_or("verify-frac", 0.05)? },
         other => anyhow::bail!("unknown policy '{other}'"),
     };
-    let metrics = Arc::new(Metrics::default());
-    let batcher_cfg = BatcherConfig {
-        max_batch: args.usize_or("max-batch", 64)?,
-        max_wait: std::time::Duration::from_micros(args.u64_or("max-wait-us", 200)?),
-        backend,
+    // One spec per served variant: `--variants a,b=arch+harsh@b.ckpt`, or
+    // the single-variant `--variant V [--nonideal P] [--ckpt F]` shorthand.
+    // A '+preset' applies that scenario's frozen effects to the variant's
+    // golden shadow block (per-read cycle noise is a datagen/eval concern),
+    // so shadow-verified requests measure the emulator against the device
+    // as deployed, not the idealized one.
+    let specs: Vec<String> = match args.str_opt("variants") {
+        Some(s) => s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect(),
+        None => vec![args.str_or("variant", "small")],
     };
-    let service = EmulatorService::spawn(
-        dir.clone(),
-        &variant,
-        state.clone(),
-        batcher_cfg.clone(),
-        metrics.clone(),
-    )?;
-    // --nonideal: the golden shadow block runs the perturbed scenario
-    // (frozen effects — variation, faults, drift, IR drop; per-read cycle
-    // noise is a datagen/eval concern), so shadow-verified requests measure
-    // the emulator against the device as deployed, not the idealized one.
-    let mut block_cfg = repro::block_for(&variant)?;
-    if let Some(spec) = nonideal_from_args(args)? {
-        block_cfg.nonideal = spec;
+    anyhow::ensure!(!specs.is_empty(), "--variants needs at least one spec");
+    let global_nonideal = nonideal_from_args(args)?;
+    let mut builder = Deployment::builder()
+        .artifact_dir(dir.clone())
+        .backend(backend)
+        .policy(policy)
+        .max_batch(args.usize_or("max-batch", 64)?)
+        .max_wait(std::time::Duration::from_micros(args.u64_or("max-wait-us", 200)?))
+        .cross_check(args.has("cross-check"));
+    for spec in &specs {
+        builder = builder.variant(parse_variant_spec(
+            &dir,
+            spec,
+            args.str_opt("ckpt"),
+            global_nonideal,
+            args.u64_or("nonideal-seed", 0)?,
+            args.has("fresh"),
+        )?);
     }
-    let block = AnalogBlock::new(block_cfg).map_err(anyhow::Error::msg)?;
-    let mut router = Router::new(block, service.handle(), policy, metrics.clone(), 0);
-    // --cross-check: stand up the *other* backend too (same batching
-    // policy); every shadow-verified request then reports the
-    // native-vs-pjrt deviation.
-    let _cross_service = if args.has("cross-check") {
-        let other = match backend {
-            BackendKind::Native => BackendKind::Pjrt,
-            BackendKind::Pjrt => BackendKind::Native,
-        };
-        let cfg2 = BatcherConfig { backend: other, ..batcher_cfg };
-        // Dedicated metrics: the secondary's batch/latency traffic must not
-        // blend into the serving backend's numbers (router-level counters
-        // like cross_checked still land on the shared `metrics`).
-        let svc = EmulatorService::spawn(dir, &variant, state, cfg2, Arc::new(Metrics::default()))?;
-        router = router.with_cross_check(svc.handle());
-        Some(svc)
-    } else {
-        None
-    };
-    let router = Arc::new(router);
+    let deployment = Arc::new(builder.build()?);
     let addr = args.str_or("addr", "127.0.0.1:7070");
-    let server = Server::spawn(&addr, router, metrics)?;
+    let server = Server::spawn(&addr, deployment.clone())?;
     println!(
-        "serving {variant} on {} (policy {policy:?}, backend {backend}); \
-         send {{\"cmd\":\"shutdown\"}} to stop",
-        server.addr
+        "serving [{}] on {} (policy {:?}, backend {}); requests pick a \
+         variant with {{\"variant\": ...}}; send {{\"cmd\":\"shutdown\"}} to stop",
+        deployment.variants().join(", "),
+        server.addr,
+        deployment.policy(),
+        deployment.backend()
     );
-    // Block until the acceptor exits (shutdown command) — dropping joins.
-    drop(server);
+    // Block until a client sends the shutdown command.
+    server.wait();
     Ok(())
 }
 

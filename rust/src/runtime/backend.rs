@@ -7,13 +7,19 @@
 //! padded up to the smallest compiled batch shape that fits, and batches
 //! larger than the biggest artifact are processed in slices, so callers see
 //! the same any-`k` contract as the native engine.
+//!
+//! Under the variant-addressed v2 backend contract this is a
+//! *single-variant shim*: one `PjrtBackend` compiles one variant's
+//! artifacts, so `variants()` always has exactly one entry (id 0). A
+//! multi-variant PJRT deployment would need one backend per variant; the
+//! `api::Deployment` builder rejects that combination up front.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::infer::{BackendKind, EmulatorBackend};
+use crate::infer::{BackendKind, EmulatorBackend, VariantId, VariantShape};
 use crate::model::ModelState;
 
 use super::artifacts::ArtifactStore;
@@ -28,14 +34,28 @@ pub struct PjrtBackend {
     exes: Vec<(usize, Arc<Executable>)>,
     params: Vec<xla::Literal>,
     input_dims: Vec<usize>,
-    n_features: usize,
-    n_outputs: usize,
+    /// Single-entry shape table: the one source of the served label and
+    /// geometry (the v2 backend contract is slice-based).
+    shape: [VariantShape; 1],
 }
 
 impl PjrtBackend {
     /// Compile every non-ablation forward artifact of `variant` under
-    /// `artifact_dir` and stage `state` as device literals.
+    /// `artifact_dir` and stage `state` as device literals. The backend
+    /// serves that variant under the same label; see [`Self::new_labeled`]
+    /// for deployment-local aliases.
     pub fn new(artifact_dir: &Path, variant: &str, state: &ModelState) -> Result<Self> {
+        Self::new_labeled(artifact_dir, variant, variant, state)
+    }
+
+    /// Like [`Self::new`], but publish the served variant under `label`
+    /// (deployments may alias an artifact variant, e.g. a scenario name).
+    pub fn new_labeled(
+        artifact_dir: &Path,
+        variant: &str,
+        label: &str,
+        state: &ModelState,
+    ) -> Result<Self> {
         let store = ArtifactStore::open(artifact_dir)?;
         let meta = store.meta.variant(variant)?.clone();
         let mut batch_kinds: Vec<(usize, String)> = meta
@@ -56,11 +76,22 @@ impl PjrtBackend {
         Ok(Self {
             params: state.to_literals()?,
             input_dims: meta.input.clone(),
-            n_features: meta.n_features(),
-            n_outputs: meta.outputs,
+            shape: [VariantShape {
+                name: label.to_string(),
+                n_features: meta.n_features(),
+                n_outputs: meta.outputs,
+            }],
             exes,
             store,
         })
+    }
+
+    fn n_features(&self) -> usize {
+        self.shape[0].n_features
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.shape[0].n_outputs
     }
 
     /// Largest compiled batch shape.
@@ -77,9 +108,9 @@ impl PjrtBackend {
             .find(|(b, _)| *b >= rows)
             .unwrap_or_else(|| self.exes.last().expect("nonempty ladder"));
         let exe_batch = *exe_batch;
-        let mut xb = Vec::with_capacity(exe_batch * self.n_features);
+        let mut xb = Vec::with_capacity(exe_batch * self.n_features());
         xb.extend_from_slice(xs);
-        let last = &xs[(rows - 1) * self.n_features..];
+        let last = &xs[(rows - 1) * self.n_features()..];
         for _ in rows..exe_batch {
             xb.extend_from_slice(last);
         }
@@ -90,7 +121,7 @@ impl PjrtBackend {
         inputs.push(&x_lit);
         let outs = exe.run(&inputs).with_context(|| format!("PJRT forward b{exe_batch}"))?;
         let flat = read_f32(&outs[0])?;
-        Ok(flat[..rows * self.n_outputs].to_vec())
+        Ok(flat[..rows * self.n_outputs()].to_vec())
     }
 }
 
@@ -99,32 +130,33 @@ impl EmulatorBackend for PjrtBackend {
         BackendKind::Pjrt
     }
 
-    fn n_features(&self) -> usize {
-        self.n_features
-    }
-
-    fn n_outputs(&self) -> usize {
-        self.n_outputs
+    fn variants(&self) -> &[VariantShape] {
+        &self.shape
     }
 
     fn max_batch(&self) -> Option<usize> {
         Some(self.largest_batch())
     }
 
-    fn forward_batch(&self, inputs: &[f32]) -> Result<Vec<f32>> {
+    fn forward_batch(&self, variant: VariantId, inputs: &[f32]) -> Result<Vec<f32>> {
         anyhow::ensure!(
-            !inputs.is_empty() && inputs.len() % self.n_features == 0,
+            variant == 0,
+            "PjrtBackend is a single-variant shim (id 0), got {variant}"
+        );
+        let n_features = self.n_features();
+        anyhow::ensure!(
+            !inputs.is_empty() && inputs.len() % n_features == 0,
             "input length {} is not a nonzero multiple of {} features",
             inputs.len(),
-            self.n_features
+            n_features
         );
-        let k = inputs.len() / self.n_features;
+        let k = inputs.len() / n_features;
         let cap = self.largest_batch();
-        let mut out = Vec::with_capacity(k * self.n_outputs);
+        let mut out = Vec::with_capacity(k * self.n_outputs());
         let mut done = 0usize;
         while done < k {
             let take = cap.min(k - done);
-            let xs = &inputs[done * self.n_features..(done + take) * self.n_features];
+            let xs = &inputs[done * n_features..(done + take) * n_features];
             out.extend_from_slice(&self.run_padded(xs, take)?);
             done += take;
         }

@@ -1,15 +1,19 @@
-//! End-to-end coordinator tests: datagen -> train -> evaluate; batcher +
-//! router + TCP server round trips. PJRT-path tests are skipped without
-//! built artifacts; the native-backend tests run everywhere (the native
-//! engine needs no artifacts at all).
+//! End-to-end coordinator + serving-API tests: datagen -> train ->
+//! evaluate (PJRT-gated); `api::Deployment` facade correctness — builder
+//! misuse, multi-variant submit pinned against direct engine/golden
+//! answers, amortized `submit_many`, per-variant metrics — and the TCP
+//! line protocol with its robustness contract. PJRT-path tests are
+//! skipped without built artifacts; the native/facade tests run
+//! everywhere (the native engine needs no artifacts at all).
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use semulator::api::{Deployment, MacRequest, VariantDef};
 use semulator::coordinator::{
-    evaluate_state, train, BatcherConfig, EmulatorService, LrSchedule, Metrics, Policy, Router,
-    Server, TrainConfig,
+    evaluate_state, train, BatcherConfig, EmulatorService, LrSchedule, Metrics, Policy, Route,
+    Router, Server, TrainConfig,
 };
 use semulator::datagen::{generate, GenConfig, SampleDist};
 use semulator::infer::{Arch, BackendKind, NativeEngine};
@@ -17,7 +21,7 @@ use semulator::model::ModelState;
 use semulator::repro::block_for;
 use semulator::runtime::ArtifactStore;
 use semulator::util::{json_parse, Json, Rng};
-use semulator::xbar::AnalogBlock;
+use semulator::xbar::{AnalogBlock, CellInputs, NonIdealSpec};
 
 fn artifact_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -27,6 +31,19 @@ fn artifact_dir() -> Option<PathBuf> {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         None
     }
+}
+
+/// A directory with no meta.json: forces the built-in-architecture path.
+fn empty_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("semnoart_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn sample_inputs(seed: u64) -> CellInputs {
+    let cfg = block_for("small").unwrap();
+    let mut rng = Rng::seed_from(seed);
+    SampleDist::UniformIid.sample(&cfg, &mut rng)
 }
 
 #[test]
@@ -63,7 +80,9 @@ fn batcher_parallel_clients_agree_with_direct_forward() {
         BatcherConfig {
             max_batch: 16,
             max_wait: std::time::Duration::from_millis(2),
-            ..BatcherConfig::default()
+            // PJRT explicitly: the default is native since PJRT cannot run
+            // in offline builds.
+            backend: BackendKind::Pjrt,
         },
         metrics.clone(),
     )
@@ -109,76 +128,29 @@ fn batcher_parallel_clients_agree_with_direct_forward() {
 }
 
 #[test]
-fn router_shadow_policy_and_tcp_server_roundtrip() {
+fn pjrt_deployment_roundtrip() {
+    // The facade on the opt-in PJRT backend (single-variant shim).
     let Some(dir) = artifact_dir() else { return };
     let store = ArtifactStore::open(&dir).unwrap();
     let meta = store.meta.variant("small").unwrap().clone();
-    let state = ModelState::init(&meta, 2);
-    let metrics = Arc::new(Metrics::default());
-    let service = EmulatorService::spawn(
-        dir.clone(),
-        "small",
-        state,
-        BatcherConfig::default(),
-        metrics.clone(),
-    )
-    .unwrap();
-    let block_cfg = block_for("small").unwrap();
-    let block = AnalogBlock::new(block_cfg.clone()).unwrap();
-    let router = Arc::new(Router::new(
-        block,
-        service.handle(),
-        Policy::Shadow { verify_frac: 1.0 },
-        metrics.clone(),
-        0,
-    ));
-    let server = Server::spawn("127.0.0.1:0", router, metrics.clone()).unwrap();
-
-    // Build one request in physical units.
-    let mut rng = Rng::seed_from(3);
-    let x = SampleDist::UniformIid.sample(&block_cfg, &mut rng);
-    let req = Json::obj(vec![("v", Json::arr_f64(&x.v)), ("g", Json::arr_f64(&x.g))]).to_string();
-
-    let mut stream = std::net::TcpStream::connect(server.addr).unwrap();
-    stream.write_all(req.as_bytes()).unwrap();
-    stream.write_all(b"\n").unwrap();
-    let mut reader = BufReader::new(stream.try_clone().unwrap());
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    let reply = json_parse(line.trim()).unwrap();
-    assert_eq!(reply.get("route").unwrap().as_str(), Some("emulated"));
-    let y = reply.get("y").unwrap().as_arr().unwrap();
-    assert_eq!(y.len(), block_cfg.n_mac());
-    // Shadow with verify_frac 1.0 must attach the deviation.
-    let dev = reply.get("verify_dev").unwrap().as_f64().unwrap();
+    let dep = Deployment::builder()
+        .artifact_dir(dir)
+        .variant(VariantDef::new("small").state(ModelState::init(&meta, 2)))
+        .backend(BackendKind::Pjrt)
+        .policy(Policy::Shadow { verify_frac: 1.0 })
+        .build()
+        .unwrap();
+    let resp = dep.submit(&MacRequest::new("small", sample_inputs(3))).unwrap();
+    assert_eq!(resp.route, Route::Emulated);
+    assert_eq!(resp.backend, Some(BackendKind::Pjrt));
+    let dev = resp.verify_dev.unwrap();
     assert!(dev.is_finite() && dev >= 0.0);
-
-    // Metrics query over the same connection.
-    stream.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
-    line.clear();
-    reader.read_line(&mut line).unwrap();
-    let snap = json_parse(line.trim()).unwrap();
-    assert_eq!(snap.get("requests").unwrap().as_f64(), Some(1.0));
-    assert_eq!(snap.get("verified").unwrap().as_f64(), Some(1.0));
-
-    // Malformed request gets an error, not a hang.
-    stream.write_all(b"{\"v\": [1]}\n").unwrap();
-    line.clear();
-    reader.read_line(&mut line).unwrap();
-    assert!(line.contains("error"));
-}
-
-/// A directory with no meta.json: forces the built-in-architecture path.
-fn empty_dir(tag: &str) -> PathBuf {
-    let dir = std::env::temp_dir().join(format!("semnoart_{tag}_{}", std::process::id()));
-    std::fs::create_dir_all(&dir).unwrap();
-    dir
 }
 
 #[test]
 fn native_batcher_serves_without_artifacts() {
-    // The whole point of the native backend: batcher -> router -> TCP
-    // server works on a checkout with zero compiled artifacts.
+    // The whole point of the native backend: batcher -> TCP-free round
+    // trips work on a checkout with zero compiled artifacts.
     let dir = empty_dir("batcher");
     let meta = Arch::for_variant("small").unwrap().to_meta();
     let state = ModelState::init(&meta, 4);
@@ -187,12 +159,13 @@ fn native_batcher_serves_without_artifacts() {
         dir.clone(),
         "small",
         state.clone(),
-        BatcherConfig::with_backend(BackendKind::Native),
+        BatcherConfig::default(), // native is now the default backend
         metrics.clone(),
     )
     .unwrap();
     let handle = service.handle();
     assert_eq!(handle.backend(), BackendKind::Native);
+    assert_eq!(handle.variant_name(), "small");
 
     // Batcher answers must equal a direct engine forward exactly.
     let engine = NativeEngine::from_meta(&meta, &state).unwrap();
@@ -203,57 +176,221 @@ fn native_batcher_serves_without_artifacts() {
         let want = engine.forward(&features).unwrap();
         assert_eq!(got, want);
     }
-    assert_eq!(metrics.batched_requests.load(std::sync::atomic::Ordering::Relaxed), 4);
+    // Multi-row submission through one request.
+    let many: Vec<f32> = (0..3 * meta.n_features()).map(|_| rng.uniform() as f32).collect();
+    let got = handle.infer_many(many.clone(), 3).unwrap();
+    assert_eq!(got, engine.forward(&many).unwrap());
+    assert!(handle.infer_many(many, 2).is_err()); // row/length mismatch
+    assert_eq!(metrics.batched_requests.load(std::sync::atomic::Ordering::Relaxed), 7);
     std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
-fn native_router_and_server_roundtrip_without_artifacts() {
-    let dir = empty_dir("server");
+fn deployment_builder_misuse_errors() {
+    let dir = empty_dir("misuse");
+    // No variants.
+    let err = Deployment::builder().artifact_dir(dir.clone()).build().unwrap_err();
+    assert!(format!("{err:#}").contains("at least one variant"), "{err:#}");
+    // Duplicate labels.
+    let err = Deployment::builder()
+        .artifact_dir(dir.clone())
+        .variant(VariantDef::new("small"))
+        .variant(VariantDef::new("small"))
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("duplicate variant label"), "{err:#}");
+    // PJRT + multi-variant.
+    let err = Deployment::builder()
+        .artifact_dir(dir.clone())
+        .variant(VariantDef::new("a").arch("small"))
+        .variant(VariantDef::new("b").arch("small"))
+        .backend(BackendKind::Pjrt)
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("single-variant shim"), "{err:#}");
+    // Unknown architecture names the failing variant.
+    let err = Deployment::builder()
+        .artifact_dir(dir.clone())
+        .variant(VariantDef::new("x").arch("nope"))
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("'x'"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance pin: one process serves two named variants — ideal `small`
+/// and a harsh-non-ideal corner of the same network — and `submit`
+/// answers equal the direct `NativeEngine` forward plus the golden-router
+/// deviation computed against each variant's own golden block.
+#[test]
+fn deployment_two_variants_pin_engine_and_golden_answers() {
+    let dir = empty_dir("twovariant");
     let meta = Arch::for_variant("small").unwrap().to_meta();
-    let metrics = Arc::new(Metrics::default());
-    let service = EmulatorService::spawn(
-        dir.clone(),
-        "small",
-        ModelState::init(&meta, 9),
-        BatcherConfig::with_backend(BackendKind::Native),
-        metrics.clone(),
-    )
-    .unwrap();
-    let block_cfg = block_for("small").unwrap();
-    let router = Arc::new(Router::new(
-        AnalogBlock::new(block_cfg.clone()).unwrap(),
-        service.handle(),
-        Policy::Shadow { verify_frac: 1.0 },
-        metrics.clone(),
-        0,
-    ));
-    let server = Server::spawn("127.0.0.1:0", router, metrics.clone()).unwrap();
+    let state = ModelState::init(&meta, 7);
+    let harsh = NonIdealSpec::preset("harsh").unwrap();
+    let dep = Deployment::builder()
+        .artifact_dir(dir.clone())
+        .variant(VariantDef::new("ideal").arch("small").state(state.clone()))
+        .variant(
+            VariantDef::new("harsh").arch("small").nonideal(harsh).state(state.clone()),
+        )
+        .policy(Policy::Shadow { verify_frac: 1.0 })
+        .seed(3)
+        .build()
+        .unwrap();
+    assert_eq!(dep.variants(), vec!["ideal", "harsh"]);
+    assert_eq!(dep.default_variant(), None);
 
-    let mut rng = Rng::seed_from(5);
-    let x = SampleDist::UniformIid.sample(&block_cfg, &mut rng);
-    let req = Json::obj(vec![("v", Json::arr_f64(&x.v)), ("g", Json::arr_f64(&x.g))]).to_string();
-    let mut stream = std::net::TcpStream::connect(server.addr).unwrap();
-    stream.write_all(req.as_bytes()).unwrap();
-    stream.write_all(b"\n").unwrap();
-    let mut reader = BufReader::new(stream.try_clone().unwrap());
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    let reply = json_parse(line.trim()).unwrap();
-    assert_eq!(reply.get("route").unwrap().as_str(), Some("emulated"));
-    // The reply names the serving backend; shadow verify always ran.
-    assert_eq!(reply.get("backend").unwrap().as_str(), Some("native"));
-    assert!(reply.get("verify_dev").unwrap().as_f64().unwrap().is_finite());
-    assert_eq!(reply.get("y").unwrap().as_arr().unwrap().len(), block_cfg.n_mac());
+    // Independent references: the raw engine and the two golden blocks.
+    let engine = NativeEngine::from_meta(&meta, &state).unwrap();
+    let cfg = block_for("small").unwrap();
+    let ideal_block = AnalogBlock::new(cfg.clone()).unwrap();
+    let harsh_block = AnalogBlock::new(cfg.clone().with_nonideal(harsh)).unwrap();
 
-    // Per-backend metrics counters distinguish the implementations.
-    stream.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
-    line.clear();
-    reader.read_line(&mut line).unwrap();
-    let snap = json_parse(line.trim()).unwrap();
-    assert_eq!(snap.get("emulated_native").unwrap().as_f64(), Some(1.0));
-    assert_eq!(snap.get("emulated_pjrt").unwrap().as_f64(), Some(0.0));
-    assert_eq!(snap.get("verified").unwrap().as_f64(), Some(1.0));
+    for seed in [21u64, 22, 23] {
+        let x = sample_inputs(seed);
+        let want: Vec<f64> = engine
+            .forward(&x.normalized(&cfg))
+            .unwrap()
+            .into_iter()
+            .map(|v| v as f64)
+            .collect();
+        let max_dev = |a: &[f64], b: &[f64]| {
+            a.iter().zip(b).map(|(p, q)| (p - q).abs()).fold(0.0f64, f64::max)
+        };
+
+        let ri = dep.submit(&MacRequest::new("ideal", x.clone())).unwrap();
+        assert_eq!(ri.route, Route::Emulated);
+        assert_eq!(ri.backend, Some(BackendKind::Native));
+        assert_eq!(ri.outputs, want, "ideal emulated output must equal the raw engine");
+        let ideal_golden = ideal_block.simulate(&x);
+        let dev = ri.verify_dev.unwrap();
+        assert!((dev - max_dev(&want, &ideal_golden)).abs() < 1e-12, "ideal verify_dev");
+
+        let rh = dep.submit(&MacRequest::new("harsh", x.clone())).unwrap();
+        // Same network + checkpoint: the emulated answer is identical ...
+        assert_eq!(rh.outputs, want, "harsh variant serves the same checkpoint");
+        // ... but it is shadow-verified against the *perturbed* block.
+        let harsh_golden = harsh_block.simulate(&x);
+        let devh = rh.verify_dev.unwrap();
+        assert!((devh - max_dev(&want, &harsh_golden)).abs() < 1e-12, "harsh verify_dev");
+        assert_ne!(ideal_golden, harsh_golden, "scenario must perturb the golden block");
+
+        // Per-request golden override pins the golden-router answer.
+        let rg = dep.submit(&MacRequest::new("harsh", x.clone()).golden()).unwrap();
+        assert_eq!(rg.route, Route::Golden);
+        assert_eq!(rg.outputs, harsh_golden);
+    }
+
+    // Per-variant metrics saw their own traffic.
+    let snap = dep.metrics_json();
+    let vars = snap.get("variants").unwrap();
+    assert_eq!(vars.get("ideal").unwrap().get("requests").unwrap().as_f64(), Some(3.0));
+    assert_eq!(vars.get("harsh").unwrap().get("requests").unwrap().as_f64(), Some(6.0));
+    assert_eq!(vars.get("ideal").unwrap().get("verified").unwrap().as_f64(), Some(3.0));
+    assert_eq!(vars.get("harsh").unwrap().get("golden").unwrap().as_f64(), Some(3.0));
+    assert_eq!(snap.get("requests").unwrap().as_f64(), Some(9.0));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn submit_many_batches_through_one_backend_call() {
+    let dir = empty_dir("submitmany");
+    let meta = Arch::for_variant("small").unwrap().to_meta();
+    let state = ModelState::init(&meta, 5);
+    let dep = Deployment::builder()
+        .artifact_dir(dir.clone())
+        .variant(VariantDef::new("small").state(state.clone()))
+        .policy(Policy::Emulator)
+        .build()
+        .unwrap();
+    let reqs: Vec<MacRequest> =
+        (0..32).map(|i| MacRequest::new("small", sample_inputs(100 + i))).collect();
+    let resps = dep.submit_many(&reqs).unwrap();
+    assert_eq!(resps.len(), 32);
+
+    // Exactly one backend call carried all 32 rows.
+    let bm = dep.batch_metrics();
+    assert_eq!(bm.batches.load(std::sync::atomic::Ordering::Relaxed), 1);
+    assert_eq!(bm.batched_requests.load(std::sync::atomic::Ordering::Relaxed), 32);
+
+    // Row-for-row equal to the raw engine on the stacked batch.
+    let engine = NativeEngine::from_meta(&meta, &state).unwrap();
+    let cfg = block_for("small").unwrap();
+    let mut flat = Vec::new();
+    for r in &reqs {
+        flat.extend_from_slice(&r.inputs.normalized(&cfg));
+    }
+    let want = engine.forward(&flat).unwrap();
+    for (i, resp) in resps.iter().enumerate() {
+        assert_eq!(resp.route, Route::Emulated);
+        let w = &want[i * meta.outputs..(i + 1) * meta.outputs];
+        for (a, b) in resp.outputs.iter().zip(w) {
+            assert_eq!(*a, *b as f64, "row {i}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn submit_many_mixed_variants_group_per_variant() {
+    let dir = empty_dir("mixed");
+    let meta = Arch::for_variant("small").unwrap().to_meta();
+    let dep = Deployment::builder()
+        .artifact_dir(dir.clone())
+        .variant(VariantDef::new("a").arch("small").state(ModelState::init(&meta, 1)))
+        .variant(VariantDef::new("b").arch("small").state(ModelState::init(&meta, 2)))
+        .policy(Policy::Emulator)
+        .build()
+        .unwrap();
+    // Interleaved variants: replies must come back in submission order,
+    // each answered by its own checkpoint, one backend call per variant.
+    let reqs: Vec<MacRequest> = (0..6)
+        .map(|i| MacRequest::new(if i % 2 == 0 { "a" } else { "b" }, sample_inputs(200 + i)))
+        .collect();
+    let resps = dep.submit_many(&reqs).unwrap();
+    for (i, r) in resps.iter().enumerate() {
+        assert_eq!(r.variant, if i % 2 == 0 { "a" } else { "b" });
+    }
+    let bm = dep.batch_metrics();
+    assert_eq!(bm.batches.load(std::sync::atomic::Ordering::Relaxed), 2);
+    assert_eq!(bm.batched_requests.load(std::sync::atomic::Ordering::Relaxed), 6);
+    // Same inputs, different checkpoints: rows 0 and 1 must differ.
+    assert_ne!(
+        dep.submit(&MacRequest::new("a", reqs[1].inputs.clone())).unwrap().outputs,
+        resps[1].outputs,
+    );
+    // Per-variant routing counters.
+    assert_eq!(
+        dep.variant_metrics("a").unwrap().emulated.load(std::sync::atomic::Ordering::Relaxed),
+        4 // 3 batched + 1 direct
+    );
+    assert_eq!(
+        dep.variant_metrics("b").unwrap().emulated.load(std::sync::atomic::Ordering::Relaxed),
+        3
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn golden_policy_bypasses_emulator() {
+    let dir = empty_dir("golden");
+    let dep = Deployment::builder()
+        .artifact_dir(dir.clone())
+        .variant(VariantDef::new("small"))
+        .policy(Policy::Golden)
+        .build()
+        .unwrap();
+    let x = sample_inputs(9);
+    let res = dep.submit(&MacRequest::new("small", x.clone())).unwrap();
+    assert_eq!(res.route, Route::Golden);
+    assert_eq!(res.backend, None);
+    // The golden answer equals the block simulation exactly.
+    let direct = AnalogBlock::new(block_for("small").unwrap()).unwrap().simulate(&x);
+    assert_eq!(res.outputs, direct);
+    let m = dep.variant_metrics("small").unwrap();
+    assert_eq!(m.emulated.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert_eq!(m.golden.load(std::sync::atomic::Ordering::Relaxed), 1);
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -293,8 +430,7 @@ fn cross_check_between_two_native_backends_agrees() {
     )
     .with_cross_check(secondary.handle());
 
-    let mut rng = Rng::seed_from(31);
-    let x = SampleDist::UniformIid.sample(&block_cfg, &mut rng);
+    let x = sample_inputs(31);
     let res = router.handle(&x).unwrap();
     assert_eq!(res.backend, Some(BackendKind::Native));
     assert!(res.verify_dev.unwrap().is_finite());
@@ -322,40 +458,124 @@ fn cross_check_between_two_native_backends_agrees() {
     )
     .with_cross_check(mismatched.handle());
     let res = router2.handle(&x).unwrap();
-    assert_eq!(res.route, semulator::coordinator::Route::Emulated);
+    assert_eq!(res.route, Route::Emulated);
     assert!(res.verify_dev.is_some());
     assert!(res.cross_dev.is_none());
     assert_eq!(metrics.cross_failed.load(std::sync::atomic::Ordering::Relaxed), 1);
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Drive a live socket through the whole protocol robustness contract:
+/// per-variant requests, structured errors for malformed/unknown inputs
+/// (connection stays open), discovery + metrics commands, shutdown.
 #[test]
-fn golden_policy_bypasses_emulator() {
-    let Some(dir) = artifact_dir() else { return };
-    let metrics = Arc::new(Metrics::default());
-    let meta = ArtifactStore::open(&dir).unwrap().meta.variant("small").unwrap().clone();
-    let service = EmulatorService::spawn(
-        dir,
-        "small",
-        ModelState::init(&meta, 0),
-        BatcherConfig::default(),
-        metrics.clone(),
-    )
-    .unwrap();
-    let block_cfg = block_for("small").unwrap();
-    let router = Router::new(
-        AnalogBlock::new(block_cfg.clone()).unwrap(),
-        service.handle(),
-        Policy::Golden,
-        metrics.clone(),
-        0,
+fn tcp_protocol_two_variants_and_robustness() {
+    let dir = empty_dir("tcp");
+    let meta = Arch::for_variant("small").unwrap().to_meta();
+    let state = ModelState::init(&meta, 8);
+    let harsh = NonIdealSpec::preset("harsh").unwrap();
+    let dep = Arc::new(
+        Deployment::builder()
+            .artifact_dir(dir.clone())
+            .variant(VariantDef::new("ideal").arch("small").state(state.clone()))
+            .variant(VariantDef::new("harsh").arch("small").nonideal(harsh).state(state))
+            .policy(Policy::Shadow { verify_frac: 1.0 })
+            .build()
+            .unwrap(),
     );
-    let mut rng = Rng::seed_from(9);
-    let x = SampleDist::UniformIid.sample(&block_cfg, &mut rng);
-    let res = router.handle(&x).unwrap();
-    assert_eq!(res.route, semulator::coordinator::Route::Golden);
-    // The golden answer equals the block simulation exactly.
-    let direct = AnalogBlock::new(block_cfg).unwrap().simulate(&x);
-    assert_eq!(res.outputs, direct);
-    assert_eq!(metrics.emulated.load(std::sync::atomic::Ordering::Relaxed), 0);
+    let server = Server::spawn("127.0.0.1:0", dep.clone()).unwrap();
+    let cfg = block_for("small").unwrap();
+
+    let stream = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut stream = stream;
+    let mut line = String::new();
+    let send = |stream: &mut std::net::TcpStream,
+                    reader: &mut BufReader<std::net::TcpStream>,
+                    line: &mut String,
+                    msg: &str|
+     -> Json {
+        stream.write_all(msg.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        line.clear();
+        reader.read_line(line).unwrap();
+        json_parse(line.trim()).unwrap()
+    };
+
+    // Well-formed requests on both variants.
+    let x = sample_inputs(41);
+    for variant in ["ideal", "harsh"] {
+        let req = Json::obj(vec![
+            ("variant", Json::Str(variant.into())),
+            ("v", Json::arr_f64(&x.v)),
+            ("g", Json::arr_f64(&x.g)),
+        ])
+        .to_string();
+        let reply = send(&mut stream, &mut reader, &mut line, &req);
+        assert_eq!(reply.get("variant").unwrap().as_str(), Some(variant));
+        assert_eq!(reply.get("route").unwrap().as_str(), Some("emulated"));
+        assert_eq!(reply.get("backend").unwrap().as_str(), Some("native"));
+        assert_eq!(reply.get("y").unwrap().as_arr().unwrap().len(), cfg.n_mac());
+        assert!(reply.get("verify_dev").unwrap().as_f64().unwrap().is_finite());
+    }
+
+    // Robustness: every malformed input earns a structured error and the
+    // connection keeps serving.
+    let cases: Vec<String> = vec![
+        "{not json".into(),                                                     // malformed JSON
+        "{\"cmd\": \"reboot\"}".into(),                                         // unknown cmd
+        Json::obj(vec![("v", Json::arr_f64(&x.v)), ("g", Json::arr_f64(&x.g))]) // missing variant
+            .to_string(),
+        Json::obj(vec![
+            ("variant", Json::Str("nope".into())),                              // unknown variant
+            ("v", Json::arr_f64(&x.v)),
+            ("g", Json::arr_f64(&x.g)),
+        ])
+        .to_string(),
+        Json::obj(vec![
+            ("variant", Json::Str("ideal".into())),
+            ("v", Json::arr_f64(&[1.0])),                                       // wrong length
+            ("g", Json::arr_f64(&x.g)),
+        ])
+        .to_string(),
+        Json::obj(vec![("variant", Json::Str("ideal".into()))]).to_string(),    // missing arrays
+        "{\"variant\": \"ideal\", \"v\": [\"x\"], \"g\": []}".into(),           // non-numeric
+    ];
+    for bad in &cases {
+        let reply = send(&mut stream, &mut reader, &mut line, bad);
+        assert!(reply.get("error").is_some(), "no error for {bad}: {line}");
+    }
+    let reply = send(&mut stream, &mut reader, &mut line, "{\"variant\": \"nope\"}");
+    assert!(
+        reply.get("error").unwrap().as_str().unwrap().contains("unknown variant"),
+        "{line}"
+    );
+
+    // The connection is still healthy: discovery, a real request, metrics.
+    let reply = send(&mut stream, &mut reader, &mut line, "{\"cmd\": \"variants\"}");
+    let names: Vec<&str> =
+        reply.get("variants").unwrap().as_arr().unwrap().iter().filter_map(|v| v.as_str()).collect();
+    assert_eq!(names, vec!["ideal", "harsh"]);
+    let req = Json::obj(vec![
+        ("variant", Json::Str("ideal".into())),
+        ("v", Json::arr_f64(&x.v)),
+        ("g", Json::arr_f64(&x.g)),
+    ])
+    .to_string();
+    assert!(send(&mut stream, &mut reader, &mut line, &req).get("y").is_some());
+
+    let snap = send(&mut stream, &mut reader, &mut line, "{\"cmd\": \"metrics\"}");
+    // Per-variant counters: ideal saw 2 requests, harsh 1; the malformed
+    // lines never reached a router.
+    let vars = snap.get("variants").unwrap();
+    assert_eq!(vars.get("ideal").unwrap().get("requests").unwrap().as_f64(), Some(2.0));
+    assert_eq!(vars.get("harsh").unwrap().get("requests").unwrap().as_f64(), Some(1.0));
+    assert_eq!(snap.get("requests").unwrap().as_f64(), Some(3.0));
+    assert_eq!(snap.get("verified").unwrap().as_f64(), Some(3.0));
+
+    // Shutdown closes the connection and stops the acceptor.
+    stream.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "server should close after shutdown");
+    std::fs::remove_dir_all(&dir).ok();
 }

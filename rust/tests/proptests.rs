@@ -257,7 +257,7 @@ fn prop_native_engine_matches_pjrt_forward() {
             (0..batch * meta.n_features()).map(|_| rng.uniform() as f32).collect();
         use semulator::infer::EmulatorBackend;
         let native = engine.forward(&x).unwrap();
-        let compiled = pjrt.forward_batch(&x).unwrap();
+        let compiled = pjrt.forward_batch(0, &x).unwrap();
         assert_eq!(native.len(), compiled.len());
         for (i, (n, p)) in native.iter().zip(&compiled).enumerate() {
             assert!(
