@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         t0.elapsed().as_secs_f64() * 1e3 / n_samples as f64,
         ds.target_mean_abs()[0]
     );
-    let (train_ds, test_ds) = ds.split(0.1, 0xA5);
+    let (train_ds, test_ds) = ds.split(0.1, 0xA5)?;
 
     // ---- 2. train through PJRT -------------------------------------------
     println!("[2/4] training {epochs} epochs (PJRT train step, LR halved at 50/75/90%) ...");

@@ -1,0 +1,59 @@
+//! The declarative pipeline in one file: load the checked-in quickstart
+//! spec, shrink it to demo scale, run datagen → train → eval → export
+//! (all artifact-free), then serve the exported run directory through the
+//! `api::Deployment` facade — the full paper loop, one typed API.
+//!
+//! ```sh
+//! cargo run --release --example run_experiment
+//! # the CLI equivalent of the full-size run:
+//! cargo run --release -p semulator -- run --spec examples/specs/quickstart.json
+//! ```
+
+use semulator::api::{Deployment, MacRequest, VariantDef};
+use semulator::pipeline::{Experiment, ExperimentSpec, RunOptions};
+use semulator::xbar::CellInputs;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A run spec: scenario + network + sampling + training recipe +
+    //    probes, JSON-round-trippable (see examples/specs/quickstart.json
+    //    for the schema). Shrunk here so the demo finishes in seconds.
+    let mut spec =
+        ExperimentSpec::from_str(&std::fs::read_to_string("examples/specs/quickstart.json")?)?;
+    spec.name = "demo".into();
+    spec.data.n_samples = 128;
+    spec.train.epochs = 10;
+
+    // 2. One call: golden datagen, guarded split, native SGD training,
+    //    eval, and an export that is itself served by the probe stage.
+    let summary = Experiment::new(spec)?.run(
+        &RunOptions::new("runs/experiments/demo"),
+        &mut |row| {
+            if let Some(test) = row.test_loss {
+                println!("epoch {:>3}  train {:.3e}  test {test:.3e}", row.epoch, row.train_loss);
+            }
+        },
+    )?;
+    println!(
+        "trained: {} steps, test MAE {:.4} mV over {} held-out outputs",
+        summary.report.steps,
+        summary.report.test.mae * 1e3,
+        summary.report.test.n
+    );
+    if let Some(p) = &summary.probe {
+        println!("probe (served from the run dir): emulated MAE {:.4} mV (n = {})", p.emulator_mae * 1e3, p.n);
+    }
+
+    // 3. The run directory is a deployment artifact: load it and ask the
+    //    served emulator one question.
+    let dep = Deployment::builder().variant(VariantDef::from_run_dir(&summary.run_dir)?).build()?;
+    let block = dep.block_config("demo")?.clone();
+    let resp = dep.submit(&MacRequest::new("demo", CellInputs::zeros(&block)))?;
+    println!(
+        "served from {}: y = {:?} via {:?} ({:?})",
+        summary.run_dir.display(),
+        resp.outputs,
+        resp.route,
+        resp.backend
+    );
+    Ok(())
+}

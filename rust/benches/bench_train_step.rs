@@ -1,19 +1,52 @@
-//! Training-step benchmark: one AOT Adam step through PJRT per variant —
-//! the cost that dominates `repro table1/fig4/fig6`. Requires artifacts.
+//! Training-step benchmark: the cost that dominates `repro
+//! table1/fig4/fig6` and every `semulator run`.
+//!
+//! Two lanes:
+//! * **native** — one `infer::NativeTrainer` SGD minibatch step
+//!   (forward tape + backward through the im2col/packed-matmul kernels),
+//!   runs with zero artifacts, so the training-throughput trajectory is
+//!   captured on every machine;
+//! * **pjrt** — one AOT-compiled Adam step through PJRT (requires
+//!   `make artifacts`; skipped otherwise).
 
+use semulator::coordinator::TrainConfig;
+use semulator::infer::{Arch, NativeTrainer};
 use semulator::model::ModelState;
 use semulator::runtime::{lit_f32, lit_scalar, ArtifactStore};
-use semulator::util::{BenchConfig, Bencher};
+use semulator::util::{BenchConfig, Bencher, Rng};
 
-fn main() {
+fn bench_native(b: &mut Bencher) {
+    println!("# bench_train_step/native — one SGD backprop step (no artifacts)");
+    let batch = TrainConfig::new("small", 1).batch; // the pipeline default
+    for variant in ["small", "cfg_a", "cfg_b"] {
+        let arch = Arch::for_variant(variant).unwrap();
+        let trainer = NativeTrainer::new(arch).unwrap();
+        let meta = trainer.meta().clone();
+        let mut state = ModelState::init(&meta, 0);
+        let mut rng = Rng::seed_from(7);
+        let xb: Vec<f32> =
+            (0..batch * meta.n_features()).map(|_| rng.range(0.0, 1.0) as f32).collect();
+        let yb: Vec<f32> =
+            (0..batch * meta.outputs).map(|_| rng.range(-0.05, 0.05) as f32).collect();
+        let stats = b.bench(&format!("{variant}/native_step_b{batch}"), || {
+            trainer.step(&mut state, &xb, &yb, 1e-4).unwrap();
+        });
+        println!(
+            "  -> {:.2} ms/step, {:.1} samples/s",
+            stats.mean.as_secs_f64() * 1e3,
+            batch as f64 / stats.mean.as_secs_f64()
+        );
+    }
+}
+
+fn bench_pjrt(b: &mut Bencher) {
     let dir = std::path::Path::new("artifacts");
     if !dir.join("meta.json").exists() {
-        println!("bench_train_step: artifacts not built (run `make artifacts`); skipping");
+        println!("# bench_train_step/pjrt — artifacts not built (run `make artifacts`); skipping");
         return;
     }
     let store = ArtifactStore::open(dir).unwrap();
-    let mut b = Bencher::new(BenchConfig::default());
-    println!("# bench_train_step — one Adam step via PJRT (fixed batch)");
+    println!("# bench_train_step/pjrt — one Adam step via PJRT (fixed batch)");
 
     for variant in ["small", "cfg_a", "cfg_b"] {
         let Ok(meta) = store.meta.variant(variant) else { continue };
@@ -56,4 +89,10 @@ fn main() {
             am.batch as f64 / stats.mean.as_secs_f64()
         );
     }
+}
+
+fn main() {
+    let mut b = Bencher::new(BenchConfig::default());
+    bench_native(&mut b);
+    bench_pjrt(&mut b);
 }

@@ -38,7 +38,7 @@
 //! CLI are thin shells over this type.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -109,6 +109,32 @@ impl VariantDef {
     /// The deployment-local label.
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// The architecture variant this label wraps.
+    pub fn arch_name(&self) -> &str {
+        &self.arch
+    }
+
+    /// Relabel (e.g. to serve a run-dir export under a CLI-chosen name).
+    pub fn labeled(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Load a variant from a `pipeline::Experiment` run directory: the
+    /// spec's name becomes the label, its resolved block (non-ideality
+    /// scenario included) the golden shadow, and the trained `ckpt.ckpt`
+    /// the parameters. Network meta falls back to the built-in
+    /// architecture; pass an explicit artifact dir via
+    /// [`Self::from_run_dir_with`] for artifact-described variants.
+    pub fn from_run_dir(dir: &Path) -> Result<Self> {
+        Self::from_run_dir_with(dir, Path::new("artifacts"))
+    }
+
+    /// [`Self::from_run_dir`] with an explicit artifact directory.
+    pub fn from_run_dir_with(dir: &Path, artifact_dir: &Path) -> Result<Self> {
+        crate::pipeline::load_variant_def(dir, artifact_dir)
     }
 }
 

@@ -1,7 +1,11 @@
 //! L3 coordinator: the systems layer around the emulator.
 //!
-//! * [`trainer`] — epoch/minibatch loop with the paper's LR-halving
-//!   schedule, driving the AOT train-step through PJRT.
+//! * [`trainer`] — the pluggable [`Trainer`] abstraction (epoch/minibatch
+//!   loop with the paper's LR-halving schedule): [`PjrtTrainer`] drives
+//!   the AOT train-step through PJRT, `infer::NativeTrainer` runs the
+//!   artifact-free backward passes. Training runs should be driven
+//!   through `pipeline::Experiment`; calling [`trainer::train`] directly
+//!   is a legacy surface.
 //! * [`batcher`] — dynamic batching of variant-addressed inference
 //!   requests onto a pluggable emulator backend (native multi-checkpoint
 //!   registry by default; PJRT artifacts opt-in).
@@ -29,6 +33,6 @@ pub use metrics::{LatencyHistogram, Metrics};
 pub use router::{Policy, Route, RouteResult, Router};
 pub use server::Server;
 pub use trainer::{
-    evaluate, evaluate_native, evaluate_state, train, EpochLog, EvalStats, LrSchedule, TrainConfig,
-    TrainReport,
+    evaluate, evaluate_native, evaluate_state, train, trainer_for, EpochLog, EvalStats, LrSchedule,
+    PjrtTrainer, TrainConfig, TrainReport, Trainer,
 };

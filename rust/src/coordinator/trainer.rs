@@ -1,11 +1,18 @@
-//! The training coordinator: epochs, minibatches, the paper's LR-halving
-//! schedule, periodic eval, checkpointing — all driving the AOT-compiled
-//! train-step executable through PJRT. Python is not involved.
+//! Training: configuration, the [`Trainer`] abstraction, and its PJRT
+//! implementation — epochs, minibatches, the paper's LR-halving schedule,
+//! periodic eval, checkpointing. Python is not involved.
 //!
-//! Training requires the PJRT train-step artifact; *evaluation* does not —
+//! Two [`Trainer`] implementations exist: [`PjrtTrainer`] drives the
+//! AOT-compiled Adam train-step through PJRT (requires `make artifacts`),
+//! and `infer::NativeTrainer` backpropagates through the native kernels
+//! with SGD — no artifacts at all. *Evaluation* never needs artifacts:
 //! [`evaluate_native`] scores a checkpoint through the artifact-free
-//! `infer::NativeEngine`, so `semulator eval --backend native` works on
-//! machines with no compiled artifacts at all.
+//! `infer::NativeEngine`.
+//!
+//! Training runs should be driven through `pipeline::Experiment`, which
+//! picks the trainer from a declarative spec and exports a self-describing
+//! run directory; calling [`train`] directly is a legacy surface kept for
+//! harnesses and the repro entrypoints.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -13,14 +20,14 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::datagen::Dataset;
-use crate::infer::NativeEngine;
+use crate::infer::{BackendKind, NativeEngine};
 use crate::model::ModelState;
 use crate::runtime::{lit_f32, lit_scalar, read_f32, ArtifactStore, VariantMeta};
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 /// Learning-rate schedule: constant base rate halved at the given epoch
 /// indices (paper Fig 4: halved at 1000, 1500 and 1800 of 2000).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LrSchedule {
     pub base: f64,
     pub halve_at: Vec<usize>,
@@ -28,12 +35,14 @@ pub struct LrSchedule {
 
 impl LrSchedule {
     /// The paper's Fig-4 schedule scaled to a different total epoch count:
-    /// halvings at 50%, 75% and 90% of training.
+    /// halvings at 50%, 75% and 90% of training. Small epoch counts make
+    /// the fractions collide (e.g. `epochs <= 2` yields the same index
+    /// three times); duplicates are removed so no epoch is halved twice.
     pub fn paper_scaled(base: f64, epochs: usize) -> Self {
-        Self {
-            base,
-            halve_at: vec![epochs / 2, epochs * 3 / 4, epochs * 9 / 10],
-        }
+        // The three fractions are non-decreasing, so dedup() suffices.
+        let mut halve_at = vec![epochs / 2, epochs * 3 / 4, epochs * 9 / 10];
+        halve_at.dedup();
+        Self { base, halve_at }
     }
 
     pub fn at(&self, epoch: usize) -> f64 {
@@ -42,13 +51,17 @@ impl LrSchedule {
     }
 }
 
-/// Training run configuration.
+/// Training run configuration (shared by every [`Trainer`]).
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub variant: String,
     pub epochs: usize,
     pub lr: LrSchedule,
     pub seed: u64,
+    /// Minibatch size. The native trainer honors it exactly (including a
+    /// smaller final batch per epoch); the PJRT trainer's batch is fixed
+    /// by the compiled train-step artifact and this field is ignored.
+    pub batch: usize,
     /// Evaluate on the test split every `eval_every` epochs (0 = only at end).
     pub eval_every: usize,
     /// Optional checkpoint path written at the end of training.
@@ -62,6 +75,7 @@ impl TrainConfig {
             epochs,
             lr: LrSchedule::paper_scaled(1e-3, epochs),
             seed: 0,
+            batch: 32,
             eval_every: 10,
             ckpt_out: None,
         }
@@ -89,6 +103,18 @@ pub struct EvalStats {
     pub p_halfmv: f64,
 }
 
+impl EvalStats {
+    /// Serde-free JSON via `util::json`, like the rest of the crate.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("mae", Json::Num(self.mae)),
+            ("mse", Json::Num(self.mse)),
+            ("p_halfmv", Json::Num(self.p_halfmv)),
+        ])
+    }
+}
+
 /// Result of a training run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
@@ -114,9 +140,112 @@ impl TrainReport {
         }
         out
     }
+
+    /// JSON form of the full report (history rows included), written into
+    /// experiment run directories next to [`Self::history_csv`].
+    pub fn to_json(&self) -> Json {
+        let history: Vec<Json> = self
+            .history
+            .iter()
+            .map(|row| {
+                Json::obj(vec![
+                    ("epoch", Json::Num(row.epoch as f64)),
+                    ("lr", Json::Num(row.lr)),
+                    ("train_loss", Json::Num(row.train_loss)),
+                    ("test_loss", row.test_loss.map(Json::Num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("final_train_loss", Json::Num(self.final_train_loss)),
+            ("test", self.test.to_json()),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("history", Json::Arr(history)),
+        ])
+    }
 }
 
-/// Train SEMULATOR on `train_ds`, evaluating on `test_ds`.
+/// A pluggable training implementation: consumes a [`TrainConfig`] and a
+/// train/test split, produces a trained [`ModelState`] plus the
+/// [`TrainReport`] (per-epoch history, final eval, wall time).
+///
+/// Implementations: [`PjrtTrainer`] (AOT Adam step through PJRT, needs
+/// artifacts) and `infer::NativeTrainer` (pure-Rust backward passes +
+/// SGD, artifact-free). `pipeline::Experiment` selects one by
+/// `BackendKind`.
+pub trait Trainer {
+    /// Which execution stack this trainer runs on (for logs/metadata).
+    fn backend(&self) -> BackendKind;
+
+    /// Run the full training loop, invoking `progress` once per epoch.
+    fn train(
+        &self,
+        cfg: &TrainConfig,
+        train_ds: &Dataset,
+        test_ds: &Dataset,
+        progress: &mut dyn FnMut(&EpochLog),
+    ) -> Result<(ModelState, TrainReport)>;
+}
+
+/// The PJRT [`Trainer`]: drives the AOT-compiled Adam train-step
+/// executable named by the variant's artifact metadata.
+pub struct PjrtTrainer<'a> {
+    store: &'a ArtifactStore,
+}
+
+impl<'a> PjrtTrainer<'a> {
+    pub fn new(store: &'a ArtifactStore) -> Self {
+        Self { store }
+    }
+}
+
+impl Trainer for PjrtTrainer<'_> {
+    fn backend(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn train(
+        &self,
+        cfg: &TrainConfig,
+        train_ds: &Dataset,
+        test_ds: &Dataset,
+        progress: &mut dyn FnMut(&EpochLog),
+    ) -> Result<(ModelState, TrainReport)> {
+        train(self.store, cfg, train_ds, test_ds, progress)
+    }
+}
+
+/// Resolve a [`BackendKind`] to its [`Trainer`]: the artifact-free
+/// `infer::NativeTrainer`, or [`PjrtTrainer`] over the artifacts opened
+/// into `store_slot` (the slot keeps the store alive for the trainer's
+/// borrow). One source of truth for the CLI `train` command and
+/// `pipeline::Experiment`.
+pub fn trainer_for<'a>(
+    backend: BackendKind,
+    artifact_dir: &std::path::Path,
+    variant: &str,
+    store_slot: &'a mut Option<ArtifactStore>,
+) -> Result<Box<dyn Trainer + 'a>> {
+    match backend {
+        BackendKind::Native => {
+            let meta = crate::infer::load_or_builtin_meta(artifact_dir, variant)?;
+            Ok(Box::new(crate::infer::NativeTrainer::from_meta(&meta)?))
+        }
+        BackendKind::Pjrt => {
+            let store = store_slot.insert(ArtifactStore::open(artifact_dir)?);
+            Ok(Box::new(PjrtTrainer::new(store)))
+        }
+    }
+}
+
+/// Train SEMULATOR on `train_ds` through the PJRT train-step artifact,
+/// evaluating on `test_ds`.
+///
+/// Deprecated surface: prefer `pipeline::Experiment::run` (declarative,
+/// exports a run directory) or the [`Trainer`] trait ([`PjrtTrainer`] /
+/// `infer::NativeTrainer`) when embedding a training loop; this free
+/// function remains for harnesses and the repro entrypoints.
 pub fn train(
     store: &ArtifactStore,
     cfg: &TrainConfig,
@@ -330,6 +459,23 @@ mod tests {
     }
 
     #[test]
+    fn paper_scaled_dedups_colliding_epochs() {
+        // epochs <= 2 collapses all three fractions to one index; the old
+        // code emitted it three times, so `at` applied three halvings at
+        // once (1e-3 -> 1.25e-4). Dedup keeps exactly one.
+        let s = LrSchedule::paper_scaled(1e-3, 2);
+        assert_eq!(s.halve_at, vec![1]);
+        assert_eq!(s.at(0), 1e-3);
+        assert_eq!(s.at(1), 5e-4);
+        // epochs = 4: 2, 3, 3 -> 2, 3.
+        let s = LrSchedule::paper_scaled(1e-3, 4);
+        assert_eq!(s.halve_at, vec![2, 3]);
+        assert_eq!(s.at(3), 2.5e-4);
+        // Large epoch counts are untouched.
+        assert_eq!(LrSchedule::paper_scaled(1e-3, 2000).halve_at.len(), 3);
+    }
+
+    #[test]
     fn evaluate_native_scores_without_artifacts() {
         let meta = crate::infer::Arch::for_variant("small").unwrap().to_meta();
         let state = ModelState::init(&meta, 2);
@@ -365,5 +511,29 @@ mod tests {
         let csv = r.history_csv();
         assert!(csv.starts_with("epoch,lr,train_loss,test_loss\n"));
         assert!(csv.contains("0,0.001,0.5,0.6"));
+    }
+
+    #[test]
+    fn report_and_stats_json_roundtrip_through_parser() {
+        let r = TrainReport {
+            history: vec![
+                EpochLog { epoch: 0, lr: 1e-3, train_loss: 0.5, test_loss: None },
+                EpochLog { epoch: 1, lr: 5e-4, train_loss: 0.25, test_loss: Some(0.3) },
+            ],
+            final_train_loss: 0.25,
+            test: EvalStats { n: 4, mae: 0.1, mse: 0.01, p_halfmv: 0.75 },
+            wall_seconds: 2.5,
+            steps: 20,
+        };
+        let j = crate::util::json_parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("steps").unwrap().as_usize(), Some(20));
+        assert_eq!(j.get("final_train_loss").unwrap().as_f64(), Some(0.25));
+        let hist = j.get("history").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), 2);
+        assert_eq!(hist[0].get("test_loss"), Some(&Json::Null));
+        assert_eq!(hist[1].get("test_loss").unwrap().as_f64(), Some(0.3));
+        let test = j.get("test").unwrap();
+        assert_eq!(test.get("n").unwrap().as_usize(), Some(4));
+        assert_eq!(test.get("p_halfmv").unwrap().as_f64(), Some(0.75));
     }
 }

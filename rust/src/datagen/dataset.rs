@@ -54,11 +54,25 @@ impl Dataset {
 
     /// Split into `(train, test)` with `test_frac` of samples held out,
     /// shuffled deterministically by `seed`.
-    pub fn split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
-        assert!((0.0..1.0).contains(&test_frac));
+    ///
+    /// Errors when the rounded test count is 0 or `n` — an empty split
+    /// used to pass through silently and only surface as NaN losses (or a
+    /// division by zero) deep inside training/eval.
+    pub fn split(&self, test_frac: f64, seed: u64) -> Result<(Dataset, Dataset)> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&test_frac),
+            "test_frac must be in [0, 1), got {test_frac}"
+        );
+        let n_test = ((self.n as f64) * test_frac).round() as usize;
+        anyhow::ensure!(
+            n_test > 0 && n_test < self.n,
+            "test_frac {test_frac} of {} samples rounds to a {} test set \
+             (need both splits non-empty; adjust test_frac or n_samples)",
+            self.n,
+            if n_test == 0 { "empty" } else { "full" }
+        );
         let mut rng = Rng::seed_from(seed);
         let perm = rng.permutation(self.n);
-        let n_test = ((self.n as f64) * test_frac).round() as usize;
         let take = |idx: &[usize]| {
             let mut x = Vec::with_capacity(idx.len() * self.d);
             let mut y = Vec::with_capacity(idx.len() * self.o);
@@ -68,7 +82,7 @@ impl Dataset {
             }
             Dataset::new(idx.len(), self.d, self.o, x, y)
         };
-        (take(&perm[n_test..]), take(&perm[..n_test]))
+        Ok((take(&perm[n_test..]), take(&perm[..n_test])))
     }
 
     /// First `k` samples (for data-requirement sweeps, paper Fig. 6).
@@ -198,16 +212,36 @@ mod tests {
     #[test]
     fn split_partitions_all_samples() {
         let ds = toy();
-        let (train, test) = ds.split(0.3, 7);
+        let (train, test) = ds.split(0.3, 7).unwrap();
         assert_eq!(train.n + test.n, ds.n);
         assert_eq!(test.n, 3);
         assert_eq!(train.d, ds.d);
         // Same seed -> same split.
-        let (train2, _) = ds.split(0.3, 7);
+        let (train2, _) = ds.split(0.3, 7).unwrap();
         assert_eq!(train, train2);
         // Different seed -> (almost surely) different order.
-        let (train3, _) = ds.split(0.3, 8);
+        let (train3, _) = ds.split(0.3, 8).unwrap();
         assert_ne!(train, train3);
+    }
+
+    #[test]
+    fn split_rejects_degenerate_fractions() {
+        let ds = toy(); // n = 10
+        // Rounds to an empty test set (0.04 * 10 = 0.4 -> 0) ...
+        let err = ds.split(0.04, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("empty"), "{err:#}");
+        // ... and test_frac = 0 exactly is equally degenerate.
+        assert!(ds.split(0.0, 1).is_err());
+        // A fraction rounding to *all* samples is rejected too.
+        let err = ds.split(0.96, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("full"), "{err:#}");
+        // Out-of-range fractions error instead of panicking.
+        assert!(ds.split(1.0, 1).is_err());
+        assert!(ds.split(-0.1, 1).is_err());
+        // The boundary case that still leaves both sides populated works.
+        let (train, test) = ds.split(0.05, 1).unwrap(); // rounds to 1
+        assert_eq!(test.n, 1);
+        assert_eq!(train.n, 9);
     }
 
     #[test]

@@ -93,6 +93,64 @@ pub fn bias_celu_cols(out: &mut [f32], rows: usize, cols: usize, bias: &[f32], a
     }
 }
 
+/// Derivative of [`celu`] with alpha = 1, expressed in terms of the
+/// *activation* `a = celu(z)`: `1` on the linear branch (`a >= 0` iff
+/// `z >= 0`), else `exp(z) = a + 1`. Taking the activation instead of the
+/// pre-activation lets the backward pass reuse the forward buffers.
+#[inline]
+pub fn celu_grad_from_act(a: f32) -> f32 {
+    if a >= 0.0 {
+        1.0
+    } else {
+        a + 1.0
+    }
+}
+
+/// `out[i, j] += dot(a[i, :], b[:, j])` with both operands in *logical*
+/// row-major layout: `a: (m, k)`, `b: (k, n)`. The accumulate form the
+/// backward pass wants for weight gradients (`dW += dOutᵀ-shaped
+/// products`), streaming `b` row-wise so the inner loop is contiguous.
+pub fn matmul_nn_acc(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "lhs size");
+    assert_eq!(b.len(), k * n, "rhs size");
+    assert_eq!(out.len(), m * n, "out size");
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for (t, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let br = &b[t * n..(t + 1) * n];
+            for (o, &bv) in or.iter_mut().zip(br) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[t, j] += dot(a[:, t], b[:, j])` — the `aᵀ b` accumulate with
+/// `a: (m, k)` and `b: (m, n)` row-major, producing `(k, n)`. This is the
+/// dense weight gradient `dW += xᵀ · dY`.
+pub fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "lhs size");
+    assert_eq!(b.len(), m * n, "rhs size");
+    assert_eq!(out.len(), k * n, "out size");
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let br = &b[i * n..(i + 1) * n];
+        for (t, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let or = &mut out[t * n..(t + 1) * n];
+            for (o, &bv) in or.iter_mut().zip(br) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
 /// Pack a row-major `(k, n)` dense weight into `(n, k)` for [`matmul_nt`].
 pub fn transpose_pack(w: &[f32], k: usize, n: usize) -> Vec<f32> {
     assert_eq!(w.len(), k * n);
@@ -172,6 +230,41 @@ mod tests {
         }
         // Packing twice returns to the original layout.
         assert_eq!(transpose_pack(&wt, n, k), w);
+    }
+
+    #[test]
+    fn accumulate_matmuls_match_naive() {
+        for (m, n, k, seed) in [(1, 1, 1, 11), (3, 5, 4, 12), (6, 2, 7, 13)] {
+            let a = fill(m * k, seed);
+            let b = fill(k * n, seed + 50);
+            let want = matmul_naive(&a, &b, m, n, k);
+            let mut got = fill(m * n, seed + 90); // nonzero: accumulate form
+            let base = got.clone();
+            matmul_nn_acc(&a, &b, m, n, k, &mut got);
+            for ((g, w), o) in got.iter().zip(&want).zip(&base) {
+                assert!((g - (w + o)).abs() <= 1e-5, "nn ({m},{n},{k})");
+            }
+            // aᵀ b against the naive product of the explicit transpose.
+            let b2 = fill(m * n, seed + 70);
+            let at = transpose_pack(&a, m, k); // (m, k) -> (k, m)
+            let want_t = matmul_naive(&at, &b2, k, n, m);
+            let mut got_t = vec![0.0f32; k * n];
+            matmul_tn_acc(&a, &b2, m, n, k, &mut got_t);
+            for (g, w) in got_t.iter().zip(&want_t) {
+                assert!((g - w).abs() <= 1e-5, "tn ({m},{n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn celu_grad_matches_derivative() {
+        for z in [-3.0f32, -0.7, -1e-3, 0.0, 1e-3, 2.0] {
+            let a = celu(z);
+            let grad = celu_grad_from_act(a);
+            let h = 1e-3f32;
+            let fd = (celu(z + h) - celu(z - h)) / (2.0 * h);
+            assert!((grad - fd).abs() < 1e-3, "z={z}: {grad} vs fd {fd}");
+        }
     }
 
     #[test]

@@ -18,6 +18,10 @@
 //!   against.
 //! * [`registry`] — [`NativeRegistry`]: several named checkpoints behind
 //!   one backend, so one process serves many variants.
+//! * [`train`] — [`NativeTrainer`]: backward passes for the same kernels
+//!   plus SGD with the paper's LR-halving schedule, so the full
+//!   datagen→train→eval→serve loop runs with zero compiled artifacts
+//!   (the `coordinator::Trainer` impl `pipeline::Experiment` defaults to).
 //!
 //! Backends are selected by [`BackendKind`]: the dynamic batcher
 //! (`coordinator::batcher`) constructs either a [`NativeRegistry`] (one or
@@ -34,10 +38,12 @@ pub mod engine;
 pub mod kernels;
 pub mod reference;
 pub mod registry;
+pub mod train;
 
 pub use arch::{load_or_builtin_meta, Arch, Layer, BUILTIN_VARIANTS};
 pub use engine::NativeEngine;
 pub use registry::NativeRegistry;
+pub use train::NativeTrainer;
 
 use anyhow::Result;
 

@@ -1,0 +1,533 @@
+//! Native training: backward passes for the packed-matmul/im2col kernels
+//! plus plain SGD with the paper's LR-halving schedule — the artifact-free
+//! half of the `Trainer` abstraction.
+//!
+//! The PJRT coordinator trainer runs an AOT-compiled Adam step and is
+//! therefore unavailable wherever `make artifacts` has not run (CI, fresh
+//! clones, machines without the real `xla` crate). [`NativeTrainer`]
+//! closes that gap: it differentiates the exact forward pass the
+//! [`NativeEngine`](super::NativeEngine) serves —
+//!
+//! * conv layers backpropagate through the same im2col gather tables
+//!   (patch gradients scatter-add back through the table),
+//! * dense layers use the `aᵀb` / `abᵀ` accumulate kernels
+//!   ([`matmul_tn_acc`](super::kernels::matmul_tn_acc),
+//!   [`matmul_nt`](super::kernels::matmul_nt)),
+//! * CELU derivatives are recovered from the *activations* so the forward
+//!   buffers double as the tape,
+//!
+//! and updates parameters with minibatch SGD on the mean-squared-error
+//! loss under a [`LrSchedule`](crate::coordinator::LrSchedule). Gradients
+//! are held to finite differences by `tests/proptests.rs`.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::trainer::{
+    evaluate_native, EpochLog, TrainConfig, TrainReport, Trainer,
+};
+use crate::datagen::Dataset;
+use crate::model::ModelState;
+use crate::runtime::VariantMeta;
+use crate::util::Rng;
+
+use super::arch::{Arch, Layer};
+use super::kernels::{
+    bias_celu_cols, bias_celu_rows, celu_grad_from_act, matmul_nn_acc, matmul_nt, matmul_tn_acc,
+    transpose_pack,
+};
+use super::BackendKind;
+
+/// One differentiable layer of the compiled plan. Weights stay in their
+/// natural [`ModelState`] layout (they change every step); only the
+/// architecture-fixed im2col gather tables are precomputed.
+enum Plan {
+    Conv {
+        cout: usize,
+        /// Patch width `Cin * kD * kH * kW`.
+        k: usize,
+        /// Output spatial positions per sample.
+        p: usize,
+        /// `p * k` sample-local source indices (see `engine.rs`).
+        gather: Vec<u32>,
+        celu: bool,
+        in_len: usize,
+        out_len: usize,
+    },
+    Dense {
+        k: usize,
+        n: usize,
+        celu: bool,
+    },
+}
+
+/// Artifact-free trainer: im2col/packed-matmul backward passes + SGD.
+pub struct NativeTrainer {
+    arch: Arch,
+    meta: VariantMeta,
+    plans: Vec<Plan>,
+}
+
+impl NativeTrainer {
+    /// Compile the backward plan for `arch`.
+    pub fn new(arch: Arch) -> Result<Self> {
+        arch.validate().with_context(|| format!("arch '{}'", arch.name))?;
+        let meta = arch.to_meta();
+        let mut plans = Vec::new();
+        let mut c = arch.input[0];
+        let mut dims = [arch.input[1], arch.input[2], arch.input[3]];
+        for ly in &arch.layers {
+            match ly {
+                Layer::Conv { cin, cout, k, s, celu } => {
+                    let [d_in, h_in, w_in] = dims;
+                    let od = (d_in - k[0]) / s[0] + 1;
+                    let oh = (h_in - k[1]) / s[1] + 1;
+                    let ow = (w_in - k[2]) / s[2] + 1;
+                    let kq = cin * k[0] * k[1] * k[2];
+                    let p = od * oh * ow;
+                    let mut gather = Vec::with_capacity(p * kq);
+                    for zd in 0..od {
+                        for zh in 0..oh {
+                            for zw in 0..ow {
+                                for ci in 0..*cin {
+                                    for kd in 0..k[0] {
+                                        for kh in 0..k[1] {
+                                            for kw in 0..k[2] {
+                                                let xi = ((ci * d_in + zd * s[0] + kd) * h_in
+                                                    + zh * s[1]
+                                                    + kh)
+                                                    * w_in
+                                                    + zw * s[2]
+                                                    + kw;
+                                                gather.push(xi as u32);
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    plans.push(Plan::Conv {
+                        cout: *cout,
+                        k: kq,
+                        p,
+                        gather,
+                        celu: *celu,
+                        in_len: c * d_in * h_in * w_in,
+                        out_len: cout * p,
+                    });
+                    c = *cout;
+                    dims = [od, oh, ow];
+                }
+                Layer::Flatten => {
+                    c *= dims[0] * dims[1] * dims[2];
+                    dims = [1, 1, 1];
+                }
+                Layer::Dense { cin, cout, celu } => {
+                    plans.push(Plan::Dense { k: *cin, n: *cout, celu: *celu });
+                    c = *cout;
+                }
+            }
+        }
+        Ok(Self { arch, meta, plans })
+    }
+
+    /// Build from a variant's parameter layout (see [`Arch::from_meta`]);
+    /// `meta` is kept as-is so artifact-described variants train natively.
+    pub fn from_meta(meta: &VariantMeta) -> Result<Self> {
+        let mut t = Self::new(Arch::from_meta(meta)?)?;
+        t.meta = meta.clone();
+        Ok(t)
+    }
+
+    pub fn arch(&self) -> &Arch {
+        &self.arch
+    }
+
+    pub fn meta(&self) -> &VariantMeta {
+        &self.meta
+    }
+
+    fn check_state(&self, state: &ModelState) -> Result<()> {
+        let specs = self.arch.param_specs();
+        anyhow::ensure!(
+            specs.len() == state.arrays.len(),
+            "state has {} parameter arrays, arch '{}' wants {}",
+            state.arrays.len(),
+            self.arch.name,
+            specs.len()
+        );
+        for (spec, arr) in specs.iter().zip(&state.arrays) {
+            anyhow::ensure!(spec.numel() == arr.len(), "array '{}' size mismatch", spec.name);
+        }
+        Ok(())
+    }
+
+    /// Forward a batch, recording every layer's activations (the tape).
+    /// `acts[0]` is the input; `acts[l + 1]` is plan `l`'s output.
+    fn forward_tape(&self, state: &ModelState, xb: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let nf = self.arch.n_features();
+        anyhow::ensure!(
+            !xb.is_empty() && xb.len() % nf == 0,
+            "input length {} is not a nonzero multiple of {nf} features",
+            xb.len()
+        );
+        let b = xb.len() / nf;
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.plans.len() + 1);
+        acts.push(xb.to_vec());
+        let mut pi = 0usize;
+        let mut patch: Vec<f32> = Vec::new();
+        for plan in &self.plans {
+            let cur = acts.last().unwrap();
+            let next = match plan {
+                Plan::Conv { cout, k, p, gather, celu, in_len, out_len } => {
+                    let (w, bias) = (&state.arrays[pi], &state.arrays[pi + 1]);
+                    let mut next = vec![0.0f32; b * out_len];
+                    patch.clear();
+                    patch.resize(p * k, 0.0);
+                    for s in 0..b {
+                        let sample = &cur[s * in_len..(s + 1) * in_len];
+                        for (dst, &src) in patch.iter_mut().zip(gather.iter()) {
+                            *dst = sample[src as usize];
+                        }
+                        let out = &mut next[s * out_len..(s + 1) * out_len];
+                        matmul_nt(w, &patch, *cout, *p, *k, out);
+                        bias_celu_rows(out, *cout, *p, bias, *celu);
+                    }
+                    next
+                }
+                Plan::Dense { k, n, celu } => {
+                    let (w, bias) = (&state.arrays[pi], &state.arrays[pi + 1]);
+                    let wt = transpose_pack(w, *k, *n);
+                    let mut next = vec![0.0f32; b * n];
+                    matmul_nt(cur, &wt, b, *n, *k, &mut next);
+                    bias_celu_cols(&mut next, b, *n, bias, *celu);
+                    next
+                }
+            };
+            acts.push(next);
+            pi += 2;
+        }
+        Ok(acts)
+    }
+
+    /// Mean-squared-error loss of a forward pass (no gradients) — the FD
+    /// oracle for the gradient checks.
+    pub fn loss(&self, state: &ModelState, xb: &[f32], yb: &[f32]) -> Result<f64> {
+        self.check_state(state)?;
+        let acts = self.forward_tape(state, xb)?;
+        let preds = acts.last().unwrap();
+        anyhow::ensure!(preds.len() == yb.len(), "target length {} vs {}", yb.len(), preds.len());
+        let mut acc = 0.0f64;
+        for (p, t) in preds.iter().zip(yb) {
+            let e = (*p - *t) as f64;
+            acc += e * e;
+        }
+        Ok(acc / preds.len() as f64)
+    }
+
+    /// MSE loss plus the gradient of every parameter array (meta order),
+    /// averaged over the batch.
+    pub fn loss_and_grads(
+        &self,
+        state: &ModelState,
+        xb: &[f32],
+        yb: &[f32],
+    ) -> Result<(f64, Vec<Vec<f32>>)> {
+        self.check_state(state)?;
+        let acts = self.forward_tape(state, xb)?;
+        let preds = acts.last().unwrap();
+        anyhow::ensure!(preds.len() == yb.len(), "target length {} vs {}", yb.len(), preds.len());
+        let b = xb.len() / self.arch.n_features();
+
+        let mut loss = 0.0f64;
+        let scale = 2.0 / preds.len() as f32;
+        let mut delta: Vec<f32> = preds
+            .iter()
+            .zip(yb)
+            .map(|(p, t)| {
+                let e = *p - *t;
+                loss += (e as f64) * (e as f64);
+                scale * e
+            })
+            .collect();
+        loss /= preds.len() as f64;
+
+        let mut grads: Vec<Vec<f32>> =
+            state.arrays.iter().map(|a| vec![0.0f32; a.len()]).collect();
+        let mut patch: Vec<f32> = Vec::new();
+        let mut dpatch: Vec<f32> = Vec::new();
+        for (l, plan) in self.plans.iter().enumerate().rev() {
+            let pi = 2 * l;
+            let (x, out) = (&acts[l], &acts[l + 1]);
+            match plan {
+                Plan::Conv { cout, k, p, gather, celu, in_len, out_len } => {
+                    if *celu {
+                        for (d, a) in delta.iter_mut().zip(out.iter()) {
+                            *d *= celu_grad_from_act(*a);
+                        }
+                    }
+                    let w = &state.arrays[pi];
+                    let mut dx = vec![0.0f32; b * in_len];
+                    patch.clear();
+                    patch.resize(p * k, 0.0);
+                    dpatch.clear();
+                    dpatch.resize(p * k, 0.0);
+                    for s in 0..b {
+                        let sample = &x[s * in_len..(s + 1) * in_len];
+                        let d_out = &delta[s * out_len..(s + 1) * out_len];
+                        // Bias gradient: sum over spatial positions.
+                        for (co, db) in grads[pi + 1].iter_mut().enumerate() {
+                            let row = &d_out[co * p..(co + 1) * p];
+                            *db += row.iter().sum::<f32>();
+                        }
+                        // Weight gradient: dW (cout, k) += dOut (cout, p) · patch (p, k).
+                        for (dst, &src) in patch.iter_mut().zip(gather.iter()) {
+                            *dst = sample[src as usize];
+                        }
+                        matmul_nn_acc(d_out, &patch, *cout, *k, *p, &mut grads[pi]);
+                        // Patch gradient: dPatch (p, k) = dOutᵀ (p, cout) · w (cout, k),
+                        // scatter-added back through the gather table.
+                        dpatch.iter_mut().for_each(|v| *v = 0.0);
+                        matmul_tn_acc(d_out, w, *cout, *k, *p, &mut dpatch);
+                        let dxs = &mut dx[s * in_len..(s + 1) * in_len];
+                        for (&src, &dv) in gather.iter().zip(dpatch.iter()) {
+                            dxs[src as usize] += dv;
+                        }
+                    }
+                    delta = dx;
+                }
+                Plan::Dense { k, n, celu } => {
+                    if *celu {
+                        for (d, a) in delta.iter_mut().zip(out.iter()) {
+                            *d *= celu_grad_from_act(*a);
+                        }
+                    }
+                    let w = &state.arrays[pi];
+                    // Bias gradient: column sums of delta (b, n).
+                    for row in delta.chunks_exact(*n) {
+                        for (db, dv) in grads[pi + 1].iter_mut().zip(row) {
+                            *db += *dv;
+                        }
+                    }
+                    // Weight gradient: dW (k, n) += xᵀ (k, b) · delta (b, n).
+                    matmul_tn_acc(x, &delta, b, *n, *k, &mut grads[pi]);
+                    // Input gradient: dx (b, k) = delta (b, n) · wᵀ; w (k, n)
+                    // row-major is exactly matmul_nt's packed (k, n) operand.
+                    let mut dx = vec![0.0f32; b * k];
+                    matmul_nt(&delta, w, b, *k, *n, &mut dx);
+                    delta = dx;
+                }
+            }
+        }
+        Ok((loss, grads))
+    }
+
+    /// One SGD minibatch step (`w -= lr * dL/dw`); returns the batch loss.
+    pub fn step(&self, state: &mut ModelState, xb: &[f32], yb: &[f32], lr: f32) -> Result<f64> {
+        let (loss, grads) = self.loss_and_grads(state, xb, yb)?;
+        for (arr, grad) in state.arrays.iter_mut().zip(&grads) {
+            for (wv, gv) in arr.iter_mut().zip(grad) {
+                *wv -= lr * gv;
+            }
+        }
+        Ok(loss)
+    }
+}
+
+impl Trainer for NativeTrainer {
+    fn backend(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn train(
+        &self,
+        cfg: &TrainConfig,
+        train_ds: &Dataset,
+        test_ds: &Dataset,
+        progress: &mut dyn FnMut(&EpochLog),
+    ) -> Result<(ModelState, TrainReport)> {
+        anyhow::ensure!(cfg.batch >= 1, "TrainConfig.batch must be >= 1");
+        // The PJRT trainer selects its artifact by cfg.variant; hold the
+        // native side to the same contract so a mismatched config cannot
+        // silently train a different architecture.
+        anyhow::ensure!(
+            cfg.variant == self.arch.name,
+            "TrainConfig names variant '{}' but this trainer was built for '{}'",
+            cfg.variant,
+            self.arch.name
+        );
+        anyhow::ensure!(
+            train_ds.d == self.meta.n_features(),
+            "dataset features {} vs arch {}",
+            train_ds.d,
+            self.meta.n_features()
+        );
+        anyhow::ensure!(
+            train_ds.o == self.meta.outputs,
+            "dataset outputs {} vs arch {}",
+            train_ds.o,
+            self.meta.outputs
+        );
+        anyhow::ensure!(train_ds.n > 0, "empty training set");
+
+        let mut state = ModelState::init(&self.meta, cfg.seed);
+        let mut rng = Rng::seed_from(cfg.seed ^ 0x5EED);
+        let batch = cfg.batch.min(train_ds.n);
+        let steps_per_epoch = train_ds.n.div_ceil(batch);
+        let mut xb: Vec<f32> = Vec::new();
+        let mut yb: Vec<f32> = Vec::new();
+        let mut history = Vec::with_capacity(cfg.epochs);
+        let mut final_train_loss = f64::NAN;
+        let t0 = Instant::now();
+        let mut total_steps = 0usize;
+
+        for epoch in 0..cfg.epochs {
+            let lr = cfg.lr.at(epoch);
+            let order = rng.permutation(train_ds.n);
+            let mut loss_acc = 0.0f64;
+            for idx in order.chunks(batch) {
+                // Native execution takes exact batch sizes — no padding.
+                xb.clear();
+                yb.clear();
+                for &i in idx {
+                    xb.extend_from_slice(train_ds.features(i));
+                    yb.extend_from_slice(train_ds.targets(i));
+                }
+                loss_acc += self.step(&mut state, &xb, &yb, lr as f32)?;
+                total_steps += 1;
+            }
+            let train_loss = loss_acc / steps_per_epoch as f64;
+            final_train_loss = train_loss;
+            let test_loss = if (cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0)
+                || epoch + 1 == cfg.epochs
+            {
+                Some(evaluate_native(&self.meta, &state, test_ds)?.mse)
+            } else {
+                None
+            };
+            let row = EpochLog { epoch, lr, train_loss, test_loss };
+            progress(&row);
+            history.push(row);
+        }
+
+        let test = evaluate_native(&self.meta, &state, test_ds)?;
+        if let Some(path) = &cfg.ckpt_out {
+            state.save(path)?;
+        }
+        Ok((
+            state,
+            TrainReport {
+                history,
+                final_train_loss,
+                test,
+                wall_seconds: t0.elapsed().as_secs_f64(),
+                steps: total_steps,
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::NativeEngine;
+
+    /// A tiny stack exercising every layer kind (conv ± CELU, flatten,
+    /// dense ± CELU) — small enough for exhaustive finite differences.
+    fn tiny_arch() -> Arch {
+        let arch = Arch {
+            name: "tiny".into(),
+            input: [2, 1, 2, 2],
+            outputs: 1,
+            layers: vec![
+                Layer::Conv { cin: 2, cout: 3, k: [1, 2, 1], s: [1, 2, 1], celu: true },
+                Layer::Conv { cin: 3, cout: 2, k: [1, 1, 2], s: [1, 1, 1], celu: false },
+                Layer::Flatten,
+                Layer::Dense { cin: 2, cout: 4, celu: true },
+                Layer::Dense { cin: 4, cout: 1, celu: false },
+            ],
+        };
+        arch.validate().unwrap();
+        arch
+    }
+
+    #[test]
+    fn forward_tape_matches_engine() {
+        for name in ["small", "cfg_a", "cfg_b"] {
+            let arch = Arch::for_variant(name).unwrap();
+            let state = ModelState::init(&arch.to_meta(), 3);
+            let trainer = NativeTrainer::new(arch.clone()).unwrap();
+            let engine = NativeEngine::new(&arch, &state).unwrap();
+            let mut rng = Rng::seed_from(17);
+            let x: Vec<f32> =
+                (0..2 * arch.n_features()).map(|_| rng.range(-0.2, 1.2) as f32).collect();
+            let tape = trainer.forward_tape(&state, &x).unwrap();
+            let want = engine.forward(&x).unwrap();
+            let got = tape.last().unwrap();
+            assert_eq!(got.len(), want.len(), "{name}");
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-5, "{name}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn sgd_reduces_loss_on_a_fixed_batch() {
+        let trainer = NativeTrainer::new(tiny_arch()).unwrap();
+        let meta = trainer.meta().clone();
+        let mut state = ModelState::init(&meta, 5);
+        let mut rng = Rng::seed_from(6);
+        let b = 8;
+        let xb: Vec<f32> =
+            (0..b * meta.n_features()).map(|_| rng.range(0.0, 1.0) as f32).collect();
+        let yb: Vec<f32> = (0..b * meta.outputs).map(|_| rng.range(-0.1, 0.1) as f32).collect();
+        let l0 = trainer.loss(&state, &xb, &yb).unwrap();
+        for _ in 0..200 {
+            trainer.step(&mut state, &xb, &yb, 0.02).unwrap();
+        }
+        let l1 = trainer.loss(&state, &xb, &yb).unwrap();
+        assert!(l1.is_finite() && l1 < l0 * 0.5, "loss did not drop: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn rejects_mismatched_shapes() {
+        let trainer = NativeTrainer::new(tiny_arch()).unwrap();
+        let meta = trainer.meta().clone();
+        let state = ModelState::init(&meta, 0);
+        let nf = meta.n_features();
+        assert!(trainer.loss(&state, &vec![0.0; nf + 1], &[0.0]).is_err());
+        assert!(trainer.loss(&state, &vec![0.0; nf], &[0.0, 0.0]).is_err());
+        let other = ModelState::init(&Arch::for_variant("small").unwrap().to_meta(), 0);
+        assert!(trainer.loss(&other, &vec![0.0; nf], &[0.0]).is_err());
+    }
+
+    #[test]
+    fn trainer_trait_runs_end_to_end() {
+        let trainer = NativeTrainer::new(tiny_arch()).unwrap();
+        let meta = trainer.meta().clone();
+        let (n, d, o) = (24usize, meta.n_features(), meta.outputs);
+        let mut rng = Rng::seed_from(9);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.range(0.0, 1.0) as f32).collect();
+        // A learnable target: mean of the features, scaled down.
+        let y: Vec<f32> = (0..n)
+            .map(|i| x[i * d..(i + 1) * d].iter().sum::<f32>() / d as f32 * 0.1)
+            .collect();
+        let ds = Dataset::new(n, d, o, x, y);
+        let mut cfg = TrainConfig::new("tiny", 30);
+        cfg.lr = crate::coordinator::LrSchedule::paper_scaled(0.02, 30);
+        cfg.batch = 8;
+        cfg.eval_every = 10;
+        let mut rows = 0usize;
+        let (state, report) =
+            Trainer::train(&trainer, &cfg, &ds, &ds, &mut |_row| rows += 1).unwrap();
+        assert_eq!(rows, 30);
+        assert_eq!(report.history.len(), 30);
+        assert_eq!(report.steps, 30 * 3);
+        assert!(report.final_train_loss < report.history[0].train_loss, "{report:?}");
+        // The returned state matches what the engine would serve.
+        let engine = NativeEngine::new(trainer.arch(), &state).unwrap();
+        assert_eq!(engine.n_outputs(), o);
+    }
+}

@@ -18,8 +18,12 @@
 //!   multi-checkpoint `NativeRegistry`.
 //! * [`api`] — **the serving API**: `Deployment` / `DeploymentBuilder`,
 //!   typed `MacRequest` / `MacResponse`, multi-variant sessions.
-//! * [`coordinator`] — training loop, dynamic batcher, golden/emulated
-//!   request router, TCP front end, metrics (the machinery `api` wires).
+//! * [`pipeline`] — **the offline-pipeline API**: declarative
+//!   `ExperimentSpec` run descriptions and `Experiment::run` driving
+//!   datagen → train → eval → export into servable run directories.
+//! * [`coordinator`] — the pluggable `Trainer` (PJRT Adam or native SGD),
+//!   dynamic batcher, golden/emulated request router, TCP front end,
+//!   metrics (the machinery `api` and `pipeline` wire).
 //! * [`analytic`] — the human-expert analytical baseline the paper argues
 //!   against.
 //! * [`stats`] — Theorem 4.1 error-bound machinery and histograms.
@@ -84,6 +88,40 @@
 //! in offline builds (vendored stub `xla` crate). `--cross-check` /
 //! `DeploymentBuilder::cross_check` shadows one backend with the other on
 //! every shadow-verified request.
+//!
+//! ## Producing a checkpoint: the experiment pipeline
+//!
+//! The offline half mirrors the serving half: one declarative spec, one
+//! typed driver. An [`pipeline::ExperimentSpec`] (JSON-round-trippable;
+//! schema in `examples/specs/quickstart.json`) names the scenario, the
+//! network variant, the sampling, the training recipe and the eval
+//! probes; [`pipeline::Experiment::run`] executes
+//! datagen → split → train → eval → export and leaves a self-describing
+//! run directory that [`api::VariantDef::from_run_dir`] serves directly:
+//!
+//! ```no_run
+//! use semulator::api::{Deployment, VariantDef};
+//! use semulator::pipeline::{Experiment, ExperimentSpec, RunOptions};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let spec = ExperimentSpec::new("demo", "small"); // all knobs default
+//! let summary = Experiment::new(spec)?
+//!     .run(&RunOptions::new("runs/experiments/demo"), &mut |_| {})?;
+//! let dep = Deployment::builder()
+//!     .variant(VariantDef::from_run_dir(&summary.run_dir)?)
+//!     .build()?; // serves variant "demo" with the trained weights
+//! # let _ = dep;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Training itself sits behind the pluggable [`coordinator::Trainer`]
+//! trait: [`infer::NativeTrainer`] (backward passes for the native
+//! kernels + SGD with the paper's LR-halving schedule — no artifacts)
+//! and [`coordinator::PjrtTrainer`] (the AOT-compiled Adam step).
+//! The CLI front end is `semulator run --spec spec.json`; direct
+//! `coordinator::trainer::train` calls are a deprecated surface kept for
+//! harnesses.
 
 pub mod analytic;
 pub mod util;
@@ -93,6 +131,7 @@ pub mod coordinator;
 pub mod datagen;
 pub mod infer;
 pub mod model;
+pub mod pipeline;
 pub mod repro;
 pub mod runtime;
 pub mod spice;

@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! semulator info
+//! semulator run     --spec examples/specs/quickstart.json
 //! semulator datagen --variant small --n 8000 --out runs/data/small.bin
 //! semulator train   --variant small --data runs/data/small.bin --epochs 150
 //! semulator eval    --variant small --data runs/data/small.bin --ckpt runs/ckpt/x.ckpt
@@ -17,11 +18,13 @@ use anyhow::{Context, Result};
 
 use semulator::api::{Deployment, MacRequest, VariantDef};
 use semulator::coordinator::{
-    evaluate_native, evaluate_state, train, LrSchedule, Policy, Server, TrainConfig,
+    evaluate_native, evaluate_state, trainer_for, EpochLog, LrSchedule, Policy, Server,
+    TrainConfig, Trainer,
 };
 use semulator::datagen::{generate_to, Dataset, GenConfig, SampleDist};
 use semulator::infer::{load_or_builtin_meta, Arch, BackendKind, BUILTIN_VARIANTS};
 use semulator::model::ModelState;
+use semulator::pipeline::{Experiment, ExperimentSpec, RunOptions};
 use semulator::repro;
 use semulator::runtime::ArtifactStore;
 use semulator::util::cli::Args;
@@ -60,6 +63,7 @@ fn work_dir(args: &Args) -> PathBuf {
 fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("info") => cmd_info(args),
+        Some("run") => cmd_run(args),
         Some("datagen") => cmd_datagen(args),
         Some("train") => cmd_train(args),
         Some("eval") => cmd_eval(args),
@@ -73,18 +77,32 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: semulator <info|datagen|train|eval|serve|repro> [options]
+const USAGE: &str = "usage: semulator <info|run|datagen|train|eval|serve|repro> [options]
   info                                   list artifacts and variants
+  run      --spec FILE [--out DIR]       one-command pipeline: datagen ->
+           split -> train -> eval -> servable run directory, driven by a
+           declarative ExperimentSpec JSON (see examples/specs/). The
+           default 'native' train backend needs zero compiled artifacts.
   datagen  --variant V --n N --out FILE  generate a SPICE dataset
            [--dist uniform|binary|sparseP] [--nonideal ideal|mild|harsh]
-  train    --variant V --data FILE       train SEMULATOR (PJRT train step)
+  train    --variant V --data FILE       train SEMULATOR
+           [--backend native|pjrt] [--batch N]  (native = artifact-free
+           SGD backprop; pjrt = AOT Adam step, the default)
   eval     --variant V --data FILE --ckpt FILE [--backend native|pjrt]
            [--nonideal ideal|mild|harsh [--probe N]]
-  serve    --variants SPEC[,SPEC...] --addr HOST:PORT  [--ckpt FILE | --fresh]
+  serve    --variants SPEC[,SPEC...] --addr HOST:PORT  [--ckpt PATH | --fresh]
            [--policy emulator|golden|shadow] [--backend native|pjrt] [--cross-check]
-           SPEC = label[=arch][+nonideal][@ckpt]; --variant V serves one
+           SPEC = label[=arch][+nonideal][@ckpt]; --variant V serves one;
+           checkpoint PATHs may be `semulator run` directories
   repro    <table1|fig4|fig5|fig6|fig7|bound|speed|all> [--preset ci|small|paper]
 common:    --artifacts DIR (default artifacts)   --work DIR (default runs)
+run:       the run directory (default runs/experiments/<name>) is
+           self-describing — spec.json + data.bin + ckpt.ckpt +
+           report.json/history.csv + eval.json — and loads straight into
+           serving: `serve` accepts it wherever a checkpoint is expected
+           via api::VariantDef::from_run_dir, and the run's own probe
+           stage already replayed held-out rows through a Deployment
+           built from the exported files.
 serve:     one process hosts every SPEC as a named variant of one
            api::Deployment: requests pick theirs with a \"variant\" field
            (optional when serving one), and {\"cmd\":\"metrics\"} reports
@@ -139,6 +157,77 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_run(args: &Args) -> Result<()> {
+    let spec_path = args.str_opt("spec").context("--spec FILE required")?;
+    let text = std::fs::read_to_string(spec_path)
+        .with_context(|| format!("read spec {spec_path}"))?;
+    let spec = ExperimentSpec::from_str(&text).with_context(|| format!("parse {spec_path}"))?;
+    let out = PathBuf::from(
+        args.str_opt("out")
+            .map(String::from)
+            .unwrap_or_else(|| format!("runs/experiments/{}", spec.name)),
+    );
+    let opts = RunOptions::new(out).artifact_dir(artifact_dir(args));
+    let epochs = spec.train.epochs;
+    let every = (epochs / 20).max(1);
+    println!(
+        "run '{}': variant {}, {} samples ({}), {} epochs ({} backend) -> {}",
+        spec.name,
+        spec.variant,
+        spec.data.n_samples,
+        spec.data.dist.tag(),
+        epochs,
+        spec.train.backend,
+        opts.out_dir.display()
+    );
+    let verbose = args.has("verbose");
+    let t0 = std::time::Instant::now();
+    let exp = Experiment::new(spec)?;
+    let summary = exp.run(&opts, &mut |row: &EpochLog| {
+        if verbose || row.test_loss.is_some() || row.epoch % every == 0 {
+            println!(
+                "epoch {:>5}  lr {:.2e}  train {:.4e}  test {}",
+                row.epoch,
+                row.lr,
+                row.train_loss,
+                row.test_loss.map(|v| format!("{v:.4e}")).unwrap_or_else(|| "-".into())
+            );
+        }
+    })?;
+    let report = &summary.report;
+    println!(
+        "done in {:.1}s: {} steps  test MAE {:.4}mV  mse {:.3e}  P(|err|<0.5mV) {:.3}",
+        t0.elapsed().as_secs_f64(),
+        report.steps,
+        report.test.mae * 1e3,
+        report.test.mse,
+        report.test.p_halfmv
+    );
+    match (&summary.pjrt_check, &summary.pjrt_skipped) {
+        (Some(stats), _) => {
+            println!("pjrt cross-check: MAE {:.4}mV  mse {:.3e}", stats.mae * 1e3, stats.mse)
+        }
+        (None, Some(reason)) => println!("pjrt cross-check skipped: {reason}"),
+        (None, None) => {}
+    }
+    if let Some(p) = &summary.probe {
+        println!(
+            "serve probe ({} rows through a Deployment built from the run dir): \
+             emulated MAE {:.4}mV, golden-route MAE {:.4}mV vs dataset targets",
+            p.n,
+            p.emulator_mae * 1e3,
+            p.golden_mae * 1e3
+        );
+    }
+    println!(
+        "run dir: {} (serve it: semulator serve --variant {} --ckpt {})",
+        summary.run_dir.display(),
+        exp.spec().name,
+        summary.run_dir.display()
+    );
+    Ok(())
+}
+
 fn cmd_datagen(args: &Args) -> Result<()> {
     let variant = args.str_or("variant", "small");
     let n = args.usize_or("n", 8000)?;
@@ -173,10 +262,11 @@ fn cmd_datagen(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let variant = args.str_or("variant", "small");
-    let store = ArtifactStore::open(&artifact_dir(args))?;
+    let backend = BackendKind::parse(&args.str_or("backend", "pjrt"))?;
     let data = args.str_opt("data").context("--data FILE required")?;
     let ds = Dataset::load(Path::new(data))?;
-    let (train_ds, test_ds) = ds.split(args.f64_or("test-frac", 0.1)?, args.u64_or("seed", 0)? ^ 0xA5);
+    let (train_ds, test_ds) =
+        ds.split(args.f64_or("test-frac", 0.1)?, args.u64_or("seed", 0)? ^ 0xA5)?;
     let epochs = args.usize_or("epochs", 150)?;
     let mut cfg = TrainConfig::new(&variant, epochs);
     cfg.lr = LrSchedule::paper_scaled(args.f64_or("lr", 1e-3)?, epochs);
@@ -184,10 +274,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.lr.halve_at = h.split(',').map(|s| s.trim().parse().unwrap_or(usize::MAX)).collect();
     }
     cfg.seed = args.u64_or("seed", 0)?;
+    cfg.batch = args.usize_or("batch", 32)?;
     cfg.eval_every = args.usize_or("eval-every", (epochs / 20).max(1))?;
     let ckpt = PathBuf::from(args.str_or("ckpt", &format!("runs/ckpt/{variant}.ckpt")));
     cfg.ckpt_out = Some(ckpt.clone());
-    let (_, report) = train(&store, &cfg, &train_ds, &test_ds, |row| {
+    // Pick the Trainer: the native SGD backprop path needs no artifacts
+    // at all; PJRT drives the AOT Adam step (and remains the default for
+    // continuity with artifact-era checkpoints).
+    let mut store = None; // artifacts outlive the trainer borrow
+    let trainer = trainer_for(backend, &artifact_dir(args), &variant, &mut store)?;
+    let (_, report) = trainer.train(&cfg, &train_ds, &test_ds, &mut |row| {
         println!(
             "epoch {:>5}  lr {:.2e}  train {:.4e}  test {}",
             row.epoch,
@@ -197,7 +293,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     })?;
     println!(
-        "done: {} steps in {:.1}s  test MAE {:.4}mV  mse {:.3e}  P(|err|<0.5mV) {:.3}",
+        "done ({} backend): {} steps in {:.1}s  test MAE {:.4}mV  mse {:.3e}  P(|err|<0.5mV) {:.3}",
+        backend,
         report.steps,
         report.wall_seconds,
         report.test.mae * 1e3,
@@ -304,7 +401,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
 /// `label[=arch][+nonideal][@ckpt]` -> a [`VariantDef`] for the serve
 /// deployment. The global `--ckpt` is the fallback checkpoint; a missing
-/// checkpoint is an error unless `--fresh` permits init weights.
+/// checkpoint is an error unless `--fresh` permits init weights. A
+/// checkpoint path may also be a `semulator run` directory (detected by
+/// its `spec.json`): the exported block, scenario, and trained weights
+/// load as declared, relabelled to `label`.
 fn parse_variant_spec(
     dir: &Path,
     spec: &str,
@@ -322,14 +422,43 @@ fn parse_variant_spec(
         None => (head, None),
     };
     let (label, arch) = match head.split_once('=') {
-        Some((l, a)) => (l, a),
-        None => (head, head),
+        Some((l, a)) => (l, Some(a)),
+        None => (head, None),
     };
     anyhow::ensure!(
-        !label.is_empty() && !arch.is_empty(),
+        !label.is_empty() && arch != Some(""),
         "bad variant spec '{spec}' (expected label[=arch][+nonideal][@ckpt])"
     );
-    let mut def = VariantDef::new(label).arch(arch);
+    let mut def = match ckpt.or(default_ckpt) {
+        Some(path) if Path::new(path).join("spec.json").is_file() => {
+            // An experiment run directory: arch/block/scenario/weights come
+            // from the export; an explicit '=arch' must agree.
+            let loaded = VariantDef::from_run_dir_with(Path::new(path), dir)?;
+            if let Some(a) = arch {
+                anyhow::ensure!(
+                    a == loaded.arch_name(),
+                    "variant '{label}': spec names arch '{a}' but run dir {path} \
+                     trained '{}'",
+                    loaded.arch_name()
+                );
+            }
+            loaded.labeled(label)
+        }
+        Some(path) => {
+            let arch = arch.unwrap_or(label);
+            let meta = load_or_builtin_meta(dir, arch)?;
+            VariantDef::new(label).arch(arch).state(ModelState::load(Path::new(path), &meta)?)
+        }
+        None => {
+            anyhow::ensure!(
+                allow_fresh,
+                "variant '{label}': no checkpoint (give --ckpt FILE, an '@FILE' \
+                 suffix — both accept a `semulator run` directory — or --fresh \
+                 to serve fresh-init weights)"
+            );
+            VariantDef::new(label).arch(arch.unwrap_or(label))
+        }
+    };
     match preset {
         Some(p) => {
             let mut s = NonIdealSpec::preset(p).map_err(anyhow::Error::msg)?;
@@ -341,17 +470,6 @@ fn parse_variant_spec(
                 def = def.nonideal(g);
             }
         }
-    }
-    match ckpt.or(default_ckpt) {
-        Some(path) => {
-            let meta = load_or_builtin_meta(dir, arch)?;
-            def = def.state(ModelState::load(Path::new(path), &meta)?);
-        }
-        None => anyhow::ensure!(
-            allow_fresh,
-            "variant '{label}': no checkpoint (give --ckpt FILE, an '@FILE' \
-             suffix, or --fresh to serve fresh-init weights)"
-        ),
     }
     Ok(def)
 }

@@ -1,0 +1,274 @@
+//! The experiment driver: one typed call from spec to served emulator.
+//!
+//! [`Experiment::run`] executes datagen → split → train → eval → export
+//! and leaves behind a *self-describing run directory*:
+//!
+//! ```text
+//! <run_dir>/
+//!   spec.json       the ExperimentSpec (reproduces the run)
+//!   data.bin        the golden dataset (+ data.meta.json provenance)
+//!   ckpt.ckpt       trained parameters
+//!   report.json     TrainReport (per-epoch history + final eval)
+//!   history.csv     the Fig-4 series
+//!   eval.json       native eval, PJRT cross-check status, probe stats
+//! ```
+//!
+//! The directory is directly servable: [`load_variant_def`] (also exposed
+//! as `api::VariantDef::from_run_dir`) turns it into a deployment variant,
+//! and the run's own probe stage does exactly that — replaying held-out
+//! rows through a `Deployment` built from the exported files — so every
+//! successful run has already closed the train→serve loop once.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::api::{Deployment, MacRequest, VariantDef};
+use crate::coordinator::{
+    evaluate_state, trainer_for, EpochLog, EvalStats, Policy, TrainReport, Trainer,
+};
+use crate::datagen::{generate_to, Dataset};
+use crate::infer::load_or_builtin_meta;
+use crate::model::ModelState;
+use crate::runtime::ArtifactStore;
+use crate::util::Json;
+use crate::xbar::CellInputs;
+
+use super::spec::ExperimentSpec;
+
+/// Run-time options orthogonal to the spec (paths live here so the same
+/// spec.json reproduces a run anywhere).
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Run directory (created; existing files are overwritten).
+    pub out_dir: PathBuf,
+    /// Where `meta.json` + compiled artifacts live; used by the PJRT
+    /// trainer and the post-training PJRT cross-check (default
+    /// `artifacts`, absent in native-only environments).
+    pub artifact_dir: PathBuf,
+}
+
+impl RunOptions {
+    pub fn new(out_dir: impl Into<PathBuf>) -> Self {
+        Self { out_dir: out_dir.into(), artifact_dir: PathBuf::from("artifacts") }
+    }
+
+    pub fn artifact_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifact_dir = dir.into();
+        self
+    }
+}
+
+/// Emulated-vs-golden statistics of the probe stage.
+#[derive(Debug, Clone)]
+pub struct ProbeStats {
+    /// Probed rows (each with every MAC output).
+    pub n: usize,
+    /// Mean |deployment-emulated − dataset golden| (volts).
+    pub emulator_mae: f64,
+    /// Mean |deployment-golden-route − dataset golden| (volts): the
+    /// serving shadow path's intrinsic deviation (read noise etc.).
+    pub golden_mae: f64,
+}
+
+/// What a finished run produced (everything is also on disk).
+#[derive(Debug)]
+pub struct RunSummary {
+    pub run_dir: PathBuf,
+    pub report: TrainReport,
+    /// PJRT eval of the trained checkpoint, when artifacts allowed it.
+    pub pjrt_check: Option<EvalStats>,
+    /// Why the PJRT cross-check did not run (native-only environments).
+    pub pjrt_skipped: Option<String>,
+    /// Probe-stage stats (`None` when `eval.probes` is 0).
+    pub probe: Option<ProbeStats>,
+}
+
+/// A declarative end-to-end run: spec in, servable run directory out.
+pub struct Experiment {
+    spec: ExperimentSpec,
+}
+
+impl Experiment {
+    /// Validate the spec and wrap it.
+    pub fn new(spec: ExperimentSpec) -> Result<Self> {
+        spec.validate()?;
+        Ok(Self { spec })
+    }
+
+    pub fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    /// Execute datagen → split → train → eval → export. `progress` fires
+    /// once per training epoch.
+    pub fn run(
+        &self,
+        opts: &RunOptions,
+        progress: &mut dyn FnMut(&EpochLog),
+    ) -> Result<RunSummary> {
+        let spec = &self.spec;
+        let run_dir = &opts.out_dir;
+        std::fs::create_dir_all(run_dir)
+            .with_context(|| format!("create run dir {}", run_dir.display()))?;
+
+        // Resolve the network geometry up front so mismatches fail before
+        // any simulation work.
+        let meta = load_or_builtin_meta(&opts.artifact_dir, &spec.variant)
+            .with_context(|| format!("spec '{}' (variant '{}')", spec.name, spec.variant))?;
+        let gen = spec.gen_config()?;
+        anyhow::ensure!(
+            gen.block.n_features() == meta.n_features(),
+            "spec '{}': block has {} features but network '{}' expects {}",
+            spec.name,
+            gen.block.n_features(),
+            spec.variant,
+            meta.n_features()
+        );
+        anyhow::ensure!(
+            gen.block.n_mac() == meta.outputs,
+            "spec '{}': block has {} MAC outputs but network '{}' expects {}",
+            spec.name,
+            gen.block.n_mac(),
+            spec.variant,
+            meta.outputs
+        );
+
+        // A stale spec.json from a previous run would make a partially
+        // written rerun look servable (the old checkpoint under the new
+        // declaration); remove it up front — the fresh one is written only
+        // once the checkpoint it describes exists, so `spec.json` present
+        // always implies a consistent export.
+        let spec_path = run_dir.join("spec.json");
+        if spec_path.exists() {
+            std::fs::remove_file(&spec_path)
+                .with_context(|| format!("remove stale {}", spec_path.display()))?;
+        }
+
+        // 1. Golden dataset (persisted with scenario provenance).
+        let ds = generate_to(&gen, &run_dir.join("data.bin"))?;
+        let (train_ds, test_ds) = ds.split(spec.data.test_frac, spec.data.seed ^ 0xA5)?;
+
+        // 2. Train through the spec's backend.
+        let mut cfg = spec.train_config();
+        cfg.ckpt_out = Some(run_dir.join("ckpt.ckpt"));
+        let mut store = None; // PJRT artifacts outlive the trainer borrow
+        let trainer = trainer_for(spec.train.backend, &opts.artifact_dir, &spec.variant, &mut store)?;
+        let (state, report) = trainer.train(&cfg, &train_ds, &test_ds, progress)?;
+        std::fs::write(run_dir.join("report.json"), report.to_json().to_string_pretty())?;
+        std::fs::write(run_dir.join("history.csv"), report.history_csv())?;
+        std::fs::write(&spec_path, spec.to_json().to_string_pretty())?;
+
+        // 3. PJRT cross-check of the trained checkpoint, when the compiled
+        // eval artifact is available (skipped, with the reason recorded,
+        // in native-only environments).
+        let (pjrt_check, pjrt_skipped) =
+            pjrt_cross_check(&opts.artifact_dir, &spec.variant, &state, &test_ds);
+
+        // 4. Probe stage: serve the *exported* run directory and replay
+        // held-out rows through it — emulated route scored against the
+        // dataset's golden targets, golden route as the reference line.
+        let probe = if spec.eval.probes > 0 {
+            Some(self.probe(opts, run_dir, &test_ds)?)
+        } else {
+            None
+        };
+
+        let mut eval_pairs = vec![("native", report.test.to_json())];
+        match &pjrt_check {
+            Some(stats) => eval_pairs.push(("pjrt", stats.to_json())),
+            None => eval_pairs.push((
+                "pjrt_skipped",
+                Json::Str(pjrt_skipped.clone().unwrap_or_default()),
+            )),
+        }
+        if let Some(p) = &probe {
+            eval_pairs.push((
+                "probes",
+                Json::obj(vec![
+                    ("n", Json::Num(p.n as f64)),
+                    ("emulator_mae", Json::Num(p.emulator_mae)),
+                    ("golden_mae", Json::Num(p.golden_mae)),
+                ]),
+            ));
+        }
+        std::fs::write(run_dir.join("eval.json"), Json::obj(eval_pairs).to_string_pretty())?;
+
+        Ok(RunSummary { run_dir: run_dir.clone(), report, pjrt_check, pjrt_skipped, probe })
+    }
+
+    /// Stand up a deployment from the exported run directory and replay
+    /// the first `eval.probes` held-out rows through both routes.
+    fn probe(&self, opts: &RunOptions, run_dir: &Path, test_ds: &Dataset) -> Result<ProbeStats> {
+        let spec = &self.spec;
+        let def = load_variant_def(run_dir, &opts.artifact_dir)?;
+        let dep = Deployment::builder()
+            .artifact_dir(opts.artifact_dir.clone())
+            .variant(def)
+            .policy(Policy::Emulator)
+            .build()
+            .context("probe deployment from run dir")?;
+        let block = dep.block_config(&spec.name)?.clone();
+        let n = spec.eval.probes.min(test_ds.n);
+        anyhow::ensure!(n > 0, "probe stage needs a non-empty test split");
+        let mut emulated = Vec::with_capacity(n);
+        let mut golden = Vec::with_capacity(n);
+        for i in 0..n {
+            let x = CellInputs::from_normalized(&block, test_ds.features(i));
+            emulated.push(MacRequest::new(spec.name.clone(), x.clone()));
+            golden.push(MacRequest::new(spec.name.clone(), x).golden());
+        }
+        let emulated = dep.submit_many(&emulated)?;
+        let golden = dep.submit_many(&golden)?;
+        let mut mae_emu = 0.0f64;
+        let mut mae_gold = 0.0f64;
+        for i in 0..n {
+            for (k, &t) in test_ds.targets(i).iter().enumerate() {
+                mae_emu += (emulated[i].outputs[k] - t as f64).abs();
+                mae_gold += (golden[i].outputs[k] - t as f64).abs();
+            }
+        }
+        let denom = (n * test_ds.o) as f64;
+        Ok(ProbeStats { n, emulator_mae: mae_emu / denom, golden_mae: mae_gold / denom })
+    }
+}
+
+/// PJRT eval of a trained checkpoint; `(None, Some(reason))` when the
+/// compiled artifacts (or the real `xla` crate) are unavailable.
+fn pjrt_cross_check(
+    artifact_dir: &Path,
+    variant: &str,
+    state: &ModelState,
+    test_ds: &Dataset,
+) -> (Option<EvalStats>, Option<String>) {
+    if !artifact_dir.join("meta.json").exists() {
+        return (None, Some(format!("no artifacts at {}", artifact_dir.display())));
+    }
+    let attempt = (|| -> Result<EvalStats> {
+        let store = ArtifactStore::open(artifact_dir)?;
+        evaluate_state(&store, variant, state, test_ds)
+    })();
+    match attempt {
+        Ok(stats) => (Some(stats), None),
+        Err(e) => (None, Some(format!("{e:#}"))),
+    }
+}
+
+/// Turn an exported run directory into a deployment variant: the spec's
+/// name becomes the served label, its resolved block (scenario included)
+/// the golden shadow, and `ckpt.ckpt` the parameters. The network meta
+/// comes from `artifact_dir` when present, else the built-in architecture.
+pub fn load_variant_def(run_dir: &Path, artifact_dir: &Path) -> Result<VariantDef> {
+    let spec_path = run_dir.join("spec.json");
+    let text = std::fs::read_to_string(&spec_path)
+        .with_context(|| format!("read {}", spec_path.display()))?;
+    let spec = ExperimentSpec::from_str(&text)
+        .with_context(|| format!("parse {}", spec_path.display()))?;
+    let meta = load_or_builtin_meta(artifact_dir, &spec.variant)
+        .with_context(|| format!("run '{}' (variant '{}')", spec.name, spec.variant))?;
+    let state = ModelState::load(&run_dir.join("ckpt.ckpt"), &meta)?;
+    Ok(VariantDef::new(spec.name.clone())
+        .arch(spec.variant.clone())
+        .block(spec.resolved_block()?)
+        .state(state))
+}

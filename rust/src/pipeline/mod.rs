@@ -1,0 +1,45 @@
+//! The offline-pipeline API: declarative, reproducible
+//! datagen → train → eval → serve runs behind one typed entry point.
+//!
+//! SEMULATOR's core loop — simulate golden crossbar MAC data, fit the
+//! regression network to it, serve the emulator — used to be reachable
+//! only through hand-wired CLI subcommands that each re-parsed paths and
+//! flags, and training hard-required the PJRT train-step artifact. This
+//! layer is the offline counterpart of `api::Deployment`:
+//!
+//! * [`ExperimentSpec`] — a JSON-round-trippable description of a run:
+//!   scenario (`BlockConfig` + `NonIdealSpec`), network variant, dataset
+//!   sampling, training recipe (backend, epochs, batch, `LrSchedule`),
+//!   seeds, and eval probes. See `examples/specs/quickstart.json`.
+//! * [`Experiment`] — validates a spec and [`Experiment::run`]s it:
+//!   golden datagen, guarded train/test split, training through a
+//!   pluggable `coordinator::Trainer` (`infer::NativeTrainer` by default,
+//!   so the whole loop runs with **zero compiled artifacts**; the PJRT
+//!   Adam trainer opt-in), native eval plus a PJRT cross-check when
+//!   artifacts exist, and a probe stage that serves the exported files.
+//! * [`load_variant_def`] — turns a finished run directory into an
+//!   `api::VariantDef` (also exposed as `VariantDef::from_run_dir`), so
+//!   `semulator serve` and `Deployment` load training output directly.
+//!
+//! ```no_run
+//! use semulator::pipeline::{Experiment, ExperimentSpec, RunOptions};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let spec = ExperimentSpec::from_str(&std::fs::read_to_string("spec.json")?)?;
+//! let summary = Experiment::new(spec)?
+//!     .run(&RunOptions::new("runs/experiments/quickstart"), &mut |row| {
+//!         println!("epoch {}: train {:.3e}", row.epoch, row.train_loss);
+//!     })?;
+//! println!("test MAE {:.4} mV -> {}", summary.report.test.mae * 1e3,
+//!          summary.run_dir.display());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The CLI front end is `semulator run --spec spec.json`.
+
+pub mod experiment;
+pub mod spec;
+
+pub use experiment::{load_variant_def, Experiment, ProbeStats, RunOptions, RunSummary};
+pub use spec::{DataSpec, EvalSpec, ExperimentSpec, TrainSpec};

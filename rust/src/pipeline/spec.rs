@@ -1,0 +1,419 @@
+//! Declarative run specifications: everything an end-to-end experiment
+//! needs, as one JSON-round-trippable value.
+//!
+//! A spec names the scenario (block geometry + [`NonIdealSpec`]), the
+//! network ([`Arch`](crate::infer::Arch) variant), the dataset sampling ([`SampleDist`],
+//! sample count, split), the training recipe (backend, epochs, batch,
+//! [`LrSchedule`]), and the eval probes — with seeds everywhere, so a run
+//! is reproducible from its `spec.json` alone.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{LrSchedule, TrainConfig};
+use crate::datagen::{GenConfig, SampleDist};
+use crate::infer::BackendKind;
+use crate::repro::block_for;
+use crate::util::{Json, json_parse};
+use crate::xbar::{BlockConfig, NonIdealSpec};
+
+/// Dataset-generation and split parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataSpec {
+    /// Golden samples to simulate.
+    pub n_samples: usize,
+    /// Input distribution (`uniform | binary | sparseP`).
+    pub dist: SampleDist,
+    /// Datagen + split seed.
+    pub seed: u64,
+    /// Held-out fraction (must leave both splits non-empty).
+    pub test_frac: f64,
+}
+
+impl Default for DataSpec {
+    fn default() -> Self {
+        Self { n_samples: 512, dist: SampleDist::UniformIid, seed: 0, test_frac: 0.125 }
+    }
+}
+
+/// Training recipe.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainSpec {
+    /// `native` (artifact-free SGD backprop, the default) or `pjrt`
+    /// (AOT Adam step; needs `make artifacts` + a real `xla` crate).
+    pub backend: BackendKind,
+    pub epochs: usize,
+    /// Minibatch size (native backend; PJRT batch is fixed by the artifact).
+    pub batch: usize,
+    pub lr: LrSchedule,
+    /// Parameter-init and shuffling seed.
+    pub seed: u64,
+    /// Test-split eval cadence in epochs (0 = only at the end).
+    pub eval_every: usize,
+}
+
+impl Default for TrainSpec {
+    fn default() -> Self {
+        let epochs = 40;
+        Self {
+            backend: BackendKind::Native,
+            epochs,
+            batch: 32,
+            lr: LrSchedule::paper_scaled(1e-3, epochs),
+            seed: 0,
+            eval_every: 10,
+        }
+    }
+}
+
+/// Post-training evaluation probes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalSpec {
+    /// Test rows replayed through a `Deployment` built from the exported
+    /// run directory (emulated + golden routes), closing the train→serve
+    /// loop inside the run itself. 0 disables the probe stage.
+    pub probes: usize,
+}
+
+impl Default for EvalSpec {
+    fn default() -> Self {
+        Self { probes: 16 }
+    }
+}
+
+/// A full experiment declaration: datagen → split → train → eval →
+/// export, reproducible from this value alone. See
+/// [`Experiment`](super::Experiment) for the driver and
+/// `examples/specs/quickstart.json` for the JSON schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentSpec {
+    /// Run label; becomes the served variant label of the exported run.
+    pub name: String,
+    /// Network architecture / artifact variant (`small`, `cfg_a`, ...).
+    pub variant: String,
+    /// Golden block override (default: the variant's canonical block).
+    pub block: Option<BlockConfig>,
+    /// Non-ideality scenario override applied to the block (mirrors
+    /// `api::VariantDef::nonideal`).
+    pub nonideal: Option<NonIdealSpec>,
+    pub data: DataSpec,
+    pub train: TrainSpec,
+    pub eval: EvalSpec,
+}
+
+impl ExperimentSpec {
+    /// A spec with every knob at its default.
+    pub fn new(name: impl Into<String>, variant: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            variant: variant.into(),
+            block: None,
+            nonideal: None,
+            data: DataSpec::default(),
+            train: TrainSpec::default(),
+            eval: EvalSpec::default(),
+        }
+    }
+
+    /// The golden block this run simulates: the explicit block or the
+    /// variant's canonical one, with the `nonideal` override applied.
+    pub fn resolved_block(&self) -> Result<BlockConfig> {
+        let mut block = match &self.block {
+            Some(b) => b.clone(),
+            None => block_for(&self.variant)
+                .with_context(|| format!("spec '{}': no canonical block", self.name))?,
+        };
+        if let Some(spec) = self.nonideal {
+            block.nonideal = spec;
+        }
+        Ok(block)
+    }
+
+    /// The datagen job this spec describes.
+    pub fn gen_config(&self) -> Result<GenConfig> {
+        let mut cfg = GenConfig::new(self.resolved_block()?, self.data.n_samples, self.data.seed);
+        cfg.dist = self.data.dist;
+        Ok(cfg)
+    }
+
+    /// The training configuration this spec describes (checkpoint path is
+    /// the driver's concern).
+    pub fn train_config(&self) -> TrainConfig {
+        let mut cfg = TrainConfig::new(&self.variant, self.train.epochs);
+        cfg.lr = self.train.lr.clone();
+        cfg.seed = self.train.seed;
+        cfg.batch = self.train.batch;
+        cfg.eval_every = self.train.eval_every;
+        cfg
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "spec: name must be non-empty");
+        anyhow::ensure!(!self.variant.is_empty(), "spec: variant must be non-empty");
+        anyhow::ensure!(self.data.n_samples >= 2, "spec: need at least 2 samples");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.data.test_frac),
+            "spec: test_frac must be in [0, 1), got {}",
+            self.data.test_frac
+        );
+        // Fail the degenerate split here, before the (dominant-cost)
+        // datagen stage would run only to die at Dataset::split.
+        let n_test = (self.data.n_samples as f64 * self.data.test_frac).round() as usize;
+        anyhow::ensure!(
+            n_test > 0 && n_test < self.data.n_samples,
+            "spec: test_frac {} of {} samples rounds to an {} test split \
+             (adjust test_frac or n_samples)",
+            self.data.test_frac,
+            self.data.n_samples,
+            if n_test == 0 { "empty" } else { "all-consuming" }
+        );
+        anyhow::ensure!(self.train.epochs >= 1, "spec: epochs must be >= 1");
+        anyhow::ensure!(self.train.batch >= 1, "spec: batch must be >= 1");
+        anyhow::ensure!(
+            self.train.lr.base.is_finite() && self.train.lr.base > 0.0,
+            "spec: lr base must be positive, got {}",
+            self.train.lr.base
+        );
+        if let Some(block) = &self.block {
+            // spec.json must reproduce the run: a block customized beyond
+            // the tunable fields `BlockConfig::to_json` records (device
+            // models in `cell.mos` / `periph`) would silently revert to
+            // defaults on reload, so reject it up front.
+            let roundtrip =
+                BlockConfig::from_json(&block.to_json()).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(
+                roundtrip == *block,
+                "spec '{}': block customizes device-model fields (cell.mos / periph) that \
+                 spec.json cannot record — only the fields BlockConfig::to_json serializes \
+                 may differ from their defaults",
+                self.name
+            );
+        }
+        let block = self.resolved_block()?;
+        block.validate().map_err(anyhow::Error::msg)?;
+        Ok(())
+    }
+
+    // ---- JSON round-trip -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("variant", Json::Str(self.variant.clone())),
+        ];
+        if let Some(block) = &self.block {
+            pairs.push(("block", block.to_json()));
+        }
+        if let Some(spec) = self.nonideal {
+            pairs.push(("nonideal", spec.to_json()));
+        }
+        pairs.push((
+            "data",
+            Json::obj(vec![
+                ("n_samples", Json::Num(self.data.n_samples as f64)),
+                ("dist", Json::Str(self.data.dist.tag())),
+                ("seed", Json::Num(self.data.seed as f64)),
+                ("test_frac", Json::Num(self.data.test_frac)),
+            ]),
+        ));
+        pairs.push((
+            "train",
+            Json::obj(vec![
+                ("backend", Json::Str(self.train.backend.as_str().into())),
+                ("epochs", Json::Num(self.train.epochs as f64)),
+                ("batch", Json::Num(self.train.batch as f64)),
+                (
+                    "lr",
+                    Json::obj(vec![
+                        ("base", Json::Num(self.train.lr.base)),
+                        ("halve_at", Json::arr_usize(&self.train.lr.halve_at)),
+                    ]),
+                ),
+                ("seed", Json::Num(self.train.seed as f64)),
+                ("eval_every", Json::Num(self.train.eval_every as f64)),
+            ]),
+        ));
+        pairs.push(("eval", Json::obj(vec![("probes", Json::Num(self.eval.probes as f64))])));
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Parse a spec back from [`Self::to_json`] output (or a hand-written
+    /// spec file). Only `name` and `variant` are required; every other key
+    /// defaults. `train.lr` may give `halve_at` explicitly or omit it for
+    /// the paper schedule scaled to `epochs`. The result is validated.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let str_req = |key: &str| -> Result<String> {
+            j.get(key)
+                .and_then(|v| v.as_str())
+                .map(String::from)
+                .ok_or_else(|| anyhow::anyhow!("spec: missing string '{key}'"))
+        };
+        let mut spec = Self::new(str_req("name")?, str_req("variant")?);
+        if let Some(b) = j.get("block") {
+            spec.block = Some(BlockConfig::from_json(b).map_err(anyhow::Error::msg)?);
+        }
+        if let Some(n) = j.get("nonideal") {
+            spec.nonideal = Some(NonIdealSpec::from_json(n).map_err(anyhow::Error::msg)?);
+        }
+
+        let usize_in = |section: &Json, key: &str, default: usize| -> Result<usize> {
+            match section.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("spec: '{key}' must be a non-negative integer")),
+            }
+        };
+        let f64_in = |section: &Json, key: &str, default: f64| -> Result<f64> {
+            match section.get(key) {
+                None => Ok(default),
+                Some(v) => {
+                    v.as_f64().ok_or_else(|| anyhow::anyhow!("spec: '{key}' must be a number"))
+                }
+            }
+        };
+
+        if let Some(data) = j.get("data") {
+            spec.data.n_samples = usize_in(data, "n_samples", spec.data.n_samples)?;
+            if let Some(d) = data.get("dist") {
+                let tag =
+                    d.as_str().ok_or_else(|| anyhow::anyhow!("spec: 'dist' must be a string"))?;
+                spec.data.dist = SampleDist::parse(tag).map_err(anyhow::Error::msg)?;
+            }
+            spec.data.seed = usize_in(data, "seed", spec.data.seed as usize)? as u64;
+            spec.data.test_frac = f64_in(data, "test_frac", spec.data.test_frac)?;
+        }
+        if let Some(train) = j.get("train") {
+            if let Some(b) = train.get("backend") {
+                let tag =
+                    b.as_str().ok_or_else(|| anyhow::anyhow!("spec: 'backend' must be a string"))?;
+                spec.train.backend = BackendKind::parse(tag)?;
+            }
+            spec.train.epochs = usize_in(train, "epochs", spec.train.epochs)?;
+            spec.train.batch = usize_in(train, "batch", spec.train.batch)?;
+            spec.train.seed = usize_in(train, "seed", spec.train.seed as usize)? as u64;
+            spec.train.eval_every = usize_in(train, "eval_every", spec.train.eval_every)?;
+            let base = match train.get("lr") {
+                Some(lr) => f64_in(lr, "base", 1e-3)?,
+                None => 1e-3,
+            };
+            let halve_at = train.get("lr").and_then(|lr| lr.get("halve_at")).map(|h| {
+                h.as_usize_vec()
+                    .ok_or_else(|| anyhow::anyhow!("spec: 'halve_at' must be an integer array"))
+            });
+            spec.train.lr = match halve_at {
+                Some(h) => LrSchedule { base, halve_at: h? },
+                None => LrSchedule::paper_scaled(base, spec.train.epochs),
+            };
+        }
+        if let Some(eval) = j.get("eval") {
+            spec.eval.probes = usize_in(eval, "probes", spec.eval.probes)?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse from spec-file text.
+    pub fn from_str(text: &str) -> Result<Self> {
+        Self::from_json(&json_parse(text).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate_and_roundtrip() {
+        let spec = ExperimentSpec::new("exp", "small");
+        spec.validate().unwrap();
+        let back = ExperimentSpec::from_str(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.resolved_block().unwrap(), BlockConfig::small());
+    }
+
+    #[test]
+    fn overrides_roundtrip() {
+        let mut spec = ExperimentSpec::new("harsh_run", "small");
+        spec.block = Some(BlockConfig::with_dims(1, 8, 2));
+        spec.nonideal = Some(NonIdealSpec::preset("harsh").unwrap());
+        spec.data = DataSpec {
+            n_samples: 64,
+            dist: SampleDist::SparseActs { p: 0.25 },
+            seed: 7,
+            test_frac: 0.25,
+        };
+        spec.train = TrainSpec {
+            backend: BackendKind::Pjrt,
+            epochs: 12,
+            batch: 8,
+            lr: LrSchedule { base: 0.02, halve_at: vec![6, 9] },
+            seed: 3,
+            eval_every: 4,
+        };
+        spec.eval.probes = 5;
+        let back = ExperimentSpec::from_str(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back, spec);
+        // The nonideal override lands on the resolved block.
+        assert_eq!(back.resolved_block().unwrap().nonideal, spec.nonideal.unwrap());
+        // Derived configs agree with the spec.
+        let gen = back.gen_config().unwrap();
+        assert_eq!(gen.n_samples, 64);
+        assert_eq!(gen.seed, 7);
+        let train = back.train_config();
+        assert_eq!(train.epochs, 12);
+        assert_eq!(train.batch, 8);
+        assert_eq!(train.lr.halve_at, vec![6, 9]);
+    }
+
+    #[test]
+    fn minimal_json_defaults_everything_else() {
+        let spec = ExperimentSpec::from_str(r#"{"name": "q", "variant": "small"}"#).unwrap();
+        assert_eq!(spec, ExperimentSpec::new("q", "small"));
+        // lr defaults to the paper schedule scaled to the spec's epochs.
+        let spec =
+            ExperimentSpec::from_str(r#"{"name": "q", "variant": "small", "train": {"epochs": 8}}"#)
+                .unwrap();
+        assert_eq!(spec.train.lr, LrSchedule::paper_scaled(1e-3, 8));
+    }
+
+    #[test]
+    fn rejects_block_that_spec_json_cannot_record() {
+        // A custom access-transistor model is real in memory but not
+        // serializable; validate must refuse rather than silently export a
+        // spec.json that reloads with default device models.
+        let mut spec = ExperimentSpec::new("x", "small");
+        let mut block = BlockConfig::small();
+        block.cell.mos.vth = 0.7;
+        spec.block = Some(block);
+        let err = spec.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("cannot record"), "{err:#}");
+        // Tunable-field customizations are fine.
+        let mut spec = ExperimentSpec::new("x", "small");
+        let mut block = BlockConfig::small();
+        block.v_read = 0.3;
+        block.cell.g_max = 2e-4;
+        spec.block = Some(block);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(ExperimentSpec::from_str("{}").is_err());
+        assert!(ExperimentSpec::from_str(r#"{"name": "", "variant": "small"}"#).is_err());
+        assert!(ExperimentSpec::from_str(r#"{"name": "q", "variant": "nope"}"#).is_err());
+        assert!(ExperimentSpec::from_str(
+            r#"{"name": "q", "variant": "small", "data": {"test_frac": 1.5}}"#
+        )
+        .is_err());
+        assert!(ExperimentSpec::from_str(
+            r#"{"name": "q", "variant": "small", "train": {"backend": "tpu"}}"#
+        )
+        .is_err());
+        // Validation catches a block/arch geometry conflict at run time,
+        // not parse time — but a structurally bad block fails here.
+        assert!(ExperimentSpec::from_str(
+            r#"{"name": "q", "variant": "small", "block": {"tiles": 1, "rows": 2, "cols": 3}}"#
+        )
+        .is_err());
+    }
+}

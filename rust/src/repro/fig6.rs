@@ -36,7 +36,7 @@ pub fn run(store: &ArtifactStore, work: &Path, opts: &Fig6Options) -> Result<Exp
     let mut monotone = true;
     for &n in &opts.sizes {
         let sub = master.head(n.min(master.n));
-        let (train_ds, test_ds) = sub.split(0.1, opts.preset.seed ^ 0xA5);
+        let (train_ds, test_ds) = sub.split(0.1, opts.preset.seed ^ 0xA5)?;
         let mut cfg = TrainConfig::new(&opts.variant, opts.preset.epochs);
         cfg.lr = LrSchedule::paper_scaled(opts.preset.lr, opts.preset.epochs);
         cfg.seed = opts.preset.seed;

@@ -65,7 +65,7 @@ pub fn train_cached(
     verbose: bool,
 ) -> Result<(ModelState, Option<TrainReport>, Dataset, Dataset)> {
     let ds = dataset_cached(work, variant, preset.n_samples, preset.seed)?;
-    let (train_ds, test_ds) = ds.split(0.1, preset.seed ^ 0xA5);
+    let (train_ds, test_ds) = ds.split(0.1, preset.seed ^ 0xA5)?;
     let ckpt = work
         .join("ckpt")
         .join(format!("{variant}_{}_n{}_e{}.ckpt", preset.name, preset.n_samples, preset.epochs));

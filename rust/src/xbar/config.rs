@@ -8,6 +8,7 @@
 //! `cols / 2` voltage outputs (Table 1: W=2 -> 1 MAC, W=8 -> 4 MACs).
 
 use crate::spice::{DiodeModel, MosModel};
+use crate::util::Json;
 
 use super::nonideal::NonIdealSpec;
 
@@ -141,12 +142,72 @@ impl BlockConfig {
         2 * self.n_cells()
     }
 
+    /// JSON form of the *tunable* block parameters: geometry, rails,
+    /// timing, conductance window, RRAM nonlinearity, and the non-ideality
+    /// scenario — everything an `ExperimentSpec` can vary. The device
+    /// models themselves (`cell.mos`, `periph`) stay at their defaults
+    /// through a round-trip; [`Self::from_json`] is the inverse.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tiles", Json::Num(self.tiles as f64)),
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("v_read", Json::Num(self.v_read)),
+            ("v_gate_max", Json::Num(self.v_gate_max)),
+            ("t_sense", Json::Num(self.t_sense)),
+            ("h", Json::Num(self.h)),
+            ("rram_alpha", Json::Num(self.cell.rram_alpha)),
+            ("g_min", Json::Num(self.cell.g_min)),
+            ("g_max", Json::Num(self.cell.g_max)),
+            ("nonideal", self.nonideal.to_json()),
+        ])
+    }
+
+    /// Rebuild a block from [`Self::to_json`] output. Geometry keys
+    /// (`tiles`, `rows`, `cols`) are required; every other key falls back
+    /// to the [`Self::with_dims`] default, so hand-written specs can stay
+    /// minimal. The result is validated.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let dim = |key: &str| -> Result<usize, String> {
+            j.get(key)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("block: missing integer '{key}'"))
+        };
+        let mut cfg = Self::with_dims(dim("tiles")?, dim("rows")?, dim("cols")?);
+        let num = |key: &str, dst: &mut f64| -> Result<(), String> {
+            if let Some(v) = j.get(key) {
+                *dst = v.as_f64().ok_or_else(|| format!("block: '{key}' must be a number"))?;
+            }
+            Ok(())
+        };
+        num("v_read", &mut cfg.v_read)?;
+        num("v_gate_max", &mut cfg.v_gate_max)?;
+        num("t_sense", &mut cfg.t_sense)?;
+        num("h", &mut cfg.h)?;
+        num("rram_alpha", &mut cfg.cell.rram_alpha)?;
+        num("g_min", &mut cfg.cell.g_min)?;
+        num("g_max", &mut cfg.cell.g_max)?;
+        if let Some(spec) = j.get("nonideal") {
+            cfg.nonideal = NonIdealSpec::from_json(spec)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         if self.cols == 0 || self.cols % 2 != 0 {
             return Err(format!("cols must be even and nonzero, got {}", self.cols));
         }
         if self.tiles == 0 || self.rows == 0 {
             return Err("tiles and rows must be nonzero".into());
+        }
+        // v_gate_max is the feature-normalization divisor; zero or negative
+        // turns every feature into NaN/negated garbage far downstream.
+        if !(self.v_gate_max > 0.0) || !self.v_gate_max.is_finite() {
+            return Err(format!("v_gate_max must be finite and > 0, got {}", self.v_gate_max));
+        }
+        if !self.v_read.is_finite() {
+            return Err(format!("v_read must be finite, got {}", self.v_read));
         }
         if self.cell.g_min <= 0.0 || self.cell.g_max <= self.cell.g_min {
             return Err("need 0 < g_min < g_max".into());
@@ -278,6 +339,47 @@ mod tests {
             assert!((back.v[k] - x.v[k]).abs() < 1e-6, "v[{k}]");
             assert!((back.g[k] - x.g[k]).abs() < 1e-9, "g[{k}]");
         }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_tunables() {
+        let mut cfg = BlockConfig::with_dims(3, 8, 4);
+        cfg.v_read = 0.25;
+        cfg.cell.g_max = 2e-4;
+        cfg.nonideal = NonIdealSpec::preset("mild").unwrap();
+        let text = cfg.to_json().to_string_pretty();
+        let back = BlockConfig::from_json(&crate::util::json_parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        // Minimal spec: geometry only, defaults everywhere else.
+        let minimal =
+            BlockConfig::from_json(&crate::util::json_parse(r#"{"tiles":1,"rows":4,"cols":2}"#).unwrap())
+                .unwrap();
+        assert_eq!(minimal, BlockConfig::with_dims(1, 4, 2));
+        // Missing geometry and invalid values are rejected.
+        assert!(BlockConfig::from_json(&crate::util::json_parse(r#"{"rows":4}"#).unwrap()).is_err());
+        assert!(BlockConfig::from_json(
+            &crate::util::json_parse(r#"{"tiles":1,"rows":4,"cols":3}"#).unwrap()
+        )
+        .is_err());
+        // A zero normalization rail would NaN every feature downstream.
+        assert!(BlockConfig::from_json(
+            &crate::util::json_parse(r#"{"tiles":1,"rows":4,"cols":2,"v_gate_max":0}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_rails() {
+        let mut bad = BlockConfig::small();
+        bad.v_gate_max = 0.0;
+        assert!(bad.validate().is_err());
+        bad.v_gate_max = -1.0;
+        assert!(bad.validate().is_err());
+        bad.v_gate_max = f64::NAN;
+        assert!(bad.validate().is_err());
+        let mut bad = BlockConfig::small();
+        bad.v_read = f64::INFINITY;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -51,7 +51,7 @@ fn train_on_real_spice_data_reduces_loss() {
     let Some(dir) = artifact_dir() else { return };
     let store = ArtifactStore::open(&dir).unwrap();
     let ds = generate(&GenConfig::new(block_for("small").unwrap(), 512, 5));
-    let (train_ds, test_ds) = ds.split(0.125, 5);
+    let (train_ds, test_ds) = ds.split(0.125, 5).unwrap();
     let mut cfg = TrainConfig::new("small", 8);
     cfg.lr = LrSchedule { base: 2e-3, halve_at: vec![6] };
     cfg.eval_every = 0;

@@ -1,0 +1,226 @@
+//! End-to-end pipeline guarantees: a declarative `ExperimentSpec` drives
+//! datagen → split → train → eval → export with zero compiled artifacts,
+//! the exported run directory is self-describing, and a `Deployment`
+//! built from it serves MACs pinned against the direct `NativeEngine`
+//! and golden-block answers.
+
+use std::path::{Path, PathBuf};
+
+use semulator::api::{Deployment, MacRequest, VariantDef};
+use semulator::coordinator::Policy;
+use semulator::datagen::Dataset;
+use semulator::infer::{Arch, BackendKind, NativeEngine};
+use semulator::model::ModelState;
+use semulator::pipeline::{Experiment, ExperimentSpec, RunOptions};
+use semulator::util::json_parse;
+use semulator::xbar::{AnalogBlock, CellInputs, NonIdealSpec};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sempipe_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A seconds-scale spec for the `small` variant.
+fn fast_spec(name: &str) -> ExperimentSpec {
+    let mut spec = ExperimentSpec::new(name, "small");
+    spec.data.n_samples = 96;
+    spec.data.test_frac = 0.125; // 12 held out
+    spec.train.epochs = 20;
+    spec.train.batch = 16;
+    spec.train.lr = semulator::coordinator::LrSchedule::paper_scaled(5e-3, 20);
+    spec.train.eval_every = 5;
+    spec.eval.probes = 4;
+    spec
+}
+
+#[test]
+fn checked_in_quickstart_spec_parses_and_roundtrips() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/specs/quickstart.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let spec = ExperimentSpec::from_str(&text)
+        .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+    // The documented schema round-trips through to_json exactly.
+    let back = ExperimentSpec::from_str(&spec.to_json().to_string_pretty()).unwrap();
+    assert_eq!(back, spec);
+    // The quickstart must stay artifact-free and seconds-scale (it gates
+    // CI's experiment-smoke job).
+    assert_eq!(spec.train.backend, BackendKind::Native);
+    assert!(spec.data.n_samples <= 2048, "quickstart grew: {}", spec.data.n_samples);
+    assert!(spec.train.epochs <= 100, "quickstart grew: {}", spec.train.epochs);
+    assert!(spec.eval.probes > 0, "quickstart must exercise the serve probe");
+}
+
+#[test]
+fn experiment_run_exports_servable_run_dir() {
+    let root = tmp_dir("ideal");
+    let run_dir = root.join("run");
+    let no_artifacts = root.join("no-artifacts");
+    let opts = RunOptions::new(&run_dir).artifact_dir(&no_artifacts);
+
+    let mut epochs_seen = 0usize;
+    let summary = Experiment::new(fast_spec("itest"))
+        .unwrap()
+        .run(&opts, &mut |_| epochs_seen += 1)
+        .unwrap();
+
+    // The run trained: every epoch logged, loss decreased, steps add up
+    // (84 train samples / batch 16 -> 6 steps per epoch).
+    assert_eq!(epochs_seen, 20);
+    let report = &summary.report;
+    assert_eq!(report.history.len(), 20);
+    assert_eq!(report.steps, 20 * 6);
+    assert!(report.final_train_loss.is_finite());
+    assert!(
+        report.final_train_loss < report.history[0].train_loss,
+        "loss did not decrease: {} -> {}",
+        report.history[0].train_loss,
+        report.final_train_loss
+    );
+    // Offline: the PJRT cross-check records why it was skipped.
+    assert!(summary.pjrt_check.is_none());
+    assert!(summary.pjrt_skipped.as_deref().unwrap().contains("no artifacts"));
+    let probe = summary.probe.as_ref().expect("probe stage ran");
+    assert_eq!(probe.n, 4);
+    assert!(probe.emulator_mae.is_finite() && probe.golden_mae.is_finite());
+
+    // The run directory is self-describing.
+    for file in ["spec.json", "data.bin", "data.meta.json", "ckpt.ckpt", "report.json", "history.csv", "eval.json"] {
+        assert!(run_dir.join(file).is_file(), "missing {file}");
+    }
+    let eval = json_parse(&std::fs::read_to_string(run_dir.join("eval.json")).unwrap()).unwrap();
+    assert!(eval.get("native").unwrap().get("mae").unwrap().as_f64().is_some());
+    assert!(eval.get("pjrt_skipped").is_some());
+    assert_eq!(eval.get("probes").unwrap().get("n").unwrap().as_usize(), Some(4));
+    let report_json =
+        json_parse(&std::fs::read_to_string(run_dir.join("report.json")).unwrap()).unwrap();
+    assert_eq!(report_json.get("history").unwrap().as_arr().unwrap().len(), 20);
+
+    // ... and servable: a Deployment built from the exported files answers
+    // submit with MACs pinned to the direct NativeEngine on the trained
+    // checkpoint, and the golden route to the golden block itself.
+    let def = VariantDef::from_run_dir_with(&run_dir, &no_artifacts).unwrap();
+    assert_eq!(def.name(), "itest");
+    assert_eq!(def.arch_name(), "small");
+    let dep = Deployment::builder()
+        .artifact_dir(&no_artifacts)
+        .variant(def)
+        .policy(Policy::Emulator)
+        .build()
+        .unwrap();
+    let block = dep.block_config("itest").unwrap().clone();
+
+    let meta = Arch::for_variant("small").unwrap().to_meta();
+    let state = ModelState::load(&run_dir.join("ckpt.ckpt"), &meta).unwrap();
+    let engine = NativeEngine::from_meta(&meta, &state).unwrap();
+    let golden_block = AnalogBlock::new(block.clone()).unwrap();
+
+    let ds = Dataset::load(&run_dir.join("data.bin")).unwrap();
+    assert_eq!(ds.n, 96);
+    for i in 0..3 {
+        let x = CellInputs::from_normalized(&block, ds.features(i));
+        let resp = dep.submit(&MacRequest::new("itest", x.clone())).unwrap();
+        let want = engine.forward(&x.normalized(&block)).unwrap();
+        assert_eq!(resp.outputs.len(), want.len());
+        for (got, w) in resp.outputs.iter().zip(&want) {
+            assert!((got - *w as f64).abs() < 1e-6, "row {i}: served {got} vs engine {w}");
+        }
+        let gold = dep.submit(&MacRequest::new("itest", x.clone()).golden()).unwrap();
+        let want_gold = golden_block.simulate(&x);
+        for (got, w) in gold.outputs.iter().zip(&want_gold) {
+            assert!((got - w).abs() < 1e-12, "row {i}: golden route {got} vs block {w}");
+        }
+    }
+    drop(dep);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn experiment_run_mild_scenario_threads_nonideal_end_to_end() {
+    let root = tmp_dir("mild");
+    let run_dir = root.join("run");
+    let no_artifacts = root.join("no-artifacts");
+    let opts = RunOptions::new(&run_dir).artifact_dir(&no_artifacts);
+
+    let mut spec = fast_spec("itest_mild");
+    spec.data.n_samples = 64;
+    spec.train.epochs = 6;
+    spec.eval.probes = 2;
+    let mut nonideal = NonIdealSpec::preset("mild").unwrap();
+    nonideal.seed = 11;
+    spec.nonideal = Some(nonideal);
+
+    let summary = Experiment::new(spec).unwrap().run(&opts, &mut |_| {}).unwrap();
+    assert!(summary.report.final_train_loss.is_finite());
+    assert_eq!(summary.probe.as_ref().unwrap().n, 2);
+
+    // Scenario provenance survives into both the spec and dataset meta.
+    let spec_back = ExperimentSpec::from_str(
+        &std::fs::read_to_string(run_dir.join("spec.json")).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(spec_back.nonideal, Some(nonideal));
+    let ds_meta =
+        json_parse(&std::fs::read_to_string(run_dir.join("data.meta.json")).unwrap()).unwrap();
+    let recorded = NonIdealSpec::from_json(ds_meta.get("nonideal").unwrap()).unwrap();
+    assert_eq!(recorded, nonideal);
+
+    // The loaded deployment variant carries the perturbed golden block.
+    let def = VariantDef::from_run_dir_with(&run_dir, &no_artifacts).unwrap();
+    let dep = Deployment::builder()
+        .artifact_dir(&no_artifacts)
+        .variant(def)
+        .policy(Policy::Emulator)
+        .build()
+        .unwrap();
+    assert_eq!(dep.block_config("itest_mild").unwrap().nonideal, nonideal);
+    drop(dep);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn degenerate_split_fails_loudly_and_early() {
+    // A spec whose test_frac rounds to an empty test set must be rejected
+    // at validation time — before any datagen runs (the old
+    // Dataset::split silently returned an empty split that only surfaced
+    // as NaN losses downstream; Dataset::split's own guard is regression-
+    // tested in datagen::dataset).
+    let mut spec = fast_spec("bad_split");
+    spec.data.n_samples = 8;
+    spec.data.test_frac = 0.01; // rounds to 0 of 8
+    spec.train.epochs = 1;
+    let err = Experiment::new(spec).unwrap_err();
+    assert!(format!("{err:#}").contains("empty"), "{err:#}");
+    // The all-consuming direction is caught too.
+    let mut spec = fast_spec("bad_split_full");
+    spec.data.n_samples = 8;
+    spec.data.test_frac = 0.97; // rounds to 8 of 8
+    let err = Experiment::new(spec).unwrap_err();
+    assert!(format!("{err:#}").contains("all-consuming"), "{err:#}");
+}
+
+#[test]
+fn rerun_never_leaves_a_servable_inconsistent_run_dir() {
+    // spec.json is removed up front and rewritten only after the
+    // checkpoint exists, so a rerun that dies mid-way leaves a directory
+    // that from_run_dir refuses (no stale new-spec over old-ckpt mix).
+    let root = tmp_dir("rerun");
+    let run_dir = root.join("run");
+    let no_artifacts = root.join("na");
+    let opts = RunOptions::new(&run_dir).artifact_dir(&no_artifacts);
+    let mut spec = fast_spec("rerun");
+    spec.data.n_samples = 64;
+    spec.train.epochs = 2;
+    spec.eval.probes = 1;
+    Experiment::new(spec.clone()).unwrap().run(&opts, &mut |_| {}).unwrap();
+    assert!(VariantDef::from_run_dir_with(&run_dir, &no_artifacts).is_ok());
+    // Simulate a rerun that died before training: the stale spec.json
+    // must already be gone by datagen time — emulate the cleanup contract
+    // by checking a fresh successful rerun still loads, and that a dir
+    // with spec.json removed is refused.
+    std::fs::remove_file(run_dir.join("spec.json")).unwrap();
+    assert!(VariantDef::from_run_dir_with(&run_dir, &no_artifacts).is_err());
+    Experiment::new(spec).unwrap().run(&opts, &mut |_| {}).unwrap();
+    assert!(VariantDef::from_run_dir_with(&run_dir, &no_artifacts).is_ok());
+    std::fs::remove_dir_all(&root).ok();
+}

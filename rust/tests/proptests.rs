@@ -3,7 +3,7 @@
 //! crate's own RNG across many cases; failures print the case seed).
 
 use semulator::datagen::{Dataset, SampleDist};
-use semulator::infer::{reference, Arch, NativeEngine};
+use semulator::infer::{reference, Arch, Layer, NativeEngine, NativeTrainer};
 use semulator::model::ModelState;
 use semulator::runtime::PjrtBackend;
 use semulator::spice::matrix::{solve, DMat};
@@ -334,6 +334,107 @@ fn prop_fast_ladder_equivalence_random_nonideal() {
                 cfg.input_shape(),
                 cfg.nonideal.r_wire
             );
+        }
+    }
+}
+
+/// A stack containing every layer kind in both activation flavors —
+/// conv+CELU, conv linear, flatten, dense+CELU, dense linear — small
+/// enough (51 parameters) for exhaustive finite differences.
+fn all_kinds_arch() -> Arch {
+    let arch = Arch {
+        name: "allkinds".into(),
+        input: [2, 1, 2, 2],
+        outputs: 2,
+        layers: vec![
+            Layer::Conv { cin: 2, cout: 3, k: [1, 2, 1], s: [1, 2, 1], celu: true },
+            Layer::Conv { cin: 3, cout: 2, k: [1, 1, 2], s: [1, 1, 1], celu: false },
+            Layer::Flatten,
+            Layer::Dense { cin: 2, cout: 4, celu: true },
+            Layer::Dense { cin: 4, cout: 2, celu: false },
+        ],
+    };
+    arch.validate().unwrap();
+    arch
+}
+
+/// Central finite difference of the trainer's loss along one parameter.
+fn fd_grad(
+    trainer: &NativeTrainer,
+    state: &ModelState,
+    xb: &[f32],
+    yb: &[f32],
+    ai: usize,
+    j: usize,
+    h: f32,
+) -> f64 {
+    let mut plus = state.clone();
+    plus.arrays[ai][j] += h;
+    let mut minus = state.clone();
+    minus.arrays[ai][j] -= h;
+    (trainer.loss(&plus, xb, yb).unwrap() - trainer.loss(&minus, xb, yb).unwrap())
+        / (2.0 * h as f64)
+}
+
+/// Property: every analytic parameter gradient of the native trainer
+/// matches central finite differences of its own loss, for a stack that
+/// contains every `Arch` layer kind (conv ± CELU, flatten, dense ± CELU).
+/// Exhaustive over all 51 parameters per case.
+#[test]
+fn prop_native_trainer_grads_match_fd_all_layer_kinds() {
+    let trainer = NativeTrainer::new(all_kinds_arch()).unwrap();
+    let meta = trainer.meta().clone();
+    for case in 0..8u64 {
+        let mut rng = Rng::seed_from(12_000 + case);
+        let state = ModelState::init(&meta, 300 + case);
+        let batch = 1 + rng.below(4);
+        let xb: Vec<f32> =
+            (0..batch * meta.n_features()).map(|_| rng.range(-0.3, 1.2) as f32).collect();
+        let yb: Vec<f32> =
+            (0..batch * meta.outputs).map(|_| rng.range(-0.3, 0.3) as f32).collect();
+        let (loss, grads) = trainer.loss_and_grads(&state, &xb, &yb).unwrap();
+        assert!(loss.is_finite() && loss >= 0.0, "case {case}: loss {loss}");
+        for (ai, grad) in grads.iter().enumerate() {
+            for (j, &an) in grad.iter().enumerate() {
+                let fd = fd_grad(&trainer, &state, &xb, &yb, ai, j, 3e-3);
+                let tol = 5e-3 + 5e-2 * (an.abs() as f64).max(fd.abs());
+                assert!(
+                    ((an as f64) - fd).abs() <= tol,
+                    "case {case} array {ai} ('{}') param {j}: analytic {an} vs fd {fd}",
+                    state.specs[ai].name
+                );
+            }
+        }
+    }
+}
+
+/// Property: gradients also hold on every *built-in* architecture
+/// (subsampled — the builtins have thousands of parameters).
+#[test]
+fn prop_native_trainer_grads_match_fd_builtin_variants() {
+    for (vi, variant) in ["small", "cfg_a", "cfg_b"].into_iter().enumerate() {
+        let arch = Arch::for_variant(variant).unwrap();
+        let trainer = NativeTrainer::new(arch).unwrap();
+        let meta = trainer.meta().clone();
+        let mut rng = Rng::seed_from(13_000 + vi as u64);
+        let state = ModelState::init(&meta, 41 + vi as u64);
+        let xb: Vec<f32> =
+            (0..2 * meta.n_features()).map(|_| rng.range(-0.2, 1.2) as f32).collect();
+        let yb: Vec<f32> = (0..2 * meta.outputs).map(|_| rng.range(-0.2, 0.2) as f32).collect();
+        let (_, grads) = trainer.loss_and_grads(&state, &xb, &yb).unwrap();
+        // Every parameter array, a handful of random entries each.
+        for (ai, grad) in grads.iter().enumerate() {
+            for _ in 0..5 {
+                let j = rng.below(grad.len());
+                let an = grad[j] as f64;
+                let fd = fd_grad(&trainer, &state, &xb, &yb, ai, j, 3e-3);
+                let tol = 5e-3 + 5e-2 * an.abs().max(fd.abs());
+                assert!(
+                    (an - fd).abs() <= tol,
+                    "{variant} array {ai} ('{}') param {j}: analytic {an} vs fd {fd}",
+                    state.specs[ai].name
+                );
+            }
         }
     }
 }
