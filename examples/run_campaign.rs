@@ -1,0 +1,66 @@
+//! The scenario-sweep loop in one file: load the checked-in quickstart
+//! campaign (non-ideality x dataset seed, 2x2), shrink it to demo scale,
+//! run the whole grid across worker threads (artifact-free), print the
+//! robustness matrix, then serve the leaderboard as one multi-variant
+//! deployment via `DeploymentBuilder::from_campaign`.
+//!
+//! ```sh
+//! cargo run --release --example run_campaign
+//! # the CLI equivalent of the full-size sweep:
+//! cargo run --release -p semulator -- sweep --spec examples/specs/sweep_quickstart.json --workers 2
+//! ```
+
+use semulator::api::{DeploymentBuilder, MacRequest};
+use semulator::pipeline::{Campaign, CampaignOptions, CampaignSpec, RunStatus};
+use semulator::xbar::CellInputs;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A campaign spec: one base ExperimentSpec plus sweep axes whose
+    //    cross-product is the grid (see examples/specs/sweep_quickstart.json
+    //    for the schema). Shrunk here so the demo finishes in seconds.
+    let mut spec = CampaignSpec::from_str(&std::fs::read_to_string(
+        "examples/specs/sweep_quickstart.json",
+    )?)?;
+    spec.name = "demo_campaign".into();
+    spec.base.data.n_samples = 48;
+    spec.base.train.epochs = 2;
+
+    // 2. One call runs the whole grid: each point is a full
+    //    datagen -> train -> eval -> export experiment in its own run dir;
+    //    failures become report rows, and summary.json/summary.csv land in
+    //    the campaign directory. Re-running with .resume(true) would skip
+    //    every up-to-date run.
+    let campaign = Campaign::new(spec)?;
+    let opts = CampaignOptions::new("runs/campaigns/demo").workers(2);
+    let report = campaign.run(&opts)?;
+    println!("robustness matrix ({} runs, {} failed):", report.rows.len(), report.n_failed);
+    for row in &report.rows {
+        match (&row.status, &row.eval) {
+            (RunStatus::Failed(e), _) => println!("  {:<16} FAILED: {e}", row.name),
+            (_, Some(e)) => println!(
+                "  {:<16} mse {:.3e}  probe {:.4} mV",
+                row.name,
+                e.test_mse,
+                e.probe_emulator_mae.unwrap_or(f64::NAN) * 1e3
+            ),
+            _ => {}
+        }
+    }
+    println!("leaderboard: {}", report.leaderboard.join(" > "));
+
+    // 3. The campaign directory is a deployment artifact: serve the top-2
+    //    runs as named variants of one session and ask the best one a
+    //    question.
+    let dep = DeploymentBuilder::from_campaign(&report.campaign_dir, 2)?.build()?;
+    let best = report.leaderboard[0].clone();
+    let block = dep.block_config(&best)?.clone();
+    let resp = dep.submit(&MacRequest::new(best, CellInputs::zeros(&block)))?;
+    println!(
+        "served [{}] from {}: best answered {:?} via {:?}",
+        dep.variants().join(", "),
+        report.campaign_dir.display(),
+        resp.outputs,
+        resp.route
+    );
+    Ok(())
+}

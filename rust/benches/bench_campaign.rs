@@ -1,0 +1,88 @@
+//! Campaign-subsystem benchmarks, zero artifacts required: grid-expansion
+//! throughput on a large sweep (the pure bookkeeping a campaign pays per
+//! point), and wall-clock of a tiny real campaign at 1 vs 2 workers (the
+//! grid-level parallel speedup datagen+train actually see).
+
+use std::time::Duration;
+
+use semulator::pipeline::{Campaign, CampaignOptions, CampaignSpec, ExperimentSpec};
+use semulator::util::{BenchConfig, Bencher};
+use semulator::xbar::NonIdealSpec;
+
+fn big_grid() -> CampaignSpec {
+    // 3 x 4 x 4 x 2 x 2 = 192 points of pure expansion work.
+    let mut spec = CampaignSpec::new("bench_expand", ExperimentSpec::new("b", "small"));
+    spec.axes.nonideal = vec![
+        ("ideal".to_string(), NonIdealSpec::ideal()),
+        ("mild".to_string(), NonIdealSpec::preset("mild").unwrap()),
+        ("harsh".to_string(), NonIdealSpec::preset("harsh").unwrap()),
+    ];
+    spec.axes.data_seed = vec![0, 1, 2, 3];
+    spec.axes.train_seed = vec![0, 1, 2, 3];
+    spec.axes.batch = vec![16, 32];
+    spec.axes.epochs = vec![10, 20];
+    spec
+}
+
+fn tiny_campaign(tag: &str) -> CampaignSpec {
+    let mut base = ExperimentSpec::new("t", "small");
+    base.data.n_samples = 32;
+    base.data.test_frac = 0.25;
+    base.train.epochs = 1;
+    base.train.batch = 16;
+    base.eval.probes = 1;
+    let mut spec = CampaignSpec::new(format!("bench_{tag}"), base);
+    spec.axes.nonideal = vec![
+        ("ideal".to_string(), NonIdealSpec::ideal()),
+        ("mild".to_string(), NonIdealSpec::preset("mild").unwrap()),
+    ];
+    spec.axes.data_seed = vec![0, 1];
+    spec
+}
+
+fn main() {
+    println!("# bench_campaign — sweep expansion + parallel grid execution (native, no artifacts)");
+
+    let mut b = Bencher::new(BenchConfig {
+        warmup: Duration::from_millis(200),
+        measure: Duration::from_secs(2),
+        min_samples: 10,
+        max_samples: 2000,
+    });
+
+    // Pure grid bookkeeping: expansion + spec hashing of 192 points.
+    let grid = big_grid();
+    let n = grid.expand().unwrap().len();
+    b.bench("expand/192pt_grid", || grid.expand().unwrap().len());
+    b.bench("expand/192pt_hashes", || {
+        grid.expand()
+            .unwrap()
+            .iter()
+            .map(|p| semulator::pipeline::spec_hash(&p.spec).len())
+            .sum::<usize>()
+    });
+    println!("  -> {n} grid points per expansion");
+
+    // End-to-end 2x2 campaigns (each iteration runs 4 full experiments).
+    let mut slow = Bencher::new(BenchConfig {
+        warmup: Duration::from_millis(0),
+        measure: Duration::from_secs(4),
+        min_samples: 2,
+        max_samples: 20,
+    });
+    let root = std::env::temp_dir().join(format!("sembench_campaign_{}", std::process::id()));
+    for workers in [1usize, 2] {
+        let spec = tiny_campaign(&format!("w{workers}"));
+        let out = root.join(format!("w{workers}"));
+        let campaign = Campaign::new(spec).unwrap();
+        let opts =
+            CampaignOptions::new(&out).artifact_dir(root.join("no-artifacts")).workers(workers);
+        slow.bench(&format!("campaign/2x2_w{workers}"), || {
+            campaign.run(&opts).unwrap().rows.len()
+        });
+    }
+    if let Some(s) = slow.speedup("campaign/2x2_w1", "campaign/2x2_w2") {
+        println!("  -> grid-parallel speedup (2 workers over 1): {s:.2}x");
+    }
+    std::fs::remove_dir_all(&root).ok();
+}

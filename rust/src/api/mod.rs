@@ -218,6 +218,46 @@ impl Default for DeploymentBuilder {
 }
 
 impl DeploymentBuilder {
+    /// A builder pre-populated with the top-`k` leaderboard runs of a
+    /// finished `pipeline::Campaign` directory (the one `semulator sweep`
+    /// writes): each leaderboard entry's run directory loads as a named
+    /// variant via [`VariantDef::from_run_dir`], best eval MSE first.
+    /// `k = 0` serves the whole stored leaderboard (the campaign's
+    /// `top_k` best runs); asking for more than the summary recorded is
+    /// an error, not a silent cap. Chain further variants / policy /
+    /// backend before `build()`.
+    pub fn from_campaign(campaign_dir: impl AsRef<Path>, k: usize) -> Result<Self> {
+        Self::from_campaign_with(campaign_dir.as_ref(), k, Path::new("artifacts"))
+    }
+
+    /// [`Self::from_campaign`] with an explicit artifact directory.
+    pub fn from_campaign_with(campaign_dir: &Path, k: usize, artifact_dir: &Path) -> Result<Self> {
+        let leaderboard = crate::pipeline::load_leaderboard(campaign_dir)?;
+        anyhow::ensure!(
+            k <= leaderboard.len(),
+            "campaign {} recorded a {}-entry leaderboard (its spec's top_k); \
+             cannot serve the requested top {k} — re-run the sweep with a \
+             larger top_k or pass k = 0 for the whole stored leaderboard",
+            campaign_dir.display(),
+            leaderboard.len()
+        );
+        let take = if k == 0 { leaderboard.len() } else { k };
+        anyhow::ensure!(
+            take > 0,
+            "campaign {} has an empty leaderboard (every run failed?)",
+            campaign_dir.display()
+        );
+        let mut builder = Deployment::builder().artifact_dir(artifact_dir);
+        for name in &leaderboard[..take] {
+            let run = crate::pipeline::campaign_run_dir(campaign_dir, name);
+            builder = builder.variant(
+                VariantDef::from_run_dir_with(&run, artifact_dir)
+                    .with_context(|| format!("leaderboard run '{name}'"))?,
+            );
+        }
+        Ok(builder)
+    }
+
     /// Add one named variant (labels must be unique).
     pub fn variant(mut self, def: VariantDef) -> Self {
         self.variants.push(def);

@@ -19,11 +19,33 @@ pub struct GenConfig {
     pub n_samples: usize,
     pub seed: u64,
     pub n_workers: usize,
+    /// Extra provenance pairs merged into the `provenance` object of
+    /// `<out>.meta.json` (e.g. the owning experiment's `spec_hash` /
+    /// `campaign` label). Never affects the generated data.
+    pub provenance: Vec<(String, Json)>,
 }
 
 impl GenConfig {
     pub fn new(block: BlockConfig, n_samples: usize, seed: u64) -> Self {
-        Self { block, dist: SampleDist::UniformIid, n_samples, seed, n_workers: crate::util::default_workers() }
+        Self {
+            block,
+            dist: SampleDist::UniformIid,
+            n_samples,
+            seed,
+            n_workers: crate::util::default_workers(),
+            provenance: Vec::new(),
+        }
+    }
+
+    /// The worker count [`generate`] actually uses, mirroring
+    /// `parallel_map`'s chunking: requested workers are clamped to the
+    /// sample count, and static chunking may merge the tail (e.g. 6
+    /// samples on 4 requested workers run as 3 chunks of 2). Recorded in
+    /// `meta.json` provenance.
+    pub fn effective_workers(&self) -> usize {
+        let n = self.n_samples.max(1);
+        let chunk = n.div_ceil(self.n_workers.max(1).min(n));
+        n.div_ceil(chunk)
     }
 }
 
@@ -68,9 +90,18 @@ pub fn generate(cfg: &GenConfig) -> Dataset {
 }
 
 /// Generate and persist (`<path>` + `<path>.meta.json`).
+///
+/// The meta's `provenance` object records *how* the file was produced
+/// (the effective worker count, plus any [`GenConfig::provenance`] pairs
+/// such as the owning spec hash / campaign). It is the one part of the
+/// meta that may differ between byte-identical datasets — everything
+/// else, like the dataset bytes themselves, is worker-count independent.
 pub fn generate_to(cfg: &GenConfig, path: &Path) -> Result<Dataset> {
     let ds = generate(cfg);
     ds.save(path)?;
+    let mut provenance: std::collections::BTreeMap<String, Json> =
+        cfg.provenance.iter().cloned().collect();
+    provenance.insert("n_workers".to_string(), Json::Num(cfg.effective_workers() as f64));
     let meta = Json::obj(vec![
         ("kind", Json::Str("semulator-dataset".into())),
         ("n_samples", Json::Num(cfg.n_samples as f64)),
@@ -93,6 +124,7 @@ pub fn generate_to(cfg: &GenConfig, path: &Path) -> Result<Dataset> {
                 ("h", Json::Num(cfg.block.h)),
             ]),
         ),
+        ("provenance", Json::Obj(provenance)),
     ]);
     std::fs::write(path.with_extension("meta.json"), meta.to_string_pretty())?;
     Ok(ds)
@@ -157,6 +189,25 @@ mod tests {
         assert_eq!(dist, cfg.dist);
         let spec = NonIdealSpec::from_json(meta.get("nonideal").unwrap()).unwrap();
         assert_eq!(spec, cfg.block.nonideal);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn meta_records_effective_workers_and_custom_provenance() {
+        let dir = std::env::temp_dir().join(format!("semgen_prov_{}", std::process::id()));
+        let path = dir.join("ds.bin");
+        let mut cfg = GenConfig::new(BlockConfig::with_dims(1, 2, 2), 3, 1);
+        cfg.n_workers = 64; // clamped: one worker per sample at most
+        cfg.provenance = vec![("spec_hash".to_string(), Json::Str("deadbeef".into()))];
+        assert_eq!(cfg.effective_workers(), 3);
+        generate_to(&cfg, &path).unwrap();
+        let meta: Json = crate::util::json_parse(
+            &std::fs::read_to_string(path.with_extension("meta.json")).unwrap(),
+        )
+        .unwrap();
+        let prov = meta.get("provenance").unwrap();
+        assert_eq!(prov.get("n_workers").unwrap().as_usize(), Some(3));
+        assert_eq!(prov.get("spec_hash").unwrap().as_str(), Some("deadbeef"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

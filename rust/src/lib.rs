@@ -20,7 +20,10 @@
 //!   typed `MacRequest` / `MacResponse`, multi-variant sessions.
 //! * [`pipeline`] — **the offline-pipeline API**: declarative
 //!   `ExperimentSpec` run descriptions and `Experiment::run` driving
-//!   datagen → train → eval → export into servable run directories.
+//!   datagen → train → eval → export into servable run directories, and
+//!   `CampaignSpec` / `Campaign::run` expanding a base spec × sweep axes
+//!   into a parallel experiment grid with an aggregated robustness
+//!   report.
 //! * [`coordinator`] — the pluggable `Trainer` (PJRT Adam or native SGD),
 //!   dynamic batcher, golden/emulated request router, TCP front end,
 //!   metrics (the machinery `api` and `pipeline` wire).
@@ -122,6 +125,20 @@
 //! The CLI front end is `semulator run --spec spec.json`; direct
 //! `coordinator::trainer::train` calls are a deprecated surface kept for
 //! harnesses.
+//!
+//! ## Exploring many scenarios: campaigns
+//!
+//! One experiment is one point; the reason to emulate at all is to sweep
+//! the space. A [`pipeline::CampaignSpec`] is a base spec plus sweep
+//! axes (non-ideality scenarios, arch variants, seeds, sample
+//! distributions, training-recipe knobs); [`pipeline::Campaign::run`]
+//! expands the cross-product into named runs, executes them across
+//! worker threads (per-run failures become report rows; `resume` skips
+//! runs whose exported spec content-hashes to the grid point), and
+//! aggregates a `summary.json`/`summary.csv` robustness matrix whose
+//! leaderboard [`api::DeploymentBuilder::from_campaign`] serves as one
+//! multi-variant session. CLI: `semulator sweep --spec sweep.json
+//! [--workers N] [--resume]`, then `semulator serve --campaign DIR`.
 
 pub mod analytic;
 pub mod util;

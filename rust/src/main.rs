@@ -24,7 +24,9 @@ use semulator::coordinator::{
 use semulator::datagen::{generate_to, Dataset, GenConfig, SampleDist};
 use semulator::infer::{load_or_builtin_meta, Arch, BackendKind, BUILTIN_VARIANTS};
 use semulator::model::ModelState;
-use semulator::pipeline::{Experiment, ExperimentSpec, RunOptions};
+use semulator::pipeline::{
+    Campaign, CampaignOptions, CampaignSpec, Experiment, ExperimentSpec, RunOptions, RunStatus,
+};
 use semulator::repro;
 use semulator::runtime::ArtifactStore;
 use semulator::util::cli::Args;
@@ -64,6 +66,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("info") => cmd_info(args),
         Some("run") => cmd_run(args),
+        Some("sweep") => cmd_sweep(args),
         Some("datagen") => cmd_datagen(args),
         Some("train") => cmd_train(args),
         Some("eval") => cmd_eval(args),
@@ -77,14 +80,24 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: semulator <info|run|datagen|train|eval|serve|repro> [options]
+const USAGE: &str = "usage: semulator <info|run|sweep|datagen|train|eval|serve|repro> [options]
   info                                   list artifacts and variants
-  run      --spec FILE [--out DIR]       one-command pipeline: datagen ->
-           split -> train -> eval -> servable run directory, driven by a
-           declarative ExperimentSpec JSON (see examples/specs/). The
-           default 'native' train backend needs zero compiled artifacts.
+  run      --spec FILE [--out DIR] [--workers N]  one-command pipeline:
+           datagen -> split -> train -> eval -> servable run directory,
+           driven by a declarative ExperimentSpec JSON (see
+           examples/specs/). The default 'native' train backend needs
+           zero compiled artifacts.
+  sweep    --spec FILE [--out DIR] [--workers N] [--resume]  run a whole
+           CampaignSpec grid (base ExperimentSpec x sweep axes: nonideal,
+           arch, data_seed, train_seed, dist, n_samples, epochs, batch,
+           lr_base) across worker threads; per-run failures become report
+           rows instead of aborting, --resume skips runs whose directory
+           already holds this exact spec (matched by content hash), and
+           the campaign dir gains summary.json/summary.csv + a
+           leaderboard servable via `serve --campaign DIR`.
   datagen  --variant V --n N --out FILE  generate a SPICE dataset
            [--dist uniform|binary|sparseP] [--nonideal ideal|mild|harsh]
+           [--workers N]
   train    --variant V --data FILE       train SEMULATOR
            [--backend native|pjrt] [--batch N]  (native = artifact-free
            SGD backprop; pjrt = AOT Adam step, the default)
@@ -93,7 +106,9 @@ const USAGE: &str = "usage: semulator <info|run|datagen|train|eval|serve|repro> 
   serve    --variants SPEC[,SPEC...] --addr HOST:PORT  [--ckpt PATH | --fresh]
            [--policy emulator|golden|shadow] [--backend native|pjrt] [--cross-check]
            SPEC = label[=arch][+nonideal][@ckpt]; --variant V serves one;
-           checkpoint PATHs may be `semulator run` directories
+           checkpoint PATHs may be `semulator run` directories;
+           --campaign DIR [--top-k K] instead serves the leaderboard of a
+           finished `semulator sweep` campaign (K=0/default: all of it)
   repro    <table1|fig4|fig5|fig6|fig7|bound|speed|all> [--preset ci|small|paper]
 common:    --artifacts DIR (default artifacts)   --work DIR (default runs)
 run:       the run directory (default runs/experiments/<name>) is
@@ -167,7 +182,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             .map(String::from)
             .unwrap_or_else(|| format!("runs/experiments/{}", spec.name)),
     );
-    let opts = RunOptions::new(out).artifact_dir(artifact_dir(args));
+    let opts = RunOptions::new(out)
+        .artifact_dir(artifact_dir(args))
+        .workers(args.usize_or("workers", semulator::util::default_workers())?);
     let epochs = spec.train.epochs;
     let every = (epochs / 20).max(1);
     println!(
@@ -224,6 +241,73 @@ fn cmd_run(args: &Args) -> Result<()> {
         summary.run_dir.display(),
         exp.spec().name,
         summary.run_dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let spec_path = args.str_opt("spec").context("--spec FILE required")?;
+    let text = std::fs::read_to_string(spec_path)
+        .with_context(|| format!("read sweep spec {spec_path}"))?;
+    let spec = CampaignSpec::from_str(&text).with_context(|| format!("parse {spec_path}"))?;
+    let out = PathBuf::from(
+        args.str_opt("out")
+            .map(String::from)
+            .unwrap_or_else(|| format!("runs/campaigns/{}", spec.name)),
+    );
+    let opts = CampaignOptions::new(&out)
+        .artifact_dir(artifact_dir(args))
+        .workers(args.usize_or("workers", semulator::util::default_workers())?)
+        .resume(args.has("resume"));
+    let campaign = Campaign::new(spec)?;
+    let spec = campaign.spec();
+    println!(
+        "campaign '{}': {} runs over axes [{}] ({} workers{}) -> {}",
+        spec.name,
+        campaign.points().len(),
+        spec.axes.swept_axes().join(", "),
+        opts.workers,
+        if opts.resume { ", resume" } else { "" },
+        out.display()
+    );
+    let t0 = std::time::Instant::now();
+    let report = campaign.run(&opts)?;
+    for row in &report.rows {
+        match (&row.status, &row.eval) {
+            (RunStatus::Failed(err), _) => println!("  {:<28} FAILED: {err}", row.name),
+            (status, Some(e)) => println!(
+                "  {:<28} {:<9} mse {:.3e}  mae {:.4}mV  probe {}",
+                row.name,
+                status.tag(),
+                e.test_mse,
+                e.test_mae * 1e3,
+                e.probe_emulator_mae
+                    .map(|v| format!("{:.4}mV", v * 1e3))
+                    .unwrap_or_else(|| "-".into()),
+            ),
+            (status, None) => println!("  {:<28} {}", row.name, status.tag()),
+        }
+    }
+    println!(
+        "done in {:.1}s: {}/{} runs ok ({} failed); leaderboard: {}",
+        t0.elapsed().as_secs_f64(),
+        report.rows.len() - report.n_failed,
+        report.rows.len(),
+        report.n_failed,
+        report.leaderboard.join(" > ")
+    );
+    println!(
+        "summary: {0}/summary.json + summary.csv; serve the leaderboard: \
+         semulator serve --campaign {0}",
+        report.campaign_dir.display()
+    );
+    // Per-run failure isolation keeps a partly-failed grid exit-0 (the
+    // report is the product), but an all-failed campaign produced nothing
+    // servable — scripts gating on the exit code must see that.
+    anyhow::ensure!(
+        report.n_failed < report.rows.len(),
+        "campaign '{}': every run failed (see summary.json rows for the errors)",
+        spec.name
     );
     Ok(())
 }
@@ -483,35 +567,64 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "shadow" => Policy::Shadow { verify_frac: args.f64_or("verify-frac", 0.05)? },
         other => anyhow::bail!("unknown policy '{other}'"),
     };
-    // One spec per served variant: `--variants a,b=arch+harsh@b.ckpt`, or
-    // the single-variant `--variant V [--nonideal P] [--ckpt F]` shorthand.
-    // A '+preset' applies that scenario's frozen effects to the variant's
-    // golden shadow block (per-read cycle noise is a datagen/eval concern),
-    // so shadow-verified requests measure the emulator against the device
+    // Variant declarations come from one of two places: a finished
+    // `semulator sweep` campaign directory (--campaign DIR serves its
+    // leaderboard, best eval MSE first), or one spec per served variant:
+    // `--variants a,b=arch+harsh@b.ckpt` / the single-variant
+    // `--variant V [--nonideal P] [--ckpt F]` shorthand. A '+preset'
+    // applies that scenario's frozen effects to the variant's golden
+    // shadow block (per-read cycle noise is a datagen/eval concern), so
+    // shadow-verified requests measure the emulator against the device
     // as deployed, not the idealized one.
-    let specs: Vec<String> = match args.str_opt("variants") {
-        Some(s) => s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect(),
-        None => vec![args.str_or("variant", "small")],
+    let mut builder = match args.str_opt("campaign") {
+        Some(campaign_dir) => {
+            // The leaderboard runs carry their own arch, scenario, and
+            // checkpoint; silently dropping a variant-shaping flag would
+            // serve something other than what the operator asked for.
+            anyhow::ensure!(
+                args.str_opt("variants").is_none()
+                    && args.str_opt("variant").is_none()
+                    && args.str_opt("ckpt").is_none()
+                    && args.str_opt("nonideal").is_none()
+                    && !args.has("fresh"),
+                "--campaign serves the campaign leaderboard as exported; it \
+                 cannot be combined with --variant/--variants/--ckpt/--nonideal/--fresh"
+            );
+            semulator::api::DeploymentBuilder::from_campaign_with(
+                Path::new(campaign_dir),
+                args.usize_or("top-k", 0)?,
+                &dir,
+            )?
+        }
+        None => {
+            let specs: Vec<String> = match args.str_opt("variants") {
+                Some(s) => {
+                    s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+                }
+                None => vec![args.str_or("variant", "small")],
+            };
+            anyhow::ensure!(!specs.is_empty(), "--variants needs at least one spec");
+            let global_nonideal = nonideal_from_args(args)?;
+            let mut b = Deployment::builder().artifact_dir(dir.clone());
+            for spec in &specs {
+                b = b.variant(parse_variant_spec(
+                    &dir,
+                    spec,
+                    args.str_opt("ckpt"),
+                    global_nonideal,
+                    args.u64_or("nonideal-seed", 0)?,
+                    args.has("fresh"),
+                )?);
+            }
+            b
+        }
     };
-    anyhow::ensure!(!specs.is_empty(), "--variants needs at least one spec");
-    let global_nonideal = nonideal_from_args(args)?;
-    let mut builder = Deployment::builder()
-        .artifact_dir(dir.clone())
+    builder = builder
         .backend(backend)
         .policy(policy)
         .max_batch(args.usize_or("max-batch", 64)?)
         .max_wait(std::time::Duration::from_micros(args.u64_or("max-wait-us", 200)?))
         .cross_check(args.has("cross-check"));
-    for spec in &specs {
-        builder = builder.variant(parse_variant_spec(
-            &dir,
-            spec,
-            args.str_opt("ckpt"),
-            global_nonideal,
-            args.u64_or("nonideal-seed", 0)?,
-            args.has("fresh"),
-        )?);
-    }
     let deployment = Arc::new(builder.build()?);
     let addr = args.str_or("addr", "127.0.0.1:7070");
     let server = Server::spawn(&addr, deployment.clone())?;

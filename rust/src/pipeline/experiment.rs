@@ -36,8 +36,9 @@ use crate::xbar::CellInputs;
 
 use super::spec::ExperimentSpec;
 
-/// Run-time options orthogonal to the spec (paths live here so the same
-/// spec.json reproduces a run anywhere).
+/// Run-time options orthogonal to the spec (paths and parallelism live
+/// here so the same spec.json reproduces a run anywhere — results never
+/// depend on any of these).
 #[derive(Debug, Clone)]
 pub struct RunOptions {
     /// Run directory (created; existing files are overwritten).
@@ -46,15 +47,38 @@ pub struct RunOptions {
     /// trainer and the post-training PJRT cross-check (default
     /// `artifacts`, absent in native-only environments).
     pub artifact_dir: PathBuf,
+    /// Datagen worker threads (default: all cores). The dataset is
+    /// byte-identical for any value; the *effective* count is recorded in
+    /// `data.meta.json` provenance.
+    pub workers: usize,
+    /// Owning campaign label, when this run is one point of a
+    /// `pipeline::Campaign` grid (recorded in `data.meta.json`
+    /// provenance).
+    pub campaign: Option<String>,
 }
 
 impl RunOptions {
     pub fn new(out_dir: impl Into<PathBuf>) -> Self {
-        Self { out_dir: out_dir.into(), artifact_dir: PathBuf::from("artifacts") }
+        Self {
+            out_dir: out_dir.into(),
+            artifact_dir: PathBuf::from("artifacts"),
+            workers: crate::util::default_workers(),
+            campaign: None,
+        }
     }
 
     pub fn artifact_dir(mut self, dir: impl Into<PathBuf>) -> Self {
         self.artifact_dir = dir.into();
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    pub fn campaign(mut self, name: impl Into<String>) -> Self {
+        self.campaign = Some(name.into());
         self
     }
 }
@@ -116,7 +140,15 @@ impl Experiment {
         // any simulation work.
         let meta = load_or_builtin_meta(&opts.artifact_dir, &spec.variant)
             .with_context(|| format!("spec '{}' (variant '{}')", spec.name, spec.variant))?;
-        let gen = spec.gen_config()?;
+        let mut gen = spec.gen_config()?;
+        gen.n_workers = opts.workers.max(1);
+        gen.provenance = vec![(
+            "spec_hash".to_string(),
+            Json::Str(super::sweep::spec_hash(spec)),
+        )];
+        if let Some(campaign) = &opts.campaign {
+            gen.provenance.push(("campaign".to_string(), Json::Str(campaign.clone())));
+        }
         anyhow::ensure!(
             gen.block.n_features() == meta.n_features(),
             "spec '{}': block has {} features but network '{}' expects {}",

@@ -1,5 +1,6 @@
 //! The offline-pipeline API: declarative, reproducible
-//! datagen → train → eval → serve runs behind one typed entry point.
+//! datagen → train → eval → serve runs — single experiments and whole
+//! scenario-sweep campaigns — behind typed entry points.
 //!
 //! SEMULATOR's core loop — simulate golden crossbar MAC data, fit the
 //! regression network to it, serve the emulator — used to be reachable
@@ -17,29 +18,45 @@
 //!   so the whole loop runs with **zero compiled artifacts**; the PJRT
 //!   Adam trainer opt-in), native eval plus a PJRT cross-check when
 //!   artifacts exist, and a probe stage that serves the exported files.
+//! * [`CampaignSpec`] / [`Campaign`] — a *grid* of experiments: a base
+//!   spec plus [`SweepAxes`] (non-ideality scenarios, arch variants,
+//!   seeds, sample distributions, training-recipe knobs) expands into the
+//!   cross-product of named specs, [`Campaign::run`] executes them across
+//!   worker threads with per-run failure isolation and spec-hash resume,
+//!   and the aggregated `summary.json` / `summary.csv` robustness matrix
+//!   ranks a leaderboard `api::DeploymentBuilder::from_campaign` can
+//!   serve directly. See `examples/specs/sweep_quickstart.json` and the
+//!   [`campaign`] module docs for the directory layout and contracts.
 //! * [`load_variant_def`] — turns a finished run directory into an
 //!   `api::VariantDef` (also exposed as `VariantDef::from_run_dir`), so
 //!   `semulator serve` and `Deployment` load training output directly.
 //!
 //! ```no_run
-//! use semulator::pipeline::{Experiment, ExperimentSpec, RunOptions};
+//! use semulator::pipeline::{Campaign, CampaignOptions, CampaignSpec};
 //!
 //! # fn main() -> anyhow::Result<()> {
-//! let spec = ExperimentSpec::from_str(&std::fs::read_to_string("spec.json")?)?;
-//! let summary = Experiment::new(spec)?
-//!     .run(&RunOptions::new("runs/experiments/quickstart"), &mut |row| {
-//!         println!("epoch {}: train {:.3e}", row.epoch, row.train_loss);
-//!     })?;
-//! println!("test MAE {:.4} mV -> {}", summary.report.test.mae * 1e3,
-//!          summary.run_dir.display());
+//! let spec = CampaignSpec::from_str(&std::fs::read_to_string("sweep.json")?)?;
+//! let report = Campaign::new(spec)?
+//!     .run(&CampaignOptions::new("runs/campaigns/demo").workers(4))?;
+//! println!("{} runs, {} failed; best: {:?}",
+//!          report.rows.len(), report.n_failed, report.leaderboard);
 //! # Ok(())
 //! # }
 //! ```
 //!
-//! The CLI front end is `semulator run --spec spec.json`.
+//! The CLI front ends are `semulator run --spec spec.json` (one
+//! experiment) and `semulator sweep --spec sweep.json [--workers N]
+//! [--resume]` (a campaign).
 
+pub mod campaign;
 pub mod experiment;
 pub mod spec;
+pub mod sweep;
 
+pub use campaign::{
+    load_leaderboard, run_dir as campaign_run_dir, Campaign, CampaignOptions, CampaignReport,
+    CampaignSpec, RunEval, RunRow, RunStatus,
+};
 pub use experiment::{load_variant_def, Experiment, ProbeStats, RunOptions, RunSummary};
 pub use spec::{DataSpec, EvalSpec, ExperimentSpec, TrainSpec};
+pub use sweep::{spec_hash, SweepAxes, SweepPoint, AXIS_NAMES};

@@ -1,0 +1,525 @@
+//! Sweep axes: the cross-product grammar behind a campaign.
+//!
+//! A [`SweepAxes`] names, per knob, the values a campaign explores —
+//! non-ideality scenarios, architecture variants, dataset/training seeds,
+//! sample distributions, and training-recipe knobs. [`SweepAxes::expand`]
+//! takes a base [`ExperimentSpec`] and produces the full cross-product of
+//! every non-empty axis as named specs: run `base-mild-d1` is the base
+//! with the `mild` scenario and dataset seed 1. Axis order (and therefore
+//! run order, run naming, and the summary row order) is fixed and
+//! deterministic, so a campaign's output is independent of how many
+//! workers executed it.
+//!
+//! Expansion never validates the individual specs — a point of the grid
+//! that cannot run (say, an arch variant incompatible with the base
+//! block) must become a *failed row* of the campaign report, not abort
+//! the whole grid. Only structural problems of the grid itself (no axes,
+//! colliding run names) are errors here.
+
+use anyhow::Result;
+
+use crate::datagen::SampleDist;
+use crate::util::Json;
+use crate::xbar::NonIdealSpec;
+
+use super::spec::ExperimentSpec;
+
+/// Stable content hash of a spec: FNV-1a 64 over the canonical compact
+/// JSON (`ExperimentSpec::to_json` sorts object keys, so the text — and
+/// the hash — is independent of construction order and survives a
+/// to-disk/from-disk round trip exactly). Campaigns use it as the
+/// skip-if-complete resume token: a run directory whose `spec.json`
+/// re-hashes to the expected value was produced by this exact spec.
+pub fn spec_hash(spec: &ExperimentSpec) -> String {
+    let text = spec.to_json().to_string();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// One swept value: the tag that names it (run-name suffix, summary axis
+/// column) plus the closure-free override it applies.
+#[derive(Debug, Clone, PartialEq)]
+enum AxisValue {
+    Nonideal(String, NonIdealSpec),
+    Arch(String),
+    DataSeed(u64),
+    TrainSeed(u64),
+    Dist(SampleDist),
+    NSamples(usize),
+    Epochs(usize),
+    Batch(usize),
+    LrBase(f64),
+}
+
+impl AxisValue {
+    fn tag(&self) -> String {
+        match self {
+            AxisValue::Nonideal(tag, _) => tag.clone(),
+            AxisValue::Arch(a) => a.clone(),
+            AxisValue::DataSeed(s) => format!("d{s}"),
+            AxisValue::TrainSeed(s) => format!("t{s}"),
+            AxisValue::Dist(d) => d.tag(),
+            AxisValue::NSamples(n) => format!("n{n}"),
+            AxisValue::Epochs(e) => format!("e{e}"),
+            AxisValue::Batch(b) => format!("b{b}"),
+            AxisValue::LrBase(lr) => format!("lr{lr}"),
+        }
+    }
+
+    fn apply(&self, spec: &mut ExperimentSpec) {
+        match self {
+            AxisValue::Nonideal(_, s) => spec.nonideal = Some(*s),
+            AxisValue::Arch(a) => spec.variant = a.clone(),
+            AxisValue::DataSeed(s) => spec.data.seed = *s,
+            AxisValue::TrainSeed(s) => spec.train.seed = *s,
+            AxisValue::Dist(d) => spec.data.dist = *d,
+            AxisValue::NSamples(n) => spec.data.n_samples = *n,
+            // Sweeping the epoch count rescales the LR schedule to it
+            // (the base spec's halvings were placed for the base count);
+            // an explicit lr_base axis value is applied after epochs, so
+            // the two compose.
+            AxisValue::Epochs(e) => {
+                spec.train.epochs = *e;
+                spec.train.lr =
+                    crate::coordinator::LrSchedule::paper_scaled(spec.train.lr.base, *e);
+            }
+            AxisValue::Batch(b) => spec.train.batch = *b,
+            AxisValue::LrBase(lr) => spec.train.lr.base = *lr,
+        }
+    }
+}
+
+/// The sweep grid: one list of values per knob; empty lists keep the
+/// base spec's value (and contribute no run-name tag or summary column).
+/// The cross-product of every non-empty axis is the campaign.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SweepAxes {
+    /// Non-ideality scenarios as `(tag, spec)` — presets parse from bare
+    /// strings in JSON, custom overrides from `{"tag":.., "spec":..}`.
+    pub nonideal: Vec<(String, NonIdealSpec)>,
+    /// Architecture variants (`small`, `cfg_a`, ...).
+    pub arch: Vec<String>,
+    /// Dataset-generation/split seeds.
+    pub data_seed: Vec<u64>,
+    /// Parameter-init/shuffle seeds.
+    pub train_seed: Vec<u64>,
+    /// Input sample distributions.
+    pub dist: Vec<SampleDist>,
+    /// Dataset sizes.
+    pub n_samples: Vec<usize>,
+    /// Training lengths (the LR schedule is rescaled to each).
+    pub epochs: Vec<usize>,
+    /// Minibatch sizes.
+    pub batch: Vec<usize>,
+    /// Base learning rates.
+    pub lr_base: Vec<f64>,
+}
+
+/// Canonical axis order; also the summary's axis-column order.
+pub const AXIS_NAMES: &[&str] = &[
+    "nonideal", "arch", "data_seed", "train_seed", "dist", "n_samples", "epochs", "batch",
+    "lr_base",
+];
+
+/// One expanded grid point: the concrete spec plus the `(axis, tag)`
+/// coordinates that produced it (swept axes only, in [`AXIS_NAMES`]
+/// order) — the campaign report's row key.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub spec: ExperimentSpec,
+    pub axes: Vec<(String, String)>,
+}
+
+impl SweepAxes {
+    /// Whether any axis has values (an empty grid is a spec error —
+    /// `Campaign` rejects it in validate).
+    pub fn is_empty(&self) -> bool {
+        self.n_axes() == 0
+    }
+
+    /// Number of swept (non-empty) axes.
+    pub fn n_axes(&self) -> usize {
+        self.per_axis().iter().filter(|v| !v.is_empty()).count()
+    }
+
+    /// Grid size (product over non-empty axes; 0 when no axis is swept).
+    pub fn n_points(&self) -> usize {
+        if self.is_empty() {
+            return 0;
+        }
+        self.per_axis().iter().filter(|v| !v.is_empty()).map(Vec::len).product()
+    }
+
+    /// Names of the swept axes, in canonical order.
+    pub fn swept_axes(&self) -> Vec<&'static str> {
+        self.per_axis()
+            .iter()
+            .zip(AXIS_NAMES)
+            .filter(|(v, _)| !v.is_empty())
+            .map(|(_, n)| *n)
+            .collect()
+    }
+
+    fn per_axis(&self) -> Vec<Vec<AxisValue>> {
+        vec![
+            self.nonideal.iter().map(|(t, s)| AxisValue::Nonideal(t.clone(), *s)).collect(),
+            self.arch.iter().map(|a| AxisValue::Arch(a.clone())).collect(),
+            self.data_seed.iter().map(|&s| AxisValue::DataSeed(s)).collect(),
+            self.train_seed.iter().map(|&s| AxisValue::TrainSeed(s)).collect(),
+            self.dist.iter().map(|&d| AxisValue::Dist(d)).collect(),
+            self.n_samples.iter().map(|&n| AxisValue::NSamples(n)).collect(),
+            self.epochs.iter().map(|&e| AxisValue::Epochs(e)).collect(),
+            self.batch.iter().map(|&b| AxisValue::Batch(b)).collect(),
+            self.lr_base.iter().map(|&l| AxisValue::LrBase(l)).collect(),
+        ]
+    }
+
+    /// Expand the cross-product over `base` into named grid points, first
+    /// axis outermost. Run names are `base.name` plus one `-tag` per
+    /// swept axis; a collision (duplicate axis values, or tags crafted to
+    /// overlap) is an error because run names become directory names and
+    /// summary row keys.
+    pub fn expand(&self, base: &ExperimentSpec) -> Result<Vec<SweepPoint>> {
+        anyhow::ensure!(!self.is_empty(), "sweep: at least one axis needs values");
+        let axes: Vec<(usize, Vec<AxisValue>)> = self
+            .per_axis()
+            .into_iter()
+            .enumerate()
+            .filter(|(_, v)| !v.is_empty())
+            .collect();
+        let mut points: Vec<SweepPoint> = Vec::with_capacity(self.n_points());
+        let mut idx = vec![0usize; axes.len()];
+        loop {
+            let mut spec = base.clone();
+            let mut coords = Vec::with_capacity(axes.len());
+            let mut name = base.name.clone();
+            for (k, (axis_id, values)) in axes.iter().enumerate() {
+                let value = &values[idx[k]];
+                value.apply(&mut spec);
+                let tag = value.tag();
+                // Run names become directory names under <campaign>/runs/
+                // and unquoted name/axis cells of summary.csv: a tag
+                // smuggling a path separator would write outside the
+                // campaign layout, and a comma would shift every later
+                // CSV column of its row.
+                anyhow::ensure!(
+                    !tag.is_empty()
+                        && !tag.contains('/')
+                        && !tag.contains('\\')
+                        && !tag.contains(','),
+                    "sweep: {} tag '{tag}' must be non-empty and free of path \
+                     separators and commas",
+                    AXIS_NAMES[*axis_id]
+                );
+                name.push('-');
+                name.push_str(&tag);
+                coords.push((AXIS_NAMES[*axis_id].to_string(), tag));
+            }
+            spec.name = name;
+            points.push(SweepPoint { spec, axes: coords });
+            // Odometer increment, last axis fastest; a full carry means
+            // the grid is exhausted.
+            let mut k = axes.len();
+            let exhausted = loop {
+                if k == 0 {
+                    break true;
+                }
+                k -= 1;
+                idx[k] += 1;
+                if idx[k] < axes[k].1.len() {
+                    break false;
+                }
+                idx[k] = 0;
+            };
+            if exhausted {
+                break;
+            }
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for p in &points {
+            anyhow::ensure!(
+                seen.insert(p.spec.name.as_str()),
+                "sweep: run name '{}' collides (duplicate axis values?)",
+                p.spec.name
+            );
+        }
+        Ok(points)
+    }
+
+    // ---- JSON round-trip -------------------------------------------------
+
+    /// JSON form. Non-ideality entries whose spec is exactly the preset
+    /// of their tag serialize as the bare preset string; anything else as
+    /// the full `{"tag":.., "spec":..}` form. Round-trips through
+    /// [`Self::from_json`] exactly.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        if !self.nonideal.is_empty() {
+            let entries = self
+                .nonideal
+                .iter()
+                .map(|(tag, spec)| match NonIdealSpec::preset(tag) {
+                    Ok(p) if p == *spec => Json::Str(tag.clone()),
+                    _ => Json::obj(vec![
+                        ("tag", Json::Str(tag.clone())),
+                        ("spec", spec.to_json()),
+                    ]),
+                })
+                .collect();
+            pairs.push(("nonideal", Json::Arr(entries)));
+        }
+        if !self.arch.is_empty() {
+            pairs.push(("arch", Json::Arr(self.arch.iter().cloned().map(Json::Str).collect())));
+        }
+        if !self.data_seed.is_empty() {
+            pairs.push((
+                "data_seed",
+                Json::Arr(self.data_seed.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ));
+        }
+        if !self.train_seed.is_empty() {
+            pairs.push((
+                "train_seed",
+                Json::Arr(self.train_seed.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ));
+        }
+        if !self.dist.is_empty() {
+            pairs.push((
+                "dist",
+                Json::Arr(self.dist.iter().map(|d| Json::Str(d.tag())).collect()),
+            ));
+        }
+        if !self.n_samples.is_empty() {
+            pairs.push(("n_samples", Json::arr_usize(&self.n_samples)));
+        }
+        if !self.epochs.is_empty() {
+            pairs.push(("epochs", Json::arr_usize(&self.epochs)));
+        }
+        if !self.batch.is_empty() {
+            pairs.push(("batch", Json::arr_usize(&self.batch)));
+        }
+        if !self.lr_base.is_empty() {
+            pairs.push(("lr_base", Json::arr_f64(&self.lr_base)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse axes back from [`Self::to_json`] output (or a hand-written
+    /// campaign file). Every axis is optional; unknown keys are rejected
+    /// so a typo'd axis name cannot silently shrink the grid.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!("sweep: 'axes' must be an object"))?;
+        for key in obj.keys() {
+            anyhow::ensure!(
+                AXIS_NAMES.contains(&key.as_str()),
+                "sweep: unknown axis '{key}' (expected one of: {})",
+                AXIS_NAMES.join(", ")
+            );
+        }
+        fn arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+            match j.get(key) {
+                None => Ok(&[]),
+                Some(v) => v
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("sweep: axis '{key}' must be an array")),
+            }
+        }
+        fn usizes(j: &Json, key: &str) -> Result<Vec<usize>> {
+            arr(j, key)?
+                .iter()
+                .map(|v| {
+                    v.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("sweep: axis '{key}' entries must be non-negative integers")
+                    })
+                })
+                .collect()
+        }
+        let mut axes = SweepAxes::default();
+        for entry in arr(j, "nonideal")? {
+            let (tag, spec) = match entry {
+                Json::Str(preset) => (
+                    preset.clone(),
+                    NonIdealSpec::preset(preset).map_err(anyhow::Error::msg)?,
+                ),
+                _ => {
+                    let tag = entry
+                        .get("tag")
+                        .and_then(|t| t.as_str())
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "sweep: nonideal entries are preset strings or {{\"tag\", \"spec\"}} objects"
+                            )
+                        })?
+                        .to_string();
+                    let spec = NonIdealSpec::from_json(
+                        entry.get("spec").ok_or_else(|| {
+                            anyhow::anyhow!("sweep: nonideal entry '{tag}' is missing 'spec'")
+                        })?,
+                    )
+                    .map_err(anyhow::Error::msg)?;
+                    (tag, spec)
+                }
+            };
+            anyhow::ensure!(!tag.is_empty(), "sweep: nonideal tags must be non-empty");
+            axes.nonideal.push((tag, spec));
+        }
+        for entry in arr(j, "arch")? {
+            let a = entry
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("sweep: 'arch' entries must be strings"))?;
+            axes.arch.push(a.to_string());
+        }
+        axes.data_seed = usizes(j, "data_seed")?.into_iter().map(|s| s as u64).collect();
+        axes.train_seed = usizes(j, "train_seed")?.into_iter().map(|s| s as u64).collect();
+        for entry in arr(j, "dist")? {
+            let tag = entry
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("sweep: 'dist' entries must be strings"))?;
+            axes.dist.push(SampleDist::parse(tag).map_err(anyhow::Error::msg)?);
+        }
+        axes.n_samples = usizes(j, "n_samples")?;
+        axes.epochs = usizes(j, "epochs")?;
+        axes.batch = usizes(j, "batch")?;
+        for entry in arr(j, "lr_base")? {
+            let v = entry
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("sweep: 'lr_base' entries must be numbers"))?;
+            axes.lr_base.push(v);
+        }
+        Ok(axes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::LrSchedule;
+
+    fn base() -> ExperimentSpec {
+        ExperimentSpec::new("b", "small")
+    }
+
+    #[test]
+    fn cross_product_shape_order_and_coords() {
+        let mut axes = SweepAxes::default();
+        axes.nonideal = vec![
+            ("ideal".into(), NonIdealSpec::ideal()),
+            ("mild".into(), NonIdealSpec::preset("mild").unwrap()),
+        ];
+        axes.data_seed = vec![0, 1, 2];
+        assert_eq!(axes.n_points(), 6);
+        assert_eq!(axes.swept_axes(), vec!["nonideal", "data_seed"]);
+        let points = axes.expand(&base()).unwrap();
+        assert_eq!(points.len(), 6);
+        // First axis outermost, deterministic naming.
+        let names: Vec<&str> = points.iter().map(|p| p.spec.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["b-ideal-d0", "b-ideal-d1", "b-ideal-d2", "b-mild-d0", "b-mild-d1", "b-mild-d2"]
+        );
+        // Overrides landed, coordinates recorded.
+        assert_eq!(points[4].spec.nonideal, Some(NonIdealSpec::preset("mild").unwrap()));
+        assert_eq!(points[4].spec.data.seed, 1);
+        assert_eq!(
+            points[4].axes,
+            vec![("nonideal".to_string(), "mild".to_string()), ("data_seed".to_string(), "d1".to_string())]
+        );
+        // Unswept knobs keep the base value.
+        assert_eq!(points[4].spec.train, base().train);
+    }
+
+    #[test]
+    fn recipe_axes_apply_and_epochs_rescales_lr() {
+        let mut axes = SweepAxes::default();
+        axes.epochs = vec![8];
+        axes.lr_base = vec![0.02];
+        axes.batch = vec![4];
+        let points = axes.expand(&base()).unwrap();
+        assert_eq!(points.len(), 1);
+        let spec = &points[0].spec;
+        assert_eq!(spec.name, "b-e8-b4-lr0.02");
+        assert_eq!(spec.train.epochs, 8);
+        assert_eq!(spec.train.batch, 4);
+        // epochs rescaled the schedule; lr_base (applied after) set the rate.
+        assert_eq!(spec.train.lr, LrSchedule { base: 0.02, halve_at: vec![4, 6, 7] });
+    }
+
+    #[test]
+    fn name_collisions_and_empty_grid_rejected() {
+        let axes = SweepAxes::default();
+        assert!(axes.expand(&base()).is_err());
+        let mut axes = SweepAxes::default();
+        axes.arch = vec!["small".into(), "small".into()];
+        let err = axes.expand(&base()).unwrap_err();
+        assert!(format!("{err:#}").contains("collides"), "{err:#}");
+    }
+
+    #[test]
+    fn path_smuggling_tags_rejected() {
+        // Run names become directories; a custom nonideal tag (the one
+        // user-controlled tag source) must not escape the campaign layout.
+        let mut axes = SweepAxes::default();
+        axes.nonideal = vec![("../evil".into(), NonIdealSpec::ideal())];
+        let err = axes.expand(&base()).unwrap_err();
+        assert!(format!("{err:#}").contains("path separators"), "{err:#}");
+    }
+
+    #[test]
+    fn json_roundtrip_including_custom_nonideal() {
+        let mut axes = SweepAxes::default();
+        axes.nonideal = vec![
+            ("mild".into(), NonIdealSpec::preset("mild").unwrap()),
+            ("wires".into(), NonIdealSpec { r_wire: 5.0, seed: 3, ..NonIdealSpec::default() }),
+        ];
+        axes.arch = vec!["small".into(), "cfg_a".into()];
+        axes.data_seed = vec![0, 7];
+        axes.train_seed = vec![1];
+        axes.dist = vec![SampleDist::UniformIid, SampleDist::SparseActs { p: 0.25 }];
+        axes.n_samples = vec![64, 128];
+        axes.epochs = vec![4];
+        axes.batch = vec![8, 16];
+        axes.lr_base = vec![1e-3, 5e-3];
+        let back = SweepAxes::from_json(&axes.to_json()).unwrap();
+        assert_eq!(back, axes);
+        // Preset entries serialize compactly, custom ones in full form.
+        let text = axes.to_json().to_string();
+        assert!(text.contains("\"mild\""));
+        assert!(text.contains("\"wires\""));
+        assert!(text.contains("\"r_wire\""));
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_axes_and_bad_entries() {
+        let j = crate::util::json_parse(r#"{"archs": ["small"]}"#).unwrap();
+        let err = SweepAxes::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown axis"), "{err:#}");
+        let j = crate::util::json_parse(r#"{"nonideal": ["bogus"]}"#).unwrap();
+        assert!(SweepAxes::from_json(&j).is_err());
+        let j = crate::util::json_parse(r#"{"data_seed": [1.5]}"#).unwrap();
+        assert!(SweepAxes::from_json(&j).is_err());
+        let j = crate::util::json_parse(r#"{"dist": ["gauss"]}"#).unwrap();
+        assert!(SweepAxes::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn spec_hash_is_stable_and_discriminating() {
+        let spec = base();
+        let h = spec_hash(&spec);
+        assert_eq!(h.len(), 16);
+        // Stable across clones and a JSON round trip.
+        assert_eq!(spec_hash(&spec.clone()), h);
+        let back = ExperimentSpec::from_str(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(spec_hash(&back), h);
+        // Any knob change moves the hash.
+        let mut other = base();
+        other.data.seed = 1;
+        assert_ne!(spec_hash(&other), h);
+        let mut other = base();
+        other.train.lr.base = 2e-3;
+        assert_ne!(spec_hash(&other), h);
+    }
+}

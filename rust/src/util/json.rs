@@ -82,6 +82,12 @@ impl Json {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
+    /// Convenience: `["a","b"]` -> `vec!["a","b"]` (None if any entry is
+    /// not a string). Campaign leaderboards and axis lists use this.
+    pub fn as_str_vec(&self) -> Option<Vec<String>> {
+        self.as_arr()?.iter().map(|v| v.as_str().map(String::from)).collect()
+    }
+
     // ---- constructors ----------------------------------------------------
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -94,6 +100,10 @@ impl Json {
 
     pub fn arr_usize(xs: &[usize]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    pub fn arr_str(xs: &[String]) -> Json {
+        Json::Arr(xs.iter().cloned().map(Json::Str).collect())
     }
 
     // ---- serialization ---------------------------------------------------
@@ -448,6 +458,15 @@ mod tests {
         let v = parse("[2, 4, 64, 2]").unwrap();
         assert_eq!(v.as_usize_vec(), Some(vec![2, 4, 64, 2]));
         assert_eq!(parse("[1.5]").unwrap().as_usize_vec(), None);
+    }
+
+    #[test]
+    fn str_vec_roundtrip() {
+        let names = vec!["a-mild-d0".to_string(), "a-ideal-d1".to_string()];
+        let v = Json::arr_str(&names);
+        assert_eq!(v.as_str_vec(), Some(names));
+        assert_eq!(parse("[\"x\", 1]").unwrap().as_str_vec(), None);
+        assert_eq!(parse("[]").unwrap().as_str_vec(), Some(Vec::new()));
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Campaign-subsystem guarantees, all artifact-free: a 2-axis grid runs
+//! in parallel into one campaign directory, `summary.json` rows are
+//! pinned to each run's own `eval.json`, a failing grid point becomes a
+//! report row instead of aborting, `--resume` re-executes nothing, the
+//! summary is identical regardless of worker count, and the leaderboard
+//! serves through `DeploymentBuilder::from_campaign`.
+
+use std::path::{Path, PathBuf};
+
+use semulator::api::{DeploymentBuilder, MacRequest};
+use semulator::pipeline::{
+    campaign_run_dir, spec_hash, Campaign, CampaignOptions, CampaignSpec, ExperimentSpec,
+    RunStatus,
+};
+use semulator::util::{json_parse, Json};
+use semulator::xbar::{BlockConfig, CellInputs, NonIdealSpec};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("semcamp_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A seconds-scale base spec for the `small` variant.
+fn fast_base(name: &str) -> ExperimentSpec {
+    let mut base = ExperimentSpec::new(name, "small");
+    base.data.n_samples = 48;
+    base.data.test_frac = 0.25;
+    base.train.epochs = 2;
+    base.train.batch = 16;
+    base.train.lr = semulator::coordinator::LrSchedule::paper_scaled(5e-3, 2);
+    base.train.eval_every = 1;
+    base.eval.probes = 2;
+    base
+}
+
+/// The acceptance grid: non-ideality x dataset seed.
+fn grid_spec(name: &str) -> CampaignSpec {
+    let mut spec = CampaignSpec::new(name, fast_base("g"));
+    spec.axes.nonideal = vec![
+        ("ideal".to_string(), NonIdealSpec::ideal()),
+        ("mild".to_string(), NonIdealSpec { seed: 3, ..NonIdealSpec::preset("mild").unwrap() }),
+    ];
+    spec.axes.data_seed = vec![0, 1];
+    spec.top_k = 3;
+    spec
+}
+
+fn read_json(path: &Path) -> Json {
+    json_parse(&std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{}: {e}", path.display())))
+        .unwrap()
+}
+
+#[test]
+fn campaign_grid_aggregates_resumes_and_is_worker_invariant() {
+    let root = tmp_dir("grid");
+    let no_artifacts = root.join("no-artifacts");
+    let cdir = root.join("campaign");
+    let opts = CampaignOptions::new(&cdir).artifact_dir(&no_artifacts).workers(2);
+
+    let campaign = Campaign::new(grid_spec("acc")).unwrap();
+    let report = campaign.run(&opts).unwrap();
+
+    // 4 grid points, all completed, each with a self-describing run dir.
+    assert_eq!(report.rows.len(), 4);
+    assert_eq!(report.n_failed, 0);
+    let names: Vec<&str> = report.rows.iter().map(|r| r.name.as_str()).collect();
+    assert_eq!(names, vec!["g-ideal-d0", "g-ideal-d1", "g-mild-d0", "g-mild-d1"]);
+    assert!(cdir.join("campaign.json").is_file());
+    for row in &report.rows {
+        assert_eq!(row.status, RunStatus::Completed);
+        let rdir = campaign_run_dir(&cdir, &row.name);
+        for file in ["spec.json", "data.bin", "ckpt.ckpt", "report.json", "eval.json"] {
+            assert!(rdir.join(file).is_file(), "{}: missing {file}", row.name);
+        }
+        // The recorded spec hash is the hash of the exported spec.json.
+        let spec = ExperimentSpec::from_str(
+            &std::fs::read_to_string(rdir.join("spec.json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(spec_hash(&spec), row.spec_hash, "{}", row.name);
+        // Datagen provenance names the campaign, the spec hash, and the
+        // effective worker count.
+        let prov = read_json(&rdir.join("data.meta.json"));
+        let prov = prov.get("provenance").unwrap();
+        assert_eq!(prov.get("campaign").unwrap().as_str(), Some("acc"));
+        assert_eq!(prov.get("spec_hash").unwrap().as_str(), Some(row.spec_hash.as_str()));
+        assert!(prov.get("n_workers").unwrap().as_usize().unwrap() >= 1);
+    }
+
+    // summary.json rows are pinned to each run's own eval.json.
+    let summary = read_json(&cdir.join("summary.json"));
+    assert_eq!(summary.get("n_runs").unwrap().as_usize(), Some(4));
+    assert_eq!(summary.get("n_failed").unwrap().as_usize(), Some(0));
+    assert_eq!(
+        summary.get("axes").unwrap().as_str_vec(),
+        Some(vec!["nonideal".to_string(), "data_seed".to_string()])
+    );
+    let rows = summary.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 4);
+    for row in rows {
+        let name = row.get("name").unwrap().as_str().unwrap();
+        let eval = read_json(&campaign_run_dir(&cdir, name).join("eval.json"));
+        let native = eval.get("native").unwrap();
+        for (summary_key, eval_key) in
+            [("test_mse", "mse"), ("test_mae", "mae"), ("p_halfmv", "p_halfmv")]
+        {
+            assert_eq!(
+                row.get(summary_key).unwrap().as_f64(),
+                native.get(eval_key).unwrap().as_f64(),
+                "{name}: summary '{summary_key}' vs eval '{eval_key}'"
+            );
+        }
+        let probes = eval.get("probes").unwrap();
+        assert_eq!(
+            row.get("probe_emulator_mae").unwrap().as_f64(),
+            probes.get("emulator_mae").unwrap().as_f64(),
+            "{name}"
+        );
+        assert_eq!(row.get("status").unwrap().as_str(), Some("completed"));
+    }
+    // The leaderboard is every run, ascending eval MSE, truncated to top_k.
+    let leaderboard = summary.get("leaderboard").unwrap().as_str_vec().unwrap();
+    assert_eq!(leaderboard.len(), 3);
+    let mse_of = |name: &str| {
+        read_json(&campaign_run_dir(&cdir, name).join("eval.json"))
+            .get("native")
+            .unwrap()
+            .get("mse")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    };
+    for pair in leaderboard.windows(2) {
+        assert!(mse_of(&pair[0]) <= mse_of(&pair[1]), "leaderboard out of order: {pair:?}");
+    }
+    let first_summary = std::fs::read_to_string(cdir.join("summary.json")).unwrap();
+    let first_csv = std::fs::read_to_string(cdir.join("summary.csv")).unwrap();
+    assert_eq!(first_csv.lines().count(), 5, "header + one row per run");
+
+    // Resume: corrupt each run's data.bin as a sentinel; a resumed
+    // campaign must touch none of them (rows are re-read from eval.json).
+    for row in &report.rows {
+        std::fs::write(campaign_run_dir(&cdir, &row.name).join("data.bin"), b"sentinel").unwrap();
+    }
+    let resumed = campaign.run(&opts.clone().resume(true)).unwrap();
+    assert!(resumed.rows.iter().all(|r| r.status == RunStatus::Resumed));
+    for row in &resumed.rows {
+        let bytes = std::fs::read(campaign_run_dir(&cdir, &row.name).join("data.bin")).unwrap();
+        assert_eq!(bytes, b"sentinel", "{}: resume re-executed the run", row.name);
+    }
+    // Same metrics, same leaderboard — only the status tag moved.
+    let resumed_summary = std::fs::read_to_string(cdir.join("summary.json")).unwrap();
+    assert_eq!(resumed_summary.replace("\"resumed\"", "\"completed\""), first_summary);
+    // A spec change invalidates the resume token: edit one run's spec.json
+    // and the next resumed campaign re-executes exactly that run.
+    let edited = campaign_run_dir(&cdir, "g-ideal-d1").join("spec.json");
+    let mut spec = ExperimentSpec::from_str(&std::fs::read_to_string(&edited).unwrap()).unwrap();
+    spec.train.seed = 99;
+    std::fs::write(&edited, spec.to_json().to_string_pretty()).unwrap();
+    let partial = campaign.run(&opts.clone().resume(true)).unwrap();
+    for row in &partial.rows {
+        let want =
+            if row.name == "g-ideal-d1" { RunStatus::Completed } else { RunStatus::Resumed };
+        assert_eq!(row.status, want, "{}", row.name);
+    }
+
+    // Worker invariance: the same grid on 1 worker, fresh directory,
+    // produces byte-identical summary.json and summary.csv.
+    let cdir1 = root.join("campaign-w1");
+    let opts1 = CampaignOptions::new(&cdir1).artifact_dir(&no_artifacts).workers(1);
+    Campaign::new(grid_spec("acc")).unwrap().run(&opts1).unwrap();
+    assert_eq!(std::fs::read_to_string(cdir1.join("summary.json")).unwrap(), first_summary);
+    assert_eq!(std::fs::read_to_string(cdir1.join("summary.csv")).unwrap(), first_csv);
+
+    // The leaderboard serves: from_campaign loads the top-2 runs as a
+    // multi-variant deployment in leaderboard order, scenario included.
+    let dep = DeploymentBuilder::from_campaign_with(&cdir1, 2, &no_artifacts)
+        .unwrap()
+        .policy(semulator::coordinator::Policy::Emulator)
+        .build()
+        .unwrap();
+    let leaderboard = semulator::pipeline::load_leaderboard(&cdir1).unwrap();
+    assert_eq!(dep.variants(), leaderboard[..2].iter().map(String::as_str).collect::<Vec<_>>());
+    for name in &leaderboard[..2] {
+        let block = dep.block_config(name).unwrap().clone();
+        let want_nonideal = if name.contains("-mild-") {
+            NonIdealSpec { seed: 3, ..NonIdealSpec::preset("mild").unwrap() }
+        } else {
+            NonIdealSpec::ideal()
+        };
+        assert_eq!(block.nonideal, want_nonideal, "{name}");
+        let resp = dep.submit(&MacRequest::new(name.clone(), CellInputs::zeros(&block))).unwrap();
+        assert_eq!(resp.outputs.len(), block.n_mac());
+    }
+    drop(dep);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn campaign_isolates_failing_run_into_report() {
+    let root = tmp_dir("fail");
+    let no_artifacts = root.join("no-artifacts");
+    let cdir = root.join("campaign");
+
+    // The base pins an explicit small-geometry block; sweeping the arch
+    // axis onto cfg_a makes that grid point structurally impossible (the
+    // block's feature count cannot feed cfg_a's network) — a deliberate
+    // failure that must become a row, not abort the grid.
+    let mut base = fast_base("f");
+    base.data.n_samples = 32;
+    base.eval.probes = 1;
+    base.block = Some(BlockConfig::small());
+    let mut spec = CampaignSpec::new("failgrid", base);
+    spec.axes.arch = vec!["small".to_string(), "cfg_a".to_string()];
+
+    let report = Campaign::new(spec)
+        .unwrap()
+        .run(&CampaignOptions::new(&cdir).artifact_dir(&no_artifacts).workers(2))
+        .unwrap();
+    assert_eq!(report.rows.len(), 2);
+    assert_eq!(report.n_failed, 1);
+    assert_eq!(report.rows[0].status, RunStatus::Completed);
+    let RunStatus::Failed(err) = &report.rows[1].status else {
+        panic!("cfg_a point should have failed, got {:?}", report.rows[1].status)
+    };
+    assert!(err.contains("features"), "unexpected failure: {err}");
+    assert!(report.rows[1].eval.is_none());
+    // The failed run is in the summary (with its error), out of the
+    // leaderboard, and its CSV metric cells are empty.
+    let summary = read_json(&cdir.join("summary.json"));
+    assert_eq!(summary.get("n_failed").unwrap().as_usize(), Some(1));
+    let rows = summary.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows[1].get("status").unwrap().as_str(), Some("failed"));
+    assert!(rows[1].get("error").unwrap().as_str().unwrap().contains("features"));
+    assert!(rows[1].get("test_mse").is_none());
+    assert_eq!(summary.get("leaderboard").unwrap().as_str_vec(), Some(vec!["f-small".to_string()]));
+    let csv = std::fs::read_to_string(cdir.join("summary.csv")).unwrap();
+    let failed_line = csv.lines().find(|l| l.starts_with("f-cfg_a,failed,")).unwrap();
+    assert!(failed_line.contains(",,,,"), "metric cells should be empty: {failed_line}");
+    // Serving the campaign still works off the surviving run.
+    let dep = DeploymentBuilder::from_campaign_with(&cdir, 0, &no_artifacts)
+        .unwrap()
+        .build()
+        .unwrap();
+    assert_eq!(dep.variants(), vec!["f-small"]);
+    drop(dep);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn cli_sweep_runs_resumes_and_checked_in_spec_parses() {
+    // The checked-in quickstart sweep must parse, expand to the 2x2 grid
+    // CI's campaign-smoke job runs, and stay artifact-free/seconds-scale.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/specs/sweep_quickstart.json");
+    let spec = CampaignSpec::from_str(&std::fs::read_to_string(&path).unwrap())
+        .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+    assert_eq!(spec.expand().unwrap().len(), 4);
+    assert!(spec.base.data.n_samples <= 256, "sweep quickstart grew");
+    assert!(spec.base.train.epochs <= 16, "sweep quickstart grew");
+    let back = CampaignSpec::from_str(&spec.to_json().to_string_pretty()).unwrap();
+    assert_eq!(back, spec);
+
+    // CLI smoke: a tiny 2-run sweep through the binary, then --resume.
+    let root = tmp_dir("cli");
+    let cdir = root.join("campaign");
+    let mut tiny = CampaignSpec::new("clismoke", fast_base("c"));
+    tiny.base.data.n_samples = 24;
+    tiny.base.train.epochs = 1;
+    tiny.base.eval.probes = 1;
+    tiny.axes.nonideal = vec![
+        ("ideal".to_string(), NonIdealSpec::ideal()),
+        ("mild".to_string(), NonIdealSpec::preset("mild").unwrap()),
+    ];
+    let spec_file = root.join("sweep.json");
+    std::fs::write(&spec_file, tiny.to_json().to_string_pretty()).unwrap();
+    let sweep = |resume: bool| -> String {
+        let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_semulator"));
+        cmd.arg("sweep")
+            .arg("--spec")
+            .arg(&spec_file)
+            .arg("--out")
+            .arg(&cdir)
+            .args(["--workers", "2"])
+            .arg("--artifacts")
+            .arg(root.join("no-artifacts"));
+        if resume {
+            cmd.arg("--resume");
+        }
+        let out = cmd.output().expect("spawn semulator sweep");
+        assert!(out.status.success(), "sweep failed: {}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let first = sweep(false);
+    assert!(first.contains("2/2 runs ok"), "{first}");
+    assert!(cdir.join("summary.json").is_file() && cdir.join("summary.csv").is_file());
+    let resumed = sweep(true);
+    assert!(resumed.contains("resumed"), "{resumed}");
+    assert!(resumed.contains("2/2 runs ok"), "{resumed}");
+    std::fs::remove_dir_all(&root).ok();
+}

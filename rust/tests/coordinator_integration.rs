@@ -465,6 +465,201 @@ fn cross_check_between_two_native_backends_agrees() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Multi-client concurrency stress on the `Deployment` facade: 8 threads
+/// hammer a 2-variant session with interleaved `submit` / `submit_many`
+/// calls. Every reply must carry its own variant's answer (no dropped or
+/// misrouted replies under batcher coalescing), and the per-variant
+/// request counters must sum exactly to the requests sent.
+#[test]
+fn deployment_concurrent_clients_exact_routing_and_counters() {
+    const THREADS: usize = 8;
+    const ITERS: usize = 12;
+    let dir = empty_dir("stress");
+    let meta = Arch::for_variant("small").unwrap().to_meta();
+    let state_a = ModelState::init(&meta, 31);
+    let state_b = ModelState::init(&meta, 32);
+    let dep = Deployment::builder()
+        .artifact_dir(dir.clone())
+        .variant(VariantDef::new("a").arch("small").state(state_a.clone()))
+        .variant(VariantDef::new("b").arch("small").state(state_b.clone()))
+        .policy(Policy::Emulator)
+        .max_batch(16)
+        .build()
+        .unwrap();
+    let cfg = block_for("small").unwrap();
+
+    // Per-variant expected answers for a shared input pool, from direct
+    // single-row engine forwards. Batched forwards are row-independent to
+    // ~1e-6; the two checkpoints must disagree by far more than that, so
+    // a misrouted reply cannot hide inside the tolerance.
+    let inputs: Vec<CellInputs> = (0..4).map(|i| sample_inputs(700 + i)).collect();
+    let forward = |state: &ModelState, x: &CellInputs| -> Vec<f64> {
+        NativeEngine::from_meta(&meta, state)
+            .unwrap()
+            .forward(&x.normalized(&cfg))
+            .unwrap()
+            .into_iter()
+            .map(|v| v as f64)
+            .collect()
+    };
+    let want_a: Vec<Vec<f64>> = inputs.iter().map(|x| forward(&state_a, x)).collect();
+    let want_b: Vec<Vec<f64>> = inputs.iter().map(|x| forward(&state_b, x)).collect();
+    let dev = |got: &[f64], want: &[f64]| {
+        got.iter().zip(want).map(|(g, w)| (g - w).abs()).fold(0.0f64, f64::max)
+    };
+    for (wa, wb) in want_a.iter().zip(&want_b) {
+        assert!(dev(wa, wb) > 1e-3, "checkpoints too close to detect misrouting");
+    }
+
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let (dep, inputs, want_a, want_b) = (&dep, &inputs, &want_a, &want_b);
+            scope.spawn(move || {
+                let own = if t % 2 == 0 { "a" } else { "b" };
+                for m in 0..ITERS {
+                    let i = (t + m) % inputs.len();
+                    if m % 2 == 0 {
+                        // Single submit on this thread's own variant.
+                        let want = if own == "a" { &want_a[i] } else { &want_b[i] };
+                        let r = dep.submit(&MacRequest::new(own, inputs[i].clone())).unwrap();
+                        assert_eq!(r.variant, own);
+                        assert!(dev(&r.outputs, want) < 1e-5, "thread {t} iter {m}: misrouted");
+                    } else {
+                        // Mixed-variant batch: replies in submission order,
+                        // each row answered by its own checkpoint.
+                        let reqs = vec![
+                            MacRequest::new("a", inputs[i].clone()),
+                            MacRequest::new("b", inputs[i].clone()),
+                        ];
+                        let rs = dep.submit_many(&reqs).unwrap();
+                        assert_eq!(rs.len(), 2);
+                        assert_eq!(rs[0].variant, "a");
+                        assert_eq!(rs[1].variant, "b");
+                        assert!(dev(&rs[0].outputs, &want_a[i]) < 1e-5, "t{t} m{m}: row a");
+                        assert!(dev(&rs[1].outputs, &want_b[i]) < 1e-5, "t{t} m{m}: row b");
+                    }
+                }
+            });
+        }
+    });
+
+    // Exact accounting: each thread sent ITERS/2 singles to its own
+    // variant and ITERS/2 mixed pairs (one row to each variant).
+    let singles_per_variant = (THREADS / 2) * (ITERS / 2);
+    let pair_rows = THREADS * (ITERS / 2);
+    let expect = (singles_per_variant + pair_rows) as f64;
+    let snap = dep.metrics_json();
+    let vars = snap.get("variants").unwrap();
+    for v in ["a", "b"] {
+        let m = vars.get(v).unwrap();
+        assert_eq!(m.get("requests").unwrap().as_f64(), Some(expect), "variant {v} requests");
+        assert_eq!(m.get("emulated").unwrap().as_f64(), Some(expect), "variant {v} emulated");
+        assert_eq!(m.get("golden").unwrap().as_f64(), Some(0.0));
+    }
+    assert_eq!(snap.get("requests").unwrap().as_f64(), Some(2.0 * expect));
+    // Every row that went in came back out of the batcher, too.
+    assert_eq!(
+        dep.batch_metrics().batched_requests.load(std::sync::atomic::Ordering::Relaxed),
+        2 * expect as u64
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Multi-client TCP stress: 6 concurrent connections each drive a mix of
+/// valid two-variant requests and malformed lines. The line protocol is
+/// strictly request/reply per connection, so each client checks its
+/// replies in order — no drops, no cross-connection bleed, structured
+/// errors never kill a connection — and the per-variant counters sum
+/// exactly to the valid requests sent across all clients.
+#[test]
+fn tcp_concurrent_clients_stress() {
+    const CLIENTS: usize = 6;
+    const ROUNDS: usize = 10;
+    let dir = empty_dir("tcpstress");
+    let meta = Arch::for_variant("small").unwrap().to_meta();
+    let state = ModelState::init(&meta, 8);
+    let dep = Arc::new(
+        Deployment::builder()
+            .artifact_dir(dir.clone())
+            .variant(VariantDef::new("a").arch("small").state(state.clone()))
+            .variant(VariantDef::new("b").arch("small").state(state))
+            .policy(Policy::Emulator)
+            .build()
+            .unwrap(),
+    );
+    let server = Server::spawn("127.0.0.1:0", dep.clone()).unwrap();
+    let cfg = block_for("small").unwrap();
+    let addr = server.addr;
+
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let cfg = &cfg;
+            scope.spawn(move || {
+                let stream = std::net::TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut line = String::new();
+                for m in 0..ROUNDS {
+                    let variant = if (c + m) % 2 == 0 { "a" } else { "b" };
+                    let x = sample_inputs((c * ROUNDS + m) as u64);
+                    let valid = Json::obj(vec![
+                        ("variant", Json::Str(variant.into())),
+                        ("v", Json::arr_f64(&x.v)),
+                        ("g", Json::arr_f64(&x.g)),
+                    ])
+                    .to_string();
+                    // Interleave a malformed line before every third valid
+                    // request; its structured error must come back first
+                    // (in order) and leave the connection serving.
+                    if m % 3 == 0 {
+                        writer.write_all(b"{broken\n").unwrap();
+                        writer.flush().unwrap();
+                        line.clear();
+                        reader.read_line(&mut line).unwrap();
+                        let reply = json_parse(line.trim()).unwrap();
+                        assert!(reply.get("error").is_some(), "client {c} round {m}: {line}");
+                    }
+                    writer.write_all(valid.as_bytes()).unwrap();
+                    writer.write_all(b"\n").unwrap();
+                    writer.flush().unwrap();
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    let reply = json_parse(line.trim()).unwrap();
+                    assert!(reply.get("error").is_none(), "client {c} round {m}: {line}");
+                    // The reply names the variant this client asked for —
+                    // a cross-connection mixup would surface here.
+                    assert_eq!(reply.get("variant").unwrap().as_str(), Some(variant));
+                    assert_eq!(reply.get("y").unwrap().as_arr().unwrap().len(), cfg.n_mac());
+                }
+            });
+        }
+    });
+
+    // CLIENTS * ROUNDS valid requests total, split by the (c + m) parity.
+    let mut want_a = 0u64;
+    let mut want_b = 0u64;
+    for c in 0..CLIENTS {
+        for m in 0..ROUNDS {
+            if (c + m) % 2 == 0 {
+                want_a += 1;
+            } else {
+                want_b += 1;
+            }
+        }
+    }
+    let snap = dep.metrics_json();
+    let vars = snap.get("variants").unwrap();
+    assert_eq!(vars.get("a").unwrap().get("requests").unwrap().as_f64(), Some(want_a as f64));
+    assert_eq!(vars.get("b").unwrap().get("requests").unwrap().as_f64(), Some(want_b as f64));
+    assert_eq!(
+        snap.get("requests").unwrap().as_f64(),
+        Some((CLIENTS * ROUNDS) as f64),
+        "malformed lines must never reach a router"
+    );
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Drive a live socket through the whole protocol robustness contract:
 /// per-variant requests, structured errors for malformed/unknown inputs
 /// (connection stays open), discovery + metrics commands, shutdown.

@@ -135,6 +135,50 @@ fn datagen_is_byte_identical_for_same_seed_and_spec() {
 }
 
 #[test]
+fn datagen_on_disk_is_parallelism_invariant() {
+    // The chunking contract campaign parallelism leans on: at a fixed
+    // seed, `data.bin` is byte-identical for 1, 4 and 64 workers (64 >
+    // n_samples also exercises the per-sample clamp), for the ideal and
+    // the `mild` non-ideal scenario. `meta.json` is identical too except
+    // for the provenance `n_workers` field, which deliberately records
+    // the effective worker count of *this* generation.
+    let dir = tmp_dir("pinv");
+    for (tag, spec) in [
+        ("ideal", NonIdealSpec::ideal()),
+        ("mild", NonIdealSpec { seed: 5, ..NonIdealSpec::preset("mild").unwrap() }),
+    ] {
+        let base = GenConfig::new(BlockConfig::with_dims(1, 4, 2).with_nonideal(spec), 24, 9);
+        let mut outputs: Vec<(Vec<u8>, String)> = Vec::new();
+        for workers in [1usize, 4, 64] {
+            let path = dir.join(format!("{tag}_w{workers}.bin"));
+            let cfg = GenConfig { n_workers: workers, ..base.clone() };
+            generate_to(&cfg, &path).unwrap();
+            let data = std::fs::read(&path).unwrap();
+            assert!(!data.is_empty());
+            // Normalize the one provenance field that names the worker
+            // count; everything else must match to the byte.
+            let meta =
+                json_parse(&std::fs::read_to_string(path.with_extension("meta.json")).unwrap())
+                    .unwrap();
+            let recorded =
+                meta.get("provenance").unwrap().get("n_workers").unwrap().as_usize().unwrap();
+            assert_eq!(recorded, cfg.effective_workers(), "{tag} w{workers}");
+            let normalized = std::fs::read_to_string(path.with_extension("meta.json"))
+                .unwrap()
+                .replace(&format!("\"n_workers\": {recorded}"), "\"n_workers\": 0");
+            assert!(normalized.contains("\"n_workers\": 0"), "normalization missed the field");
+            outputs.push((data, normalized));
+        }
+        let (data0, meta0) = &outputs[0];
+        for (i, (data, meta)) in outputs.iter().enumerate().skip(1) {
+            assert_eq!(data, data0, "{tag}: data.bin differs between worker counts (run {i})");
+            assert_eq!(meta, meta0, "{tag}: meta.json differs between worker counts (run {i})");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn read_noise_moves_targets_but_not_features() {
     let base = GenConfig { n_workers: 1, ..GenConfig::new(BlockConfig::with_dims(1, 3, 2), 6, 21) };
     let mut noisy = base.clone();
