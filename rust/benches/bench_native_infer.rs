@@ -20,11 +20,21 @@ use semulator::infer::{Arch, EmulatorBackend, NativeEngine, BUILTIN_VARIANTS};
 use semulator::model::ModelState;
 use semulator::repro::block_for;
 use semulator::runtime::PjrtBackend;
-use semulator::util::{BenchConfig, Bencher, Rng};
+use semulator::util::{BenchConfig, BenchJsonl, Bencher, Rng};
 
 const BATCHES: [usize; 4] = [1, 32, 256, 4096];
 
+/// Kernel FLOPs retired by one call of `f`, via the process-wide obs
+/// counters (exact: the bench binary does nothing else concurrently).
+fn flops_of(f: impl FnOnce()) -> u64 {
+    let before = semulator::obs::counters::global_snapshot();
+    f();
+    semulator::obs::counters::global_snapshot().since(&before).kernel_flops
+}
+
 fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut jsonl = BenchJsonl::from_args("bench_native_infer", &argv);
     let artifact_dir = std::path::PathBuf::from("artifacts");
     let have_artifacts = artifact_dir.join("meta.json").exists();
     if !have_artifacts {
@@ -62,9 +72,13 @@ fn main() {
 
         for batch in BATCHES {
             let xs: Vec<f32> = (0..batch * feat).map(|_| rng.uniform() as f32).collect();
-            let native = b
-                .bench(&format!("{variant}/native/b{batch}"), || engine.forward(&xs).unwrap())
-                .clone();
+            let lane = format!("{variant}/native/b{batch}");
+            let native = {
+                let mut sp = semulator::obs::span("bench.native_infer");
+                sp.counter("batch", batch as u64);
+                b.bench(&lane, || engine.forward(&xs).unwrap()).clone()
+            };
+            jsonl.row(&lane, batch, native.mean, flops_of(|| drop(engine.forward(&xs).unwrap())));
             println!(
                 "  -> native: {:.2} µs/sample at batch {batch}",
                 native.mean.as_secs_f64() * 1e6 / batch as f64
@@ -111,11 +125,13 @@ fn main() {
                 })
                 .collect();
             let raw_name = format!("{variant}/native/b{batch}");
-            let stats = b
-                .bench(&format!("{variant}/deployment/b{batch}"), || {
-                    dep.submit_many(&reqs).unwrap()
-                })
-                .clone();
+            let lane = format!("{variant}/deployment/b{batch}");
+            let stats = {
+                let mut sp = semulator::obs::span("bench.native_infer");
+                sp.counter("batch", batch as u64);
+                b.bench(&lane, || dep.submit_many(&reqs).unwrap()).clone()
+            };
+            jsonl.row(&lane, batch, stats.mean, flops_of(|| drop(dep.submit_many(&reqs).unwrap())));
             let facade_us = stats.mean.as_secs_f64() * 1e6 / batch as f64;
             match b.speedup(&format!("{variant}/deployment/b{batch}"), &raw_name) {
                 Some(ratio) => println!(
@@ -145,4 +161,5 @@ fn main() {
             );
         }
     }
+    jsonl.finish().expect("write --json output");
 }

@@ -13,9 +13,17 @@ use semulator::coordinator::TrainConfig;
 use semulator::infer::{Arch, NativeTrainer};
 use semulator::model::ModelState;
 use semulator::runtime::{lit_f32, lit_scalar, ArtifactStore};
-use semulator::util::{BenchConfig, Bencher, Rng};
+use semulator::util::{BenchConfig, BenchJsonl, Bencher, Rng};
 
-fn bench_native(b: &mut Bencher) {
+/// Kernel FLOPs retired by one call of `f`, via the process-wide obs
+/// counters (exact: the bench binary does nothing else concurrently).
+fn flops_of(f: impl FnOnce()) -> u64 {
+    let before = semulator::obs::counters::global_snapshot();
+    f();
+    semulator::obs::counters::global_snapshot().since(&before).kernel_flops
+}
+
+fn bench_native(b: &mut Bencher, jsonl: &mut BenchJsonl) {
     println!("# bench_train_step/native — one SGD backprop step (no artifacts)");
     let batch = TrainConfig::new("small", 1).batch; // the pipeline default
     for variant in ["small", "cfg_a", "cfg_b"] {
@@ -28,9 +36,18 @@ fn bench_native(b: &mut Bencher) {
             (0..batch * meta.n_features()).map(|_| rng.range(0.0, 1.0) as f32).collect();
         let yb: Vec<f32> =
             (0..batch * meta.outputs).map(|_| rng.range(-0.05, 0.05) as f32).collect();
-        let stats = b.bench(&format!("{variant}/native_step_b{batch}"), || {
+        let lane = format!("{variant}/native_step_b{batch}");
+        let stats = {
+            let mut sp = semulator::obs::span("bench.train_step");
+            sp.counter("batch", batch as u64);
+            b.bench(&lane, || {
+                trainer.step(&mut state, &xb, &yb, 1e-4).unwrap();
+            })
+            .clone()
+        };
+        jsonl.row(&lane, batch, stats.mean, flops_of(|| {
             trainer.step(&mut state, &xb, &yb, 1e-4).unwrap();
-        });
+        }));
         println!(
             "  -> {:.2} ms/step, {:.1} samples/s",
             stats.mean.as_secs_f64() * 1e3,
@@ -92,7 +109,10 @@ fn bench_pjrt(b: &mut Bencher) {
 }
 
 fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut jsonl = BenchJsonl::from_args("bench_train_step", &argv);
     let mut b = Bencher::new(BenchConfig::default());
-    bench_native(&mut b);
+    bench_native(&mut b, &mut jsonl);
     bench_pjrt(&mut b);
+    jsonl.finish().expect("write --json output");
 }

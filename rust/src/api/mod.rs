@@ -39,6 +39,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -440,7 +441,7 @@ impl DeploymentBuilder {
                 router = router.with_cross_check(cs.handle_for(i)?);
             }
             index.insert(name.clone(), i);
-            entries.push(Entry { name, router, metrics });
+            entries.push(Entry { name, router, metrics, inflight: Arc::new(AtomicU64::new(0)) });
         }
         Ok(Deployment {
             entries,
@@ -450,6 +451,7 @@ impl DeploymentBuilder {
             batch_metrics,
             backend: self.backend,
             policy: self.policy,
+            started: Instant::now(),
         })
     }
 }
@@ -458,6 +460,26 @@ struct Entry {
     name: String,
     router: Router,
     metrics: Arc<Metrics>,
+    /// Requests currently inside this variant's router (admission signal
+    /// for load shedding; exposed as the per-variant `inflight` gauge).
+    inflight: Arc<AtomicU64>,
+}
+
+/// RAII in-flight counter: adds on construction, subtracts on drop (so
+/// error paths decrement too).
+struct InflightGuard<'a>(&'a AtomicU64, u64);
+
+impl<'a> InflightGuard<'a> {
+    fn enter(counter: &'a AtomicU64, n: u64) -> Self {
+        counter.fetch_add(n, Ordering::Relaxed);
+        Self(counter, n)
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(self.1, Ordering::Relaxed);
+    }
 }
 
 /// A running multi-variant serving stack: the one way to stand up and talk
@@ -476,6 +498,7 @@ pub struct Deployment {
     batch_metrics: Arc<Metrics>,
     backend: BackendKind,
     policy: Policy,
+    started: Instant,
 }
 
 impl Deployment {
@@ -547,6 +570,7 @@ impl Deployment {
         let entry = self.entry(&req.variant)?;
         self.check_inputs(entry, &req.inputs)?;
         let t0 = Instant::now();
+        let _inflight = InflightGuard::enter(&entry.inflight, 1);
         let r = entry.router.handle_with(&req.inputs, req.opts.policy)?;
         Ok(MacResponse {
             variant: entry.name.clone(),
@@ -579,6 +603,7 @@ impl Deployment {
             let entry = &self.entries[entry_idx];
             let xs: Vec<&CellInputs> = members.iter().map(|&i| &reqs[i].inputs).collect();
             let t0 = Instant::now();
+            let _inflight = InflightGuard::enter(&entry.inflight, members.len() as u64);
             let results = entry.router.handle_many_with(&xs, opts.policy)?;
             let latency = t0.elapsed();
             for (&i, r) in members.iter().zip(results) {
@@ -596,39 +621,35 @@ impl Deployment {
         Ok(out.into_iter().map(|r| r.expect("every request answered")).collect())
     }
 
-    /// Metrics snapshot: top-level counters summed over every variant,
-    /// batcher stats, plus a `"variants"` object with each variant's full
-    /// per-variant snapshot (counters + latency percentiles).
-    pub fn metrics_json(&self) -> Json {
-        let mut totals: BTreeMap<&'static str, u64> = BTreeMap::new();
+    /// The [`crate::obs::Registry`] view of this deployment: every
+    /// variant's metrics plus its `inflight` gauge, the batcher stats, and
+    /// the `uptime_s` gauge — the single source both metric surfaces
+    /// render from.
+    fn registry(&self) -> crate::obs::Registry {
+        let mut reg = crate::obs::Registry::new();
         for e in &self.entries {
-            for (k, v) in e.metrics.counters() {
-                *totals.entry(k).or_insert(0) += v;
-            }
+            let inflight = e.inflight.load(Ordering::Relaxed) as f64;
+            reg.variant(&e.name, e.metrics.clone(), &[("inflight", inflight)]);
         }
-        let mut top: Vec<(String, Json)> = totals
-            .into_iter()
-            // Router metrics never touch the batcher pair; drop the
-            // always-zero keys in favor of the batcher-level stats below.
-            .filter(|(k, _)| *k != "batches" && *k != "batched_requests")
-            .map(|(k, v)| (k.to_string(), Json::Num(v as f64)))
-            .collect();
-        top.push(("mean_batch_size".into(), Json::Num(self.batch_metrics.mean_batch_size())));
-        top.push((
-            "batches".into(),
-            Json::Num(self.batch_metrics.batches.load(std::sync::atomic::Ordering::Relaxed) as f64),
-        ));
-        top.push((
-            "batched_requests".into(),
-            Json::Num(
-                self.batch_metrics.batched_requests.load(std::sync::atomic::Ordering::Relaxed)
-                    as f64,
-            ),
-        ));
-        let variants: BTreeMap<String, Json> =
-            self.entries.iter().map(|e| (e.name.clone(), e.metrics.snapshot())).collect();
-        top.push(("variants".into(), Json::Obj(variants)));
-        Json::Obj(top.into_iter().collect())
+        reg.batcher(self.batch_metrics.clone());
+        reg.gauge("uptime_s", self.started.elapsed().as_secs_f64());
+        reg
+    }
+
+    /// Metrics snapshot: top-level counters summed over every variant,
+    /// batcher stats, the `uptime_s` gauge, plus a `"variants"` object
+    /// with each variant's full per-variant snapshot (counters + latency
+    /// percentiles + the `inflight` gauge).
+    pub fn metrics_json(&self) -> Json {
+        self.registry().json()
+    }
+
+    /// Prometheus text exposition of the same metrics (per-variant
+    /// counters, latency histogram buckets, inflight gauges, batcher
+    /// stats, uptime, and the global obs work counters). Served by the
+    /// TCP `{"cmd":"metrics_prom"}` command.
+    pub fn metrics_prom(&self) -> String {
+        self.registry().prometheus()
     }
 
     /// Batcher-level metrics of the primary backend (drain sizes/latency).

@@ -201,15 +201,22 @@ impl EmulatorService {
         let (init_tx, init_rx) = channel::<Result<Vec<VariantShape>, String>>();
         let backend_kind = cfg.backend;
         let thread_name = format!("batcher-{}", specs[0].name);
+        // Attribute the worker's kernel FLOPs to the spawning run: a
+        // deployment built inside `Experiment::run` (the probe stage)
+        // carries that run's obs counter scope into its batcher thread.
+        let obs_scope = crate::obs::counters::current_scope();
         let worker = std::thread::Builder::new()
             .name(thread_name)
-            .spawn(move || match BatchWorker::init(&artifact_dir, &specs, &cfg) {
-                Ok(worker) => {
-                    let _ = init_tx.send(Ok(worker.shapes().to_vec()));
-                    worker.run(rx, metrics);
-                }
-                Err(e) => {
-                    let _ = init_tx.send(Err(format!("{e:#}")));
+            .spawn(move || {
+                let _obs = crate::obs::counters::scoped_opt(obs_scope);
+                match BatchWorker::init(&artifact_dir, &specs, &cfg) {
+                    Ok(worker) => {
+                        let _ = init_tx.send(Ok(worker.shapes().to_vec()));
+                        worker.run(rx, metrics);
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(format!("{e:#}")));
+                    }
                 }
             })
             .context("spawning batcher thread")?;
@@ -334,7 +341,12 @@ impl BatchWorker {
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
-            self.run_drain(&pending, &metrics);
+            {
+                let mut sp = crate::obs::span("batcher.drain");
+                sp.counter("requests", pending.len() as u64);
+                sp.counter("rows", rows as u64);
+                self.run_drain(&pending, &metrics);
+            }
             metrics.latency.record(t0.elapsed());
         }
     }

@@ -42,18 +42,44 @@ impl LatencyHistogram {
         self.max_us.load(Ordering::Relaxed)
     }
 
-    /// Approximate quantile from the bucket boundaries (upper bound).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative `(le_us, count)` pairs up to the highest non-empty
+    /// bucket — the Prometheus `_bucket{le=...}` series (bucket `k` covers
+    /// `[2^k, 2^(k+1))` µs, so its upper bound is `2^(k+1)`). Empty
+    /// histogram: empty vec.
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let highest = match counts.iter().rposition(|&c| c > 0) {
+            Some(k) => k,
+            None => return Vec::new(),
+        };
+        let mut out = Vec::with_capacity(highest + 1);
+        let mut cum = 0u64;
+        for (k, c) in counts.iter().take(highest + 1).enumerate() {
+            cum += c;
+            out.push((1u64 << (k + 1), cum));
+        }
+        out
+    }
+
+    /// Approximate quantile from the bucket boundaries: the upper bound of
+    /// the bucket containing the q-th sample, clamped to the observed
+    /// maximum (so a lone 1 µs sample reports 1, not bucket 0's bound of
+    /// 2, and the top bucket never reports beyond anything recorded).
     pub fn quantile_us(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
         }
-        let target = ((total as f64) * q).ceil() as u64;
+        let target = ((total as f64) * q).ceil().max(1.0) as u64;
         let mut seen = 0u64;
         for (k, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return 1u64 << (k + 1);
+                return (1u64 << (k + 1)).min(self.max_us());
             }
         }
         self.max_us()
@@ -151,6 +177,43 @@ mod tests {
         assert!(h.quantile_us(0.5) <= 64);
         assert!(h.quantile_us(0.95) >= 1024);
         assert_eq!(h.max_us(), 2000);
+    }
+
+    #[test]
+    fn quantiles_clamp_to_observed_range() {
+        // A lone 1 µs sample: bucket 0's upper bound is 2, but no recorded
+        // latency exceeds 1 — every quantile must report 1.
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_micros(1));
+        assert_eq!(h.quantile_us(0.5), 1);
+        assert_eq!(h.quantile_us(0.99), 1);
+        assert_eq!(h.max_us(), 1);
+
+        // Known distribution: 90 × 10 µs + 10 × 3000 µs. p50 lands in the
+        // [8,16) bucket (upper bound 16); p99 lands in the [2048,4096)
+        // bucket whose bound 4096 must clamp to the observed max 3000.
+        let h = LatencyHistogram::default();
+        for _ in 0..90 {
+            h.record(Duration::from_micros(10));
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_micros(3000));
+        }
+        assert_eq!(h.quantile_us(0.5), 16);
+        assert_eq!(h.quantile_us(0.99), 3000);
+        assert_eq!(h.quantile_us(1.0), 3000);
+    }
+
+    #[test]
+    fn cumulative_buckets_expose_prometheus_series() {
+        let h = LatencyHistogram::default();
+        assert!(h.cumulative_buckets().is_empty());
+        h.record(Duration::from_micros(1)); // bucket 0, le 2
+        h.record(Duration::from_micros(3)); // bucket 1, le 4
+        h.record(Duration::from_micros(3));
+        let b = h.cumulative_buckets();
+        assert_eq!(b, vec![(2, 1), (4, 3)]);
+        assert_eq!(h.sum_us(), 7);
     }
 
     #[test]

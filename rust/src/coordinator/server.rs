@@ -10,7 +10,11 @@
 //! -> {"cmd": "variants"}
 //! <- {"variants": ["cfg_a", "cfg_a_harsh"], "backend": "native", "us": 3}
 //! -> {"cmd": "metrics"}
-//! <- {"requests": ..., "variants": {"cfg_a": {...}, ...}, "us": 5}
+//! <- {"requests": ..., "uptime_s": ..., "variants": {"cfg_a": {...}, ...}, "us": 5}
+//! -> {"cmd": "metrics_prom"}
+//! <- {"prom": "# TYPE semulator_requests_total counter\n...", "us": 7}
+//! -> {"cmd": "trace"}
+//! <- {"trace": [{"span": "server.request", "us": 41, "counters": {...}}, ...], "us": 2}
 //! -> {"cmd": "shutdown"}
 //! ```
 //!
@@ -18,7 +22,11 @@
 //! verified replies add `verify_dev` (vs golden SPICE) and, when a
 //! cross-check backend is attached, `cross_dev` (vs the other emulator).
 //! `metrics` reports deployment-wide counters plus a per-variant
-//! breakdown.
+//! breakdown; `metrics_prom` carries the same data (plus the global obs
+//! work counters and latency-histogram buckets) as Prometheus text
+//! exposition in the `prom` string field — scrape it by splitting that
+//! field out of the JSON line. `trace` returns the recent-span ring of
+//! the global [`crate::obs`] tracer.
 //!
 //! Robustness contract: malformed JSON, wrong-length `v`/`g`, unknown
 //! `cmd` and unknown `variant` all produce a structured
@@ -136,6 +144,7 @@ fn handle_conn(stream: TcpStream, deployment: &Deployment, stop: &AtomicBool) ->
             }
         }
         let t0 = std::time::Instant::now();
+        let _sp = crate::obs::span("server.request");
         let reply = match process_line(line.trim(), deployment, stop) {
             Ok(Some(mut obj)) => {
                 obj.push(("us".to_string(), Json::Num(t0.elapsed().as_micros() as f64)));
@@ -166,6 +175,11 @@ fn process_line(
                 let obj = snap.as_obj().unwrap().clone().into_iter().collect();
                 Ok(Some(obj))
             }
+            "metrics_prom" => Ok(Some(vec![(
+                "prom".to_string(),
+                Json::Str(deployment.metrics_prom()),
+            )])),
+            "trace" => Ok(Some(vec![("trace".to_string(), crate::obs::trace::global().to_json())])),
             "variants" => Ok(Some(vec![
                 (
                     "variants".to_string(),
@@ -183,7 +197,9 @@ fn process_line(
                 stop.store(true, Ordering::Relaxed);
                 Ok(None)
             }
-            other => anyhow::bail!("unknown command '{other}' (metrics | variants | shutdown)"),
+            other => anyhow::bail!(
+                "unknown command '{other}' (metrics | metrics_prom | trace | variants | shutdown)"
+            ),
         };
     }
     // A MAC request: resolve the variant (optional for single-variant

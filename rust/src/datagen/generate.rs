@@ -52,6 +52,8 @@ impl GenConfig {
 /// Generate a dataset by running `n_samples` independent transient
 /// simulations of the block (fast structured solver) in parallel.
 pub fn generate(cfg: &GenConfig) -> Dataset {
+    let mut sp = crate::obs::span("datagen.generate");
+    sp.counter("samples", cfg.n_samples as u64);
     let block = AnalogBlock::new(cfg.block.clone()).expect("invalid block config");
     let d = cfg.block.n_features();
     let o = cfg.block.n_mac();

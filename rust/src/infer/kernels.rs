@@ -22,6 +22,16 @@ pub fn celu(x: f32) -> f32 {
     }
 }
 
+/// Count one `(m, n, k)` matmul against the obs work counters: 2·m·n·k
+/// FLOPs (chunk-invariant) and the f32 bytes of all three operands
+/// (per-call, so NOT chunk-invariant — the weight operand recounts per
+/// chunk).
+#[inline]
+fn count_matmul(m: usize, n: usize, k: usize) {
+    crate::obs::counters::add_kernel_flops(2 * (m as u64) * (n as u64) * (k as u64));
+    crate::obs::counters::add_kernel_bytes(4 * ((m * k) + (n * k) + (m * n)) as u64);
+}
+
 /// `out[i, j] = dot(a[i, :], bt[j, :])` with `a: (m, k)` row-major and
 /// `bt: (n, k)` row-major (i.e. the logical `(k, n)` right operand stored
 /// transposed).
@@ -29,6 +39,7 @@ pub fn matmul_nt(a: &[f32], bt: &[f32], m: usize, n: usize, k: usize, out: &mut 
     assert_eq!(a.len(), m * k, "lhs size");
     assert_eq!(bt.len(), n * k, "packed rhs size");
     assert_eq!(out.len(), m * n, "out size");
+    count_matmul(m, n, k);
     for i in 0..m {
         let ar = &a[i * k..(i + 1) * k];
         let or = &mut out[i * n..(i + 1) * n];
@@ -114,6 +125,7 @@ pub fn matmul_nn_acc(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &m
     assert_eq!(a.len(), m * k, "lhs size");
     assert_eq!(b.len(), k * n, "rhs size");
     assert_eq!(out.len(), m * n, "out size");
+    count_matmul(m, n, k);
     for i in 0..m {
         let ar = &a[i * k..(i + 1) * k];
         let or = &mut out[i * n..(i + 1) * n];
@@ -136,6 +148,7 @@ pub fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &m
     assert_eq!(a.len(), m * k, "lhs size");
     assert_eq!(b.len(), m * n, "rhs size");
     assert_eq!(out.len(), k * n, "out size");
+    count_matmul(m, n, k);
     for i in 0..m {
         let ar = &a[i * k..(i + 1) * k];
         let br = &b[i * n..(i + 1) * n];
@@ -254,6 +267,26 @@ mod tests {
                 assert!((g - w).abs() <= 1e-5, "tn ({m},{n},{k})");
             }
         }
+    }
+
+    #[test]
+    fn matmuls_count_flops_and_bytes() {
+        use crate::obs::counters;
+        let set = std::sync::Arc::new(crate::obs::CounterSet::new());
+        let _g = counters::scoped(set.clone());
+        let (m, n, k) = (2, 3, 4);
+        let a = fill(m * k, 21);
+        let b = fill(k * n, 22);
+        let bt = transpose_pack(&b, k, n);
+        let mut out = vec![0.0f32; m * n];
+        matmul_nt(&a, &bt, m, n, k, &mut out);
+        let s = set.snapshot();
+        assert_eq!(s.kernel_flops, 2 * 2 * 3 * 4);
+        assert_eq!(s.kernel_bytes, 4 * (2 * 4 + 3 * 4 + 2 * 3));
+        matmul_nn_acc(&a, &b, m, n, k, &mut out);
+        let mut wt = vec![0.0f32; k * n];
+        matmul_tn_acc(&a, &out, m, n, k, &mut wt);
+        assert_eq!(set.snapshot().kernel_flops, 3 * 48);
     }
 
     #[test]

@@ -384,6 +384,8 @@ impl Trainer for NativeTrainer {
         let mut total_steps = 0usize;
 
         for epoch in 0..cfg.epochs {
+            let mut sp = crate::obs::span("train.epoch");
+            sp.counter("epoch", epoch as u64);
             let lr = cfg.lr.at(epoch);
             let order = rng.permutation(train_ds.n);
             let mut loss_acc = 0.0f64;

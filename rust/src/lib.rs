@@ -27,6 +27,10 @@
 //! * [`coordinator`] — the pluggable `Trainer` (PJRT Adam or native SGD),
 //!   dynamic batcher, golden/emulated request router, TCP front end,
 //!   metrics (the machinery `api` and `pipeline` wire).
+//! * [`obs`] — the unified telemetry layer: tracing spans, scoped work
+//!   counters (kernel FLOPs, Newton iterations), Prometheus text
+//!   exposition, and the `timings.json` machinery behind
+//!   `semulator stats`.
 //! * [`analytic`] — the human-expert analytical baseline the paper argues
 //!   against.
 //! * [`stats`] — Theorem 4.1 error-bound machinery and histograms.
@@ -148,6 +152,7 @@ pub mod coordinator;
 pub mod datagen;
 pub mod infer;
 pub mod model;
+pub mod obs;
 pub mod pipeline;
 pub mod repro;
 pub mod runtime;

@@ -8,6 +8,7 @@
 //! semulator train   --variant small --data runs/data/small.bin --epochs 150
 //! semulator eval    --variant small --data runs/data/small.bin --ckpt runs/ckpt/x.ckpt
 //! semulator serve   --variant small --ckpt runs/ckpt/x.ckpt --addr 127.0.0.1:7070
+//! semulator stats   runs/experiments/quickstart
 //! semulator repro   table1|fig4|fig5|fig6|fig7|bound|speed|all [--preset ci|small|paper]
 //! ```
 
@@ -71,6 +72,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("train") => cmd_train(args),
         Some("eval") => cmd_eval(args),
         Some("serve") => cmd_serve(args),
+        Some("stats") => cmd_stats(args),
         Some("repro") => cmd_repro(args),
         Some(other) => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
         None => {
@@ -80,7 +82,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: semulator <info|run|sweep|datagen|train|eval|serve|repro> [options]
+const USAGE: &str = "usage: semulator <info|run|sweep|datagen|train|eval|serve|stats|repro> [options]
   info                                   list artifacts and variants
   run      --spec FILE [--out DIR] [--workers N]  one-command pipeline:
            datagen -> split -> train -> eval -> servable run directory,
@@ -109,6 +111,10 @@ const USAGE: &str = "usage: semulator <info|run|sweep|datagen|train|eval|serve|r
            checkpoint PATHs may be `semulator run` directories;
            --campaign DIR [--top-k K] instead serves the leaderboard of a
            finished `semulator sweep` campaign (K=0/default: all of it)
+  stats    DIR                            pretty-print the timing breakdown
+           of a `semulator run` directory (per-stage wall-clock from its
+           timings.json sidecar, kernel FLOPs, Newton iterations) or of a
+           whole `semulator sweep` campaign (one row per run + totals)
   repro    <table1|fig4|fig5|fig6|fig7|bound|speed|all> [--preset ci|small|paper]
 common:    --artifacts DIR (default artifacts)   --work DIR (default runs)
 run:       the run directory (default runs/experiments/<name>) is
@@ -638,6 +644,128 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     // Block until a client sends the shutdown command.
     server.wait();
+    Ok(())
+}
+
+/// One parsed `timings.json` sidecar (see `pipeline::Experiment::run`).
+struct RunTimings {
+    total_ms: f64,
+    /// Stage wall-clock, sorted by descending ms.
+    stages: Vec<(String, f64)>,
+    /// Obs work counters, in sidecar (sorted-key) order.
+    counters: Vec<(String, f64)>,
+}
+
+impl RunTimings {
+    fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("timings.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = semulator::util::json_parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let pairs = |key: &str| -> Vec<(String, f64)> {
+            j.get(key)
+                .and_then(|v| v.as_obj())
+                .map(|m| {
+                    m.iter().filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x))).collect()
+                })
+                .unwrap_or_default()
+        };
+        let mut stages = pairs("stages");
+        stages.sort_by(|a, b| b.1.total_cmp(&a.1));
+        Ok(Self {
+            total_ms: j.get("total_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            stages,
+            counters: pairs("counters"),
+        })
+    }
+
+    fn counter(&self, key: &str) -> f64 {
+        self.counters.iter().find(|(k, _)| k == key).map(|(_, v)| *v).unwrap_or(0.0)
+    }
+}
+
+/// `1234567.0` -> `"1.23M"` — counter magnitudes, not exact values (the
+/// exact integers stay in the JSON surfaces).
+fn human_count(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.0}")
+    }
+}
+
+/// `semulator stats DIR`: pretty-print the timing breakdown of one run
+/// directory, or of every run under a campaign directory's `runs/`.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.positional.first().map(String::as_str).context(
+        "usage: semulator stats DIR (a `semulator run` run directory or a \
+         `semulator sweep` campaign directory)",
+    )?);
+    if dir.join("timings.json").is_file() {
+        let t = RunTimings::load(&dir)?;
+        println!("{}: total {:.1} ms", dir.display(), t.total_ms);
+        for (stage, ms) in &t.stages {
+            let pct = if t.total_ms > 0.0 { ms / t.total_ms * 100.0 } else { 0.0 };
+            println!("  stage {stage:<12} {ms:>10.1} ms  {pct:>5.1}%");
+        }
+        for (k, v) in &t.counters {
+            println!("  {k:<18} {:>10}", human_count(*v));
+        }
+        return Ok(());
+    }
+    let runs = dir.join("runs");
+    anyhow::ensure!(
+        runs.is_dir(),
+        "{}: neither a run directory (no timings.json) nor a campaign \
+         directory (no runs/)",
+        dir.display()
+    );
+    let mut names: Vec<String> = std::fs::read_dir(&runs)?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().is_dir())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .collect();
+    names.sort();
+    println!(
+        "{:<28} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "run", "total_ms", "datagen_ms", "train_ms", "kernel_flops", "newton_iters"
+    );
+    let (mut total, mut flops, mut newton, mut shown) = (0.0f64, 0.0f64, 0.0f64, 0usize);
+    for name in &names {
+        match RunTimings::load(&runs.join(name)) {
+            Ok(t) => {
+                let stage = |key: &str| {
+                    t.stages.iter().find(|(k, _)| k == key).map(|(_, v)| *v).unwrap_or(0.0)
+                };
+                println!(
+                    "{:<28} {:>10.1} {:>10.1} {:>10.1} {:>12} {:>12}",
+                    name,
+                    t.total_ms,
+                    stage("datagen"),
+                    stage("train"),
+                    human_count(t.counter("kernel_flops")),
+                    human_count(t.counter("newton_iters")),
+                );
+                total += t.total_ms;
+                flops += t.counter("kernel_flops");
+                newton += t.counter("newton_iters");
+                shown += 1;
+            }
+            Err(_) => println!("{name:<28} (no timings.json — failed or pre-obs run)"),
+        }
+    }
+    anyhow::ensure!(shown > 0, "{}: no run under runs/ has a timings.json", dir.display());
+    println!(
+        "campaign total: {shown}/{} runs, {total:.1} ms, {} kernel FLOPs, {} Newton iters",
+        names.len(),
+        human_count(flops),
+        human_count(newton),
+    );
     Ok(())
 }
 

@@ -1,0 +1,254 @@
+//! Deterministic work counters with scoped per-run sinks.
+//!
+//! Counters here measure *work done*, never wall time: FLOPs retired by
+//! the packed-matmul kernels, bytes they touched, Newton iterations spent
+//! in the fast crossbar solver, and solve invocations on either the fast
+//! or the golden MNA path. Every add lands in one process-wide
+//! [`CounterSet`] (served by `{"cmd":"metrics_prom"}`) and, when a scope
+//! is installed on the current thread, in that scope's set too.
+//!
+//! Scopes are how a pipeline run isolates its own totals while other runs
+//! execute concurrently (a campaign grid): [`crate::pipeline::Experiment`]
+//! installs a fresh scope around the whole run, and the two thread
+//! boundaries inside a run — [`crate::util::parallel_map`] workers and the
+//! batcher worker spawned by the probe-stage deployment — re-install the
+//! spawning thread's scope, so every add a run causes is attributed to it.
+//!
+//! All counters are relaxed atomics: they never order anything and never
+//! feed back into numeric results, so instrumented code stays bit-exact.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::Json;
+
+/// A set of work counters (thread-safe; relaxed atomics).
+#[derive(Debug, Default)]
+pub struct CounterSet {
+    /// Floating-point operations retired by the matmul kernels (2·m·n·k
+    /// per call) — invariant under batching/chunking/worker count.
+    pub kernel_flops: AtomicU64,
+    /// Bytes the matmul kernels streamed ((m·k + n·k + m·n)·4 per call).
+    /// NOT chunk-invariant (the weight operand is counted once per chunk);
+    /// report it, but never put it in byte-identical summaries.
+    pub kernel_bytes: AtomicU64,
+    /// Newton iterations spent inside the fast solver (cell + bitline +
+    /// ladder + output loops) — per-sample deterministic.
+    pub newton_iters: AtomicU64,
+    /// Fast structured solves ([`crate::xbar::FastSolver::simulate`] calls).
+    pub fast_solves: AtomicU64,
+    /// Golden full-netlist MNA solves
+    /// ([`crate::xbar::AnalogBlock::simulate_golden`] calls).
+    pub golden_solves: AtomicU64,
+}
+
+impl CounterSet {
+    pub const fn new() -> Self {
+        Self {
+            kernel_flops: AtomicU64::new(0),
+            kernel_bytes: AtomicU64::new(0),
+            newton_iters: AtomicU64::new(0),
+            fast_solves: AtomicU64::new(0),
+            golden_solves: AtomicU64::new(0),
+        }
+    }
+
+    pub fn snapshot(&self) -> CounterSnapshot {
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        CounterSnapshot {
+            kernel_flops: ld(&self.kernel_flops),
+            kernel_bytes: ld(&self.kernel_bytes),
+            newton_iters: ld(&self.newton_iters),
+            fast_solves: ld(&self.fast_solves),
+            golden_solves: ld(&self.golden_solves),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`CounterSet`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub kernel_flops: u64,
+    pub kernel_bytes: u64,
+    pub newton_iters: u64,
+    pub fast_solves: u64,
+    pub golden_solves: u64,
+}
+
+impl CounterSnapshot {
+    /// Saturating element-wise difference `self - earlier`.
+    pub fn since(&self, earlier: &CounterSnapshot) -> CounterSnapshot {
+        CounterSnapshot {
+            kernel_flops: self.kernel_flops.saturating_sub(earlier.kernel_flops),
+            kernel_bytes: self.kernel_bytes.saturating_sub(earlier.kernel_bytes),
+            newton_iters: self.newton_iters.saturating_sub(earlier.newton_iters),
+            fast_solves: self.fast_solves.saturating_sub(earlier.fast_solves),
+            golden_solves: self.golden_solves.saturating_sub(earlier.golden_solves),
+        }
+    }
+
+    /// Stable name/value pairs (the serialization order everywhere).
+    pub fn named(&self) -> [(&'static str, u64); 5] {
+        [
+            ("kernel_flops", self.kernel_flops),
+            ("kernel_bytes", self.kernel_bytes),
+            ("newton_iters", self.newton_iters),
+            ("fast_solves", self.fast_solves),
+            ("golden_solves", self.golden_solves),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(self.named().iter().map(|&(k, v)| (k, Json::Num(v as f64))).collect())
+    }
+
+    /// Parse the object produced by [`CounterSnapshot::to_json`]; absent
+    /// keys read as zero (forward compatibility with older sidecars).
+    pub fn from_json(v: &Json) -> CounterSnapshot {
+        let g = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0) as u64;
+        CounterSnapshot {
+            kernel_flops: g("kernel_flops"),
+            kernel_bytes: g("kernel_bytes"),
+            newton_iters: g("newton_iters"),
+            fast_solves: g("fast_solves"),
+            golden_solves: g("golden_solves"),
+        }
+    }
+}
+
+/// The process-wide counter set (what `metrics_prom` exposes).
+static GLOBAL: CounterSet = CounterSet::new();
+
+/// Snapshot of the process-wide counters.
+pub fn global_snapshot() -> CounterSnapshot {
+    GLOBAL.snapshot()
+}
+
+thread_local! {
+    static SCOPE: RefCell<Option<Arc<CounterSet>>> = RefCell::new(None);
+}
+
+/// The scope installed on the current thread, if any. Capture this before
+/// spawning a worker thread and re-install it there with [`scoped_opt`] so
+/// work done on the worker is attributed to the spawning run.
+pub fn current_scope() -> Option<Arc<CounterSet>> {
+    SCOPE.with(|s| s.borrow().clone())
+}
+
+/// RAII guard restoring the previously installed scope on drop.
+pub struct ScopeGuard {
+    prev: Option<Arc<CounterSet>>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        SCOPE.with(|s| *s.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Install `set` as the current thread's scope until the guard drops.
+pub fn scoped(set: Arc<CounterSet>) -> ScopeGuard {
+    scoped_opt(Some(set))
+}
+
+/// Install an optional scope (no-op guard for `None` — used when
+/// propagating a possibly-absent parent scope into a worker thread).
+pub fn scoped_opt(set: Option<Arc<CounterSet>>) -> ScopeGuard {
+    let prev = SCOPE.with(|s| std::mem::replace(&mut *s.borrow_mut(), set));
+    ScopeGuard { prev }
+}
+
+#[inline]
+fn add(field: fn(&CounterSet) -> &AtomicU64, n: u64) {
+    if n == 0 {
+        return;
+    }
+    field(&GLOBAL).fetch_add(n, Ordering::Relaxed);
+    SCOPE.with(|s| {
+        if let Some(set) = s.borrow().as_ref() {
+            field(set).fetch_add(n, Ordering::Relaxed);
+        }
+    });
+}
+
+pub fn add_kernel_flops(n: u64) {
+    add(|c| &c.kernel_flops, n);
+}
+
+pub fn add_kernel_bytes(n: u64) {
+    add(|c| &c.kernel_bytes, n);
+}
+
+pub fn add_newton_iters(n: u64) {
+    add(|c| &c.newton_iters, n);
+}
+
+pub fn add_fast_solves(n: u64) {
+    add(|c| &c.fast_solves, n);
+}
+
+pub fn add_golden_solves(n: u64) {
+    add(|c| &c.golden_solves, n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_isolates_concurrent_runs() {
+        // Two threads, each with its own scope, adding disjoint amounts:
+        // every scope sees exactly its own work even though the global set
+        // absorbs both.
+        let g0 = global_snapshot();
+        let a = Arc::new(CounterSet::new());
+        let b = Arc::new(CounterSet::new());
+        std::thread::scope(|s| {
+            for (set, n) in [(a.clone(), 10u64), (b.clone(), 33u64)] {
+                s.spawn(move || {
+                    let _g = scoped(set);
+                    for _ in 0..n {
+                        add_kernel_flops(2);
+                        add_newton_iters(1);
+                    }
+                });
+            }
+        });
+        assert_eq!(a.snapshot().kernel_flops, 20);
+        assert_eq!(a.snapshot().newton_iters, 10);
+        assert_eq!(b.snapshot().kernel_flops, 66);
+        assert_eq!(b.snapshot().newton_iters, 33);
+        let d = global_snapshot().since(&g0);
+        assert!(d.kernel_flops >= 86, "global absorbed both scopes: {d:?}");
+    }
+
+    #[test]
+    fn scope_guard_restores_previous() {
+        let outer = Arc::new(CounterSet::new());
+        let inner = Arc::new(CounterSet::new());
+        let _o = scoped(outer.clone());
+        {
+            let _i = scoped(inner.clone());
+            add_fast_solves(1);
+        }
+        add_fast_solves(2);
+        assert_eq!(inner.snapshot().fast_solves, 1);
+        assert_eq!(outer.snapshot().fast_solves, 2);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip() {
+        let s = CounterSnapshot {
+            kernel_flops: 1 << 40,
+            kernel_bytes: 7,
+            newton_iters: 3,
+            fast_solves: 2,
+            golden_solves: 1,
+        };
+        let back = CounterSnapshot::from_json(&s.to_json());
+        assert_eq!(back, s);
+        // Large counts serialize as exact integers (no float mangling).
+        assert!(s.to_json().to_string().contains("1099511627776"));
+    }
+}

@@ -1,0 +1,261 @@
+//! Unified observability layer: tracing spans, work counters, and
+//! Prometheus-style metrics exposition.
+//!
+//! SEMULATOR's value proposition is simulation speed, so the pipeline has
+//! to be able to answer "where does the time go" without external crates.
+//! This module is that answer, in three zero-dependency pieces:
+//!
+//! * [`counters`] — process-wide **work counters** (kernel FLOPs/bytes,
+//!   fast-solver Newton iterations, fast/golden solve counts) with
+//!   thread-scoped sinks so one pipeline run can tally exactly its own
+//!   work while other runs execute concurrently. Work counters measure
+//!   operations, never wall time, which is what lets them appear in the
+//!   byte-identical campaign summaries.
+//! * [`trace`] — RAII [`Span`]s with hierarchical names, per-span wall
+//!   time + counter attachments, and a ring-buffered recent-event log
+//!   ([`trace::global`]) served by the TCP `{"cmd":"trace"}` command.
+//! * [`prom`] — Prometheus text-exposition rendering and a format lint.
+//!
+//! [`Registry`] is the aggregation point: it unifies the existing
+//! [`coordinator::Metrics`](crate::coordinator::Metrics) /
+//! [`LatencyHistogram`](crate::coordinator::LatencyHistogram) instances of
+//! a deployment with gauges (uptime, per-variant inflight) and the global
+//! work counters, and renders both the established JSON metrics shape
+//! ([`Registry::json`]) and Prometheus text exposition
+//! ([`Registry::prometheus`]) from one source of truth.
+//! [`crate::api::Deployment::metrics_json`] and
+//! [`crate::api::Deployment::metrics_prom`] are thin shells over it.
+//!
+//! Instrumented call sites (the hooks perf PRs must report through):
+//! datagen sampling, `NativeTrainer` epochs, `FastSolver` Newton loops,
+//! golden MNA solves, the packed-matmul kernels, the batcher drain loop,
+//! and the TCP request path. Offline, `semulator stats DIR` pretty-prints
+//! the `timings.json` breakdown every `Experiment::run` writes.
+
+pub mod counters;
+pub mod prom;
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::coordinator::Metrics;
+use crate::util::Json;
+
+pub use counters::{CounterSet, CounterSnapshot};
+pub use prom::PromText;
+pub use trace::{Span, TraceEvent, Tracer};
+
+/// Open a span on the global tracer (shorthand for [`trace::span`]).
+pub fn span(name: &str) -> Span<'static> {
+    trace::span(name)
+}
+
+/// Aggregates a deployment's metric sources and renders them as JSON (the
+/// established `metrics` shape) or Prometheus text exposition.
+#[derive(Default)]
+pub struct Registry {
+    variants: Vec<VariantEntry>,
+    batcher: Option<Arc<Metrics>>,
+    /// Top-level gauges, e.g. `uptime_s`. The JSON key is used verbatim;
+    /// the Prometheus name is `semulator_<key>`.
+    gauges: Vec<(String, f64)>,
+}
+
+struct VariantEntry {
+    name: String,
+    metrics: Arc<Metrics>,
+    /// Per-variant gauges, e.g. `inflight`.
+    gauges: Vec<(&'static str, f64)>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register one variant's request metrics plus per-variant gauges.
+    pub fn variant(&mut self, name: &str, metrics: Arc<Metrics>, gauges: &[(&'static str, f64)]) {
+        self.variants.push(VariantEntry {
+            name: name.to_string(),
+            metrics,
+            gauges: gauges.to_vec(),
+        });
+    }
+
+    /// Register the shared batcher-level metrics (drain sizes/latency).
+    pub fn batcher(&mut self, metrics: Arc<Metrics>) {
+        self.batcher = Some(metrics);
+    }
+
+    /// Register a top-level gauge (JSON key verbatim).
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.gauges.push((name.to_string(), value));
+    }
+
+    /// The established JSON metrics shape: top-level counters summed over
+    /// every variant, batcher stats, top-level gauges, and a `"variants"`
+    /// object with each variant's snapshot plus its gauges.
+    pub fn json(&self) -> Json {
+        let mut totals: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for e in &self.variants {
+            for (k, v) in e.metrics.counters() {
+                *totals.entry(k).or_insert(0) += v;
+            }
+        }
+        let mut top: Vec<(String, Json)> = totals
+            .into_iter()
+            // Router metrics never touch the batcher pair; drop the
+            // always-zero keys in favor of the batcher-level stats below.
+            .filter(|(k, _)| *k != "batches" && *k != "batched_requests")
+            .map(|(k, v)| (k.to_string(), Json::Num(v as f64)))
+            .collect();
+        if let Some(b) = &self.batcher {
+            top.push(("mean_batch_size".into(), Json::Num(b.mean_batch_size())));
+            top.push(("batches".into(), Json::Num(b.batches.load(Ordering::Relaxed) as f64)));
+            top.push((
+                "batched_requests".into(),
+                Json::Num(b.batched_requests.load(Ordering::Relaxed) as f64),
+            ));
+        }
+        for (k, v) in &self.gauges {
+            top.push((k.clone(), Json::Num(*v)));
+        }
+        let variants: BTreeMap<String, Json> = self
+            .variants
+            .iter()
+            .map(|e| {
+                let mut snap = match e.metrics.snapshot() {
+                    Json::Obj(map) => map,
+                    _ => unreachable!("Metrics::snapshot is an object"),
+                };
+                for (k, v) in &e.gauges {
+                    snap.insert((*k).to_string(), Json::Num(*v));
+                }
+                (e.name.clone(), Json::Obj(snap))
+            })
+            .collect();
+        top.push(("variants".into(), Json::Obj(variants)));
+        Json::Obj(top.into_iter().collect())
+    }
+
+    /// Prometheus text exposition of everything registered plus the global
+    /// work counters and trace-event count. Families are grouped (one
+    /// `# TYPE` per family, samples contiguous) and pass [`prom::lint`].
+    pub fn prometheus(&self) -> String {
+        let mut p = PromText::new();
+        // Global work counters (process-wide, monotonic).
+        for (k, v) in counters::global_snapshot().named() {
+            p.counter(&format!("semulator_{k}_total"), &[], v as f64);
+        }
+        p.counter("semulator_trace_events_total", &[], trace::global().recorded() as f64);
+        for (k, v) in &self.gauges {
+            p.gauge(&format!("semulator_{k}"), &[], *v);
+        }
+        // Per-variant request counters, family-major so samples group.
+        let per_variant: Vec<(&str, [(&'static str, u64); 10])> =
+            self.variants.iter().map(|e| (e.name.as_str(), e.metrics.counters())).collect();
+        if let Some((_, first)) = per_variant.first() {
+            for idx in 0..first.len() {
+                let key = first[idx].0;
+                if key == "batches" || key == "batched_requests" {
+                    continue; // always zero per-variant; batcher-level below
+                }
+                for (name, counters) in &per_variant {
+                    p.counter(
+                        &format!("semulator_{key}_total"),
+                        &[("variant", name)],
+                        counters[idx].1 as f64,
+                    );
+                }
+            }
+        }
+        // Per-variant gauges (inflight), family-major.
+        let gauge_keys: BTreeMap<&'static str, ()> =
+            self.variants.iter().flat_map(|e| e.gauges.iter().map(|(k, _)| (*k, ()))).collect();
+        for key in gauge_keys.keys() {
+            for e in &self.variants {
+                if let Some((_, v)) = e.gauges.iter().find(|(k, _)| k == key) {
+                    p.gauge(&format!("semulator_{key}"), &[("variant", &e.name)], *v);
+                }
+            }
+        }
+        for e in &self.variants {
+            p.histogram_us(
+                "semulator_request_latency_us",
+                &[("variant", &e.name)],
+                &e.metrics.latency,
+            );
+        }
+        if let Some(b) = &self.batcher {
+            p.counter("semulator_batches_total", &[], b.batches.load(Ordering::Relaxed) as f64);
+            p.counter(
+                "semulator_batched_requests_total",
+                &[],
+                b.batched_requests.load(Ordering::Relaxed) as f64,
+            );
+            p.histogram_us("semulator_batch_flush_latency_us", &[], &b.latency);
+        }
+        p.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn registry_renders_both_surfaces_consistently() {
+        let mut reg = Registry::new();
+        let a = Arc::new(Metrics::default());
+        Metrics::inc(&a.requests);
+        Metrics::inc(&a.requests);
+        Metrics::inc(&a.emulated);
+        a.latency.record(Duration::from_micros(40));
+        let b = Arc::new(Metrics::default());
+        Metrics::inc(&b.requests);
+        Metrics::inc(&b.golden);
+        let batch = Arc::new(Metrics::default());
+        batch.batches.fetch_add(2, Ordering::Relaxed);
+        batch.batched_requests.fetch_add(6, Ordering::Relaxed);
+        reg.variant("a", a, &[("inflight", 0.0)]);
+        reg.variant("b", b, &[("inflight", 1.0)]);
+        reg.batcher(batch);
+        reg.gauge("uptime_s", 12.5);
+
+        let j = reg.json();
+        assert_eq!(j.get("requests").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("golden").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("mean_batch_size").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("uptime_s").unwrap().as_f64(), Some(12.5));
+        let va = j.get("variants").unwrap().get("a").unwrap();
+        assert_eq!(va.get("requests").unwrap().as_f64(), Some(2.0));
+        assert_eq!(va.get("inflight").unwrap().as_f64(), Some(0.0));
+        let vb = j.get("variants").unwrap().get("b").unwrap();
+        assert_eq!(vb.get("inflight").unwrap().as_f64(), Some(1.0));
+
+        let text = reg.prometheus();
+        prom::lint(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
+        assert!(text.contains("semulator_requests_total{variant=\"a\"} 2"), "{text}");
+        assert!(text.contains("semulator_requests_total{variant=\"b\"} 1"), "{text}");
+        assert!(text.contains("semulator_inflight{variant=\"b\"} 1"), "{text}");
+        assert!(text.contains("semulator_uptime_s 12.5"), "{text}");
+        assert!(text.contains("semulator_batches_total 2"), "{text}");
+        assert!(
+            text.contains("semulator_request_latency_us_bucket{variant=\"a\",le=\"64\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE semulator_kernel_flops_total counter"), "{text}");
+        // One TYPE declaration per family.
+        let decls = text.matches("# TYPE semulator_requests_total").count();
+        assert_eq!(decls, 1);
+    }
+
+    #[test]
+    fn empty_registry_still_lints() {
+        let text = Registry::new().prometheus();
+        assert!(prom::lint(&text).unwrap() >= 6, "{text}");
+    }
+}

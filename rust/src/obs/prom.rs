@@ -1,0 +1,206 @@
+//! Prometheus text-exposition rendering (version 0.0.4 subset).
+//!
+//! [`PromText`] accumulates `# TYPE` declarations and sample lines of the
+//! form `name{label="value",...} value`; [`PromText::histogram_us`]
+//! renders a [`LatencyHistogram`](crate::coordinator::LatencyHistogram)
+//! as the conventional cumulative `_bucket{le=...}` series plus `_sum`
+//! and `_count`. [`lint`] validates that a rendered exposition contains
+//! only well-formed lines — CI's obs-smoke job and the golden-string
+//! tests both gate on it.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+use crate::coordinator::LatencyHistogram;
+
+/// Accumulator for a Prometheus text exposition.
+#[derive(Default)]
+pub struct PromText {
+    out: String,
+    typed: BTreeSet<String>,
+}
+
+fn fmt_value(out: &mut String, v: f64) {
+    if v.is_finite() && v.fract() == 0.0 && v.abs() < 1e15 {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Emit a `# TYPE` declaration the first time `name` is seen.
+    fn declare(&mut self, name: &str, kind: &str) {
+        if self.typed.insert(name.to_string()) {
+            let _ = writeln!(self.out, "# TYPE {name} {kind}");
+        }
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                let _ = write!(self.out, "{k}=\"{}\"", escape_label(v));
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        fmt_value(&mut self.out, value);
+        self.out.push('\n');
+    }
+
+    pub fn counter(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.declare(name, "counter");
+        self.sample(name, labels, value);
+    }
+
+    pub fn gauge(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.declare(name, "gauge");
+        self.sample(name, labels, value);
+    }
+
+    /// Render a log2-bucketed latency histogram as cumulative
+    /// `name_bucket{le="<us>"}` series plus `name_sum` / `name_count`.
+    pub fn histogram_us(&mut self, name: &str, labels: &[(&str, &str)], hist: &LatencyHistogram) {
+        self.declare(name, "histogram");
+        let bucket = format!("{name}_bucket");
+        let total = hist.count();
+        for (le, cum) in hist.cumulative_buckets() {
+            let le_s = le.to_string();
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            ls.push(("le", le_s.as_str()));
+            self.sample(&bucket, &ls, cum as f64);
+        }
+        let mut ls: Vec<(&str, &str)> = labels.to_vec();
+        ls.push(("le", "+Inf"));
+        self.sample(&bucket, &ls, total as f64);
+        self.sample(&format!("{name}_sum"), labels, hist.sum_us() as f64);
+        self.sample(&format!("{name}_count"), labels, total as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Validate a text exposition: every non-empty line must be a
+/// `# TYPE <name> <kind>` declaration or a `name{labels} value` sample.
+/// Returns the number of sample lines on success.
+pub fn lint(text: &str) -> Result<usize, String> {
+    fn is_name(s: &str) -> bool {
+        !s.is_empty()
+            && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+            && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+    let mut samples = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        let err = |what: &str| Err(format!("line {}: {what}: {line:?}", ln + 1));
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let (name, kind) = (it.next().unwrap_or(""), it.next().unwrap_or(""));
+            if !is_name(name) || !matches!(kind, "counter" | "gauge" | "histogram" | "summary") {
+                return err("bad TYPE declaration");
+            }
+            if it.next().is_some() {
+                return err("trailing tokens after TYPE");
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            return err("only '# TYPE' comments are produced");
+        }
+        // name[{labels}] value
+        let (head, value) = match line.rsplit_once(' ') {
+            Some(p) => p,
+            None => return err("no value"),
+        };
+        if value.parse::<f64>().is_err() {
+            return err("unparseable value");
+        }
+        let name = match head.split_once('{') {
+            Some((n, labels)) => {
+                if !labels.ends_with('}') {
+                    return err("unterminated label set");
+                }
+                n
+            }
+            None => head,
+        };
+        if !is_name(name) {
+            return err("bad metric name");
+        }
+        samples += 1;
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn golden_exposition_string() {
+        // Pin the exact rendering: TYPE once per family, labels quoted,
+        // integer values without decimal points.
+        let mut p = PromText::new();
+        p.counter("semulator_requests_total", &[("variant", "a")], 3.0);
+        p.counter("semulator_requests_total", &[("variant", "b")], 1.0);
+        p.gauge("semulator_uptime_seconds", &[], 1.5);
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_micros(1));
+        h.record(Duration::from_micros(3));
+        p.histogram_us("semulator_latency_us", &[("variant", "a")], &h);
+        let text = p.finish();
+        let want = "\
+# TYPE semulator_requests_total counter
+semulator_requests_total{variant=\"a\"} 3
+semulator_requests_total{variant=\"b\"} 1
+# TYPE semulator_uptime_seconds gauge
+semulator_uptime_seconds 1.5
+# TYPE semulator_latency_us histogram
+semulator_latency_us_bucket{variant=\"a\",le=\"2\"} 1
+semulator_latency_us_bucket{variant=\"a\",le=\"4\"} 2
+semulator_latency_us_bucket{variant=\"a\",le=\"+Inf\"} 2
+semulator_latency_us_sum{variant=\"a\"} 4
+semulator_latency_us_count{variant=\"a\"} 2
+";
+        assert_eq!(text, want);
+        assert_eq!(lint(&text).unwrap(), 8);
+    }
+
+    #[test]
+    fn lint_rejects_malformed_lines() {
+        assert!(lint("semulator_ok 1\n").is_ok());
+        assert!(lint("no value here\n").is_err());
+        assert!(lint("bad name 1\n").is_err());
+        assert!(lint("name{unterminated 1\n").is_err());
+        assert!(lint("# HELP x y\n").is_err());
+        assert!(lint("# TYPE x flavor\n").is_err());
+        assert!(lint("x NaN\n").is_ok()); // NaN parses as f64
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut p = PromText::new();
+        p.gauge("g", &[("k", "a\"b\\c")], 1.0);
+        let text = p.finish();
+        assert!(text.contains("g{k=\"a\\\"b\\\\c\"} 1"), "{text}");
+        lint(&text).unwrap();
+    }
+}

@@ -26,7 +26,9 @@
 //!   `eval.json` files (never from in-memory state), contain no wall-clock
 //!   values, and are ordered by the deterministic grid expansion, so the
 //!   same campaign spec yields an identical `summary.json` regardless of
-//!   worker count.
+//!   worker count. Wall-clock stays in each run's `timings.json` sidecar;
+//!   only the *chunk-invariant* work counters it records (kernel FLOPs,
+//!   Newton iterations) are surfaced as summary columns.
 //!
 //! The leaderboard (run names sorted by held-out eval MSE) feeds directly
 //! into serving: `api::DeploymentBuilder::from_campaign` turns the top-K
@@ -217,6 +219,13 @@ pub struct RunEval {
     /// disabled probes).
     pub probe_emulator_mae: Option<f64>,
     pub probe_golden_mae: Option<f64>,
+    /// Packed-kernel FLOPs of the whole run, from the `timings.json`
+    /// sidecar (`None` for runs predating the obs layer). Chunk-invariant,
+    /// so safe inside the byte-identical summary.
+    pub kernel_flops: Option<u64>,
+    /// Newton iterations across every fast solve (same provenance and
+    /// invariance as [`Self::kernel_flops`]).
+    pub newton_iters: Option<u64>,
 }
 
 /// One summary row: grid coordinates + outcome + metrics.
@@ -371,6 +380,17 @@ fn disk_row(dir: &Path, point: &SweepPoint, hash: &str, status: RunStatus) -> Re
         section.get(key).and_then(|v| v.as_f64()).unwrap_or(f64::NAN)
     };
     let probes = eval.get("probes");
+    // Work counters come from the timings.json sidecar when present (runs
+    // made before the obs layer simply lack the columns). Only the
+    // chunk-invariant counters are read — wall-clock and byte counters
+    // stay out of summaries by design.
+    let counters = std::fs::read_to_string(dir.join("timings.json"))
+        .ok()
+        .and_then(|t| json_parse(&t).ok())
+        .and_then(|t| t.get("counters").cloned());
+    let counter = |key: &str| -> Option<u64> {
+        counters.as_ref().and_then(|c| c.get(key)).and_then(|v| v.as_f64()).map(|v| v as u64)
+    };
     Ok(RunRow {
         name: point.spec.name.clone(),
         spec_hash: hash.to_string(),
@@ -382,6 +402,8 @@ fn disk_row(dir: &Path, point: &SweepPoint, hash: &str, status: RunStatus) -> Re
             p_halfmv: num(native, "p_halfmv"),
             probe_emulator_mae: probes.and_then(|p| p.get("emulator_mae")).and_then(|v| v.as_f64()),
             probe_golden_mae: probes.and_then(|p| p.get("golden_mae")).and_then(|v| v.as_f64()),
+            kernel_flops: counter("kernel_flops"),
+            newton_iters: counter("newton_iters"),
         }),
     })
 }
@@ -438,7 +460,10 @@ impl CampaignReport {
             out.push(',');
             out.push_str(axis);
         }
-        out.push_str(",test_mse,test_mae,p_halfmv,probe_emulator_mae,probe_golden_mae,error\n");
+        out.push_str(
+            ",test_mse,test_mae,p_halfmv,probe_emulator_mae,probe_golden_mae,\
+             kernel_flops,newton_iters,error\n",
+        );
         for row in &self.rows {
             out.push_str(&format!("{},{},{}", row.name, row.status.tag(), row.spec_hash));
             for axis in &self.axes {
@@ -448,14 +473,17 @@ impl CampaignReport {
                 }
             }
             let opt = |v: Option<f64>| v.map(|x| x.to_string()).unwrap_or_default();
+            let opt_u = |v: Option<u64>| v.map(|x| x.to_string()).unwrap_or_default();
             let e = row.eval.as_ref();
             out.push_str(&format!(
-                ",{},{},{},{},{}",
+                ",{},{},{},{},{},{},{}",
                 opt(e.map(|e| e.test_mse)),
                 opt(e.map(|e| e.test_mae)),
                 opt(e.map(|e| e.p_halfmv)),
                 opt(e.and_then(|e| e.probe_emulator_mae)),
                 opt(e.and_then(|e| e.probe_golden_mae)),
+                opt_u(e.and_then(|e| e.kernel_flops)),
+                opt_u(e.and_then(|e| e.newton_iters)),
             ));
             out.push(',');
             if let RunStatus::Failed(err) = &row.status {
@@ -492,6 +520,12 @@ fn row_json(row: &RunRow) -> Json {
         }
         if let Some(v) = e.probe_golden_mae {
             pairs.push(("probe_golden_mae", Json::Num(v)));
+        }
+        if let Some(v) = e.kernel_flops {
+            pairs.push(("kernel_flops", Json::Num(v as f64)));
+        }
+        if let Some(v) = e.newton_iters {
+            pairs.push(("newton_iters", Json::Num(v as f64)));
         }
     }
     if let RunStatus::Failed(err) = &row.status {
@@ -566,6 +600,8 @@ mod tests {
                 p_halfmv: 0.5,
                 probe_emulator_mae: Some(0.2),
                 probe_golden_mae: None,
+                kernel_flops: Some(123456),
+                newton_iters: None,
             }),
         }
     }
@@ -607,8 +643,13 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("name,status,spec_hash,data_seed,test_mse"));
+        assert!(lines[0].ends_with("probe_golden_mae,kernel_flops,newton_iters,error"));
         assert!(lines[2].contains(",failed,"));
         assert!(lines[2].contains("\"boom, with \"\"quotes\"\"\""));
-        assert!(lines[1].ends_with("0.2,,"), "{}", lines[1]);
+        // probe_golden_mae and newton_iters are absent, kernel_flops is an
+        // exact integer cell, error is empty on a completed row.
+        assert!(lines[1].ends_with("0.2,,123456,,"), "{}", lines[1]);
+        assert_eq!(jrows[0].get("kernel_flops").unwrap().as_f64(), Some(123456.0));
+        assert!(jrows[0].get("newton_iters").is_none());
     }
 }

@@ -8,10 +8,18 @@
 //!   spec.json       the ExperimentSpec (reproduces the run)
 //!   data.bin        the golden dataset (+ data.meta.json provenance)
 //!   ckpt.ckpt       trained parameters
-//!   report.json     TrainReport (per-epoch history + final eval)
+//!   report.json     TrainReport (per-epoch history + final eval + timings)
 //!   history.csv     the Fig-4 series
 //!   eval.json       native eval, PJRT cross-check status, probe stats
+//!   timings.json    wall-clock per stage + obs work counters (see below)
 //! ```
+//!
+//! Every run executes inside its own [`crate::obs`] counter scope, so the
+//! kernel-FLOP / Newton-iteration totals in `timings.json` are *this
+//! run's* work even when a campaign runs many experiments concurrently.
+//! Wall-clock lives only in `report.json`/`timings.json` — never in
+//! campaign summaries, which must stay byte-identical across worker
+//! counts (the counters, being chunk-invariant, may be surfaced there).
 //!
 //! The directory is directly servable: [`load_variant_def`] (also exposed
 //! as `api::VariantDef::from_run_dir`) turns it into a deployment variant,
@@ -126,13 +134,61 @@ impl Experiment {
 
     /// Execute datagen → split → train → eval → export. `progress` fires
     /// once per training epoch.
+    ///
+    /// The whole body runs inside a fresh [`crate::obs`] counter scope and
+    /// a stage timer; on success the run directory gains a `timings.json`
+    /// sidecar (`total_ms`, per-stage ms, work counters) and `report.json`
+    /// carries the same object under a `timings` key.
     pub fn run(
         &self,
         opts: &RunOptions,
         progress: &mut dyn FnMut(&EpochLog),
     ) -> Result<RunSummary> {
+        let t_total = std::time::Instant::now();
+        // A private sink keeps concurrent campaign runs from bleeding
+        // kernel/solver work into each other's counters; parallel_map and
+        // deployment workers inherit it at spawn.
+        let sink = std::sync::Arc::new(crate::obs::CounterSet::new());
+        let _scope = crate::obs::counters::scoped(sink.clone());
+        let mut sp = crate::obs::span("experiment.run");
+        let mut stages: Vec<(&'static str, f64)> = Vec::new();
+        let summary = self.run_stages(opts, progress, &mut stages)?;
+        let counters = sink.snapshot();
+        let total_ms = t_total.elapsed().as_secs_f64() * 1e3;
+        sp.counter("stages", stages.len() as u64);
+
+        let timings = Json::obj(vec![
+            ("counters", counters.to_json()),
+            (
+                "stages",
+                Json::Obj(stages.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect()),
+            ),
+            ("total_ms", Json::Num(total_ms)),
+        ]);
+        let run_dir = &opts.out_dir;
+        std::fs::write(run_dir.join("timings.json"), timings.to_string_pretty())?;
+        let mut report_json = summary.report.to_json();
+        if let Json::Obj(map) = &mut report_json {
+            map.insert("timings".to_string(), timings);
+        }
+        std::fs::write(run_dir.join("report.json"), report_json.to_string_pretty())?;
+        Ok(summary)
+    }
+
+    /// The timed stage sequence behind [`Experiment::run`]. Appends
+    /// `(stage, wall ms)` pairs covering (nearly) the whole body — the
+    /// per-stage sum is the run's wall time minus only the final report
+    /// writes.
+    fn run_stages(
+        &self,
+        opts: &RunOptions,
+        progress: &mut dyn FnMut(&EpochLog),
+        stages: &mut Vec<(&'static str, f64)>,
+    ) -> Result<RunSummary> {
+        let ms = |t: &std::time::Instant| t.elapsed().as_secs_f64() * 1e3;
         let spec = &self.spec;
         let run_dir = &opts.out_dir;
+        let t = std::time::Instant::now();
         std::fs::create_dir_all(run_dir)
             .with_context(|| format!("create run dir {}", run_dir.display()))?;
 
@@ -176,30 +232,43 @@ impl Experiment {
             std::fs::remove_file(&spec_path)
                 .with_context(|| format!("remove stale {}", spec_path.display()))?;
         }
+        stages.push(("setup", ms(&t)));
 
         // 1. Golden dataset (persisted with scenario provenance).
+        let t = std::time::Instant::now();
         let ds = generate_to(&gen, &run_dir.join("data.bin"))?;
         let (train_ds, test_ds) = ds.split(spec.data.test_frac, spec.data.seed ^ 0xA5)?;
+        stages.push(("datagen", ms(&t)));
 
         // 2. Train through the spec's backend.
+        let t = std::time::Instant::now();
         let mut cfg = spec.train_config();
         cfg.ckpt_out = Some(run_dir.join("ckpt.ckpt"));
         let mut store = None; // PJRT artifacts outlive the trainer borrow
         let trainer = trainer_for(spec.train.backend, &opts.artifact_dir, &spec.variant, &mut store)?;
         let (state, report) = trainer.train(&cfg, &train_ds, &test_ds, progress)?;
-        std::fs::write(run_dir.join("report.json"), report.to_json().to_string_pretty())?;
+        stages.push(("train", ms(&t)));
+
+        // 3. Export. `report.json` itself is written by `run` once the
+        // stage timings are known; `spec.json` still lands only after the
+        // checkpoint it describes exists.
+        let t = std::time::Instant::now();
         std::fs::write(run_dir.join("history.csv"), report.history_csv())?;
         std::fs::write(&spec_path, spec.to_json().to_string_pretty())?;
+        stages.push(("export", ms(&t)));
 
-        // 3. PJRT cross-check of the trained checkpoint, when the compiled
+        // 4. PJRT cross-check of the trained checkpoint, when the compiled
         // eval artifact is available (skipped, with the reason recorded,
         // in native-only environments).
+        let t = std::time::Instant::now();
         let (pjrt_check, pjrt_skipped) =
             pjrt_cross_check(&opts.artifact_dir, &spec.variant, &state, &test_ds);
+        stages.push(("pjrt_check", ms(&t)));
 
-        // 4. Probe stage: serve the *exported* run directory and replay
+        // 5. Probe stage: serve the *exported* run directory and replay
         // held-out rows through it — emulated route scored against the
         // dataset's golden targets, golden route as the reference line.
+        let t = std::time::Instant::now();
         let probe = if spec.eval.probes > 0 {
             Some(self.probe(opts, run_dir, &test_ds)?)
         } else {
@@ -225,6 +294,7 @@ impl Experiment {
             ));
         }
         std::fs::write(run_dir.join("eval.json"), Json::obj(eval_pairs).to_string_pretty())?;
+        stages.push(("probe", ms(&t)));
 
         Ok(RunSummary { run_dir: run_dir.clone(), report, pjrt_check, pjrt_skipped, probe })
     }

@@ -137,6 +137,68 @@ impl Bencher {
     }
 }
 
+/// Collects `{bench, lane, batch, ns_per_mac, flops}` rows and writes one
+/// JSON object per line — the input format of `scripts/bench_to_json.sh`,
+/// which merges every bench binary's output into the checked-in
+/// `BENCH_baseline.json`.
+///
+/// `flops` is the kernel-FLOP count of ONE timed call, measured through
+/// the [`crate::obs`] counters; `ns_per_mac` normalizes the mean call
+/// time by `flops / 2` so lanes of different geometry compare directly.
+pub struct BenchJsonl {
+    bench: String,
+    path: Option<std::path::PathBuf>,
+    rows: Vec<String>,
+}
+
+impl BenchJsonl {
+    /// `bench` names the binary; the output path comes from a
+    /// `--json PATH` pair anywhere in `args` (absent: collection is off
+    /// and every method is a no-op).
+    pub fn from_args(bench: &str, args: &[String]) -> Self {
+        let path = args
+            .windows(2)
+            .find(|w| w[0] == "--json")
+            .map(|w| std::path::PathBuf::from(&w[1]));
+        Self { bench: bench.to_string(), path, rows: Vec::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.path.is_some()
+    }
+
+    /// Record one lane. Lanes whose timed call retired no kernel FLOPs
+    /// (e.g. the analytic baseline) are skipped — `ns_per_mac` would be
+    /// meaningless.
+    pub fn row(&mut self, lane: &str, batch: usize, mean: Duration, flops: u64) {
+        if self.path.is_none() || flops == 0 {
+            return;
+        }
+        let ns_per_mac = mean.as_secs_f64() * 1e9 / ((flops / 2).max(1) as f64);
+        self.rows.push(
+            crate::util::Json::obj(vec![
+                ("bench", crate::util::Json::Str(self.bench.clone())),
+                ("lane", crate::util::Json::Str(lane.to_string())),
+                ("batch", crate::util::Json::Num(batch as f64)),
+                ("ns_per_mac", crate::util::Json::Num(ns_per_mac)),
+                ("flops", crate::util::Json::Num(flops as f64)),
+            ])
+            .to_string(),
+        );
+    }
+
+    /// Write the collected JSONL (no-op without `--json`).
+    pub fn finish(&self) -> std::io::Result<()> {
+        if let Some(path) = &self.path {
+            let mut text = self.rows.join("\n");
+            text.push('\n');
+            std::fs::write(path, text)?;
+            println!("# wrote {} bench rows -> {}", self.rows.len(), path.display());
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,6 +228,32 @@ mod tests {
         let s = b.speedup("slow", "fast").unwrap();
         assert!(s > 10.0, "speedup {s}");
         assert!(b.speedup("slow", "missing").is_none());
+    }
+
+    #[test]
+    fn jsonl_rows_and_flag_parsing() {
+        let off = BenchJsonl::from_args("b", &["--measure".into(), "1".into()]);
+        assert!(!off.enabled());
+        let dir = std::env::temp_dir().join(format!("sembench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rows.jsonl");
+        let args = vec!["--json".to_string(), path.display().to_string()];
+        let mut j = BenchJsonl::from_args("bench_x", &args);
+        assert!(j.enabled());
+        j.row("v/native/b32", 32, Duration::from_micros(64), 128_000);
+        j.row("v/analytic/b1", 1, Duration::from_micros(1), 0); // skipped
+        j.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let row = crate::util::json_parse(lines[0]).unwrap();
+        assert_eq!(row.get("bench").unwrap().as_str(), Some("bench_x"));
+        assert_eq!(row.get("lane").unwrap().as_str(), Some("v/native/b32"));
+        assert_eq!(row.get("batch").unwrap().as_usize(), Some(32));
+        assert_eq!(row.get("flops").unwrap().as_f64(), Some(128_000.0));
+        // 64 µs / 64k MACs = 1 ns per MAC.
+        assert!((row.get("ns_per_mac").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

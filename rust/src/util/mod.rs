@@ -8,7 +8,7 @@ pub mod json;
 pub mod parallel;
 pub mod rng;
 
-pub use bench::{BenchConfig, BenchStats, Bencher};
+pub use bench::{BenchConfig, BenchJsonl, BenchStats, Bencher};
 pub use json::{parse as json_parse, Json, JsonError};
 pub use parallel::{default_workers, parallel_map};
 pub use rng::Rng;

@@ -7,7 +7,9 @@
 /// Apply `f(index)` for `0..n` in parallel, collecting results in order.
 ///
 /// `f` must be `Sync` (it is shared by reference across workers). With
-/// `n_workers <= 1` this degrades to a plain sequential loop.
+/// `n_workers <= 1` this degrades to a plain sequential loop. Workers
+/// inherit the calling thread's [`crate::obs::counters`] scope, so work
+/// counted inside `f` stays attributed to the surrounding pipeline run.
 pub fn parallel_map<T, F>(n: usize, n_workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -20,12 +22,15 @@ where
     if workers == 1 {
         return (0..n).map(f).collect();
     }
+    let obs_scope = crate::obs::counters::current_scope();
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let chunk = n.div_ceil(workers);
     std::thread::scope(|scope| {
         for (w, slot) in out.chunks_mut(chunk).enumerate() {
             let f = &f;
+            let obs_scope = obs_scope.clone();
             scope.spawn(move || {
+                let _obs = crate::obs::counters::scoped_opt(obs_scope);
                 let base = w * chunk;
                 for (i, s) in slot.iter_mut().enumerate() {
                     *s = Some(f(base + i));
@@ -62,6 +67,15 @@ mod tests {
     #[test]
     fn more_workers_than_items() {
         assert_eq!(parallel_map(3, 64, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn workers_inherit_obs_scope() {
+        use crate::obs::counters;
+        let set = std::sync::Arc::new(crate::obs::CounterSet::new());
+        let _g = counters::scoped(set.clone());
+        parallel_map(16, 4, |_| counters::add_newton_iters(1));
+        assert_eq!(set.snapshot().newton_iters, 16);
     }
 
     #[test]

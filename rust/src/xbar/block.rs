@@ -44,6 +44,8 @@ impl AnalogBlock {
     /// benchmarking, not dataset generation. Applies the same frozen
     /// non-ideal transform as `simulate` so the two paths stay comparable.
     pub fn simulate_golden(&self, x: &CellInputs) -> Result<Vec<f64>, SpiceError> {
+        let _sp = crate::obs::span("xbar.golden_mna");
+        crate::obs::counters::add_golden_solves(1);
         let cfg = self.config();
         let xr = self.fast.apply_nonideal(x);
         let net = build_block(cfg, &xr);

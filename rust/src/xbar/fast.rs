@@ -43,7 +43,9 @@ const MAX_IT: usize = 60;
 
 /// Solve one cell: internal node voltage `m` such that the access-transistor
 /// current equals the RRAM current into the bitline. Returns
-/// `(i_into_bl, d i / d v_bl, m)`. `m_ws` is the warm start.
+/// `(i_into_bl, d i / d v_bl, m)`. `m_ws` is the warm start. Newton
+/// iterations spent are accumulated into `iters` (flushed to the obs work
+/// counters once per solve, so the hot loop stays atomic-free).
 #[inline]
 fn solve_cell(
     mos: &MosModel,
@@ -52,6 +54,7 @@ fn solve_cell(
     v_g: f64,
     v_bl: f64,
     m_ws: f64,
+    iters: &mut u64,
 ) -> (f64, f64, f64) {
     // Bracket: F(m) = i_mos - i_rram is strictly decreasing in m;
     // F(min(bl, rail)) >= 0 >= F(max(bl, rail)).
@@ -61,6 +64,7 @@ fn solve_cell(
     let mut f = 0.0;
     let mut df = -1.0;
     for _ in 0..MAX_IT {
+        *iters += 1;
         let op = mos_eval(mos, v_rail, v_g, m);
         let (ir, gr) = rram.eval(m - v_bl);
         f = op.id - ir;
@@ -177,6 +181,7 @@ impl FastSolver {
         let mut bl = vec![0.0f64; cfg.cols];
         let mut out = vec![0.0f64; cfg.n_mac()];
         let mut m_ws = vec![0.0f64; cfg.n_cells()];
+        let mut iters = 0u64;
 
         for _ in 0..n_steps {
             if !warm_start {
@@ -188,11 +193,19 @@ impl FastSolver {
                 let mut v = bl_prev; // warm start
                 let g_c = p.c_sense / cfg.h;
                 for _ in 0..MAX_IT {
+                    iters += 1;
                     let mut i_sum = 0.0;
                     let mut di_sum = 0.0;
                     for &k in &self.per_col[j] {
-                        let (i, di, m) =
-                            solve_cell(&cfg.cell.mos, &rram_models[k], cfg.v_read, x.v[k], v, m_ws[k]);
+                        let (i, di, m) = solve_cell(
+                            &cfg.cell.mos,
+                            &rram_models[k],
+                            cfg.v_read,
+                            x.v[k],
+                            v,
+                            m_ws[k],
+                            &mut iters,
+                        );
                         m_ws[k] = m;
                         i_sum += i;
                         di_sum += di;
@@ -210,9 +223,11 @@ impl FastSolver {
             // --- output level -------------------------------------------------
             for m in 0..cfg.n_mac() {
                 let i_in = p.gm_amp * (bl[2 * m] - bl[2 * m + 1]);
-                out[m] = solve_output(p, out[m], i_in, cfg.h);
+                out[m] = solve_output(p, out[m], i_in, cfg.h, &mut iters);
             }
         }
+        crate::obs::counters::add_newton_iters(iters);
+        crate::obs::counters::add_fast_solves(1);
         out
     }
 
@@ -244,6 +259,7 @@ impl FastSolver {
         let mut diag = vec![0.0f64; m];
         let mut cp = vec![0.0f64; m];
         let mut delta = vec![0.0f64; m];
+        let mut iters = 0u64;
 
         for _ in 0..n_steps {
             if !warm_start {
@@ -253,6 +269,7 @@ impl FastSolver {
                 let v = &mut v_col[j];
                 let v0_prev = v[0];
                 for _ in 0..MAX_IT {
+                    iters += 1;
                     // Assemble. Off-diagonals are all -g_r; only the
                     // diagonal and residual vary per node.
                     f[0] = g_c * (v[0] - v0_prev) - g_r * (v[1] - v[0]);
@@ -266,6 +283,7 @@ impl FastSolver {
                             x.v[k],
                             v[node],
                             m_ws[k],
+                            &mut iters,
                         );
                         m_ws[k] = mm;
                         // KCL at the tap: wire current toward the sense end
@@ -307,9 +325,11 @@ impl FastSolver {
             // as the peripheral hangs off `bl` in the parasitic netlist.
             for mac in 0..cfg.n_mac() {
                 let i_in = p.gm_amp * (v_col[2 * mac][0] - v_col[2 * mac + 1][0]);
-                out[mac] = solve_output(p, out[mac], i_in, cfg.h);
+                out[mac] = solve_output(p, out[mac], i_in, cfg.h, &mut iters);
             }
         }
+        crate::obs::counters::add_newton_iters(iters);
+        crate::obs::counters::add_fast_solves(1);
         out
     }
 }
@@ -317,12 +337,19 @@ impl FastSolver {
 /// Backward-Euler step of the output stage: RC load + clamp diodes driven by
 /// the differential current `i_in`.
 #[inline]
-fn solve_output(p: &super::config::PeriphParams, out_prev: f64, i_in: f64, h: f64) -> f64 {
+fn solve_output(
+    p: &super::config::PeriphParams,
+    out_prev: f64,
+    i_in: f64,
+    h: f64,
+    iters: &mut u64,
+) -> f64 {
     let g_c = p.c_load / h;
     let g_l = 1.0 / p.r_load;
     let clamp: &DiodeModel = &p.clamp;
     let mut v = out_prev;
     for _ in 0..MAX_IT {
+        *iters += 1;
         let (i_up, g_up) = clamp.eval(v - p.v_clamp);
         let (i_dn, g_dn) = clamp.eval(-p.v_clamp - v);
         let f = g_c * (v - out_prev) + g_l * v - i_in + i_up - i_dn;
@@ -406,7 +433,7 @@ mod tests {
     fn cell_solver_current_continuity() {
         let mos = MosModel::access_nmos();
         let rram = RramModel { g: 4e-5, alpha: 1.5 };
-        let (i, _, m) = solve_cell(&mos, &rram, 0.2, 0.9, 0.05, 0.0);
+        let (i, _, m) = solve_cell(&mos, &rram, 0.2, 0.9, 0.05, 0.0, &mut 0);
         // The returned current must satisfy both device equations at m.
         let op = mos_eval(&mos, 0.2, 0.9, m);
         let (ir, _) = rram.eval(m - 0.05);
@@ -419,7 +446,7 @@ mod tests {
     fn cell_solver_cutoff() {
         let mos = MosModel::access_nmos(); // vth = 0.5
         let rram = RramModel { g: 4e-5, alpha: 1.5 };
-        let (i, _, _) = solve_cell(&mos, &rram, 0.2, 0.3, 0.0, 0.1);
+        let (i, _, _) = solve_cell(&mos, &rram, 0.2, 0.3, 0.0, 0.1, &mut 0);
         assert!(i.abs() < 1e-12, "cutoff cell leaks {i}");
     }
 
@@ -429,9 +456,9 @@ mod tests {
         let rram = RramModel { g: 4e-5, alpha: 1.5 };
         let h = 1e-7;
         for bl in [0.0, 0.05, 0.12] {
-            let (_, di, m) = solve_cell(&mos, &rram, 0.2, 1.0, bl, 0.1);
-            let (ip, _, _) = solve_cell(&mos, &rram, 0.2, 1.0, bl + h, m);
-            let (im, _, _) = solve_cell(&mos, &rram, 0.2, 1.0, bl - h, m);
+            let (_, di, m) = solve_cell(&mos, &rram, 0.2, 1.0, bl, 0.1, &mut 0);
+            let (ip, _, _) = solve_cell(&mos, &rram, 0.2, 1.0, bl + h, m, &mut 0);
+            let (im, _, _) = solve_cell(&mos, &rram, 0.2, 1.0, bl - h, m, &mut 0);
             let fd = (ip - im) / (2.0 * h);
             assert!((di - fd).abs() < 1e-4 * (1.0 + fd.abs()), "bl={bl}: {di} vs {fd}");
         }
@@ -454,6 +481,26 @@ mod tests {
         let solver = FastSolver::new(cfg.clone());
         let x = fill(&cfg, |t, r, j| (0.3 + 0.1 * t as f64 + 0.02 * r as f64, 1e-6 + 1e-5 * j as f64));
         assert_eq!(solver.simulate(&x), solver.simulate(&x));
+    }
+
+    #[test]
+    fn newton_iteration_count_is_deterministic_and_nonzero() {
+        use crate::obs::counters;
+        use std::sync::Arc;
+        let cfg = BlockConfig::small();
+        let solver = FastSolver::new(cfg.clone());
+        let x = fill(&cfg, |_, r, j| (0.5 + 0.04 * r as f64, 1e-6 + 9e-6 * j as f64));
+        let count_once = || {
+            let set = Arc::new(crate::obs::CounterSet::new());
+            let _g = counters::scoped(set.clone());
+            solver.simulate(&x);
+            set.snapshot()
+        };
+        let (a, b) = (count_once(), count_once());
+        assert_eq!(a, b, "per-sample Newton work must be deterministic");
+        assert!(a.newton_iters > 0);
+        assert_eq!(a.fast_solves, 1);
+        assert_eq!(a.golden_solves, 0);
     }
 
     #[test]

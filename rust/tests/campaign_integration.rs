@@ -70,7 +70,9 @@ fn campaign_grid_aggregates_resumes_and_is_worker_invariant() {
     for row in &report.rows {
         assert_eq!(row.status, RunStatus::Completed);
         let rdir = campaign_run_dir(&cdir, &row.name);
-        for file in ["spec.json", "data.bin", "ckpt.ckpt", "report.json", "eval.json"] {
+        for file in
+            ["spec.json", "data.bin", "ckpt.ckpt", "report.json", "eval.json", "timings.json"]
+        {
             assert!(rdir.join(file).is_file(), "{}: missing {file}", row.name);
         }
         // The recorded spec hash is the hash of the exported spec.json.
@@ -118,6 +120,15 @@ fn campaign_grid_aggregates_resumes_and_is_worker_invariant() {
             "{name}"
         );
         assert_eq!(row.get("status").unwrap().as_str(), Some("completed"));
+        // Counter columns are pinned to the run's own timings.json sidecar
+        // and are nonzero for any run that trained and probed.
+        let counters = read_json(&campaign_run_dir(&cdir, name).join("timings.json"));
+        let counters = counters.get("counters").unwrap();
+        for key in ["kernel_flops", "newton_iters"] {
+            let want = counters.get(key).unwrap().as_f64().unwrap();
+            assert!(want > 0.0, "{name}: {key} should be nonzero");
+            assert_eq!(row.get(key).unwrap().as_f64(), Some(want), "{name}: summary '{key}'");
+        }
     }
     // The leaderboard is every run, ascending eval MSE, truncated to top_k.
     let leaderboard = summary.get("leaderboard").unwrap().as_str_vec().unwrap();
@@ -137,6 +148,8 @@ fn campaign_grid_aggregates_resumes_and_is_worker_invariant() {
     let first_summary = std::fs::read_to_string(cdir.join("summary.json")).unwrap();
     let first_csv = std::fs::read_to_string(cdir.join("summary.csv")).unwrap();
     assert_eq!(first_csv.lines().count(), 5, "header + one row per run");
+    let header = first_csv.lines().next().unwrap();
+    assert!(header.ends_with("kernel_flops,newton_iters,error"), "csv header: {header}");
 
     // Resume: corrupt each run's data.bin as a sentinel; a resumed
     // campaign must touch none of them (rows are re-read from eval.json).

@@ -557,6 +557,13 @@ fn deployment_concurrent_clients_exact_routing_and_counters() {
         assert_eq!(m.get("golden").unwrap().as_f64(), Some(0.0));
     }
     assert_eq!(snap.get("requests").unwrap().as_f64(), Some(2.0 * expect));
+    // Observability gauges: the session reports its age, and with every
+    // client joined the per-variant inflight gauges must have drained
+    // back to zero (the guard decrements on every exit path).
+    assert!(snap.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    for v in ["a", "b"] {
+        assert_eq!(vars.get(v).unwrap().get("inflight").unwrap().as_f64(), Some(0.0));
+    }
     // Every row that went in came back out of the batcher, too.
     assert_eq!(
         dep.batch_metrics().batched_requests.load(std::sync::atomic::Ordering::Relaxed),
@@ -767,6 +774,27 @@ fn tcp_protocol_two_variants_and_robustness() {
     assert_eq!(vars.get("harsh").unwrap().get("requests").unwrap().as_f64(), Some(1.0));
     assert_eq!(snap.get("requests").unwrap().as_f64(), Some(3.0));
     assert_eq!(snap.get("verified").unwrap().as_f64(), Some(3.0));
+    assert!(snap.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+
+    // Prometheus exposition over the same socket: the `prom` field must
+    // pass the format lint and carry the per-variant counters and the
+    // latency histogram series.
+    let reply = send(&mut stream, &mut reader, &mut line, "{\"cmd\": \"metrics_prom\"}");
+    let prom = reply.get("prom").unwrap().as_str().unwrap();
+    semulator::obs::prom::lint(prom).unwrap();
+    assert!(prom.contains("# TYPE semulator_requests_total counter"), "{prom}");
+    assert!(prom.contains("semulator_requests_total{variant=\"ideal\"} 2"), "{prom}");
+    assert!(prom.contains("semulator_request_latency_us_bucket"), "{prom}");
+    assert!(prom.contains("semulator_kernel_flops_total"), "{prom}");
+
+    // The trace ring replays recent spans; this very connection's
+    // requests are in it.
+    let reply = send(&mut stream, &mut reader, &mut line, "{\"cmd\": \"trace\"}");
+    let events = reply.get("trace").unwrap().as_arr().unwrap();
+    assert!(
+        events.iter().any(|e| e.get("span").and_then(|s| s.as_str()) == Some("server.request")),
+        "trace ring should hold server.request spans"
+    );
 
     // Shutdown closes the connection and stops the acceptor.
     stream.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();

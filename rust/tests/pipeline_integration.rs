@@ -85,7 +85,7 @@ fn experiment_run_exports_servable_run_dir() {
     assert!(probe.emulator_mae.is_finite() && probe.golden_mae.is_finite());
 
     // The run directory is self-describing.
-    for file in ["spec.json", "data.bin", "data.meta.json", "ckpt.ckpt", "report.json", "history.csv", "eval.json"] {
+    for file in ["spec.json", "data.bin", "data.meta.json", "ckpt.ckpt", "report.json", "history.csv", "eval.json", "timings.json"] {
         assert!(run_dir.join(file).is_file(), "missing {file}");
     }
     let eval = json_parse(&std::fs::read_to_string(run_dir.join("eval.json")).unwrap()).unwrap();
@@ -95,6 +95,33 @@ fn experiment_run_exports_servable_run_dir() {
     let report_json =
         json_parse(&std::fs::read_to_string(run_dir.join("report.json")).unwrap()).unwrap();
     assert_eq!(report_json.get("history").unwrap().as_arr().unwrap().len(), 20);
+
+    // report.json carries the obs timings: named stages account for >= 90%
+    // of the measured wall-clock total, and the run's kernel/solver work
+    // was counted (training matmuls + probe golden solves are nonzero).
+    let timings = report_json.get("timings").expect("report.json has a timings section");
+    let total_ms = timings.get("total_ms").unwrap().as_f64().unwrap();
+    assert!(total_ms > 0.0);
+    let stages = timings.get("stages").unwrap();
+    let stage_sum: f64 = ["setup", "datagen", "train", "export", "pjrt_check", "probe"]
+        .iter()
+        .map(|s| stages.get(s).unwrap().as_f64().unwrap())
+        .sum();
+    assert!(
+        stage_sum >= 0.9 * total_ms,
+        "stages cover {stage_sum:.3} of {total_ms:.3} ms (< 90%)"
+    );
+    let counters = timings.get("counters").unwrap();
+    assert!(counters.get("kernel_flops").unwrap().as_f64().unwrap() > 0.0);
+    assert!(counters.get("newton_iters").unwrap().as_f64().unwrap() > 0.0);
+    assert!(counters.get("golden_solves").unwrap().as_f64().unwrap() > 0.0);
+    // The sidecar is the same object, byte-compatible for campaign reads.
+    let sidecar =
+        json_parse(&std::fs::read_to_string(run_dir.join("timings.json")).unwrap()).unwrap();
+    assert_eq!(
+        sidecar.get("counters").unwrap().to_string_pretty(),
+        counters.to_string_pretty()
+    );
 
     // ... and servable: a Deployment built from the exported files answers
     // submit with MACs pinned to the direct NativeEngine on the trained

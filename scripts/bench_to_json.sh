@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Regenerate BENCH_baseline.json from the bench binaries.
+#
+# Each `harness = false` bench accepts `--json PATH` and writes one
+# `{bench, lane, batch, ns_per_mac, flops}` JSON object per line, where
+# `flops` is the obs-counter kernel-FLOP count of one timed call and
+# `ns_per_mac` the mean call time over flops/2. This script runs both
+# benches and merges their JSONL into one `semulator-bench-baseline`
+# document (one row per line, so baselines diff cleanly). Usage:
+#
+#   scripts/bench_to_json.sh [OUT]      # default OUT = BENCH_baseline.json
+#
+# Timings are machine-dependent: treat the checked-in baseline as a shape
+# reference (schema + lane list + FLOP counts, which ARE deterministic),
+# not as a perf contract across hosts.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+out="${1:-BENCH_baseline.json}"
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+(cd rust && cargo bench --bench bench_native_infer -- --json "$tmp/infer.jsonl")
+(cd rust && cargo bench --bench bench_train_step -- --json "$tmp/train.jsonl")
+
+{
+  printf '{\n  "generated_by": "scripts/bench_to_json.sh",\n'
+  printf '  "kind": "semulator-bench-baseline",\n  "rows": [\n'
+  cat "$tmp/infer.jsonl" "$tmp/train.jsonl" | sed 's/^/    /; $!s/$/,/'
+  printf '  ]\n}\n'
+} > "$out"
+echo "wrote $out ($(cat "$tmp/infer.jsonl" "$tmp/train.jsonl" | wc -l) rows)"
