@@ -1,0 +1,118 @@
+//! Golden MNA linear-backend benchmark: dense LU vs the pattern-cached
+//! sparse LU across system sizes, on the resistive-ladder topology that
+//! dominates parasitic crossbar netlists, plus a sparse-only scaling
+//! sweep and an end-to-end golden block transient.
+//!
+//! The dense lanes stop at 512 unknowns — the O(n^3) factorization is
+//! already tens of milliseconds there, and the printed speedups make the
+//! crossover unambiguous without burning bench time on a forgone
+//! conclusion. `--json PATH` emits the same JSONL schema as the other
+//! benches; sparse lanes report the obs-counted structural work
+//! (`sparse_nnz + sparse_fill_in` per solve) in the `flops` field, so a
+//! nonzero value doubles as proof the sparse path actually ran.
+
+use std::time::Duration;
+
+use semulator::obs::counters as obs;
+use semulator::spice::*;
+use semulator::util::{BenchConfig, BenchJsonl, Bencher, Rng};
+use semulator::xbar::{AnalogBlock, BlockConfig, CellInputs, NonIdealSpec};
+
+/// `n`-stage loaded ladder: the 1-D skeleton of a bitline with IR drop
+/// (n + 1 node unknowns + 1 source branch).
+fn ladder(n: usize, rng: &mut Rng) -> Circuit {
+    let mut c = Circuit::new();
+    let src = c.node("src");
+    c.vdc(src, GND, 1.0);
+    let mut prev = src;
+    for k in 0..n {
+        let tap = c.node(&format!("t{k}"));
+        c.resistor(prev, tap, rng.range(1.0, 50.0));
+        c.resistor(tap, GND, rng.range(1e2, 1e4));
+        prev = tap;
+    }
+    c
+}
+
+fn nr_with(solver: SolverChoice) -> NrOptions {
+    NrOptions { solver, ..NrOptions::default() }
+}
+
+/// Structural work retired by one call, via the sparse obs counters.
+fn sparse_work_of(f: impl FnOnce()) -> u64 {
+    let before = obs::global_snapshot();
+    f();
+    let d = obs::global_snapshot().since(&before);
+    d.sparse_nnz + d.sparse_fill_in
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut jsonl = BenchJsonl::from_args("bench_golden_solve", &argv);
+    let mut b = Bencher::new(BenchConfig {
+        warmup: Duration::from_millis(100),
+        measure: Duration::from_millis(500),
+        min_samples: 5,
+        max_samples: 10_000,
+    });
+    println!("# bench_golden_solve — dense vs sparse MNA backends on ladder networks");
+
+    let mut rng = Rng::seed_from(42);
+    for &n in &[64usize, 128, 256, 512] {
+        let ckt = ladder(n, &mut rng);
+        let dense_lane = format!("ladder{n}/dense");
+        let dense = b.bench(&dense_lane, || dc_op(&ckt, &nr_with(SolverChoice::Dense)).unwrap()).clone();
+        // Dense flops proxy: one n^3/3 factorization per Newton pass.
+        let n_unk = ckt.n_unknowns() as u64;
+        jsonl.row(&dense_lane, n, dense.mean, (n_unk * n_unk * n_unk) / 3);
+
+        let sparse_lane = format!("ladder{n}/sparse");
+        let sparse =
+            b.bench(&sparse_lane, || dc_op(&ckt, &nr_with(SolverChoice::Sparse)).unwrap()).clone();
+        let work = sparse_work_of(|| drop(dc_op(&ckt, &nr_with(SolverChoice::Sparse)).unwrap()));
+        assert!(work > 0, "sparse obs counters must move");
+        jsonl.row(&sparse_lane, n, sparse.mean, work);
+
+        let speedup = dense.mean.as_secs_f64() / sparse.mean.as_secs_f64();
+        println!(
+            "  -> ladder n={n}: dense {:.1} µs, sparse {:.1} µs ({speedup:.1}x)",
+            dense.mean.as_secs_f64() * 1e6,
+            sparse.mean.as_secs_f64() * 1e6
+        );
+    }
+
+    // Sparse-only scaling: sizes the dense LU cannot touch in bench time.
+    for &n in &[1024usize, 4096, 16384] {
+        let ckt = ladder(n, &mut rng);
+        let lane = format!("ladder{n}/sparse");
+        let stats = b.bench(&lane, || dc_op(&ckt, &nr_with(SolverChoice::Sparse)).unwrap()).clone();
+        let work = sparse_work_of(|| drop(dc_op(&ckt, &nr_with(SolverChoice::Sparse)).unwrap()));
+        jsonl.row(&lane, n, stats.mean, work);
+        println!("  -> ladder n={n}: sparse {:.2} ms", stats.mean.as_secs_f64() * 1e3);
+    }
+
+    // End-to-end golden transient of a parasitic crossbar block — the
+    // datagen unit of work the sparse backend exists for.
+    let mut cfg = BlockConfig::with_dims(1, 16, 16);
+    cfg.nonideal = NonIdealSpec { r_wire: 2.0, ..NonIdealSpec::default() };
+    let block = AnalogBlock::new(cfg.clone()).expect("block config");
+    let mut x = CellInputs::zeros(&cfg);
+    for k in 0..cfg.n_cells() {
+        x.v[k] = rng.range(0.0, cfg.v_gate_max);
+        x.g[k] = rng.range(cfg.cell.g_min, cfg.cell.g_max);
+    }
+    let lane = "block16x16_irdrop/golden_sparse";
+    let stats = b
+        .bench(lane, || block.simulate_golden_with(&x, SolverChoice::Sparse).unwrap())
+        .clone();
+    let work =
+        sparse_work_of(|| drop(block.simulate_golden_with(&x, SolverChoice::Sparse).unwrap()));
+    assert!(work > 0, "golden block transient must route through the sparse backend");
+    jsonl.row(lane, 1, stats.mean, work);
+    println!(
+        "  -> 16x16 IR-drop block golden transient: {:.2} ms/sample (sparse work {work})",
+        stats.mean.as_secs_f64() * 1e3
+    );
+
+    jsonl.finish().expect("write --json output");
+}

@@ -5,6 +5,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::spice::SolverChoice;
 use crate::util::{json::Json, parallel_map, Rng};
 use crate::xbar::{AnalogBlock, BlockConfig};
 
@@ -23,6 +24,15 @@ pub struct GenConfig {
     /// `<out>.meta.json` (e.g. the owning experiment's `spec_hash` /
     /// `campaign` label). Never affects the generated data.
     pub provenance: Vec<(String, Json)>,
+    /// Simulate every sample through the full-netlist golden MNA solve
+    /// (`AnalogBlock::simulate_golden`) instead of the structured fast
+    /// solver. Slower, but the honest SPICE reference — feasible even for
+    /// large parasitic crossbars now that the MNA path picks a sparse LU
+    /// past `crate::spice::dc::SPARSE_THRESHOLD` unknowns.
+    pub golden: bool,
+    /// Linear-backend override for the golden path (ignored when
+    /// `golden` is false). `Auto` picks by system size.
+    pub solver: SolverChoice,
 }
 
 impl GenConfig {
@@ -34,6 +44,8 @@ impl GenConfig {
             seed,
             n_workers: crate::util::default_workers(),
             provenance: Vec::new(),
+            golden: false,
+            solver: SolverChoice::Auto,
         }
     }
 
@@ -50,7 +62,9 @@ impl GenConfig {
 }
 
 /// Generate a dataset by running `n_samples` independent transient
-/// simulations of the block (fast structured solver) in parallel.
+/// simulations of the block in parallel — the fast structured solver by
+/// default, or the full-netlist golden MNA solve when
+/// [`GenConfig::golden`] is set.
 pub fn generate(cfg: &GenConfig) -> Dataset {
     let mut sp = crate::obs::span("datagen.generate");
     sp.counter("samples", cfg.n_samples as u64);
@@ -62,6 +76,19 @@ pub fn generate(cfg: &GenConfig) -> Dataset {
     let mut root = Rng::seed_from(cfg.seed);
     let seeds: Vec<u64> = (0..cfg.n_samples).map(|_| root.next_u64()).collect();
 
+    let simulate = |x: &crate::xbar::CellInputs| -> Vec<f64> {
+        if cfg.golden {
+            // A golden solve fails only on a singular/non-convergent
+            // netlist, which for a validated block config is a bug, not
+            // an input-dependent condition — so panicking (and poisoning
+            // the worker join) beats silently emitting garbage rows.
+            block
+                .simulate_golden_with(x, cfg.solver)
+                .unwrap_or_else(|e| panic!("golden datagen solve failed: {e}"))
+        } else {
+            block.simulate(x)
+        }
+    };
     let rows: Vec<(Vec<f32>, Vec<f32>)> = parallel_map(cfg.n_samples, cfg.n_workers, |i| {
         let mut rng = Rng::seed_from(seeds[i]);
         let x = cfg.dist.sample(&cfg.block, &mut rng);
@@ -73,9 +100,9 @@ pub fn generate(cfg: &GenConfig) -> Dataset {
         let y = if cfg.block.nonideal.read_noise > 0.0 {
             let mut x_read = x.clone();
             cfg.block.nonideal.apply_read_noise(&cfg.block, &mut x_read, &mut rng);
-            block.simulate(&x_read)
+            simulate(&x_read)
         } else {
-            block.simulate(&x)
+            simulate(&x)
         };
         (x.normalized(&cfg.block), y.iter().map(|&v| v as f32).collect())
     });
@@ -109,6 +136,8 @@ pub fn generate_to(cfg: &GenConfig, path: &Path) -> Result<Dataset> {
         ("n_samples", Json::Num(cfg.n_samples as f64)),
         ("seed", Json::Num(cfg.seed as f64)),
         ("dist", Json::Str(cfg.dist.tag())),
+        ("golden", Json::Bool(cfg.golden)),
+        ("solver", Json::Str(cfg.solver.as_str().to_string())),
         ("nonideal", cfg.block.nonideal.to_json()),
         (
             "block",
@@ -210,6 +239,30 @@ mod tests {
         let prov = meta.get("provenance").unwrap();
         assert_eq!(prov.get("n_workers").unwrap().as_usize(), Some(3));
         assert_eq!(prov.get("spec_hash").unwrap().as_str(), Some("deadbeef"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn golden_datagen_matches_fast_on_tiny_block() {
+        // Same samples through both simulation paths: the golden MNA solve
+        // and the structured fast solver agree to solver tolerance, and the
+        // meta records which path produced the file.
+        let base = GenConfig::new(BlockConfig::with_dims(1, 3, 2), 4, 11);
+        let fast = generate(&base);
+        let gold = generate(&GenConfig { golden: true, ..base.clone() });
+        assert_eq!(fast.x, gold.x, "features must not depend on the solver path");
+        for (a, b) in fast.y.iter().zip(gold.y.iter()) {
+            assert!((a - b).abs() < 1e-4, "fast {a} vs golden {b}");
+        }
+        let dir = std::env::temp_dir().join(format!("semgen_gold_{}", std::process::id()));
+        let path = dir.join("ds.bin");
+        generate_to(&GenConfig { golden: true, ..base }, &path).unwrap();
+        let meta: Json = crate::util::json_parse(
+            &std::fs::read_to_string(path.with_extension("meta.json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(meta.get("golden").unwrap().as_bool(), Some(true));
+        assert_eq!(meta.get("solver").unwrap().as_str(), Some("auto"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

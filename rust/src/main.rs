@@ -99,7 +99,11 @@ const USAGE: &str = "usage: semulator <info|run|sweep|datagen|train|eval|serve|s
            leaderboard servable via `serve --campaign DIR`.
   datagen  --variant V --n N --out FILE  generate a SPICE dataset
            [--dist uniform|binary|sparseP] [--nonideal ideal|mild|harsh]
-           [--workers N]
+           [--workers N] [--dims TxRxC] [--golden [--solver auto|dense|sparse]]
+           --golden simulates through the full-netlist MNA solve instead
+           of the structured fast solver (the honest SPICE reference;
+           large systems pick a sparse LU automatically), --dims overrides
+           the variant's block geometry
   train    --variant V --data FILE       train SEMULATOR
            [--backend native|pjrt] [--batch N]  (native = artifact-free
            SGD backprop; pjrt = AOT Adam step, the default)
@@ -328,21 +332,44 @@ fn cmd_datagen(args: &Args) -> Result<()> {
             .unwrap_or_else(|| format!("runs/data/{variant}_n{n}_s{seed}.bin")),
     );
     let dist = SampleDist::parse(&args.str_or("dist", "uniform")).map_err(anyhow::Error::msg)?;
-    let mut cfg = GenConfig::new(repro::block_for(&variant)?, n, seed);
+    // `--dims TxRxC` builds the block geometry directly (e.g. `--dims
+    // 1x256x256` for a large-crossbar golden run); the default is the
+    // variant's canonical block.
+    let block = match args.str_opt("dims") {
+        Some(dims) => {
+            let parts: Vec<usize> = dims
+                .split('x')
+                .map(|p| {
+                    p.parse()
+                        .with_context(|| format!("--dims expects TILESxROWSxCOLS, got '{dims}'"))
+                })
+                .collect::<Result<_>>()?;
+            anyhow::ensure!(parts.len() == 3, "--dims expects TILESxROWSxCOLS, got '{dims}'");
+            semulator::xbar::BlockConfig::with_dims(parts[0], parts[1], parts[2])
+        }
+        None => repro::block_for(&variant)?,
+    };
+    let mut cfg = GenConfig::new(block, n, seed);
     cfg.dist = dist;
     if let Some(spec) = nonideal_from_args(args)? {
         cfg.block.nonideal = spec;
     }
     cfg.n_workers = args.usize_or("workers", semulator::util::default_workers())?;
+    cfg.golden = args.has("golden");
+    cfg.solver = args
+        .str_or("solver", "auto")
+        .parse::<semulator::spice::SolverChoice>()
+        .map_err(anyhow::Error::msg)?;
     let t0 = std::time::Instant::now();
     let ds = generate_to(&cfg, &out)?;
     println!(
-        "generated {} samples ({} features -> {} outputs, dist {}, nonideal {}) in {:.1}s -> {}",
+        "generated {} samples ({} features -> {} outputs, dist {}, nonideal {}, path {}) in {:.1}s -> {}",
         ds.n,
         ds.d,
         ds.o,
         cfg.dist.tag(),
         args.str_or("nonideal", "ideal"),
+        if cfg.golden { "golden" } else { "fast" },
         t0.elapsed().as_secs_f64(),
         out.display()
     );

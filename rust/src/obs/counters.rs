@@ -41,6 +41,18 @@ pub struct CounterSet {
     /// Golden full-netlist MNA solves
     /// ([`crate::xbar::AnalogBlock::simulate_golden`] calls).
     pub golden_solves: AtomicU64,
+    /// Linear solves through the sparse MNA backend
+    /// ([`crate::spice::sparse::SparseWorkspace::solve`] calls).
+    pub sparse_solves: AtomicU64,
+    /// Stored nonzeros processed per sparse factorization (one add of
+    /// nnz(A) per factor — a deterministic work proxy).
+    pub sparse_nnz: AtomicU64,
+    /// L/U entries created beyond nnz(A) by fresh sparse factorizations
+    /// (fill-in; symbolic replays add nothing here).
+    pub sparse_fill_in: AtomicU64,
+    /// Sparse factorizations that reused the recorded symbolic
+    /// factorization (no graph traversal, no pivot search).
+    pub sparse_symbolic_reuses: AtomicU64,
 }
 
 impl CounterSet {
@@ -51,6 +63,10 @@ impl CounterSet {
             newton_iters: AtomicU64::new(0),
             fast_solves: AtomicU64::new(0),
             golden_solves: AtomicU64::new(0),
+            sparse_solves: AtomicU64::new(0),
+            sparse_nnz: AtomicU64::new(0),
+            sparse_fill_in: AtomicU64::new(0),
+            sparse_symbolic_reuses: AtomicU64::new(0),
         }
     }
 
@@ -62,6 +78,10 @@ impl CounterSet {
             newton_iters: ld(&self.newton_iters),
             fast_solves: ld(&self.fast_solves),
             golden_solves: ld(&self.golden_solves),
+            sparse_solves: ld(&self.sparse_solves),
+            sparse_nnz: ld(&self.sparse_nnz),
+            sparse_fill_in: ld(&self.sparse_fill_in),
+            sparse_symbolic_reuses: ld(&self.sparse_symbolic_reuses),
         }
     }
 }
@@ -74,6 +94,10 @@ pub struct CounterSnapshot {
     pub newton_iters: u64,
     pub fast_solves: u64,
     pub golden_solves: u64,
+    pub sparse_solves: u64,
+    pub sparse_nnz: u64,
+    pub sparse_fill_in: u64,
+    pub sparse_symbolic_reuses: u64,
 }
 
 impl CounterSnapshot {
@@ -85,17 +109,27 @@ impl CounterSnapshot {
             newton_iters: self.newton_iters.saturating_sub(earlier.newton_iters),
             fast_solves: self.fast_solves.saturating_sub(earlier.fast_solves),
             golden_solves: self.golden_solves.saturating_sub(earlier.golden_solves),
+            sparse_solves: self.sparse_solves.saturating_sub(earlier.sparse_solves),
+            sparse_nnz: self.sparse_nnz.saturating_sub(earlier.sparse_nnz),
+            sparse_fill_in: self.sparse_fill_in.saturating_sub(earlier.sparse_fill_in),
+            sparse_symbolic_reuses: self
+                .sparse_symbolic_reuses
+                .saturating_sub(earlier.sparse_symbolic_reuses),
         }
     }
 
     /// Stable name/value pairs (the serialization order everywhere).
-    pub fn named(&self) -> [(&'static str, u64); 5] {
+    pub fn named(&self) -> [(&'static str, u64); 9] {
         [
             ("kernel_flops", self.kernel_flops),
             ("kernel_bytes", self.kernel_bytes),
             ("newton_iters", self.newton_iters),
             ("fast_solves", self.fast_solves),
             ("golden_solves", self.golden_solves),
+            ("sparse_solves", self.sparse_solves),
+            ("sparse_nnz", self.sparse_nnz),
+            ("sparse_fill_in", self.sparse_fill_in),
+            ("sparse_symbolic_reuses", self.sparse_symbolic_reuses),
         ]
     }
 
@@ -113,6 +147,10 @@ impl CounterSnapshot {
             newton_iters: g("newton_iters"),
             fast_solves: g("fast_solves"),
             golden_solves: g("golden_solves"),
+            sparse_solves: g("sparse_solves"),
+            sparse_nnz: g("sparse_nnz"),
+            sparse_fill_in: g("sparse_fill_in"),
+            sparse_symbolic_reuses: g("sparse_symbolic_reuses"),
         }
     }
 }
@@ -192,6 +230,22 @@ pub fn add_golden_solves(n: u64) {
     add(|c| &c.golden_solves, n);
 }
 
+pub fn add_sparse_solves(n: u64) {
+    add(|c| &c.sparse_solves, n);
+}
+
+pub fn add_sparse_nnz(n: u64) {
+    add(|c| &c.sparse_nnz, n);
+}
+
+pub fn add_sparse_fill_in(n: u64) {
+    add(|c| &c.sparse_fill_in, n);
+}
+
+pub fn add_sparse_symbolic_reuses(n: u64) {
+    add(|c| &c.sparse_symbolic_reuses, n);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +299,10 @@ mod tests {
             newton_iters: 3,
             fast_solves: 2,
             golden_solves: 1,
+            sparse_solves: 6,
+            sparse_nnz: 120,
+            sparse_fill_in: 14,
+            sparse_symbolic_reuses: 5,
         };
         let back = CounterSnapshot::from_json(&s.to_json());
         assert_eq!(back, s);

@@ -13,6 +13,7 @@ use crate::coordinator::{LrSchedule, TrainConfig};
 use crate::datagen::{GenConfig, SampleDist};
 use crate::infer::BackendKind;
 use crate::repro::block_for;
+use crate::spice::SolverChoice;
 use crate::util::{Json, json_parse};
 use crate::xbar::{BlockConfig, NonIdealSpec};
 
@@ -27,11 +28,24 @@ pub struct DataSpec {
     pub seed: u64,
     /// Held-out fraction (must leave both splits non-empty).
     pub test_frac: f64,
+    /// Simulate samples through the full-netlist golden MNA path instead
+    /// of the structured fast solver (slower; the honest SPICE reference).
+    pub golden: bool,
+    /// Linear-backend override for the golden path (`auto` sizes between
+    /// dense and sparse LU; ignored when `golden` is false).
+    pub solver: SolverChoice,
 }
 
 impl Default for DataSpec {
     fn default() -> Self {
-        Self { n_samples: 512, dist: SampleDist::UniformIid, seed: 0, test_frac: 0.125 }
+        Self {
+            n_samples: 512,
+            dist: SampleDist::UniformIid,
+            seed: 0,
+            test_frac: 0.125,
+            golden: false,
+            solver: SolverChoice::Auto,
+        }
     }
 }
 
@@ -132,6 +146,8 @@ impl ExperimentSpec {
     pub fn gen_config(&self) -> Result<GenConfig> {
         let mut cfg = GenConfig::new(self.resolved_block()?, self.data.n_samples, self.data.seed);
         cfg.dist = self.data.dist;
+        cfg.golden = self.data.golden;
+        cfg.solver = self.data.solver;
         Ok(cfg)
     }
 
@@ -206,15 +222,21 @@ impl ExperimentSpec {
         if let Some(spec) = self.nonideal {
             pairs.push(("nonideal", spec.to_json()));
         }
-        pairs.push((
-            "data",
-            Json::obj(vec![
-                ("n_samples", Json::Num(self.data.n_samples as f64)),
-                ("dist", Json::Str(self.data.dist.tag())),
-                ("seed", Json::Num(self.data.seed as f64)),
-                ("test_frac", Json::Num(self.data.test_frac)),
-            ]),
-        ));
+        let mut data_pairs = vec![
+            ("n_samples", Json::Num(self.data.n_samples as f64)),
+            ("dist", Json::Str(self.data.dist.tag())),
+            ("seed", Json::Num(self.data.seed as f64)),
+            ("test_frac", Json::Num(self.data.test_frac)),
+        ];
+        // Emitted only when non-default so pre-existing specs keep their
+        // content hash (the campaign resume token).
+        if self.data.golden {
+            data_pairs.push(("golden", Json::Bool(true)));
+        }
+        if self.data.solver != SolverChoice::Auto {
+            data_pairs.push(("solver", Json::Str(self.data.solver.as_str().to_string())));
+        }
+        pairs.push(("data", Json::obj(data_pairs)));
         pairs.push((
             "train",
             Json::obj(vec![
@@ -281,6 +303,17 @@ impl ExperimentSpec {
             }
             spec.data.seed = usize_in(data, "seed", spec.data.seed as usize)? as u64;
             spec.data.test_frac = f64_in(data, "test_frac", spec.data.test_frac)?;
+            if let Some(g) = data.get("golden") {
+                spec.data.golden = g
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("spec: 'golden' must be a boolean"))?;
+            }
+            if let Some(s) = data.get("solver") {
+                let tag = s
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("spec: 'solver' must be a string"))?;
+                spec.data.solver = tag.parse().map_err(anyhow::Error::msg)?;
+            }
         }
         if let Some(train) = j.get("train") {
             if let Some(b) = train.get("backend") {
@@ -329,6 +362,25 @@ mod tests {
         let back = ExperimentSpec::from_str(&spec.to_json().to_string_pretty()).unwrap();
         assert_eq!(back, spec);
         assert_eq!(back.resolved_block().unwrap(), BlockConfig::small());
+        // Default golden/solver knobs stay out of the JSON so pre-existing
+        // specs keep their content hash (the campaign resume token).
+        let text = spec.to_json().to_string();
+        assert!(!text.contains("golden") && !text.contains("solver"), "{text}");
+    }
+
+    #[test]
+    fn golden_data_spec_parses_from_json() {
+        let spec = ExperimentSpec::from_str(
+            r#"{"name": "g", "variant": "small",
+                "data": {"n_samples": 16, "golden": true, "solver": "sparse"}}"#,
+        )
+        .unwrap();
+        assert!(spec.data.golden);
+        assert_eq!(spec.data.solver, SolverChoice::Sparse);
+        assert!(ExperimentSpec::from_str(
+            r#"{"name": "g", "variant": "small", "data": {"solver": "cholesky"}}"#
+        )
+        .is_err());
     }
 
     #[test]
@@ -341,6 +393,8 @@ mod tests {
             dist: SampleDist::SparseActs { p: 0.25 },
             seed: 7,
             test_frac: 0.25,
+            golden: true,
+            solver: SolverChoice::Sparse,
         };
         spec.train = TrainSpec {
             backend: BackendKind::Pjrt,
@@ -359,6 +413,8 @@ mod tests {
         let gen = back.gen_config().unwrap();
         assert_eq!(gen.n_samples, 64);
         assert_eq!(gen.seed, 7);
+        assert!(gen.golden);
+        assert_eq!(gen.solver, SolverChoice::Sparse);
         let train = back.train_config();
         assert_eq!(train.epochs, 12);
         assert_eq!(train.batch, 8);

@@ -53,6 +53,7 @@ enum AxisValue {
     Epochs(usize),
     Batch(usize),
     LrBase(f64),
+    Golden(bool),
 }
 
 impl AxisValue {
@@ -67,6 +68,7 @@ impl AxisValue {
             AxisValue::Epochs(e) => format!("e{e}"),
             AxisValue::Batch(b) => format!("b{b}"),
             AxisValue::LrBase(lr) => format!("lr{lr}"),
+            AxisValue::Golden(g) => (if *g { "gold" } else { "fast" }).to_string(),
         }
     }
 
@@ -89,6 +91,7 @@ impl AxisValue {
             }
             AxisValue::Batch(b) => spec.train.batch = *b,
             AxisValue::LrBase(lr) => spec.train.lr.base = *lr,
+            AxisValue::Golden(g) => spec.data.golden = *g,
         }
     }
 }
@@ -117,12 +120,17 @@ pub struct SweepAxes {
     pub batch: Vec<usize>,
     /// Base learning rates.
     pub lr_base: Vec<f64>,
+    /// Datagen simulation paths: `true` = full-netlist golden MNA solve
+    /// (tag `gold`), `false` = structured fast solver (tag `fast`). A
+    /// `[true, false]` axis measures how much emulator quality the fast
+    /// solver's structure assumptions cost across the rest of the grid.
+    pub golden: Vec<bool>,
 }
 
 /// Canonical axis order; also the summary's axis-column order.
 pub const AXIS_NAMES: &[&str] = &[
     "nonideal", "arch", "data_seed", "train_seed", "dist", "n_samples", "epochs", "batch",
-    "lr_base",
+    "lr_base", "golden",
 ];
 
 /// One expanded grid point: the concrete spec plus the `(axis, tag)`
@@ -175,6 +183,7 @@ impl SweepAxes {
             self.epochs.iter().map(|&e| AxisValue::Epochs(e)).collect(),
             self.batch.iter().map(|&b| AxisValue::Batch(b)).collect(),
             self.lr_base.iter().map(|&l| AxisValue::LrBase(l)).collect(),
+            self.golden.iter().map(|&g| AxisValue::Golden(g)).collect(),
         ]
     }
 
@@ -305,6 +314,9 @@ impl SweepAxes {
         if !self.lr_base.is_empty() {
             pairs.push(("lr_base", Json::arr_f64(&self.lr_base)));
         }
+        if !self.golden.is_empty() {
+            pairs.push(("golden", Json::Arr(self.golden.iter().map(|&g| Json::Bool(g)).collect())));
+        }
         Json::obj(pairs)
     }
 
@@ -390,6 +402,12 @@ impl SweepAxes {
                 .ok_or_else(|| anyhow::anyhow!("sweep: 'lr_base' entries must be numbers"))?;
             axes.lr_base.push(v);
         }
+        for entry in arr(j, "golden")? {
+            let g = entry
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("sweep: 'golden' entries must be booleans"))?;
+            axes.golden.push(g);
+        }
         Ok(axes)
     }
 }
@@ -449,6 +467,22 @@ mod tests {
     }
 
     #[test]
+    fn golden_axis_tags_and_applies() {
+        // The golden axis makes the datagen simulation path a grid
+        // dimension: `gold` rows run the full-netlist MNA solve, `fast`
+        // rows the structured solver, same scenario otherwise.
+        let mut axes = SweepAxes::default();
+        axes.golden = vec![true, false];
+        axes.data_seed = vec![0];
+        let points = axes.expand(&base()).unwrap();
+        let names: Vec<&str> = points.iter().map(|p| p.spec.name.as_str()).collect();
+        assert_eq!(names, vec!["b-d0-gold", "b-d0-fast"]);
+        assert!(points[0].spec.data.golden);
+        assert!(!points[1].spec.data.golden);
+        assert_eq!(points[0].axes[1], ("golden".to_string(), "gold".to_string()));
+    }
+
+    #[test]
     fn name_collisions_and_empty_grid_rejected() {
         let axes = SweepAxes::default();
         assert!(axes.expand(&base()).is_err());
@@ -483,6 +517,7 @@ mod tests {
         axes.epochs = vec![4];
         axes.batch = vec![8, 16];
         axes.lr_base = vec![1e-3, 5e-3];
+        axes.golden = vec![true, false];
         let back = SweepAxes::from_json(&axes.to_json()).unwrap();
         assert_eq!(back, axes);
         // Preset entries serialize compactly, custom ones in full form.

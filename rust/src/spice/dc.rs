@@ -4,13 +4,20 @@
 //! followed by one branch current per voltage source (in device order).
 //!
 //! Each Newton iteration stamps the linearized system `A x = b` from scratch
-//! into preallocated buffers (no allocation in the loop), factors it with the
-//! dense LU from [`super::matrix`], and applies a damped update. Circuits
-//! with no nonlinear devices converge in one iteration.
+//! into preallocated buffers (no allocation in the loop), factors it, and
+//! applies a damped update. Circuits with no nonlinear devices converge in
+//! one iteration.
+//!
+//! Two linear backends sit behind [`Workspace`], selected by
+//! [`SolverChoice`]: the dense LU from [`super::matrix`] for small systems
+//! and the pattern-cached sparse LU from [`super::sparse`] (fill-reducing
+//! ordering, symbolic reuse across iterations, BiCGSTAB fallback) for large
+//! ones. [`SolverChoice::Auto`] switches at [`SPARSE_THRESHOLD`] unknowns.
 
 use super::devices::{mos_eval, switch_g, Device, NodeId};
 use super::matrix::{lu_factor_inplace, lu_solve_inplace, DMat};
 use super::netlist::Circuit;
+use super::sparse::SparseWorkspace;
 
 /// Integration method for transient companion models.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,6 +44,52 @@ pub enum CapMode<'a> {
     Companion { h: f64, method: Method, state: &'a TranState },
 }
 
+/// Linear-solver backend selection for [`Workspace`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SolverChoice {
+    /// Dense below [`SPARSE_THRESHOLD`] unknowns, sparse at or above it.
+    #[default]
+    Auto,
+    /// Always the dense LU from [`super::matrix`].
+    Dense,
+    /// Always the sparse backend from [`super::sparse`].
+    Sparse,
+}
+
+impl SolverChoice {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SolverChoice::Auto => "auto",
+            SolverChoice::Dense => "dense",
+            SolverChoice::Sparse => "sparse",
+        }
+    }
+}
+
+impl std::str::FromStr for SolverChoice {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(SolverChoice::Auto),
+            "dense" => Ok(SolverChoice::Dense),
+            "sparse" => Ok(SolverChoice::Sparse),
+            other => Err(format!("unknown solver '{other}' (want auto|dense|sparse)")),
+        }
+    }
+}
+
+impl std::fmt::Display for SolverChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Unknown count at which [`SolverChoice::Auto`] flips to the sparse
+/// backend. Dense LU is O(n^3) per factorization; measured crossover on
+/// MNA-shaped systems is well below this, but small dense solves avoid
+/// the sparse path's pattern bookkeeping entirely.
+pub const SPARSE_THRESHOLD: usize = 128;
+
 /// Newton-Raphson tuning knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct NrOptions {
@@ -51,6 +104,8 @@ pub struct NrOptions {
     pub gmin: f64,
     /// Maximum per-iteration node-voltage step (damping limit, V).
     pub dv_max: f64,
+    /// Linear backend (dense / sparse / size-based auto).
+    pub solver: SolverChoice,
 }
 
 impl Default for NrOptions {
@@ -62,6 +117,7 @@ impl Default for NrOptions {
             iabstol: 1e-12,
             gmin: 1e-12,
             dv_max: 0.5,
+            solver: SolverChoice::Auto,
         }
     }
 }
@@ -69,17 +125,27 @@ impl Default for NrOptions {
 /// Solver failure modes.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SpiceError {
-    Singular { at_col: usize },
+    /// The MNA matrix is (structurally or numerically) singular. `unknown`
+    /// names the offending node or voltage-source branch.
+    Singular { at_col: usize, unknown: String },
     NonConvergence { t: f64, iters: usize, max_delta: f64 },
+    /// Gmin-stepping continuation stalled: a stage failed even after the
+    /// reduction ratio was walked down to ~1.
+    GminStepFailed { gmin: f64, iters: usize, max_delta: f64 },
     Invalid(String),
 }
 
 impl std::fmt::Display for SpiceError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SpiceError::Singular { at_col } => write!(f, "singular MNA matrix at column {at_col}"),
+            SpiceError::Singular { at_col, unknown } => {
+                write!(f, "singular MNA matrix at column {at_col} ({unknown})")
+            }
             SpiceError::NonConvergence { t, iters, max_delta } => {
                 write!(f, "Newton-Raphson failed to converge at t={t:e} after {iters} iterations (max delta {max_delta:e})")
+            }
+            SpiceError::GminStepFailed { gmin, iters, max_delta } => {
+                write!(f, "gmin continuation stalled at gmin={gmin:e} after {iters} iterations (max delta {max_delta:e})")
             }
             SpiceError::Invalid(msg) => write!(f, "invalid circuit: {msg}"),
         }
@@ -88,19 +154,85 @@ impl std::fmt::Display for SpiceError {
 
 impl std::error::Error for SpiceError {}
 
+/// Map an MNA unknown index to a human-readable label: the node name for
+/// voltage unknowns, the source's terminal names for branch currents.
+pub(crate) fn unknown_label(ckt: &Circuit, idx: usize) -> String {
+    let n_v = ckt.n_nodes() - 1;
+    if idx < n_v {
+        return format!("node '{}'", ckt.node_name(idx + 1));
+    }
+    let want = idx - n_v;
+    let mut branch = 0usize;
+    for dev in &ckt.devices {
+        if let Device::VSource { p, n, .. } = dev {
+            if branch == want {
+                return format!(
+                    "branch current of vsource {}->{}",
+                    ckt.node_name(*p),
+                    ckt.node_name(*n)
+                );
+            }
+            branch += 1;
+        }
+    }
+    format!("branch current #{want}")
+}
+
+fn singular(ckt: &Circuit, at_col: usize) -> SpiceError {
+    SpiceError::Singular { at_col, unknown: unknown_label(ckt, at_col) }
+}
+
+/// Destination for MNA matrix stamps: the dense matrix or the sparse
+/// workspace's pattern recorder / value scatter.
+pub trait StampSink {
+    fn add(&mut self, r: usize, c: usize, v: f64);
+}
+
+impl StampSink for DMat {
+    #[inline]
+    fn add(&mut self, r: usize, c: usize, v: f64) {
+        DMat::add(self, r, c, v);
+    }
+}
+
+#[derive(Debug, Clone)]
+enum WsFactor {
+    Dense { a: DMat, perm: Vec<usize> },
+    Sparse(Box<SparseWorkspace>),
+}
+
 /// Reusable solver buffers; create once per circuit, reuse across timesteps.
 #[derive(Debug, Clone)]
 pub struct Workspace {
-    a: DMat,
+    factor: WsFactor,
     b: Vec<f64>,
     x_new: Vec<f64>,
-    perm: Vec<usize>,
 }
 
 impl Workspace {
+    /// Auto-selected backend (dense below [`SPARSE_THRESHOLD`] unknowns).
     pub fn for_circuit(ckt: &Circuit) -> Self {
+        Self::with_solver(ckt, SolverChoice::Auto)
+    }
+
+    pub fn with_solver(ckt: &Circuit, choice: SolverChoice) -> Self {
         let n = ckt.n_unknowns();
-        Self { a: DMat::zeros_sq(n), b: vec![0.0; n], x_new: vec![0.0; n], perm: Vec::with_capacity(n) }
+        let sparse = match choice {
+            SolverChoice::Dense => false,
+            SolverChoice::Sparse => true,
+            SolverChoice::Auto => n >= SPARSE_THRESHOLD,
+        };
+        let factor = if sparse {
+            WsFactor::Sparse(Box::new(SparseWorkspace::new(n)))
+        } else {
+            WsFactor::Dense { a: DMat::zeros_sq(n), perm: Vec::with_capacity(n) }
+        };
+        Self { factor, b: vec![0.0; n], x_new: vec![0.0; n] }
+    }
+
+    /// Which backend this workspace resolved to.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.factor, WsFactor::Sparse(_))
     }
 }
 
@@ -115,7 +247,7 @@ pub fn node_v(x: &[f64], node: NodeId) -> f64 {
 }
 
 #[inline]
-fn stamp_g(a: &mut DMat, p: NodeId, n: NodeId, g: f64) {
+fn stamp_g<S: StampSink>(a: &mut S, p: NodeId, n: NodeId, g: f64) {
     if p != 0 {
         a.add(p - 1, p - 1, g);
         if n != 0 {
@@ -142,17 +274,20 @@ fn stamp_i(b: &mut [f64], p: NodeId, n: NodeId, i: f64) {
 }
 
 /// Build the linearized MNA system around guess `x` at time `t`.
+///
+/// The matrix-add call sequence is a pure function of circuit topology
+/// (values change per call, the `(r, c)` sequence never does) — the
+/// sparse backend's pattern cache depends on this invariant.
 #[allow(clippy::too_many_arguments)]
-fn stamp_all(
+fn stamp_all<S: StampSink>(
     ckt: &Circuit,
     t: f64,
     x: &[f64],
     cap: &CapMode<'_>,
     gmin: f64,
-    a: &mut DMat,
+    a: &mut S,
     b: &mut [f64],
 ) {
-    a.clear();
     b.iter_mut().for_each(|v| *v = 0.0);
     let branch_base = ckt.n_nodes() - 1;
     let mut branch = 0usize;
@@ -310,11 +445,21 @@ pub fn nr_solve(
     let linear = !ckt.is_nonlinear();
     let mut last_delta = f64::INFINITY;
     for iter in 0..opts.max_iter {
-        stamp_all(ckt, t, x, &cap, opts.gmin, &mut ws.a, &mut ws.b);
-        lu_factor_inplace(&mut ws.a, &mut ws.perm)
-            .map_err(|e| SpiceError::Singular { at_col: e.at_col })?;
-        ws.x_new.copy_from_slice(&ws.b);
-        lu_solve_inplace(&ws.a, &ws.perm, &mut ws.x_new);
+        match &mut ws.factor {
+            WsFactor::Dense { a, perm } => {
+                a.clear();
+                stamp_all(ckt, t, x, &cap, opts.gmin, a, &mut ws.b);
+                lu_factor_inplace(a, perm).map_err(|e| singular(ckt, e.at_col))?;
+                ws.x_new.copy_from_slice(&ws.b);
+                lu_solve_inplace(a, perm, &mut ws.x_new);
+            }
+            WsFactor::Sparse(sw) => {
+                sw.begin_stamp();
+                stamp_all(ckt, t, x, &cap, opts.gmin, sw.as_mut(), &mut ws.b);
+                sw.end_stamp().map_err(|c| singular(ckt, c))?;
+                sw.solve(&ws.b, &mut ws.x_new).map_err(|c| singular(ckt, c))?;
+            }
+        }
 
         // Convergence check on the undamped update.
         let mut converged = true;
@@ -359,8 +504,12 @@ pub fn nr_solve(
 ///
 /// Tries a direct solve first; on non-convergence walks gmin down from 1e-3
 /// to the target, reusing each stage's solution as the next initial guess.
+/// A failed stage does not abort the continuation: the reduction ratio is
+/// halved (retrying from the last converged gmin at a closer target) until
+/// it reaches ~1, at which point [`SpiceError::GminStepFailed`] reports the
+/// stalled stage's gmin.
 pub fn dc_op(ckt: &Circuit, opts: &NrOptions) -> Result<Vec<f64>, SpiceError> {
-    let mut ws = Workspace::for_circuit(ckt);
+    let mut ws = Workspace::with_solver(ckt, opts.solver);
     let mut x = vec![0.0; ckt.n_unknowns()];
     match nr_solve(ckt, 0.0, &mut x, CapMode::Open, opts, &mut ws) {
         Ok(_) => return Ok(x),
@@ -369,14 +518,33 @@ pub fn dc_op(ckt: &Circuit, opts: &NrOptions) -> Result<Vec<f64>, SpiceError> {
     }
     // Gmin stepping continuation.
     x.iter_mut().for_each(|v| *v = 0.0);
+    let mut x_good = x.clone();
+    // `gmin_hi` is the last gmin that converged (1e-2 is a virtual start:
+    // the first attempted stage is 1e-2 / ratio = 1e-3, as before).
+    let mut gmin_hi = 1e-2;
+    let mut ratio = 10.0f64;
     let mut gmin = 1e-3;
     loop {
         let staged = NrOptions { gmin, ..*opts };
-        nr_solve(ckt, 0.0, &mut x, CapMode::Open, &staged, &mut ws)?;
-        if gmin <= opts.gmin {
-            return Ok(x);
+        match nr_solve(ckt, 0.0, &mut x, CapMode::Open, &staged, &mut ws) {
+            Ok(_) => {
+                if gmin <= opts.gmin {
+                    return Ok(x);
+                }
+                x_good.copy_from_slice(&x);
+                gmin_hi = gmin;
+                gmin = (gmin / ratio).max(opts.gmin);
+            }
+            Err(SpiceError::NonConvergence { iters, max_delta, .. }) => {
+                ratio *= 0.5;
+                if ratio < 1.05 {
+                    return Err(SpiceError::GminStepFailed { gmin, iters, max_delta });
+                }
+                x.copy_from_slice(&x_good);
+                gmin = (gmin_hi / ratio).max(opts.gmin);
+            }
+            Err(e) => return Err(e),
         }
-        gmin = (gmin * 0.1).max(opts.gmin);
     }
 }
 
@@ -497,14 +665,83 @@ mod tests {
 
     #[test]
     fn singular_reported_for_floating_subcircuit() {
+        // The error must name the offending node, not just a raw matrix
+        // column — and both backends must agree on it.
+        for solver in [SolverChoice::Dense, SolverChoice::Sparse] {
+            let mut c = Circuit::new();
+            let a = c.node("a");
+            let b = c.node("b");
+            // b touches only a current source chain with no DC path to ground.
+            c.vdc(a, GND, 1.0).resistor(a, GND, 1.0);
+            c.isource(a, b, Waveform::Dc(0.0));
+            let r = dc_op(&c, &NrOptions { solver, ..NrOptions::default() });
+            match r {
+                Err(e @ SpiceError::Singular { .. }) => {
+                    let msg = e.to_string();
+                    assert!(msg.contains("node 'b'"), "{solver}: message lacks node name: {msg}");
+                }
+                other => panic!("{solver}: expected Singular, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn singular_names_vsource_branch() {
+        // Two voltage sources in parallel: the MNA matrix has two identical
+        // branch rows, so elimination dies on a branch column; the message
+        // must identify it as a vsource branch.
         let mut c = Circuit::new();
         let a = c.node("a");
-        let b = c.node("b");
-        // b touches only a current source chain with no DC path to ground.
-        c.vdc(a, GND, 1.0).resistor(a, GND, 1.0);
-        c.isource(a, b, Waveform::Dc(0.0));
-        let r = dc_op(&c, &NrOptions::default());
-        assert!(matches!(r, Err(SpiceError::Singular { .. })));
+        c.vdc(a, GND, 1.0).vdc(a, GND, 2.0).resistor(a, GND, 1e3);
+        let e = dc_op(&c, &NrOptions::default()).unwrap_err();
+        let msg = e.to_string();
+        assert!(
+            matches!(e, SpiceError::Singular { .. }) && msg.contains("vsource"),
+            "expected a named branch singular error, got: {msg}"
+        );
+    }
+
+    /// Stiff reverse-biased diode fed by a current source through a huge
+    /// resistor: with a tight iteration budget the direct solve and the
+    /// early (large-gmin) continuation stages fail, so reaching the answer
+    /// requires the adaptive reduction-ratio retry.
+    fn stiff_gmin_circuit() -> (Circuit, NodeId) {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        c.isource(GND, a, Waveform::Dc(1e-6));
+        c.diode(GND, a, DiodeModel::default()); // blocking direction
+        c.resistor(a, GND, 2e7); // DC path: v(a) settles at ~20 V
+        (c, a)
+    }
+
+    #[test]
+    fn gmin_stepping_recovers_from_failed_stage() {
+        let (c, a) = stiff_gmin_circuit();
+        let opts = NrOptions { max_iter: 30, dv_max: 0.25, ..NrOptions::default() };
+        // Pre-fix behavior: the first stage that fails aborts the whole
+        // continuation with NonConvergence. The adaptive ratio must instead
+        // retry closer stages and land on the exact solution.
+        let x = dc_op(&c, &opts).expect("gmin continuation should recover");
+        let va = node_v(&x, a);
+        // Almost all of the 1 uA flows through the 20 MOhm resistor (the
+        // reverse diode carries ~ -Is = -1e-12 A, gmin leaks ~1e-12 * 20 V).
+        assert!((va - 20.0).abs() < 0.1, "v(a) = {va}");
+    }
+
+    #[test]
+    fn gmin_stepping_reports_stage_gmin_when_exhausted() {
+        let (c, _) = stiff_gmin_circuit();
+        // One Newton iteration can never converge this circuit, so every
+        // stage fails and the ratio walks down to the give-up floor.
+        let opts = NrOptions { max_iter: 1, ..NrOptions::default() };
+        match dc_op(&c, &opts) {
+            Err(e @ SpiceError::GminStepFailed { gmin, .. }) => {
+                assert!(gmin > 0.0);
+                let msg = e.to_string();
+                assert!(msg.contains("gmin"), "message should carry the stage gmin: {msg}");
+            }
+            other => panic!("expected GminStepFailed, got {other:?}"),
+        }
     }
 
     #[test]

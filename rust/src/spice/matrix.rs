@@ -1,12 +1,15 @@
 //! Dense linear algebra for MNA systems.
 //!
-//! Modified-nodal-analysis Jacobians for the circuits in this crate are small
-//! (tens to a few hundred unknowns once the structured crossbar path has
-//! eliminated the per-cell internal nodes, see [`crate::xbar::fast`]), so a
-//! cache-friendly dense LU with partial pivoting is both simpler and faster
-//! than a general sparse factorization at these sizes. The factorization is
-//! done in place and reuses the caller's buffers so the Newton-Raphson inner
-//! loop performs no allocation.
+//! A cache-friendly dense LU with partial pivoting, used for *small*
+//! systems (below [`crate::spice::dc::SPARSE_THRESHOLD`] unknowns under
+//! [`crate::spice::SolverChoice::Auto`]), where its simplicity and lack of
+//! pattern bookkeeping win. Larger systems — parasitic crossbar ladders
+//! run to ~10^5 unknowns — go through [`crate::spice::sparse`], whose
+//! fill-reducing ordered LU with symbolic reuse is asymptotically (and in
+//! practice, past ~100 unknowns) far faster than this O(n^3)
+//! factorization. The factorization is done in place and reuses the
+//! caller's buffers so the Newton-Raphson inner loop performs no
+//! allocation.
 
 /// A dense row-major matrix of `f64`.
 #[derive(Debug, Clone, PartialEq)]

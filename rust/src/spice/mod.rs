@@ -5,6 +5,16 @@
 //! backward-Euler / trapezoidal transient integration. It is the *golden*
 //! reference SEMULATOR is trained against and benchmarked over.
 //!
+//! Two linear backends serve the Newton inner loop, selected by
+//! [`SolverChoice`] (a field of [`NrOptions`]): dense LU ([`matrix`]) for
+//! small systems, and a pattern-cached sparse LU with fill-reducing
+//! ordering, symbolic reuse across iterations, and a
+//! Jacobi-preconditioned BiCGSTAB fallback ([`sparse`]) for large ones —
+//! [`SolverChoice::Auto`] (the default) switches at
+//! [`dc::SPARSE_THRESHOLD`] unknowns, which is what lets parasitic
+//! crossbar netlists (256x256 with IR drop is ~10^5 unknowns) run as
+//! golden references at all.
+//!
 //! ```no_run
 //! // (no_run: doctest binaries miss the libstdc++ rpath in this offline
 //! // image; the same circuit is exercised by unit tests.)
@@ -22,10 +32,13 @@ pub mod dc;
 pub mod devices;
 pub mod matrix;
 pub mod netlist;
+pub mod sparse;
 pub mod transient;
 pub mod waveform;
 
-pub use dc::{dc_op, node_v, CapMode, Method, NrOptions, SpiceError, TranState, Workspace};
+pub use dc::{
+    dc_op, node_v, CapMode, Method, NrOptions, SolverChoice, SpiceError, TranState, Workspace,
+};
 pub use devices::{Device, DiodeModel, MosModel, MosType, NodeId, RramModel};
 pub use netlist::{Circuit, GND};
 pub use transient::{transient, TranOptions, TranResult};

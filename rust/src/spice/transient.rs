@@ -108,7 +108,7 @@ pub fn transient(ckt: &Circuit, opts: &TranOptions, nr: &NrOptions) -> Result<Tr
             opts.h, opts.t_stop
         )));
     }
-    let mut ws = Workspace::for_circuit(ckt);
+    let mut ws = Workspace::with_solver(ckt, nr.solver);
     let mut x = vec![0.0; ckt.n_unknowns()];
     let mut nr_iters = 0usize;
 
@@ -147,10 +147,14 @@ pub fn transient(ckt: &Circuit, opts: &TranOptions, nr: &NrOptions) -> Result<Tr
             }
         }
         let mut t_next = (t + opts.h).min(opts.t_stop);
+        let mut hit_bp = false;
         if let Some(&bp) = bp_iter.peek() {
             if bp < t_next - eps {
                 t_next = bp;
             }
+            // Whether shortened to it or landing naturally, this step ends
+            // on a breakpoint edge.
+            hit_bp = bp <= t_next + eps;
         }
         let h_eff = t_next - t;
         // The first step (and the step after any breakpoint edge) has no
@@ -159,7 +163,10 @@ pub fn transient(ckt: &Circuit, opts: &TranOptions, nr: &NrOptions) -> Result<Tr
         let method = if first_step { Method::BackwardEuler } else { opts.method };
         let cap = CapMode::Companion { h: h_eff, method, state: &state };
         nr_iters += nr_solve(ckt, t_next, &mut x, cap, nr, &mut ws)?;
-        first_step = false;
+        // Re-arm the bootstrap whenever this step landed on a breakpoint:
+        // the committed capacitor current is about to go stale across the
+        // edge, and trapezoidal averaging against it rings.
+        first_step = hit_bp;
 
         // Commit capacitor state at the accepted point.
         let mut k = 0usize;
@@ -274,6 +281,36 @@ mod tests {
         // Discharging from 2 V with tau = 1 ms; at t = 0.1 ms ~ 2*exp(-0.1).
         let expect = 2.0 * (-0.1f64).exp();
         assert!((res.final_value(0) - expect).abs() < 2e-2);
+    }
+
+    #[test]
+    fn pulse_edge_no_trapezoidal_overshoot() {
+        // Regression: the BE bootstrap must re-arm after *every* breakpoint
+        // edge, not just the first step. With h >> tau the trapezoidal
+        // update rings against the stale pre-edge capacitor current: the
+        // first post-edge sample undershot to about -0.11 V when the
+        // bootstrap stayed disarmed. With the re-armed BE step the
+        // post-edge tail stays within ~±0.01 V.
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let b = c.node("b");
+        c.vsource(a, GND, Waveform::Pulse { v1: 0.0, v2: 1.0, td: 0.0, tr: 0.0, tf: 0.0, pw: 1e-3, period: 0.0 });
+        c.resistor(a, b, 1e3);
+        c.capacitor(b, GND, 1e-8); // tau = 10 us << h
+        let mut opts = TranOptions::new(2e-3, 1e-4);
+        opts.method = Method::Trapezoidal;
+        opts.record = vec![b];
+        let res = transient(&c, &opts, &NrOptions::default()).unwrap();
+        // Falling edge at t = 1 ms; the step landing on it reads the
+        // post-edge source with pre-edge companion state, giving
+        // v_edge = (2C/h) / (1/R + 2C/h) = 1/6.
+        let edge = res.times.iter().position(|&t| (t - 1e-3).abs() < 1e-12).expect("edge timepoint");
+        let v_edge = res.traces[0][edge];
+        assert!((v_edge - 1.0 / 6.0).abs() < 1e-6, "v_edge={v_edge}");
+        for (&t, &v) in res.times.iter().zip(&res.traces[0]).skip(edge + 1) {
+            assert!(v >= -0.02, "post-edge undershoot {v} at t={t}");
+            assert!(v <= v_edge + 1e-9, "post-edge sample {v} above edge value at t={t}");
+        }
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! a perturbed `AnalogBlock` is the "perturbed golden block" the router's
 //! shadow path and the robustness-eval CLI check the emulator against.
 
-use crate::spice::{transient, NrOptions, SpiceError, TranOptions};
+use crate::spice::{transient, NrOptions, SolverChoice, SpiceError, TranOptions};
 
 use super::array::build_block;
 use super::config::{BlockConfig, CellInputs};
@@ -39,11 +39,23 @@ impl AnalogBlock {
         self.fast.simulate(x)
     }
 
-    /// Full-netlist MNA solve of the identical discretization. Slow
-    /// (dense LU over every cell-internal node); use for validation and
-    /// benchmarking, not dataset generation. Applies the same frozen
-    /// non-ideal transform as `simulate` so the two paths stay comparable.
+    /// Full-netlist MNA solve of the identical discretization, under
+    /// [`SolverChoice::Auto`] (dense LU below
+    /// [`crate::spice::dc::SPARSE_THRESHOLD`] unknowns, pattern-cached
+    /// sparse LU above — which is what makes golden datagen on large
+    /// parasitic crossbars feasible). Applies the same frozen non-ideal
+    /// transform as `simulate` so the two paths stay comparable.
     pub fn simulate_golden(&self, x: &CellInputs) -> Result<Vec<f64>, SpiceError> {
+        self.simulate_golden_with(x, SolverChoice::Auto)
+    }
+
+    /// [`Self::simulate_golden`] with an explicit linear-backend choice
+    /// (used by the differential tests and the `--solver` CLI override).
+    pub fn simulate_golden_with(
+        &self,
+        x: &CellInputs,
+        solver: SolverChoice,
+    ) -> Result<Vec<f64>, SpiceError> {
         let _sp = crate::obs::span("xbar.golden_mna");
         crate::obs::counters::add_golden_solves(1);
         let cfg = self.config();
@@ -52,7 +64,7 @@ impl AnalogBlock {
         let mut opts = TranOptions::new(cfg.t_sense, cfg.h);
         opts.uic = true;
         opts.record = net.outputs.clone();
-        let nr = NrOptions { reltol: 1e-9, vabstol: 1e-12, ..NrOptions::default() };
+        let nr = NrOptions { reltol: 1e-9, vabstol: 1e-12, solver, ..NrOptions::default() };
         let res = transient(&net.circuit, &opts, &nr)?;
         Ok((0..net.outputs.len()).map(|k| res.final_value(k)).collect())
     }

@@ -1,184 +1,46 @@
-//! Golden-value regression tests for the SPICE engine.
+//! Golden-value regression tests for the SPICE engine, dense backend.
 //!
-//! Every assertion here is against a *closed-form* answer computed in the
-//! test itself by elementary circuit theory (series/parallel reduction,
-//! the RC exponential, a bisection of the scalar diode equation) — never
-//! against a previously recorded solver output. Solver refactors and
-//! speed work are therefore pinned to physics, not to themselves.
+//! The scenarios (and the closed-form answers they pin against) live in
+//! `golden_common` so the sparse backend suite (`sparse_golden`) runs the
+//! identical physics under [`SolverChoice::Sparse`]. These circuits are
+//! all far below `SPARSE_THRESHOLD`, so the default (`Auto`) options
+//! exercise the dense LU; a second pass forces `Dense` explicitly so the
+//! pin survives any future threshold change.
 
 use semulator::spice::*;
+
+mod golden_common;
 
 fn nr() -> NrOptions {
     NrOptions::default()
 }
 
-/// Voltage-divider ladder with line resistance: `N` stages of `r_line`
-/// series wire, each tap loaded by `r_shunt` to ground — the resistive
-/// skeleton of a crossbar bitline with IR drop. The expected tap voltages
-/// come from folding the ladder from the far end with series/parallel
-/// reduction, independent of the MNA machinery.
 #[test]
 fn golden_divider_ladder_with_line_resistance() {
-    const N: usize = 8;
-    let v_src = 1.0;
-    let r_line = 50.0;
-    let r_shunt = 1e3;
-
-    // Closed form: equivalent resistance seen looking away from the source
-    // at tap k (0-based), folded from the last tap backwards.
-    //   R_eq[N-1] = r_shunt
-    //   R_eq[k]   = r_shunt || (r_line + R_eq[k+1])
-    let mut r_eq = [0.0f64; N];
-    r_eq[N - 1] = r_shunt;
-    for k in (0..N - 1).rev() {
-        let downstream = r_line + r_eq[k + 1];
-        r_eq[k] = r_shunt * downstream / (r_shunt + downstream);
-    }
-    // Voltage divides stage by stage.
-    let mut expect = [0.0f64; N];
-    expect[0] = v_src * r_eq[0] / (r_line + r_eq[0]);
-    for k in 1..N {
-        expect[k] = expect[k - 1] * r_eq[k] / (r_line + r_eq[k]);
-    }
-
-    let mut c = Circuit::new();
-    let src = c.node("src");
-    c.vdc(src, GND, v_src);
-    let mut prev = src;
-    let mut taps = Vec::new();
-    for k in 0..N {
-        let tap = c.node(&format!("tap{k}"));
-        c.resistor(prev, tap, r_line);
-        c.resistor(tap, GND, r_shunt);
-        taps.push(tap);
-        prev = tap;
-    }
-    let x = dc_op(&c, &nr()).unwrap();
-    for (k, &tap) in taps.iter().enumerate() {
-        let got = node_v(&x, tap);
-        assert!(
-            (got - expect[k]).abs() < 1e-9,
-            "tap {k}: dc_op {got} vs closed form {}",
-            expect[k]
-        );
-    }
-    // Sanity on the closed form itself: monotone IR droop.
-    for k in 1..N {
-        assert!(expect[k] < expect[k - 1]);
-    }
+    golden_common::divider_ladder_with_line_resistance(&nr());
 }
 
-/// RC step response pinned to `v(t) = V (1 - exp(-t/RC))`. Trapezoidal at
-/// a fine step must be within 1e-4 of the analytic value; backward Euler
-/// within its first-order error bound.
 #[test]
 fn golden_rc_step_response() {
-    let v_src = 1.0;
-    let r = 1e3;
-    let cap = 1e-6; // tau = 1 ms
-    let t_stop = 2e-3;
-    let analytic = v_src * (1.0 - (-t_stop / (r * cap)).exp());
-
-    let run = |method: Method, h: f64| -> f64 {
-        let mut c = Circuit::new();
-        let a = c.node("a");
-        let b = c.node("b");
-        c.vdc(a, GND, v_src).resistor(a, b, r).capacitor(b, GND, cap);
-        let mut opts = TranOptions::new(t_stop, h);
-        opts.uic = true;
-        opts.method = method;
-        opts.record = vec![b];
-        transient(&c, &opts, &nr()).unwrap().final_value(0)
-    };
-
-    let trap = run(Method::Trapezoidal, 1e-5);
-    assert!(
-        (trap - analytic).abs() < 1e-4,
-        "trapezoidal {trap} vs analytic {analytic} (err {:.2e})",
-        (trap - analytic).abs()
-    );
-    let be = run(Method::BackwardEuler, 1e-6);
-    assert!(
-        (be - analytic).abs() < 5e-4,
-        "backward Euler {be} vs analytic {analytic} (err {:.2e})",
-        (be - analytic).abs()
-    );
+    golden_common::rc_step_response(&nr());
 }
 
-/// Series R into a diode: the operating point of
-/// `(Vs - v)/R = Is (exp(v/nVt) - 1)` found by bisection of the scalar
-/// equation (monotone in `v`), then compared against `dc_op` on the
-/// two-element netlist.
 #[test]
 fn golden_diode_resistor_operating_point() {
-    let v_src = 2.0;
-    let r = 1e3;
-    let d = DiodeModel::default();
-
-    // Bisection: f(v) = (Vs - v)/R - i_d(v) is strictly decreasing.
-    let f = |v: f64| (v_src - v) / r - d.eval(v).0;
-    let (mut lo, mut hi) = (0.0f64, v_src);
-    assert!(f(lo) > 0.0 && f(hi) < 0.0);
-    for _ in 0..200 {
-        let mid = 0.5 * (lo + hi);
-        if f(mid) > 0.0 {
-            lo = mid;
-        } else {
-            hi = mid;
-        }
-    }
-    let expect = 0.5 * (lo + hi);
-
-    let mut c = Circuit::new();
-    let a = c.node("a");
-    let k = c.node("k");
-    c.vdc(a, GND, v_src).resistor(a, k, r).diode(k, GND, d);
-    let x = dc_op(&c, &nr()).unwrap();
-    let got = node_v(&x, k);
-    // gmin (1e-12 S across the junction) shifts the answer by O(1e-9) V.
-    assert!((got - expect).abs() < 1e-7, "dc_op {got} vs bisection {expect}");
+    golden_common::diode_resistor_operating_point(&nr());
 }
 
-/// RRAM in its linear limit (`alpha -> 0`) behaves as an ideal resistor:
-/// the divider answer is closed-form.
 #[test]
 fn golden_rram_linear_limit_divider() {
-    let g = 1e-4; // 10 kOhm
-    let r_top = 2e3;
-    let v_src = 1.0;
-    let expect = v_src * (1.0 / g) / (r_top + 1.0 / g);
-
-    let mut c = Circuit::new();
-    let a = c.node("a");
-    let m = c.node("m");
-    c.vdc(a, GND, v_src).resistor(a, m, r_top).rram(m, GND, RramModel { g, alpha: 0.0 });
-    let x = dc_op(&c, &nr()).unwrap();
-    let got = node_v(&x, m);
-    assert!((got - expect).abs() < 1e-9, "dc_op {got} vs closed form {expect}");
+    golden_common::rram_linear_limit_divider(&nr());
 }
 
-/// Two-segment RC wire (distributed parasitic): the DC steady state of a
-/// driven ladder must land every node on the source (no DC drop without a
-/// load), while the transient midpoint lags the endpoint — a qualitative
-/// pin plus an exact DC value.
 #[test]
 fn golden_rc_wire_settles_to_rail() {
-    let mut c = Circuit::new();
-    let src = c.node("src");
-    let mid = c.node("mid");
-    let end = c.node("end");
-    c.vdc(src, GND, 0.5);
-    c.resistor(src, mid, 100.0).capacitor(mid, GND, 1e-9);
-    c.resistor(mid, end, 100.0).capacitor(end, GND, 1e-9);
-    // Slowest pole of the two-section ladder: tau = RC / 0.382 ~ 2.6e-7 s;
-    // 4 us is ~15 tau, leaving the residual well under the tolerance.
-    let mut opts = TranOptions::new(4e-6, 2e-9);
-    opts.uic = true;
-    opts.record = vec![mid, end];
-    let res = transient(&c, &opts, &nr()).unwrap();
-    assert!((res.final_value(0) - 0.5).abs() < 1e-4, "mid {}", res.final_value(0));
-    assert!((res.final_value(1) - 0.5).abs() < 1e-4, "end {}", res.final_value(1));
-    // Early on, the far end must lag the midpoint.
-    let idx = res.times.iter().position(|&t| t >= 1e-7).unwrap();
-    assert!(res.traces[1][idx] < res.traces[0][idx], "far end should charge later");
+    golden_common::rc_wire_settles_to_rail(&nr());
+}
+
+#[test]
+fn golden_suite_under_forced_dense_backend() {
+    golden_common::run_all(&NrOptions { solver: SolverChoice::Dense, ..NrOptions::default() });
 }

@@ -21,11 +21,15 @@ trap 'rm -rf "$tmp"' EXIT
 
 (cd rust && cargo bench --bench bench_native_infer -- --json "$tmp/infer.jsonl")
 (cd rust && cargo bench --bench bench_train_step -- --json "$tmp/train.jsonl")
+# Golden MNA backend lanes: sparse rows carry the obs-counted structural
+# work (sparse_nnz + sparse_fill_in) in `flops`, so a nonzero value in the
+# baseline proves the sparse path ran.
+(cd rust && cargo bench --bench bench_golden_solve -- --json "$tmp/golden.jsonl")
 
 {
   printf '{\n  "generated_by": "scripts/bench_to_json.sh",\n'
   printf '  "kind": "semulator-bench-baseline",\n  "rows": [\n'
-  cat "$tmp/infer.jsonl" "$tmp/train.jsonl" | sed 's/^/    /; $!s/$/,/'
+  cat "$tmp/infer.jsonl" "$tmp/train.jsonl" "$tmp/golden.jsonl" | sed 's/^/    /; $!s/$/,/'
   printf '  ]\n}\n'
 } > "$out"
-echo "wrote $out ($(cat "$tmp/infer.jsonl" "$tmp/train.jsonl" | wc -l) rows)"
+echo "wrote $out ($(cat "$tmp/infer.jsonl" "$tmp/train.jsonl" "$tmp/golden.jsonl" | wc -l) rows)"
