@@ -1,0 +1,98 @@
+//! Crossbar-mapped network inference benchmark: one `XbarLinear` layer
+//! forward pass under each per-tile MAC executor — exact ideal math,
+//! the structured fast solver, and the fresh-init regression emulator —
+//! across tile geometries.
+//!
+//! The ideal lanes price the pure tiling/bit-slice/shift-add scaffolding
+//! (digital bookkeeping only), the fast lanes add one structured analog
+//! solve per tile per bit-plane, and the emulated lane routes the same
+//! tiles through an `api::Deployment`. `--json PATH` emits the shared
+//! JSONL schema; the `flops` field reports the obs-counted tile-MAC
+//! executions per forward pass, so a nonzero value doubles as proof the
+//! executor actually drove the tiles.
+
+use std::time::Duration;
+
+use semulator::nn::{build_executor, AdcSpec, Executor, LayerOpts, NnSpec, XbarLinear};
+use semulator::obs::counters as obs;
+use semulator::util::{BenchConfig, BenchJsonl, Bencher, Rng};
+use semulator::xbar::NonIdealSpec;
+
+/// The first-layer shape of the built-in task MLP: 36 pixels -> 12
+/// hidden units, 2-bit input slices, 8-bit ADC.
+const N_OUT: usize = 12;
+const N_IN: usize = 36;
+
+fn layer(tile_rows: usize, tile_outs: usize, rng: &mut Rng) -> XbarLinear {
+    let w: Vec<f64> = (0..N_OUT * N_IN).map(|_| rng.range(-1.0, 1.0)).collect();
+    let bias: Vec<f64> = (0..N_OUT).map(|_| rng.range(-0.1, 0.1)).collect();
+    let opts = LayerOpts {
+        tile_rows,
+        tile_outs,
+        w_max: 0.0,
+        input_bits: 2,
+        adc: AdcSpec { bits: 8, range: 8.0 },
+        in_scale: 1.0,
+        nonideal: NonIdealSpec::default(),
+    };
+    XbarLinear::program(&w, &bias, N_OUT, N_IN, &opts).expect("program bench layer")
+}
+
+/// Tile-MAC executions retired by one call, via the obs counters.
+fn macs_of(f: impl FnOnce()) -> u64 {
+    let before = obs::global_snapshot();
+    f();
+    obs::global_snapshot().since(&before).tile_macs
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut jsonl = BenchJsonl::from_args("bench_nn_infer", &argv);
+    let mut b = Bencher::new(BenchConfig {
+        warmup: Duration::from_millis(100),
+        measure: Duration::from_millis(500),
+        min_samples: 5,
+        max_samples: 10_000,
+    });
+    println!("# bench_nn_infer — XbarLinear forward pass per tile executor");
+
+    let mut rng = Rng::seed_from(7);
+    let x: Vec<f64> = (0..N_IN).map(|_| rng.uniform()).collect();
+
+    for &(tr, to) in &[(8usize, 2usize), (16, 4), (32, 6)] {
+        let l = layer(tr, to, &mut rng);
+        let n_tiles = l.tiled.tiles.len();
+        for (tag, exec) in [("ideal", Executor::Ideal), ("fast", Executor::Fast)] {
+            let backend = exec.prepare(&l.tiled).expect("prepare backend");
+            let lane = format!("layer36x12_t{tr}x{to}/{tag}");
+            let stats = b.bench(&lane, || l.forward(&backend, &x).unwrap()).clone();
+            let macs = macs_of(|| drop(l.forward(&backend, &x).unwrap()));
+            assert!(macs > 0, "{lane}: tile_macs counter must move");
+            jsonl.row(&lane, n_tiles, stats.mean, macs);
+            println!(
+                "  -> {tr}r x {to}o ({n_tiles} tiles) {tag}: {:.1} µs/forward ({macs} tile MACs)",
+                stats.mean.as_secs_f64() * 1e6
+            );
+        }
+    }
+
+    // The emulated executor serves a fixed block geometry (the built-in
+    // `small` architecture), so it gets one lane at that native tiling.
+    let spec = NnSpec { executor: "emulated".into(), ..NnSpec::default() };
+    let (exec, rows, outs) =
+        build_executor(&spec, &NonIdealSpec::default()).expect("fresh-init emulated executor");
+    let l = layer(rows, outs, &mut rng);
+    let n_tiles = l.tiled.tiles.len();
+    let backend = exec.prepare(&l.tiled).expect("prepare emulated backend");
+    let lane = format!("layer36x12_t{rows}x{outs}/emulated");
+    let stats = b.bench(&lane, || l.forward(&backend, &x).unwrap()).clone();
+    let macs = macs_of(|| drop(l.forward(&backend, &x).unwrap()));
+    assert!(macs > 0, "{lane}: tile_macs counter must move");
+    jsonl.row(&lane, n_tiles, stats.mean, macs);
+    println!(
+        "  -> {rows}r x {outs}o ({n_tiles} tiles) emulated: {:.1} µs/forward ({macs} tile MACs)",
+        stats.mean.as_secs_f64() * 1e6
+    );
+
+    jsonl.finish().expect("write --json output");
+}

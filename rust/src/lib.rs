@@ -18,6 +18,11 @@
 //!   multi-checkpoint `NativeRegistry`.
 //! * [`api`] — **the serving API**: `Deployment` / `DeploymentBuilder`,
 //!   typed `MacRequest` / `MacResponse`, multi-variant sessions.
+//! * [`nn`] — **crossbar-mapped networks**: differential-pair weight
+//!   programming, semi-passive tiling, input bit-slicing + ADC, and an
+//!   MLP classifier whose per-tile MACs run on a pluggable executor
+//!   (ideal / fast / golden MNA / the emulator itself) — the
+//!   accuracy-vs-nonideality half of the evaluation.
 //! * [`pipeline`] — **the offline-pipeline API**: declarative
 //!   `ExperimentSpec` run descriptions and `Experiment::run` driving
 //!   datagen → train → eval → export into servable run directories, and
@@ -135,7 +140,8 @@
 //! One experiment is one point; the reason to emulate at all is to sweep
 //! the space. A [`pipeline::CampaignSpec`] is a base spec plus sweep
 //! axes (non-ideality scenarios, arch variants, seeds, sample
-//! distributions, training-recipe knobs); [`pipeline::Campaign::run`]
+//! distributions, training-recipe knobs, golden-solver backends, ADC
+//! resolutions, tile geometries); [`pipeline::Campaign::run`]
 //! expands the cross-product into named runs, executes them across
 //! worker threads (per-run failures become report rows; `resume` skips
 //! runs whose exported spec content-hashes to the grid point), and
@@ -143,6 +149,18 @@
 //! leaderboard [`api::DeploymentBuilder::from_campaign`] serves as one
 //! multi-variant session. CLI: `semulator sweep --spec sweep.json
 //! [--workers N] [--resume]`, then `semulator serve --campaign DIR`.
+//!
+//! ## Putting a network on the array
+//!
+//! The [`nn`] subsystem asks the system-level question: *what does this
+//! device corner do to task accuracy?* An experiment spec's optional
+//! `"nn"` section (an [`nn::NnSpec`]) trains a small MLP in software,
+//! programs it onto tiles under the spec's non-ideality scenario, and
+//! classifies a held-out set through the chosen executor; the resulting
+//! `accuracy` lands in `eval.json` and as a campaign summary column, so
+//! `semulator sweep` can chart accuracy against non-ideality presets,
+//! ADC bits, or tile sizes. Standalone CLI:
+//! `semulator nn-eval --spec spec.json`.
 
 pub mod analytic;
 pub mod util;
@@ -152,6 +170,7 @@ pub mod coordinator;
 pub mod datagen;
 pub mod infer;
 pub mod model;
+pub mod nn;
 pub mod obs;
 pub mod pipeline;
 pub mod repro;

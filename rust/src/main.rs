@@ -4,6 +4,7 @@
 //! ```text
 //! semulator info
 //! semulator run     --spec examples/specs/quickstart.json
+//! semulator nn-eval --spec examples/specs/nn_quickstart.json --out runs/nn
 //! semulator datagen --variant small --n 8000 --out runs/data/small.bin
 //! semulator train   --variant small --data runs/data/small.bin --epochs 150
 //! semulator eval    --variant small --data runs/data/small.bin --ckpt runs/ckpt/x.ckpt
@@ -25,6 +26,7 @@ use semulator::coordinator::{
 use semulator::datagen::{generate_to, Dataset, GenConfig, SampleDist};
 use semulator::infer::{load_or_builtin_meta, Arch, BackendKind, BUILTIN_VARIANTS};
 use semulator::model::ModelState;
+use semulator::nn::NnSpec;
 use semulator::pipeline::{
     Campaign, CampaignOptions, CampaignSpec, Experiment, ExperimentSpec, RunOptions, RunStatus,
 };
@@ -68,6 +70,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("info") => cmd_info(args),
         Some("run") => cmd_run(args),
         Some("sweep") => cmd_sweep(args),
+        Some("nn-eval") => cmd_nn_eval(args),
         Some("datagen") => cmd_datagen(args),
         Some("train") => cmd_train(args),
         Some("eval") => cmd_eval(args),
@@ -82,7 +85,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: semulator <info|run|sweep|datagen|train|eval|serve|stats|repro> [options]
+const USAGE: &str = "usage: semulator <info|run|sweep|nn-eval|datagen|train|eval|serve|stats|repro> [options]
   info                                   list artifacts and variants
   run      --spec FILE [--out DIR] [--workers N]  one-command pipeline:
            datagen -> split -> train -> eval -> servable run directory,
@@ -92,11 +95,19 @@ const USAGE: &str = "usage: semulator <info|run|sweep|datagen|train|eval|serve|s
   sweep    --spec FILE [--out DIR] [--workers N] [--resume]  run a whole
            CampaignSpec grid (base ExperimentSpec x sweep axes: nonideal,
            arch, data_seed, train_seed, dist, n_samples, epochs, batch,
-           lr_base) across worker threads; per-run failures become report
+           lr_base, golden, adc_bits, tile) across worker threads; per-run
+           failures become report
            rows instead of aborting, --resume skips runs whose directory
            already holds this exact spec (matched by content hash), and
            the campaign dir gains summary.json/summary.csv + a
            leaderboard servable via `serve --campaign DIR`.
+  nn-eval  --spec FILE [--out DIR] [--executor ideal|fast|golden|emulated]
+           [--nonideal ideal|mild|harsh [--nonideal-seed N]]
+           crossbar-mapped network evaluation on its own: train a small
+           MLP in software, program it onto emulated tiles, and report
+           task accuracy vs the digital baseline. FILE is an
+           ExperimentSpec with an \"nn\" section (its nonideal scenario
+           applies) or a bare NnSpec object; --out writes nn_report.json.
   datagen  --variant V --n N --out FILE  generate a SPICE dataset
            [--dist uniform|binary|sparseP] [--nonideal ideal|mild|harsh]
            [--workers N] [--dims TxRxC] [--golden [--solver auto|dense|sparse]]
@@ -117,8 +128,9 @@ const USAGE: &str = "usage: semulator <info|run|sweep|datagen|train|eval|serve|s
            finished `semulator sweep` campaign (K=0/default: all of it)
   stats    DIR                            pretty-print the timing breakdown
            of a `semulator run` directory (per-stage wall-clock from its
-           timings.json sidecar, kernel FLOPs, Newton iterations) or of a
-           whole `semulator sweep` campaign (one row per run + totals)
+           timings.json sidecar, kernel FLOPs, Newton iterations, sparse
+           MNA solves, nn tile MACs / ADC clips) or of a whole `semulator
+           sweep` campaign (one row per run + totals)
   repro    <table1|fig4|fig5|fig6|fig7|bound|speed|all> [--preset ci|small|paper]
 common:    --artifacts DIR (default artifacts)   --work DIR (default runs)
 run:       the run directory (default runs/experiments/<name>) is
@@ -319,6 +331,67 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "campaign '{}': every run failed (see summary.json rows for the errors)",
         spec.name
     );
+    Ok(())
+}
+
+/// `semulator nn-eval --spec FILE`: one crossbar-mapped-network
+/// evaluation outside the full pipeline. The spec file is either a
+/// complete `ExperimentSpec` carrying an `"nn"` section (the same file
+/// `semulator run` takes — its `nonideal` scenario applies) or a bare
+/// `NnSpec` object; `--executor` / `--nonideal` override either form.
+fn cmd_nn_eval(args: &Args) -> Result<()> {
+    let spec_path = args.str_opt("spec").context("--spec FILE required")?;
+    let text = std::fs::read_to_string(spec_path)
+        .with_context(|| format!("read spec {spec_path}"))?;
+    let j = semulator::util::json_parse(&text)
+        .map_err(|e| anyhow::anyhow!("{spec_path}: {e}"))?;
+    let (mut nn, mut nonideal) = if j.get("nn").is_some() {
+        let spec =
+            ExperimentSpec::from_str(&text).with_context(|| format!("parse {spec_path}"))?;
+        (spec.nn.clone().expect("nn key present"), spec.nonideal.unwrap_or_default())
+    } else {
+        (NnSpec::from_json(&j).map_err(anyhow::Error::msg)?, NonIdealSpec::default())
+    };
+    if let Some(exec) = args.str_opt("executor") {
+        nn.executor = exec.to_string();
+    }
+    if let Some(spec) = nonideal_from_args(args)? {
+        nonideal = spec;
+    }
+    nn.validate().map_err(anyhow::Error::msg)?;
+    println!(
+        "nn-eval: executor {}, hidden {}, tiles {}x{}, input {} bits, adc {} bits, \
+         {} train / {} test",
+        nn.executor,
+        nn.hidden,
+        nn.tile_rows,
+        nn.tile_outs,
+        nn.input_bits,
+        nn.adc_bits,
+        nn.n_train,
+        nn.n_test
+    );
+    let t0 = std::time::Instant::now();
+    let report = semulator::nn::nn_eval(&nn, &nonideal)?;
+    println!(
+        "accuracy {:.3} ({}/{} correct)  software baseline {:.3}  \
+         tile MACs {}  ADC clips {}  in {:.1}s",
+        report.accuracy,
+        report.n_correct,
+        report.n_test,
+        report.soft_accuracy,
+        human_count(report.tile_macs as f64),
+        human_count(report.adc_clips as f64),
+        t0.elapsed().as_secs_f64(),
+    );
+    if let Some(out) = args.str_opt("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create --out dir {}", dir.display()))?;
+        let path = dir.join("nn_report.json");
+        std::fs::write(&path, format!("{}\n", report.to_json().to_string()))?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }
 
@@ -759,10 +832,19 @@ fn cmd_stats(args: &Args) -> Result<()> {
         .collect();
     names.sort();
     println!(
-        "{:<28} {:>10} {:>10} {:>10} {:>12} {:>12}",
-        "run", "total_ms", "datagen_ms", "train_ms", "kernel_flops", "newton_iters"
+        "{:<28} {:>10} {:>10} {:>10} {:>12} {:>12} {:>13} {:>10} {:>10}",
+        "run",
+        "total_ms",
+        "datagen_ms",
+        "train_ms",
+        "kernel_flops",
+        "newton_iters",
+        "sparse_solves",
+        "tile_macs",
+        "adc_clips"
     );
     let (mut total, mut flops, mut newton, mut shown) = (0.0f64, 0.0f64, 0.0f64, 0usize);
+    let (mut sparse, mut macs, mut clips) = (0.0f64, 0.0f64, 0.0f64);
     for name in &names {
         match RunTimings::load(&runs.join(name)) {
             Ok(t) => {
@@ -770,17 +852,23 @@ fn cmd_stats(args: &Args) -> Result<()> {
                     t.stages.iter().find(|(k, _)| k == key).map(|(_, v)| *v).unwrap_or(0.0)
                 };
                 println!(
-                    "{:<28} {:>10.1} {:>10.1} {:>10.1} {:>12} {:>12}",
+                    "{:<28} {:>10.1} {:>10.1} {:>10.1} {:>12} {:>12} {:>13} {:>10} {:>10}",
                     name,
                     t.total_ms,
                     stage("datagen"),
                     stage("train"),
                     human_count(t.counter("kernel_flops")),
                     human_count(t.counter("newton_iters")),
+                    human_count(t.counter("sparse_solves")),
+                    human_count(t.counter("tile_macs")),
+                    human_count(t.counter("adc_clips")),
                 );
                 total += t.total_ms;
                 flops += t.counter("kernel_flops");
                 newton += t.counter("newton_iters");
+                sparse += t.counter("sparse_solves");
+                macs += t.counter("tile_macs");
+                clips += t.counter("adc_clips");
                 shown += 1;
             }
             Err(_) => println!("{name:<28} (no timings.json — failed or pre-obs run)"),
@@ -788,10 +876,14 @@ fn cmd_stats(args: &Args) -> Result<()> {
     }
     anyhow::ensure!(shown > 0, "{}: no run under runs/ has a timings.json", dir.display());
     println!(
-        "campaign total: {shown}/{} runs, {total:.1} ms, {} kernel FLOPs, {} Newton iters",
+        "campaign total: {shown}/{} runs, {total:.1} ms, {} kernel FLOPs, {} Newton iters, \
+         {} sparse solves, {} tile MACs, {} ADC clips",
         names.len(),
         human_count(flops),
         human_count(newton),
+        human_count(sparse),
+        human_count(macs),
+        human_count(clips),
     );
     Ok(())
 }

@@ -1,0 +1,201 @@
+//! Input bit-slicing and the ADC model.
+//!
+//! Analog crossbars take their multiplicand on the wordline, but driving
+//! an arbitrary analog voltage through a transistor gate is the least
+//! linear thing a 1T1R cell can do. The semi-passive recipe (SNIPPETS.md
+//! #1) sidesteps it: quantize each activation to `d` bits and present one
+//! *binary* bit-plane per cycle — every wordline is either fully off or
+//! fully on — then recombine the per-plane MAC results digitally with a
+//! shift-add. [`InputSlicer`] is that decomposition; `bits = 0` keeps the
+//! analog fast path (drive the activation directly), which is what the
+//! exactness tests use.
+//!
+//! Between the bitline and the shift-add sits the converter:
+//! [`AdcSpec`] models a symmetric mid-tread ADC with `bits` of
+//! resolution over `±range`. Conversions that land outside the code
+//! range clamp *and* bump the global `adc_clips` counter, so a campaign
+//! can report how often a scenario saturated its readout.
+
+use crate::obs::counters;
+
+/// A symmetric `bits`-bit ADC over `±range` (weight·input units after
+/// calibration). `bits = 0` disables conversion entirely (ideal readout).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdcSpec {
+    /// Resolution; codes span `-(2^(bits-1) - 1) ..= 2^(bits-1) - 1`.
+    /// `0` = no converter in the path.
+    pub bits: u32,
+    /// Full-scale input magnitude.
+    pub range: f64,
+}
+
+impl Default for AdcSpec {
+    fn default() -> Self {
+        Self { bits: 0, range: 8.0 }
+    }
+}
+
+impl AdcSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bits > 24 {
+            return Err(format!("adc bits {} out of range (0..=24)", self.bits));
+        }
+        if self.bits > 0 && self.bits < 2 {
+            return Err("an ADC needs >= 2 bits for a signed code (or 0 to disable)".into());
+        }
+        if !(self.range.is_finite() && self.range > 0.0) {
+            return Err(format!("adc range must be finite and > 0, got {}", self.range));
+        }
+        Ok(())
+    }
+
+    /// Largest representable code magnitude (`2^(bits-1) - 1`).
+    pub fn max_code(&self) -> i64 {
+        debug_assert!(self.bits >= 2);
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    /// Quantize one reading. Saturating conversions (the *rounded* code
+    /// falls outside the code range) clamp to full scale and count one
+    /// `adc_clips`.
+    pub fn convert(&self, x: f64) -> f64 {
+        if self.bits == 0 {
+            return x;
+        }
+        let max_code = self.max_code() as f64;
+        let lsb = self.range / max_code;
+        let code = (x / lsb).round();
+        if code.abs() > max_code {
+            counters::add_adc_clips(1);
+        }
+        code.clamp(-max_code, max_code) * lsb
+    }
+}
+
+/// Decompose activations in `[0, 1]` into binary bit-planes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InputSlicer {
+    /// Activation resolution `d`; `0` = analog (one slice, the raw
+    /// values).
+    pub bits: u32,
+}
+
+impl InputSlicer {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bits > 16 {
+            return Err(format!("input bits {} out of range (0..=16)", self.bits));
+        }
+        Ok(())
+    }
+
+    /// Number of tile passes one forward costs.
+    pub fn n_slices(&self) -> usize {
+        if self.bits == 0 {
+            1
+        } else {
+            self.bits as usize
+        }
+    }
+
+    /// `(weight, drive)` pairs: the layer runs each `drive` (values in
+    /// `[0, 1]`; binary for `bits > 0`) through the tiles and accumulates
+    /// `weight ×` the calibrated result. For `bits = 0` this is one
+    /// identity slice; otherwise activations quantize to
+    /// `round(x · (2^d - 1))` and slice `k` carries bit `k` with weight
+    /// `2^k / (2^d - 1)`.
+    pub fn slices(&self, x: &[f64]) -> Vec<(f64, Vec<f64>)> {
+        if self.bits == 0 {
+            return vec![(1.0, x.to_vec())];
+        }
+        let levels = (1u64 << self.bits) - 1;
+        let codes: Vec<u64> =
+            x.iter().map(|&v| (v.clamp(0.0, 1.0) * levels as f64).round() as u64).collect();
+        (0..self.bits)
+            .map(|k| {
+                let weight = (1u64 << k) as f64 / levels as f64;
+                let drive = codes.iter().map(|&c| ((c >> k) & 1) as f64).collect();
+                (weight, drive)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adc_validation() {
+        assert!(AdcSpec { bits: 0, range: 8.0 }.validate().is_ok());
+        assert!(AdcSpec { bits: 1, range: 8.0 }.validate().is_err());
+        assert!(AdcSpec { bits: 8, range: 0.0 }.validate().is_err());
+        assert!(AdcSpec { bits: 25, range: 8.0 }.validate().is_err());
+    }
+
+    #[test]
+    fn adc_quantizes_to_lsb_grid() {
+        // 4 bits over ±7: max_code 7, lsb exactly 1.0.
+        let adc = AdcSpec { bits: 4, range: 7.0 };
+        assert_eq!(adc.convert(0.0), 0.0);
+        assert_eq!(adc.convert(2.4), 2.0);
+        assert_eq!(adc.convert(2.6), 3.0);
+        assert_eq!(adc.convert(-3.4), -3.0);
+        // bits = 0 passes anything through untouched.
+        let off = AdcSpec { bits: 0, range: 1.0 };
+        assert_eq!(off.convert(123.456), 123.456);
+    }
+
+    #[test]
+    fn adc_saturation_clamps_and_counts() {
+        let adc = AdcSpec { bits: 4, range: 7.0 };
+        let before = counters::global_snapshot();
+        assert_eq!(adc.convert(6.9), 7.0); // rounds to max code: no clip
+        assert_eq!(counters::global_snapshot().since(&before).adc_clips, 0);
+        assert_eq!(adc.convert(9.3), 7.0); // beyond full scale: clips
+        assert_eq!(adc.convert(-100.0), -7.0);
+        assert_eq!(counters::global_snapshot().since(&before).adc_clips, 2);
+    }
+
+    #[test]
+    fn analog_slice_is_identity() {
+        let s = InputSlicer { bits: 0 };
+        let x = vec![0.1, 0.9, 0.5];
+        let slices = s.slices(&x);
+        assert_eq!(slices.len(), 1);
+        assert_eq!(slices[0].0, 1.0);
+        assert_eq!(slices[0].1, x);
+    }
+
+    #[test]
+    fn bit_planes_recombine_to_the_quantized_value() {
+        let s = InputSlicer { bits: 4 };
+        let x = vec![0.0, 1.0, 7.0 / 15.0, 0.2];
+        let slices = s.slices(&x);
+        assert_eq!(slices.len(), 4);
+        for (i, &xi) in x.iter().enumerate() {
+            let recombined: f64 = slices.iter().map(|(w, d)| w * d[i]).sum();
+            let quantized = (xi * 15.0).round() / 15.0;
+            assert!((recombined - quantized).abs() < 1e-12, "x[{i}]={xi}: {recombined}");
+            // Planes are binary.
+            for (_, d) in &slices {
+                assert!(d[i] == 0.0 || d[i] == 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn d1_and_d8_slicing_agree_on_binary_inputs() {
+        // On 0/1 inputs the 1-bit decomposition is the input itself and
+        // the 8-bit one is eight identical planes whose weights sum to 1:
+        // any *linear* MAC sees the same operand either way.
+        let x = vec![1.0, 0.0, 1.0, 1.0, 0.0];
+        let w = [0.3, -1.2, 0.55, 0.0, 2.0];
+        let mac = |drive: &[f64]| -> f64 { drive.iter().zip(w).map(|(d, wi)| d * wi).sum() };
+        let y1: f64 = InputSlicer { bits: 1 }.slices(&x).iter().map(|(s, d)| s * mac(d)).sum();
+        let y8: f64 = InputSlicer { bits: 8 }.slices(&x).iter().map(|(s, d)| s * mac(d)).sum();
+        let exact = mac(&x);
+        assert!((y1 - exact).abs() < 1e-12, "{y1} vs {exact}");
+        assert!((y8 - exact).abs() < 1e-12, "{y8} vs {exact}");
+        assert!((y1 - y8).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,424 @@
+//! [`XbarLinear`]: a fully-connected layer executed tile-by-tile on
+//! emulated crossbar hardware, behind a pluggable per-tile MAC executor.
+//!
+//! The layer owns the *digital* half of the computation — input
+//! bit-plane decomposition, per-tile partial-sum accumulation, ADC
+//! conversion, shift-add recombination, bias — and delegates every
+//! analog tile MAC to an [`Executor`]:
+//!
+//! * [`Executor::Ideal`] — the clipped-weight matmul in f64 (software
+//!   baseline; no device physics).
+//! * [`Executor::Fast`] — the structured transient solver
+//!   ([`crate::xbar::FastSolver`]), non-idealities applied.
+//! * [`Executor::Golden`] — full-netlist MNA through
+//!   [`crate::xbar::AnalogBlock::simulate_golden_with`], dense or sparse
+//!   per [`SolverChoice`].
+//! * [`Executor::Emulated`] — a trained regression network served by an
+//!   [`crate::api::Deployment`] (the paper's surrogate in the loop).
+//!
+//! Physical executors read out *voltages*, not dot products, so each
+//! layer/executor pair is calibrated once against an ideal single-cell
+//! probe tile ([`Calibration`]): the full-scale response of one
+//! `w = w_max` cell under full gate drive fixes the volts-per-weight
+//! gain, and the zero-input response fixes the offset. Every tile MAC —
+//! whatever the executor — counts one `tile_macs`; saturating ADC codes
+//! count `adc_clips`.
+
+use crate::api::{Deployment, MacRequest};
+use crate::obs::counters;
+use crate::spice::SolverChoice;
+use crate::xbar::{AnalogBlock, FastSolver, NonIdealSpec};
+
+use super::bitslice::{AdcSpec, InputSlicer};
+use super::tile::{ProgrammedTile, TiledMatrix};
+
+/// Which implementation answers per-tile MACs.
+pub enum Executor {
+    /// Exact f64 matmul over the window-clipped weights.
+    Ideal,
+    /// Structured fast transient solver (non-idealities applied).
+    Fast,
+    /// Full-netlist MNA golden solve with the given backend choice.
+    Golden(SolverChoice),
+    /// A served regression-network emulator; the deployment's `variant`
+    /// geometry must match the tile geometry. One trained net answers
+    /// every tile of the grid (per-tile fault-map seeds do not apply on
+    /// this path — the emulator models its variant's scenario).
+    Emulated {
+        dep: Deployment,
+        variant: String,
+    },
+}
+
+impl Executor {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Executor::Ideal => "ideal",
+            Executor::Fast => "fast",
+            Executor::Golden(_) => "golden",
+            Executor::Emulated { .. } => "emulated",
+        }
+    }
+
+    /// Bind this executor to one programmed tile grid: construct per-tile
+    /// solvers and calibrate the readout.
+    pub fn prepare<'a>(&'a self, tiled: &TiledMatrix) -> Result<TileBackend<'a>, String> {
+        let kind = match self {
+            Executor::Ideal => BackendKind::Ideal,
+            Executor::Fast => BackendKind::Fast(
+                tiled.tiles.iter().map(|t| FastSolver::new(t.cfg.clone())).collect(),
+            ),
+            Executor::Golden(choice) => BackendKind::Golden(
+                tiled
+                    .tiles
+                    .iter()
+                    .map(|t| AnalogBlock::new(t.cfg.clone()))
+                    .collect::<Result<Vec<_>, String>>()?,
+                *choice,
+            ),
+            Executor::Emulated { dep, variant } => {
+                let bc = dep.block_config(variant).map_err(|e| format!("{e:#}"))?;
+                let t = &tiled.tiles[0];
+                if bc.n_cells() != t.cfg.n_cells() || bc.n_mac() != t.cfg.n_mac() {
+                    return Err(format!(
+                        "emulated variant '{variant}' serves a {} cell / {} MAC block \
+                         but the tile grid is {} cells / {} MACs — match the nn tile \
+                         geometry to the served block",
+                        bc.n_cells(),
+                        bc.n_mac(),
+                        t.cfg.n_cells(),
+                        t.cfg.n_mac()
+                    ));
+                }
+                BackendKind::Emulated { dep, variant: variant.as_str() }
+            }
+        };
+        let calib = Calibration::probe(&kind, tiled)?;
+        Ok(TileBackend { kind, calib })
+    }
+}
+
+/// Per-tile solver instances for one (executor, tile grid) pair.
+enum BackendKind<'a> {
+    Ideal,
+    Fast(Vec<FastSolver>),
+    Golden(Vec<AnalogBlock>, SolverChoice),
+    Emulated { dep: &'a Deployment, variant: &'a str },
+}
+
+impl BackendKind<'_> {
+    /// Raw (uncalibrated) tile response for tile `i` of the grid the
+    /// backend was prepared for.
+    fn raw(&self, i: usize, tile: &ProgrammedTile, drive: &[f64]) -> Result<Vec<f64>, String> {
+        match self {
+            BackendKind::Ideal => Ok(tile.ideal_mac(drive)),
+            BackendKind::Fast(solvers) => Ok(solvers[i].simulate(&tile.cell_inputs(drive))),
+            BackendKind::Golden(blocks, choice) => blocks[i]
+                .simulate_golden_with(&tile.cell_inputs(drive), *choice)
+                .map_err(|e| format!("golden tile solve: {e}")),
+            BackendKind::Emulated { dep, variant } => {
+                let req = MacRequest::new(*variant, tile.cell_inputs(drive));
+                Ok(dep.submit(&req).map_err(|e| format!("{e:#}"))?.outputs)
+            }
+        }
+    }
+
+    /// A one-off solve on a probe tile that is not part of the grid
+    /// (calibration); `Fast`/`Golden` build a throwaway solver for it.
+    fn raw_probe(&self, tile: &ProgrammedTile, drive: &[f64]) -> Result<Vec<f64>, String> {
+        match self {
+            BackendKind::Ideal => Ok(tile.ideal_mac(drive)),
+            BackendKind::Fast(_) => {
+                Ok(FastSolver::new(tile.cfg.clone()).simulate(&tile.cell_inputs(drive)))
+            }
+            BackendKind::Golden(_, choice) => AnalogBlock::new(tile.cfg.clone())?
+                .simulate_golden_with(&tile.cell_inputs(drive), *choice)
+                .map_err(|e| format!("golden calibration solve: {e}")),
+            BackendKind::Emulated { dep, variant } => {
+                let req = MacRequest::new(*variant, tile.cell_inputs(drive));
+                Ok(dep.submit(&req).map_err(|e| format!("{e:#}"))?.outputs)
+            }
+        }
+    }
+}
+
+/// Affine decode from tile readout (volts) to weight·input units.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    pub gain: f64,
+    pub offset: f64,
+}
+
+impl Calibration {
+    pub fn identity() -> Self {
+        Self { gain: 1.0, offset: 0.0 }
+    }
+
+    /// Two-point probe on an *ideal* single-cell tile of the grid's
+    /// geometry and mapping scale: zero drive fixes the offset, one
+    /// full-scale cell under full drive fixes the gain. Degenerate
+    /// responses (an untrained emulator can be flat) read back as zero
+    /// gain instead of dividing by ~0.
+    fn probe(kind: &BackendKind<'_>, tiled: &TiledMatrix) -> Result<Self, String> {
+        if matches!(kind, BackendKind::Ideal) {
+            return Ok(Self::identity());
+        }
+        let grid = &tiled.grid;
+        let w_max = tiled.mapping.w_max;
+        let mut cal_w = vec![0.0; grid.tile_outs * grid.tile_rows];
+        cal_w[0] = w_max;
+        let cal = TiledMatrix::program(
+            &cal_w,
+            grid.tile_outs,
+            grid.tile_rows,
+            grid.tile_rows,
+            grid.tile_outs,
+            NonIdealSpec::default(),
+            w_max,
+        )?;
+        let probe_tile = &cal.tiles[0];
+        let zero = vec![0.0; grid.tile_rows];
+        let mut unit = vec![0.0; grid.tile_rows];
+        unit[0] = 1.0;
+        let v_zero = kind.raw_probe(probe_tile, &zero)?[0];
+        let v_fs = kind.raw_probe(probe_tile, &unit)?[0];
+        let span = v_fs - v_zero;
+        let gain = if span.abs() < 1e-12 { 0.0 } else { w_max / span };
+        Ok(Self { gain, offset: v_zero })
+    }
+}
+
+/// An [`Executor`] bound to one tile grid: per-tile solvers plus the
+/// readout calibration. Built by [`Executor::prepare`].
+pub struct TileBackend<'a> {
+    kind: BackendKind<'a>,
+    calib: Calibration,
+}
+
+impl TileBackend<'_> {
+    pub fn calibration(&self) -> Calibration {
+        self.calib
+    }
+
+    /// One calibrated tile MAC (`out_len` values in weight·input units).
+    /// Counts one `tile_macs` whatever the executor.
+    pub fn mac(&self, i: usize, tile: &ProgrammedTile, drive: &[f64]) -> Result<Vec<f64>, String> {
+        counters::add_tile_macs(1);
+        let raw = self.kind.raw(i, tile, drive)?;
+        if matches!(self.kind, BackendKind::Ideal) {
+            return Ok(raw);
+        }
+        Ok(raw[..tile.out_len]
+            .iter()
+            .map(|v| (v - self.calib.offset) * self.calib.gain)
+            .collect())
+    }
+}
+
+/// Construction options for one [`XbarLinear`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerOpts {
+    /// Wordlines per tile.
+    pub tile_rows: usize,
+    /// Differential outputs per tile.
+    pub tile_outs: usize,
+    /// Full-scale weight (`0` = auto from `max |w|`).
+    pub w_max: f64,
+    /// Input bit-slice depth (`0` = analog drive).
+    pub input_bits: u32,
+    /// Converter between bitline and shift-add.
+    pub adc: AdcSpec,
+    /// Activations divide by this before hitting the wordlines (and the
+    /// linear MAC multiplies back) so drives stay in `[0, 1]`.
+    pub in_scale: f64,
+    /// Device scenario programmed into every tile.
+    pub nonideal: NonIdealSpec,
+}
+
+/// A fully-connected layer programmed onto crossbar tiles.
+pub struct XbarLinear {
+    pub tiled: TiledMatrix,
+    pub bias: Vec<f64>,
+    pub in_scale: f64,
+    pub slicer: InputSlicer,
+    pub adc: AdcSpec,
+}
+
+impl XbarLinear {
+    /// Program `w` (`(n_out, n_in)` row-major) + `bias` onto tiles.
+    pub fn program(
+        w: &[f64],
+        bias: &[f64],
+        n_out: usize,
+        n_in: usize,
+        opts: &LayerOpts,
+    ) -> Result<Self, String> {
+        if bias.len() != n_out {
+            return Err(format!("bias has {} entries, expected {n_out}", bias.len()));
+        }
+        if !(opts.in_scale.is_finite() && opts.in_scale > 0.0) {
+            return Err(format!("in_scale must be finite and > 0, got {}", opts.in_scale));
+        }
+        let slicer = InputSlicer { bits: opts.input_bits };
+        slicer.validate()?;
+        opts.adc.validate()?;
+        let tiled = TiledMatrix::program(
+            w,
+            n_out,
+            n_in,
+            opts.tile_rows,
+            opts.tile_outs,
+            opts.nonideal,
+            opts.w_max,
+        )?;
+        Ok(Self { tiled, bias: bias.to_vec(), in_scale: opts.in_scale, slicer, adc: opts.adc })
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.tiled.grid.n_in
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.tiled.grid.n_out
+    }
+
+    /// One forward pass: slice inputs, run every (slice, tile) MAC
+    /// through the backend, ADC-convert, shift-add, rescale, add bias.
+    pub fn forward(&self, backend: &TileBackend<'_>, x: &[f64]) -> Result<Vec<f64>, String> {
+        if x.len() != self.n_in() {
+            return Err(format!("input has {} features, layer takes {}", x.len(), self.n_in()));
+        }
+        let inv = 1.0 / self.in_scale;
+        let xn: Vec<f64> = x.iter().map(|v| (v * inv).clamp(0.0, 1.0)).collect();
+        let mut acc = vec![0.0f64; self.n_out()];
+        for (slice_w, drive) in self.slicer.slices(&xn) {
+            for (i, tile) in self.tiled.tiles.iter().enumerate() {
+                let d = &drive[tile.in_offset..tile.in_offset + tile.in_len];
+                for (m, v) in backend.mac(i, tile, d)?.into_iter().enumerate() {
+                    acc[tile.out_offset + m] += slice_w * self.adc.convert(v);
+                }
+            }
+        }
+        Ok(acc.iter().zip(&self.bias).map(|(a, b)| a * self.in_scale + b).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> LayerOpts {
+        LayerOpts {
+            tile_rows: 4,
+            tile_outs: 2,
+            w_max: 1.0,
+            input_bits: 0,
+            adc: AdcSpec { bits: 0, range: 8.0 },
+            in_scale: 1.0,
+            nonideal: NonIdealSpec::default(),
+        }
+    }
+
+    #[test]
+    fn program_validates_shapes_and_opts() {
+        let w = vec![0.0; 6];
+        assert!(XbarLinear::program(&w, &[0.0; 2], 2, 3, &opts()).is_ok());
+        let err = XbarLinear::program(&w, &[0.0; 3], 2, 3, &opts()).unwrap_err();
+        assert!(err.contains("bias"), "{err}");
+        let bad = LayerOpts { in_scale: 0.0, ..opts() };
+        assert!(XbarLinear::program(&w, &[0.0; 2], 2, 3, &bad).is_err());
+    }
+
+    #[test]
+    fn ideal_forward_is_the_affine_map() {
+        // y = Wx + b over two tiles along the input dimension.
+        let w = vec![0.5, -0.25, 1.0, 0.0, -1.0, 0.125, 0.75, -0.5, 0.25, 0.0, 0.5, -0.75];
+        let (n_out, n_in) = (2, 6);
+        let b = vec![0.125, -1.5];
+        let layer = XbarLinear::program(&w, &b, n_out, n_in, &opts()).unwrap();
+        let exec = Executor::Ideal;
+        let backend = exec.prepare(&layer.tiled).unwrap();
+        let x = vec![1.0, 0.5, 0.0, 0.25, 0.75, 1.0];
+        let y = layer.forward(&backend, &x).unwrap();
+        for j in 0..n_out {
+            let expect: f64 =
+                (0..n_in).map(|i| w[j * n_in + i] * x[i]).sum::<f64>() + b[j];
+            assert!((y[j] - expect).abs() < 1e-12, "out {j}: {} vs {expect}", y[j]);
+        }
+    }
+
+    #[test]
+    fn tile_macs_count_slices_times_tiles() {
+        let w = vec![0.1; 12];
+        let layer = XbarLinear::program(
+            &w,
+            &[0.0; 2],
+            2,
+            6,
+            &LayerOpts { input_bits: 3, ..opts() },
+        )
+        .unwrap();
+        let exec = Executor::Ideal;
+        let backend = exec.prepare(&layer.tiled).unwrap();
+        let before = counters::global_snapshot();
+        layer.forward(&backend, &[0.5; 6]).unwrap();
+        let d = counters::global_snapshot().since(&before);
+        // 3 bit-planes x 2 tiles (6 inputs on 4-row tiles x 1 out chunk).
+        assert_eq!(d.tile_macs, 6, "{d:?}");
+    }
+
+    #[test]
+    fn fast_executor_tracks_ideal_on_an_ideal_device() {
+        // With no non-idealities and binary drives, the calibrated fast
+        // path is a (mildly nonlinear) analog of the exact MAC: same
+        // sign, same ballpark.
+        let w = vec![1.0, -0.5, 0.25, 0.75];
+        let layer = XbarLinear::program(
+            &w,
+            &[0.0; 2],
+            2,
+            2,
+            &LayerOpts { tile_rows: 2, input_bits: 1, ..opts() },
+        )
+        .unwrap();
+        let ideal = Executor::Ideal.prepare(&layer.tiled).unwrap();
+        let fast = Executor::Fast.prepare(&layer.tiled).unwrap();
+        let x = vec![1.0, 1.0];
+        let yi = layer.forward(&ideal, &x).unwrap();
+        let yf = layer.forward(&fast, &x).unwrap();
+        for j in 0..2 {
+            assert!(
+                (yi[j] - yf[j]).abs() < 0.35 * (1.0 + yi[j].abs()),
+                "out {j}: ideal {} vs fast {}",
+                yi[j],
+                yf[j]
+            );
+            assert_eq!(yi[j].signum(), yf[j].signum(), "out {j} sign");
+        }
+    }
+
+    #[test]
+    fn adc_in_the_loop_quantizes_and_counts_clips() {
+        let w = vec![1.0; 8]; // one output summing 8 full-scale weights
+        let layer = XbarLinear::program(
+            &w,
+            &[0.0],
+            1,
+            8,
+            &LayerOpts {
+                tile_rows: 8,
+                tile_outs: 1,
+                input_bits: 1,
+                adc: AdcSpec { bits: 4, range: 2.0 }, // tile sum 8 >> range
+                ..opts()
+            },
+        )
+        .unwrap();
+        let backend = Executor::Ideal.prepare(&layer.tiled).unwrap();
+        let before = counters::global_snapshot();
+        let y = layer.forward(&backend, &[1.0; 8]).unwrap();
+        let d = counters::global_snapshot().since(&before);
+        assert!(d.adc_clips >= 1, "{d:?}");
+        assert!((y[0] - 2.0).abs() < 1e-12, "saturated at ADC full scale, got {}", y[0]);
+    }
+}

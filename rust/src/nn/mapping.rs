@@ -1,0 +1,150 @@
+//! Differential conductance-pair weight mapping.
+//!
+//! A signed weight `w` cannot live in a single memristive cell — device
+//! conductance is strictly positive inside `[g_min, g_max]` — so every
+//! logical weight occupies two cells on adjacent bitlines and is read out
+//! as the *difference* of their currents (the PS32-style differential
+//! peripheral that makes [`crate::xbar::BlockConfig`] pair its columns:
+//! MAC output `m` senses columns `2m` and `2m+1`). This module is the
+//! pure encode/decode math of that scheme:
+//!
+//! * `w >= 0` programs `G⁺ = g_min + w·s`, `G⁻ = g_min`,
+//! * `w <  0` programs `G⁺ = g_min`, `G⁻ = g_min - w·s`,
+//!
+//! with `s = (g_max - g_min) / w_max` the conductance-per-weight scale.
+//! Weights beyond `±w_max` saturate at the device window edge — the
+//! clipping that [`WeightMapping::effective`] models exactly and the
+//! round-trip proptests pin. Device non-idealities are *not* applied
+//! here: programmed conductances flow through the existing
+//! [`crate::xbar::NonIdealSpec`] realization inside whichever solver
+//! executes the tile, so programming + read disturbance stay in one
+//! place.
+
+use crate::xbar::BlockConfig;
+
+/// Encode/decode parameters for differential-pair weight programming.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WeightMapping {
+    /// Low end of the programmable conductance window (S).
+    pub g_min: f64,
+    /// High end of the programmable conductance window (S).
+    pub g_max: f64,
+    /// The weight magnitude mapped onto the full window; `|w| > w_max`
+    /// clips.
+    pub w_max: f64,
+}
+
+impl WeightMapping {
+    /// A mapping over `cfg`'s device window with the given full-scale
+    /// weight.
+    pub fn for_block(cfg: &BlockConfig, w_max: f64) -> Result<Self, String> {
+        if !(w_max.is_finite() && w_max > 0.0) {
+            return Err(format!("w_max must be finite and > 0, got {w_max}"));
+        }
+        if !(cfg.cell.g_min > 0.0 && cfg.cell.g_max > cfg.cell.g_min) {
+            return Err(format!(
+                "conductance window [{}, {}] is not programmable",
+                cfg.cell.g_min, cfg.cell.g_max
+            ));
+        }
+        Ok(Self { g_min: cfg.cell.g_min, g_max: cfg.cell.g_max, w_max })
+    }
+
+    /// Conductance per unit weight.
+    pub fn scale(&self) -> f64 {
+        (self.g_max - self.g_min) / self.w_max
+    }
+
+    /// Program one weight: `(G⁺, G⁻)`, both inside `[g_min, g_max]`.
+    pub fn encode(&self, w: f64) -> (f64, f64) {
+        let dg = (w.abs().min(self.w_max)) * self.scale();
+        let hot = (self.g_min + dg).min(self.g_max);
+        if w >= 0.0 {
+            (hot, self.g_min)
+        } else {
+            (self.g_min, hot)
+        }
+    }
+
+    /// Read one pair back into weight units.
+    pub fn decode(&self, g_plus: f64, g_minus: f64) -> f64 {
+        (g_plus - g_minus) / self.scale()
+    }
+
+    /// The weight the pair actually represents after window clipping —
+    /// computed directly in weight units (no conductance round trip), so
+    /// in-range weights are preserved *exactly*. This is what the `Ideal`
+    /// executor multiplies by.
+    pub fn effective(&self, w: f64) -> f64 {
+        w.clamp(-self.w_max, self.w_max)
+    }
+}
+
+/// Full-scale weight for a matrix: `max |w|` (1.0 for an all-zero
+/// matrix, so the mapping stays well-defined).
+pub fn auto_w_max(weights: &[f64]) -> f64 {
+    let m = weights.iter().fold(0.0f64, |a, &w| a.max(w.abs()));
+    if m > 0.0 {
+        m
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mapping() -> WeightMapping {
+        WeightMapping::for_block(&BlockConfig::small(), 1.0).unwrap()
+    }
+
+    #[test]
+    fn rejects_bad_full_scale() {
+        assert!(WeightMapping::for_block(&BlockConfig::small(), 0.0).is_err());
+        assert!(WeightMapping::for_block(&BlockConfig::small(), f64::NAN).is_err());
+    }
+
+    #[test]
+    fn encode_respects_window_and_sign() {
+        let m = mapping();
+        for w in [-2.0, -1.0, -0.25, 0.0, 0.6, 1.0, 3.5] {
+            let (gp, gm) = m.encode(w);
+            assert!(gp >= m.g_min && gp <= m.g_max, "w={w}: G+={gp}");
+            assert!(gm >= m.g_min && gm <= m.g_max, "w={w}: G-={gm}");
+            if w > 0.0 {
+                assert_eq!(gm, m.g_min, "positive weight keeps G- cold");
+            } else if w < 0.0 {
+                assert_eq!(gp, m.g_min, "negative weight keeps G+ cold");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_inverts_encode_within_clip_bounds() {
+        let m = mapping();
+        for w in [-1.0, -0.5, -1.0 / 3.0, 0.0, 0.125, 0.9, 1.0] {
+            let (gp, gm) = m.encode(w);
+            let back = m.decode(gp, gm);
+            assert!((back - w).abs() < 1e-9, "w={w} came back as {back}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_weights_clip_to_full_scale() {
+        let m = mapping();
+        let (gp, gm) = m.encode(7.0);
+        assert_eq!((gp, gm), (m.g_max, m.g_min));
+        assert!((m.decode(gp, gm) - 1.0).abs() < 1e-12);
+        assert_eq!(m.effective(7.0), 1.0);
+        assert_eq!(m.effective(-7.0), -1.0);
+        assert_eq!(m.effective(0.25), 0.25);
+    }
+
+    #[test]
+    fn auto_full_scale_tracks_max_abs() {
+        assert_eq!(auto_w_max(&[0.1, -0.7, 0.3]), 0.7);
+        assert_eq!(auto_w_max(&[0.0, 0.0]), 1.0);
+        assert_eq!(auto_w_max(&[]), 1.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Crossbar-mapped neural-network inference over emulated tiles.
+//!
+//! This subsystem closes the loop the paper's evaluation runs: take a
+//! network trained in software, program its weights onto analog crossbar
+//! tiles, and measure task accuracy when the tiles execute through
+//! progressively more physical MAC paths — from an exact matmul to the
+//! trained regression-net emulator itself.
+//!
+//! The layer stack, bottom up:
+//!
+//! * [`mapping`] — signed weights as differential conductance pairs
+//!   (`G⁺ − G⁻`) clipped to the device window ([`WeightMapping`]).
+//! * [`tile`] — semi-passive tiling of a `(n_out, n_in)` matrix into
+//!   fixed-geometry sub-arrays with digital partial-sum accumulation
+//!   ([`TiledMatrix`], [`ProgrammedTile`]).
+//! * [`bitslice`] — `d`-bit input bit-slicing with shift-add
+//!   recombination ([`InputSlicer`]) and a symmetric mid-tread ADC with
+//!   saturation counting ([`AdcSpec`]).
+//! * [`layer`] — [`XbarLinear`] ties those together behind a pluggable
+//!   per-tile [`Executor`]:
+//!   - `Ideal` — exact clipped-weight matmul (the digital reference),
+//!   - `Fast` — [`crate::xbar::FastSolver`] device physics,
+//!   - `Golden` — full MNA via [`crate::spice::SolverChoice`]
+//!     (dense or sparse),
+//!   - `Emulated` — the regression-net emulator through
+//!     [`crate::api::Deployment`].
+//!
+//!   Physical executors read bitline voltages, so each backend runs a
+//!   two-point [`Calibration`] probe on an ideal reference tile to map
+//!   volts back to weight·input units.
+//! * [`network`] — a procedurally generated 6×6 image task
+//!   ([`NnTask`]), a deterministic software trainer ([`SoftMlp`]), the
+//!   crossbar-programmed MLP ([`XbarMlp`]), and the [`NnSpec`] /
+//!   [`NnReport`] JSON surface the pipeline, campaign sweeps, and
+//!   `semulator nn-eval` share.
+//!
+//! Tile MAC executions and ADC saturations land on the observability
+//! counters (`tile_macs`, `adc_clips`) and are exported through the
+//! usual stats/Prometheus surface.
+//!
+//! # Quick start
+//!
+//! ```no_run
+//! use semulator::nn::{nn_eval, NnSpec};
+//! use semulator::xbar::NonIdealSpec;
+//!
+//! let spec = NnSpec { executor: "fast".into(), adc_bits: 6, ..Default::default() };
+//! let nonideal = NonIdealSpec::preset("mild").map_err(anyhow::Error::msg)?;
+//! let report = nn_eval(&spec, &nonideal)?;
+//! println!("accuracy {:.3} (software {:.3})", report.accuracy, report.soft_accuracy);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod bitslice;
+pub mod layer;
+pub mod mapping;
+pub mod network;
+pub mod tile;
+
+pub use bitslice::{AdcSpec, InputSlicer};
+pub use layer::{Calibration, Executor, LayerOpts, TileBackend, XbarLinear};
+pub use mapping::{auto_w_max, WeightMapping};
+pub use network::{
+    build_executor, build_run_dir_executor, nn_eval, nn_eval_with, NnReport, NnSpec, NnTask,
+    SoftMlp, XbarMlp,
+};
+pub use tile::{ProgrammedTile, TileGrid, TiledMatrix};

@@ -1,0 +1,667 @@
+//! The crossbar-mapped MLP, its tiny image task, and the `nn-eval`
+//! entry points the pipeline and CLI share.
+//!
+//! The workflow is the standard analog-deployment loop: train a small
+//! MLP *in software* (f64 SGD, [`SoftMlp`]), program the trained weights
+//! onto crossbar tiles ([`XbarMlp`]), and measure classification
+//! accuracy under a device scenario and executor — that accuracy drop
+//! versus the digital baseline is the quantity the
+//! accuracy-vs-nonideality campaigns sweep.
+//!
+//! Everything is procedurally generated and seeded: [`NnTask`] draws
+//! noisy 6×6 pattern images (stripes / diagonal / center blob), the
+//! trainer shuffles with a forked [`Rng`], and the physical solvers are
+//! deterministic — so a campaign's per-run `accuracy` is byte-identical
+//! whatever the worker count.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Policy;
+use crate::obs::counters;
+use crate::util::{Json, Rng};
+use crate::xbar::NonIdealSpec;
+
+use super::bitslice::AdcSpec;
+use super::layer::{Executor, LayerOpts, XbarLinear};
+
+/// Seed-offset between the two layers' tile fault maps.
+const LAYER_SEED_STRIDE: u64 = 0x9E37;
+
+/// The procedurally generated tiny-image classification task: 6×6
+/// grayscale patterns in four classes (horizontal stripes, vertical
+/// stripes, diagonal band, center blob) under additive Gaussian pixel
+/// noise. Balanced, deterministic for a seed, and linearly-separable
+/// enough that a tiny MLP learns it in a few dozen epochs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NnTask {
+    pub side: usize,
+    pub n_classes: usize,
+}
+
+impl Default for NnTask {
+    fn default() -> Self {
+        Self { side: 6, n_classes: 4 }
+    }
+}
+
+impl NnTask {
+    pub fn n_pixels(&self) -> usize {
+        self.side * self.side
+    }
+
+    fn template(&self, class: usize, r: usize, c: usize) -> bool {
+        let s = self.side;
+        match class % 4 {
+            0 => r % 2 == 0,
+            1 => c % 2 == 0,
+            2 => r == c || r == c + 1 || r + 1 == c,
+            _ => (s / 3..s - s / 3).contains(&r) && (s / 3..s - s / 3).contains(&c),
+        }
+    }
+
+    /// Generate `n` labelled images (`xs` row-major `n × side²` in
+    /// `[0, 1]`, labels round-robin over classes).
+    pub fn generate(&self, n: usize, noise: f64, seed: u64) -> (Vec<f64>, Vec<usize>) {
+        let mut rng = Rng::seed_from(seed);
+        let mut xs = Vec::with_capacity(n * self.n_pixels());
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = i % self.n_classes;
+            for r in 0..self.side {
+                for c in 0..self.side {
+                    let base = if self.template(class, r, c) { 0.9 } else { 0.1 };
+                    xs.push((base + noise * rng.normal()).clamp(0.0, 1.0));
+                }
+            }
+            ys.push(class);
+        }
+        (xs, ys)
+    }
+}
+
+/// A software-trained two-layer MLP (`n_in → hidden → n_out`, ReLU +
+/// softmax cross-entropy) — the digital baseline whose weights the
+/// crossbar version programs.
+#[derive(Debug, Clone)]
+pub struct SoftMlp {
+    pub n_in: usize,
+    pub hidden: usize,
+    pub n_out: usize,
+    /// `(hidden, n_in)` row-major.
+    pub w1: Vec<f64>,
+    pub b1: Vec<f64>,
+    /// `(n_out, hidden)` row-major.
+    pub w2: Vec<f64>,
+    pub b2: Vec<f64>,
+    /// Largest hidden activation seen on the training set (floor 1.0) —
+    /// the crossbar second layer's input scale.
+    pub act_scale: f64,
+}
+
+fn dot_rows(w: &[f64], b: &[f64], n_out: usize, n_in: usize, x: &[f64]) -> Vec<f64> {
+    (0..n_out)
+        .map(|j| {
+            let row = &w[j * n_in..(j + 1) * n_in];
+            row.iter().zip(x).map(|(wi, xi)| wi * xi).sum::<f64>() + b[j]
+        })
+        .collect()
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl SoftMlp {
+    /// Minibatch SGD from a seeded init; fully deterministic.
+    pub fn train(
+        n_in: usize,
+        n_out: usize,
+        hidden: usize,
+        xs: &[f64],
+        ys: &[usize],
+        epochs: usize,
+        lr: f64,
+        seed: u64,
+    ) -> Self {
+        let n = ys.len();
+        assert_eq!(xs.len(), n * n_in, "training set shape");
+        let mut rng = Rng::seed_from(seed);
+        let mut init = |n_out: usize, n_in: usize| -> Vec<f64> {
+            let a = (6.0 / (n_in + n_out) as f64).sqrt();
+            (0..n_out * n_in).map(|_| rng.range(-a, a)).collect()
+        };
+        let mut m = Self {
+            n_in,
+            hidden,
+            n_out,
+            w1: init(hidden, n_in),
+            b1: vec![0.0; hidden],
+            w2: init(n_out, hidden),
+            b2: vec![0.0; n_out],
+            act_scale: 1.0,
+        };
+        const BATCH: usize = 16;
+        for _ in 0..epochs {
+            let perm = rng.permutation(n);
+            for chunk in perm.chunks(BATCH) {
+                let mut gw1 = vec![0.0; m.w1.len()];
+                let mut gb1 = vec![0.0; m.b1.len()];
+                let mut gw2 = vec![0.0; m.w2.len()];
+                let mut gb2 = vec![0.0; m.b2.len()];
+                for &s in chunk {
+                    let x = &xs[s * n_in..(s + 1) * n_in];
+                    let pre = dot_rows(&m.w1, &m.b1, hidden, n_in, x);
+                    let h: Vec<f64> = pre.iter().map(|&v| v.max(0.0)).collect();
+                    let z = dot_rows(&m.w2, &m.b2, n_out, hidden, &h);
+                    // Softmax + cross-entropy gradient: p - onehot.
+                    let zmax = z.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    let exps: Vec<f64> = z.iter().map(|&v| (v - zmax).exp()).collect();
+                    let sum: f64 = exps.iter().sum();
+                    let mut dz: Vec<f64> = exps.iter().map(|&e| e / sum).collect();
+                    dz[ys[s]] -= 1.0;
+                    for j in 0..n_out {
+                        gb2[j] += dz[j];
+                        for k in 0..hidden {
+                            gw2[j * hidden + k] += dz[j] * h[k];
+                        }
+                    }
+                    for k in 0..hidden {
+                        if pre[k] <= 0.0 {
+                            continue;
+                        }
+                        let dh: f64 = (0..n_out).map(|j| m.w2[j * hidden + k] * dz[j]).sum();
+                        gb1[k] += dh;
+                        for i in 0..n_in {
+                            gw1[k * n_in + i] += dh * x[i];
+                        }
+                    }
+                }
+                let step = lr / chunk.len() as f64;
+                let upd = |w: &mut [f64], g: &[f64]| {
+                    for (wi, gi) in w.iter_mut().zip(g) {
+                        *wi -= step * gi;
+                    }
+                };
+                upd(&mut m.w1, &gw1);
+                upd(&mut m.b1, &gb1);
+                upd(&mut m.w2, &gw2);
+                upd(&mut m.b2, &gb2);
+            }
+        }
+        let mut peak = 1.0f64;
+        for s in 0..n {
+            let x = &xs[s * n_in..(s + 1) * n_in];
+            for v in dot_rows(&m.w1, &m.b1, hidden, n_in, x) {
+                peak = peak.max(v);
+            }
+        }
+        m.act_scale = peak;
+        m
+    }
+
+    pub fn hidden_act(&self, x: &[f64]) -> Vec<f64> {
+        dot_rows(&self.w1, &self.b1, self.hidden, self.n_in, x)
+            .into_iter()
+            .map(|v| v.max(0.0))
+            .collect()
+    }
+
+    pub fn logits(&self, x: &[f64]) -> Vec<f64> {
+        let h = self.hidden_act(x);
+        dot_rows(&self.w2, &self.b2, self.n_out, self.hidden, &h)
+    }
+
+    pub fn predict(&self, x: &[f64]) -> usize {
+        argmax(&self.logits(x))
+    }
+
+    pub fn accuracy(&self, xs: &[f64], ys: &[usize]) -> f64 {
+        let correct = ys
+            .iter()
+            .enumerate()
+            .filter(|(s, &y)| self.predict(&xs[s * self.n_in..(s + 1) * self.n_in]) == y)
+            .count();
+        correct as f64 / ys.len().max(1) as f64
+    }
+}
+
+/// The crossbar-programmed MLP: two [`XbarLinear`] layers with a digital
+/// ReLU between them.
+pub struct XbarMlp {
+    pub l1: XbarLinear,
+    pub l2: XbarLinear,
+}
+
+/// One evaluation's result (what `eval.json`'s `"nn"` section and
+/// `nn_report.json` serialize).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NnReport {
+    pub executor: String,
+    /// Crossbar-executed test accuracy.
+    pub accuracy: f64,
+    /// The software baseline's accuracy on the same test set.
+    pub soft_accuracy: f64,
+    pub n_correct: usize,
+    pub n_test: usize,
+    /// Tile MAC executions this evaluation cost (scope-isolated).
+    pub tile_macs: u64,
+    /// ADC saturations this evaluation hit (scope-isolated).
+    pub adc_clips: u64,
+}
+
+impl NnReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("executor", Json::Str(self.executor.clone())),
+            ("accuracy", Json::Num(self.accuracy)),
+            ("soft_accuracy", Json::Num(self.soft_accuracy)),
+            ("n_correct", Json::Num(self.n_correct as f64)),
+            ("n_test", Json::Num(self.n_test as f64)),
+            ("tile_macs", Json::Num(self.tile_macs as f64)),
+            ("adc_clips", Json::Num(self.adc_clips as f64)),
+        ])
+    }
+}
+
+impl XbarMlp {
+    /// Program a trained [`SoftMlp`] onto tiles under a device scenario.
+    pub fn from_soft(
+        soft: &SoftMlp,
+        spec: &NnSpec,
+        nonideal: &NonIdealSpec,
+        tile_rows: usize,
+        tile_outs: usize,
+    ) -> Result<Self, String> {
+        let adc = AdcSpec { bits: spec.adc_bits, range: spec.adc_range };
+        let mut ni2 = *nonideal;
+        ni2.seed = ni2.seed.wrapping_add(LAYER_SEED_STRIDE);
+        let base = LayerOpts {
+            tile_rows,
+            tile_outs,
+            w_max: spec.w_max,
+            input_bits: spec.input_bits,
+            adc,
+            in_scale: 1.0,
+            nonideal: *nonideal,
+        };
+        let l1 = XbarLinear::program(&soft.w1, &soft.b1, soft.hidden, soft.n_in, &base)?;
+        let l2 = XbarLinear::program(
+            &soft.w2,
+            &soft.b2,
+            soft.n_out,
+            soft.hidden,
+            &LayerOpts { in_scale: soft.act_scale, nonideal: ni2, ..base },
+        )?;
+        Ok(Self { l1, l2 })
+    }
+
+    /// Classify the test set through `exec` and report accuracy plus the
+    /// evaluation's tile/ADC counter deltas (read from the installed
+    /// counter scope when one exists, so concurrent campaign runs don't
+    /// bleed into each other).
+    pub fn evaluate(&self, exec: &Executor, xs: &[f64], ys: &[usize]) -> Result<NnReport, String> {
+        let _span = crate::obs::span("nn.eval");
+        let scope = counters::current_scope();
+        let snap = || match &scope {
+            Some(s) => s.snapshot(),
+            None => counters::global_snapshot(),
+        };
+        let before = snap();
+        let b1 = exec.prepare(&self.l1.tiled)?;
+        let b2 = exec.prepare(&self.l2.tiled)?;
+        let n_in = self.l1.n_in();
+        let mut n_correct = 0;
+        for (s, &y) in ys.iter().enumerate() {
+            let x = &xs[s * n_in..(s + 1) * n_in];
+            let h: Vec<f64> =
+                self.l1.forward(&b1, x)?.into_iter().map(|v| v.max(0.0)).collect();
+            let logits = self.l2.forward(&b2, &h)?;
+            if argmax(&logits) == y {
+                n_correct += 1;
+            }
+        }
+        let d = snap().since(&before);
+        Ok(NnReport {
+            executor: exec.name().to_string(),
+            accuracy: n_correct as f64 / ys.len().max(1) as f64,
+            soft_accuracy: 0.0, // filled by the nn_eval drivers
+            n_correct,
+            n_test: ys.len(),
+            tile_macs: d.tile_macs,
+            adc_clips: d.adc_clips,
+        })
+    }
+}
+
+/// JSON-declared configuration of one crossbar-mapped-network
+/// evaluation (the optional `"nn"` section of an experiment spec).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NnSpec {
+    /// Per-tile MAC executor: `ideal | fast | golden | emulated`.
+    pub executor: String,
+    /// Golden MNA backend (`auto | dense | sparse`); golden executor
+    /// only.
+    pub solver: String,
+    /// Hidden width of the MLP.
+    pub hidden: usize,
+    /// Wordlines per tile.
+    pub tile_rows: usize,
+    /// Differential outputs per tile.
+    pub tile_outs: usize,
+    /// Input bit-slice depth `d` (`0` = analog drive).
+    pub input_bits: u32,
+    /// ADC resolution (`0` = ideal readout).
+    pub adc_bits: u32,
+    /// ADC full-scale magnitude (weight·input units).
+    pub adc_range: f64,
+    /// Full-scale weight (`0` = auto per layer from `max |w|`).
+    pub w_max: f64,
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Pixel noise sigma of the generated task.
+    pub noise: f64,
+    /// Software-training epochs.
+    pub epochs: usize,
+    /// Software-training learning rate.
+    pub lr: f64,
+    /// Master seed (task, init, shuffles, emulated fresh-init).
+    pub seed: u64,
+}
+
+impl Default for NnSpec {
+    fn default() -> Self {
+        Self {
+            executor: "fast".into(),
+            solver: "auto".into(),
+            hidden: 12,
+            tile_rows: 16,
+            tile_outs: 4,
+            input_bits: 4,
+            adc_bits: 0,
+            adc_range: 8.0,
+            w_max: 0.0,
+            n_train: 192,
+            n_test: 64,
+            noise: 0.15,
+            epochs: 40,
+            lr: 0.3,
+            seed: 7,
+        }
+    }
+}
+
+impl NnSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        match self.executor.as_str() {
+            "ideal" | "fast" | "golden" | "emulated" => {}
+            other => {
+                return Err(format!(
+                    "unknown nn executor '{other}' (ideal | fast | golden | emulated)"
+                ))
+            }
+        }
+        self.solver.parse::<crate::spice::SolverChoice>()?;
+        let check = |name: &str, v: usize, lo: usize, hi: usize| -> Result<(), String> {
+            if v < lo || v > hi {
+                return Err(format!("nn.{name} = {v} out of range [{lo}, {hi}]"));
+            }
+            Ok(())
+        };
+        check("hidden", self.hidden, 1, 256)?;
+        check("tile_rows", self.tile_rows, 1, 1024)?;
+        check("tile_outs", self.tile_outs, 1, 256)?;
+        check("n_train", self.n_train, 1, 100_000)?;
+        check("n_test", self.n_test, 1, 100_000)?;
+        check("epochs", self.epochs, 1, 10_000)?;
+        super::bitslice::InputSlicer { bits: self.input_bits }.validate()?;
+        AdcSpec { bits: self.adc_bits, range: self.adc_range }.validate()?;
+        if !(self.w_max.is_finite() && self.w_max >= 0.0) {
+            return Err(format!("nn.w_max = {} must be finite and >= 0", self.w_max));
+        }
+        if !(0.0..=1.0).contains(&self.noise) {
+            return Err(format!("nn.noise = {} out of range [0, 1]", self.noise));
+        }
+        if !(self.lr.is_finite() && self.lr > 0.0 && self.lr <= 10.0) {
+            return Err(format!("nn.lr = {} out of range (0, 10]", self.lr));
+        }
+        if self.seed > (1u64 << 53) {
+            return Err("nn.seed must fit in 53 bits (JSON number safety)".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("executor", Json::Str(self.executor.clone())),
+            ("solver", Json::Str(self.solver.clone())),
+            ("hidden", Json::Num(self.hidden as f64)),
+            ("tile_rows", Json::Num(self.tile_rows as f64)),
+            ("tile_outs", Json::Num(self.tile_outs as f64)),
+            ("input_bits", Json::Num(self.input_bits as f64)),
+            ("adc_bits", Json::Num(self.adc_bits as f64)),
+            ("adc_range", Json::Num(self.adc_range)),
+            ("w_max", Json::Num(self.w_max)),
+            ("n_train", Json::Num(self.n_train as f64)),
+            ("n_test", Json::Num(self.n_test as f64)),
+            ("noise", Json::Num(self.noise)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("lr", Json::Num(self.lr)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    /// Parse an `"nn"` object; absent keys keep their defaults.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let d = Self::default();
+        let s = |k: &str, dflt: &str| -> String {
+            v.get(k).and_then(|x| x.as_str()).map(str::to_string).unwrap_or_else(|| dflt.into())
+        };
+        let u = |k: &str, dflt: usize| v.get(k).and_then(|x| x.as_usize()).unwrap_or(dflt);
+        let f = |k: &str, dflt: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(dflt);
+        let spec = Self {
+            executor: s("executor", &d.executor),
+            solver: s("solver", &d.solver),
+            hidden: u("hidden", d.hidden),
+            tile_rows: u("tile_rows", d.tile_rows),
+            tile_outs: u("tile_outs", d.tile_outs),
+            input_bits: u("input_bits", d.input_bits as usize) as u32,
+            adc_bits: u("adc_bits", d.adc_bits as usize) as u32,
+            adc_range: f("adc_range", d.adc_range),
+            w_max: f("w_max", d.w_max),
+            n_train: u("n_train", d.n_train),
+            n_test: u("n_test", d.n_test),
+            noise: f("noise", d.noise),
+            epochs: u("epochs", d.epochs),
+            lr: f("lr", d.lr),
+            seed: f("seed", d.seed as f64) as u64,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Build the executor an [`NnSpec`] asks for. The `emulated` executor
+/// here is *artifact-free*: a fresh-init regression net over the
+/// built-in `small` architecture (mechanism-exercising; its accuracy
+/// reflects an untrained surrogate). Returns the executor plus the tile
+/// geometry to use — emulated executors force the served block's
+/// geometry.
+pub fn build_executor(spec: &NnSpec, nonideal: &NonIdealSpec) -> Result<(Executor, usize, usize)> {
+    match spec.executor.as_str() {
+        "ideal" => Ok((Executor::Ideal, spec.tile_rows, spec.tile_outs)),
+        "fast" => Ok((Executor::Fast, spec.tile_rows, spec.tile_outs)),
+        "golden" => {
+            let choice = spec.solver.parse().map_err(anyhow::Error::msg)?;
+            Ok((Executor::Golden(choice), spec.tile_rows, spec.tile_outs))
+        }
+        "emulated" => {
+            let def = crate::api::VariantDef::new("nn")
+                .arch("small")
+                .nonideal(*nonideal)
+                .init_seed(spec.seed);
+            let dep = crate::api::Deployment::builder()
+                .variant(def)
+                .policy(Policy::Emulator)
+                .build()
+                .context("fresh-init emulated nn executor")?;
+            let bc = dep.block_config("nn")?.clone();
+            let (rows, outs) = (bc.tiles * bc.rows, bc.n_mac());
+            Ok((Executor::Emulated { dep, variant: "nn".into() }, rows, outs))
+        }
+        other => anyhow::bail!("unknown nn executor '{other}'"),
+    }
+}
+
+/// An `emulated` executor backed by a trained `pipeline::Experiment` run
+/// directory (the deployment the probe stage also builds). Tile
+/// geometry comes from the run's block.
+pub fn build_run_dir_executor(
+    run_dir: &Path,
+    artifact_dir: &Path,
+) -> Result<(Executor, usize, usize)> {
+    let def = crate::api::VariantDef::from_run_dir_with(run_dir, artifact_dir)?;
+    let name = def.name().to_string();
+    let dep = crate::api::Deployment::builder()
+        .artifact_dir(artifact_dir)
+        .variant(def)
+        .policy(Policy::Emulator)
+        .build()
+        .with_context(|| format!("emulated nn executor from {}", run_dir.display()))?;
+    let bc = dep.block_config(&name)?.clone();
+    let (rows, outs) = (bc.tiles * bc.rows, bc.n_mac());
+    Ok((Executor::Emulated { dep, variant: name }, rows, outs))
+}
+
+/// Run one full nn evaluation with an already-built executor.
+pub fn nn_eval_with(
+    spec: &NnSpec,
+    nonideal: &NonIdealSpec,
+    exec: &Executor,
+    tile_rows: usize,
+    tile_outs: usize,
+) -> Result<NnReport> {
+    spec.validate().map_err(anyhow::Error::msg)?;
+    let task = NnTask::default();
+    let (train_x, train_y) = task.generate(spec.n_train, spec.noise, spec.seed);
+    let (test_x, test_y) = task.generate(spec.n_test, spec.noise, spec.seed ^ 0x5EED);
+    let soft = SoftMlp::train(
+        task.n_pixels(),
+        task.n_classes,
+        spec.hidden,
+        &train_x,
+        &train_y,
+        spec.epochs,
+        spec.lr,
+        spec.seed,
+    );
+    let mlp = XbarMlp::from_soft(&soft, spec, nonideal, tile_rows, tile_outs)
+        .map_err(anyhow::Error::msg)?;
+    let mut report = mlp.evaluate(exec, &test_x, &test_y).map_err(anyhow::Error::msg)?;
+    report.soft_accuracy = soft.accuracy(&test_x, &test_y);
+    Ok(report)
+}
+
+/// Run one full nn evaluation, building the executor the spec asks for.
+pub fn nn_eval(spec: &NnSpec, nonideal: &NonIdealSpec) -> Result<NnReport> {
+    let (exec, tile_rows, tile_outs) = build_executor(spec, nonideal)?;
+    nn_eval_with(spec, nonideal, &exec, tile_rows, tile_outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_is_deterministic_and_balanced() {
+        let task = NnTask::default();
+        let (xa, ya) = task.generate(40, 0.1, 5);
+        let (xb, yb) = task.generate(40, 0.1, 5);
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
+        for class in 0..task.n_classes {
+            assert_eq!(ya.iter().filter(|&&y| y == class).count(), 10);
+        }
+        assert!(xa.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let (xc, _) = task.generate(40, 0.1, 6);
+        assert_ne!(xa, xc, "different seeds draw different noise");
+    }
+
+    #[test]
+    fn soft_mlp_learns_the_task() {
+        let spec = NnSpec::default();
+        let task = NnTask::default();
+        let (tx, ty) = task.generate(spec.n_train, spec.noise, spec.seed);
+        let (ex, ey) = task.generate(spec.n_test, spec.noise, spec.seed ^ 0x5EED);
+        let soft = SoftMlp::train(
+            task.n_pixels(),
+            task.n_classes,
+            spec.hidden,
+            &tx,
+            &ty,
+            spec.epochs,
+            spec.lr,
+            spec.seed,
+        );
+        let acc = soft.accuracy(&ex, &ey);
+        assert!(acc >= 0.8, "software baseline should learn the task, got {acc}");
+        assert!(soft.act_scale >= 1.0);
+    }
+
+    #[test]
+    fn spec_json_roundtrip_and_defaults() {
+        let spec = NnSpec { executor: "golden".into(), adc_bits: 6, seed: 11, ..Default::default() };
+        let back = NnSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // An empty object reads as the defaults.
+        let empty = crate::util::json_parse("{}").unwrap();
+        assert_eq!(NnSpec::from_json(&empty).unwrap(), NnSpec::default());
+    }
+
+    #[test]
+    fn spec_validation_rejects_bad_fields() {
+        let ok = NnSpec::default();
+        assert!(ok.validate().is_ok());
+        assert!(NnSpec { executor: "spice".into(), ..ok.clone() }.validate().is_err());
+        assert!(NnSpec { solver: "qr".into(), ..ok.clone() }.validate().is_err());
+        assert!(NnSpec { hidden: 0, ..ok.clone() }.validate().is_err());
+        assert!(NnSpec { adc_bits: 1, ..ok.clone() }.validate().is_err());
+        assert!(NnSpec { noise: 2.0, ..ok.clone() }.validate().is_err());
+        assert!(NnSpec { lr: 0.0, ..ok }.validate().is_err());
+    }
+
+    #[test]
+    fn ideal_xbar_tracks_the_software_baseline() {
+        // Single-tile layers, analog drive, no ADC, auto w_max: the ideal
+        // executor computes the same affine maps as the software forward
+        // pass up to the second layer's in_scale rescaling (and its
+        // clamp, should a test activation exceed the training peak), so
+        // accuracies agree to within a couple of flipped near-ties.
+        let spec = NnSpec {
+            executor: "ideal".into(),
+            input_bits: 0,
+            adc_bits: 0,
+            tile_rows: 64,
+            tile_outs: 16,
+            n_train: 96,
+            n_test: 24,
+            epochs: 12,
+            ..Default::default()
+        };
+        let report = nn_eval(&spec, &NonIdealSpec::default()).unwrap();
+        assert_eq!(report.executor, "ideal");
+        assert!(
+            (report.accuracy - report.soft_accuracy).abs() <= 2.0 / 24.0 + 1e-12,
+            "{report:?}"
+        );
+        assert!(report.tile_macs > 0);
+        assert_eq!(report.adc_clips, 0);
+    }
+}

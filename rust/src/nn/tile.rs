@@ -1,0 +1,286 @@
+//! Semi-passive tiling: carve a large weight matrix into crossbar-sized
+//! sub-arrays with digital partial-sum accumulation.
+//!
+//! A physical block only offers `rows` wordlines and `cols/2`
+//! differential outputs, so a `(n_out, n_in)` layer becomes a grid of
+//! `ceil(n_in / tile_rows) × ceil(n_out / tile_outs)` programmed tiles
+//! (the 8×8-tile semi-passive organization of SNIPPETS.md #1, with the
+//! tile geometry configurable). Edge tiles pad with zero-weight pairs
+//! (`G⁺ = G⁻ = g_min`) so every tile shares one [`BlockConfig`]
+//! geometry — which is also what lets the `Emulated` executor reuse a
+//! single trained regression net for the whole grid. Partial sums along
+//! the input dimension accumulate digitally in f64, exactly like the
+//! shift-add that recombines input bit-planes.
+//!
+//! Tiles carry their [`crate::xbar::NonIdealSpec`] inside `cfg`, with the
+//! fault-map seed offset per tile so a grid doesn't replicate one tile's
+//! stuck-cell pattern everywhere; the executors' solvers apply the frozen
+//! realization at solve time (the same path `datagen --nonideal` uses).
+
+use crate::xbar::{BlockConfig, CellInputs, NonIdealSpec};
+
+use super::mapping::{auto_w_max, WeightMapping};
+
+/// Tile decomposition of a `(n_out, n_in)` weight matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGrid {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Wordlines (inputs) per tile.
+    pub tile_rows: usize,
+    /// Differential MAC outputs per tile (tile columns = `2 * tile_outs`).
+    pub tile_outs: usize,
+}
+
+impl TileGrid {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_in == 0 || self.n_out == 0 {
+            return Err(format!("empty matrix ({} x {})", self.n_out, self.n_in));
+        }
+        if self.tile_rows == 0 || self.tile_outs == 0 {
+            return Err(format!(
+                "tile geometry {}r x {}o must be nonzero",
+                self.tile_rows, self.tile_outs
+            ));
+        }
+        Ok(())
+    }
+
+    /// Tile count along the input dimension.
+    pub fn row_chunks(&self) -> usize {
+        self.n_in.div_ceil(self.tile_rows)
+    }
+
+    /// Tile count along the output dimension.
+    pub fn out_chunks(&self) -> usize {
+        self.n_out.div_ceil(self.tile_outs)
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.row_chunks() * self.out_chunks()
+    }
+}
+
+/// One crossbar tile with its weights programmed as differential pairs.
+#[derive(Debug, Clone)]
+pub struct ProgrammedTile {
+    /// `(1, tile_rows, 2 * tile_outs)` block carrying the tile's
+    /// non-ideality scenario (per-tile fault-map seed).
+    pub cfg: BlockConfig,
+    /// Programmed (pre-realization) conductances, `cfg` cell layout.
+    pub g: Vec<f64>,
+    /// First input index this tile covers.
+    pub in_offset: usize,
+    /// Real (unpadded) inputs in this tile (`<= tile_rows`).
+    pub in_len: usize,
+    /// First output index this tile covers.
+    pub out_offset: usize,
+    /// Real (unpadded) outputs in this tile (`<= tile_outs`).
+    pub out_len: usize,
+    /// Window-clipped weights, `(tile_outs, tile_rows)` row-major with
+    /// zero padding — the exact matrix the analog pairs represent and the
+    /// `Ideal` executor's operand.
+    pub w_eff: Vec<f64>,
+}
+
+impl ProgrammedTile {
+    /// Cell inputs for one drive vector (`drive.len() == in_len`, values
+    /// in `[0, 1]` scaled onto the gate rail; padded rows stay off).
+    pub fn cell_inputs(&self, drive: &[f64]) -> CellInputs {
+        assert_eq!(drive.len(), self.in_len, "tile drive length");
+        let cols = self.cfg.cols;
+        let mut x = CellInputs { v: vec![0.0; self.cfg.n_cells()], g: self.g.clone() };
+        for (r, &d) in drive.iter().enumerate() {
+            let v = d.clamp(0.0, 1.0) * self.cfg.v_gate_max;
+            for c in 0..cols {
+                x.v[r * cols + c] = v;
+            }
+        }
+        x
+    }
+
+    /// The tile's exact linear MAC over the clipped weights (the `Ideal`
+    /// executor): `y[m] = Σ_r w_eff[m][r] · drive[r]`, length `out_len`.
+    pub fn ideal_mac(&self, drive: &[f64]) -> Vec<f64> {
+        assert_eq!(drive.len(), self.in_len, "tile drive length");
+        let tile_rows = self.cfg.rows;
+        (0..self.out_len)
+            .map(|m| {
+                let row = &self.w_eff[m * tile_rows..m * tile_rows + self.in_len];
+                row.iter().zip(drive).map(|(w, d)| w * d).sum()
+            })
+            .collect()
+    }
+}
+
+/// A weight matrix programmed across a grid of crossbar tiles.
+#[derive(Debug, Clone)]
+pub struct TiledMatrix {
+    pub grid: TileGrid,
+    pub mapping: WeightMapping,
+    /// Row-chunk-major: tile `(rc, oc)` lives at `rc * out_chunks + oc`.
+    pub tiles: Vec<ProgrammedTile>,
+}
+
+impl TiledMatrix {
+    /// Program `w` (`(n_out, n_in)` row-major) onto a tile grid under a
+    /// non-ideality scenario. `w_max = 0` auto-scales to `max |w|`.
+    pub fn program(
+        w: &[f64],
+        n_out: usize,
+        n_in: usize,
+        tile_rows: usize,
+        tile_outs: usize,
+        nonideal: NonIdealSpec,
+        w_max: f64,
+    ) -> Result<Self, String> {
+        let grid = TileGrid { n_in, n_out, tile_rows, tile_outs };
+        grid.validate()?;
+        if w.len() != n_out * n_in {
+            return Err(format!(
+                "weight matrix has {} entries, expected {} x {}",
+                w.len(),
+                n_out,
+                n_in
+            ));
+        }
+        let full_scale = if w_max > 0.0 { w_max } else { auto_w_max(w) };
+        let template = BlockConfig::with_dims(1, tile_rows, 2 * tile_outs);
+        template.validate()?;
+        let mapping = WeightMapping::for_block(&template, full_scale)?;
+
+        let mut tiles = Vec::with_capacity(grid.n_tiles());
+        for rc in 0..grid.row_chunks() {
+            let in_offset = rc * tile_rows;
+            let in_len = tile_rows.min(n_in - in_offset);
+            for oc in 0..grid.out_chunks() {
+                let out_offset = oc * tile_outs;
+                let out_len = tile_outs.min(n_out - out_offset);
+                // Per-tile fault-map seed: same scenario, independent
+                // frozen draws across the grid.
+                let mut ni = nonideal;
+                ni.seed = ni.seed.wrapping_add(tiles.len() as u64);
+                let cfg = template.clone().with_nonideal(ni);
+                let cols = cfg.cols;
+                let mut g = vec![cfg.cell.g_min; cfg.n_cells()];
+                let mut w_eff = vec![0.0; tile_outs * tile_rows];
+                for m in 0..out_len {
+                    for r in 0..in_len {
+                        let wi = w[(out_offset + m) * n_in + (in_offset + r)];
+                        let (gp, gm) = mapping.encode(wi);
+                        g[r * cols + 2 * m] = gp;
+                        g[r * cols + 2 * m + 1] = gm;
+                        w_eff[m * tile_rows + r] = mapping.effective(wi);
+                    }
+                }
+                tiles.push(ProgrammedTile {
+                    cfg,
+                    g,
+                    in_offset,
+                    in_len,
+                    out_offset,
+                    out_len,
+                    w_eff,
+                });
+            }
+        }
+        Ok(Self { grid, mapping, tiles })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_chunk_counts_cover_the_matrix() {
+        let g = TileGrid { n_in: 36, n_out: 10, tile_rows: 16, tile_outs: 4 };
+        assert_eq!(g.row_chunks(), 3);
+        assert_eq!(g.out_chunks(), 3);
+        assert_eq!(g.n_tiles(), 9);
+        assert!(g.validate().is_ok());
+        assert!(TileGrid { n_in: 0, ..g }.validate().is_err());
+        assert!(TileGrid { tile_rows: 0, ..g }.validate().is_err());
+    }
+
+    #[test]
+    fn program_rejects_shape_mismatch() {
+        let err = TiledMatrix::program(&[0.0; 5], 2, 3, 4, 2, NonIdealSpec::default(), 1.0)
+            .unwrap_err();
+        assert!(err.contains("5 entries"), "{err}");
+    }
+
+    #[test]
+    fn tiled_ideal_mac_matches_dense_matmul() {
+        // 5x7 matrix on 3r x 2o tiles: 3 x 3 grid with padding on every
+        // edge; partial sums must reassemble the dense product exactly.
+        let (n_out, n_in) = (5, 7);
+        let w: Vec<f64> =
+            (0..n_out * n_in).map(|i| ((i * 31 % 17) as f64 - 8.0) / 8.0).collect();
+        let x: Vec<f64> = (0..n_in).map(|i| (i as f64) / (n_in - 1) as f64).collect();
+        let tm = TiledMatrix::program(&w, n_out, n_in, 3, 2, NonIdealSpec::default(), 1.0)
+            .unwrap();
+        assert_eq!(tm.tiles.len(), 3 * 3);
+        let mut y = vec![0.0f64; n_out];
+        for t in &tm.tiles {
+            let drive = &x[t.in_offset..t.in_offset + t.in_len];
+            for (m, v) in t.ideal_mac(drive).into_iter().enumerate() {
+                y[t.out_offset + m] += v;
+            }
+        }
+        for j in 0..n_out {
+            let dense: f64 = (0..n_in).map(|i| w[j * n_in + i] * x[i]).sum();
+            assert!((y[j] - dense).abs() < 1e-12, "out {j}: {} vs {dense}", y[j]);
+        }
+    }
+
+    #[test]
+    fn programmed_pairs_decode_to_clipped_weights() {
+        let w = vec![0.5, -0.25, 2.0, -3.0];
+        let tm = TiledMatrix::program(&w, 2, 2, 2, 2, NonIdealSpec::default(), 1.0).unwrap();
+        let t = &tm.tiles[0];
+        let cols = t.cfg.cols;
+        for m in 0..2 {
+            for r in 0..2 {
+                let decoded = tm.mapping.decode(t.g[r * cols + 2 * m], t.g[r * cols + 2 * m + 1]);
+                let expect = w[m * 2 + r].clamp(-1.0, 1.0);
+                assert!((decoded - expect).abs() < 1e-9, "w[{m}][{r}]");
+                assert_eq!(t.w_eff[m * t.cfg.rows + r], expect);
+            }
+        }
+    }
+
+    #[test]
+    fn padded_cells_stay_cold() {
+        // 1x1 matrix on a 4r x 2o tile: 7 padded pairs at g_min and no
+        // gate drive.
+        let tm = TiledMatrix::program(&[0.8], 1, 1, 4, 2, NonIdealSpec::default(), 1.0).unwrap();
+        let t = &tm.tiles[0];
+        let x = t.cell_inputs(&[1.0]);
+        let cols = t.cfg.cols;
+        for r in 0..t.cfg.rows {
+            for c in 0..cols {
+                if r == 0 && c < 2 {
+                    continue; // the programmed pair
+                }
+                assert_eq!(t.g[r * cols + c], t.cfg.cell.g_min, "cell ({r},{c})");
+            }
+            let expect_v = if r == 0 { t.cfg.v_gate_max } else { 0.0 };
+            for c in 0..cols {
+                assert_eq!(x.v[r * cols + c], expect_v, "gate ({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn per_tile_seeds_differ() {
+        let mut ni = NonIdealSpec::preset("harsh").unwrap();
+        ni.seed = 100;
+        let tm = TiledMatrix::program(&[0.1; 8 * 8], 8, 8, 4, 2, ni, 1.0).unwrap();
+        let seeds: Vec<u64> = tm.tiles.iter().map(|t| t.cfg.nonideal.seed).collect();
+        let mut unique = seeds.clone();
+        unique.sort_unstable();
+        unique.dedup();
+        assert_eq!(unique.len(), seeds.len(), "{seeds:?}");
+    }
+}

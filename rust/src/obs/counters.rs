@@ -2,8 +2,9 @@
 //!
 //! Counters here measure *work done*, never wall time: FLOPs retired by
 //! the packed-matmul kernels, bytes they touched, Newton iterations spent
-//! in the fast crossbar solver, and solve invocations on either the fast
-//! or the golden MNA path. Every add lands in one process-wide
+//! in the fast crossbar solver, solve invocations on either the fast or
+//! the golden MNA path, and the crossbar-mapped network layer's per-tile
+//! MAC executions and ADC saturations. Every add lands in one process-wide
 //! [`CounterSet`] (served by `{"cmd":"metrics_prom"}`) and, when a scope
 //! is installed on the current thread, in that scope's set too.
 //!
@@ -53,6 +54,13 @@ pub struct CounterSet {
     /// Sparse factorizations that reused the recorded symbolic
     /// factorization (no graph traversal, no pivot search).
     pub sparse_symbolic_reuses: AtomicU64,
+    /// Per-tile analog MAC operations executed by the crossbar-mapped
+    /// network layer (`crate::nn`): one per (tile, input slice, sample),
+    /// whatever executor answered it.
+    pub tile_macs: AtomicU64,
+    /// ADC conversions that saturated (code clamped to the end of the
+    /// converter's range) in `crate::nn::AdcSpec::convert`.
+    pub adc_clips: AtomicU64,
 }
 
 impl CounterSet {
@@ -67,6 +75,8 @@ impl CounterSet {
             sparse_nnz: AtomicU64::new(0),
             sparse_fill_in: AtomicU64::new(0),
             sparse_symbolic_reuses: AtomicU64::new(0),
+            tile_macs: AtomicU64::new(0),
+            adc_clips: AtomicU64::new(0),
         }
     }
 
@@ -82,6 +92,8 @@ impl CounterSet {
             sparse_nnz: ld(&self.sparse_nnz),
             sparse_fill_in: ld(&self.sparse_fill_in),
             sparse_symbolic_reuses: ld(&self.sparse_symbolic_reuses),
+            tile_macs: ld(&self.tile_macs),
+            adc_clips: ld(&self.adc_clips),
         }
     }
 }
@@ -98,6 +110,8 @@ pub struct CounterSnapshot {
     pub sparse_nnz: u64,
     pub sparse_fill_in: u64,
     pub sparse_symbolic_reuses: u64,
+    pub tile_macs: u64,
+    pub adc_clips: u64,
 }
 
 impl CounterSnapshot {
@@ -115,11 +129,13 @@ impl CounterSnapshot {
             sparse_symbolic_reuses: self
                 .sparse_symbolic_reuses
                 .saturating_sub(earlier.sparse_symbolic_reuses),
+            tile_macs: self.tile_macs.saturating_sub(earlier.tile_macs),
+            adc_clips: self.adc_clips.saturating_sub(earlier.adc_clips),
         }
     }
 
     /// Stable name/value pairs (the serialization order everywhere).
-    pub fn named(&self) -> [(&'static str, u64); 9] {
+    pub fn named(&self) -> [(&'static str, u64); 11] {
         [
             ("kernel_flops", self.kernel_flops),
             ("kernel_bytes", self.kernel_bytes),
@@ -130,6 +146,8 @@ impl CounterSnapshot {
             ("sparse_nnz", self.sparse_nnz),
             ("sparse_fill_in", self.sparse_fill_in),
             ("sparse_symbolic_reuses", self.sparse_symbolic_reuses),
+            ("tile_macs", self.tile_macs),
+            ("adc_clips", self.adc_clips),
         ]
     }
 
@@ -151,6 +169,8 @@ impl CounterSnapshot {
             sparse_nnz: g("sparse_nnz"),
             sparse_fill_in: g("sparse_fill_in"),
             sparse_symbolic_reuses: g("sparse_symbolic_reuses"),
+            tile_macs: g("tile_macs"),
+            adc_clips: g("adc_clips"),
         }
     }
 }
@@ -246,6 +266,14 @@ pub fn add_sparse_symbolic_reuses(n: u64) {
     add(|c| &c.sparse_symbolic_reuses, n);
 }
 
+pub fn add_tile_macs(n: u64) {
+    add(|c| &c.tile_macs, n);
+}
+
+pub fn add_adc_clips(n: u64) {
+    add(|c| &c.adc_clips, n);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -303,6 +331,8 @@ mod tests {
             sparse_nnz: 120,
             sparse_fill_in: 14,
             sparse_symbolic_reuses: 5,
+            tile_macs: 77,
+            adc_clips: 4,
         };
         let back = CounterSnapshot::from_json(&s.to_json());
         assert_eq!(back, s);

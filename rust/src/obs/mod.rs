@@ -6,9 +6,10 @@
 //! This module is that answer, in three zero-dependency pieces:
 //!
 //! * [`counters`] — process-wide **work counters** (kernel FLOPs/bytes,
-//!   fast-solver Newton iterations, fast/golden solve counts) with
-//!   thread-scoped sinks so one pipeline run can tally exactly its own
-//!   work while other runs execute concurrently. Work counters measure
+//!   fast-solver Newton iterations, fast/golden solve counts, sparse-MNA
+//!   solves/nnz/fill-in/symbolic reuses, and the crossbar-mapped network's
+//!   tile MACs and ADC clips) with thread-scoped sinks so one pipeline run
+//!   can tally exactly its own work while other runs execute concurrently. Work counters measure
 //!   operations, never wall time, which is what lets them appear in the
 //!   byte-identical campaign summaries.
 //! * [`trace`] — RAII [`Span`]s with hierarchical names, per-span wall
@@ -248,6 +249,18 @@ mod tests {
             "{text}"
         );
         assert!(text.contains("# TYPE semulator_kernel_flops_total counter"), "{text}");
+        // Every global work counter renders as its own family — including
+        // the sparse-solver counters (PR 7) and the nn tile/ADC counters.
+        for family in [
+            "# TYPE semulator_sparse_solves_total counter",
+            "# TYPE semulator_sparse_nnz_total counter",
+            "# TYPE semulator_sparse_fill_in_total counter",
+            "# TYPE semulator_sparse_symbolic_reuses_total counter",
+            "# TYPE semulator_tile_macs_total counter",
+            "# TYPE semulator_adc_clips_total counter",
+        ] {
+            assert!(text.contains(family), "missing {family}\n{text}");
+        }
         // One TYPE declaration per family.
         let decls = text.matches("# TYPE semulator_requests_total").count();
         assert_eq!(decls, 1);

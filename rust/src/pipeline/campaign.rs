@@ -226,6 +226,11 @@ pub struct RunEval {
     /// Newton iterations across every fast solve (same provenance and
     /// invariance as [`Self::kernel_flops`]).
     pub newton_iters: Option<u64>,
+    /// Crossbar-mapped-network task accuracy from the run's `eval.json`
+    /// `"nn"` section (`None` when the spec has no `nn` stage). Seeded
+    /// and solver-deterministic, so safe inside the byte-identical
+    /// summary.
+    pub accuracy: Option<f64>,
 }
 
 /// One summary row: grid coordinates + outcome + metrics.
@@ -404,6 +409,7 @@ fn disk_row(dir: &Path, point: &SweepPoint, hash: &str, status: RunStatus) -> Re
             probe_golden_mae: probes.and_then(|p| p.get("golden_mae")).and_then(|v| v.as_f64()),
             kernel_flops: counter("kernel_flops"),
             newton_iters: counter("newton_iters"),
+            accuracy: eval.get("nn").and_then(|n| n.get("accuracy")).and_then(|v| v.as_f64()),
         }),
     })
 }
@@ -462,7 +468,7 @@ impl CampaignReport {
         }
         out.push_str(
             ",test_mse,test_mae,p_halfmv,probe_emulator_mae,probe_golden_mae,\
-             kernel_flops,newton_iters,error\n",
+             kernel_flops,newton_iters,accuracy,error\n",
         );
         for row in &self.rows {
             out.push_str(&format!("{},{},{}", row.name, row.status.tag(), row.spec_hash));
@@ -476,7 +482,7 @@ impl CampaignReport {
             let opt_u = |v: Option<u64>| v.map(|x| x.to_string()).unwrap_or_default();
             let e = row.eval.as_ref();
             out.push_str(&format!(
-                ",{},{},{},{},{},{},{}",
+                ",{},{},{},{},{},{},{},{}",
                 opt(e.map(|e| e.test_mse)),
                 opt(e.map(|e| e.test_mae)),
                 opt(e.map(|e| e.p_halfmv)),
@@ -484,6 +490,7 @@ impl CampaignReport {
                 opt(e.and_then(|e| e.probe_golden_mae)),
                 opt_u(e.and_then(|e| e.kernel_flops)),
                 opt_u(e.and_then(|e| e.newton_iters)),
+                opt(e.and_then(|e| e.accuracy)),
             ));
             out.push(',');
             if let RunStatus::Failed(err) = &row.status {
@@ -526,6 +533,9 @@ fn row_json(row: &RunRow) -> Json {
         }
         if let Some(v) = e.newton_iters {
             pairs.push(("newton_iters", Json::Num(v as f64)));
+        }
+        if let Some(v) = e.accuracy {
+            pairs.push(("accuracy", Json::Num(v)));
         }
     }
     if let RunStatus::Failed(err) = &row.status {
@@ -602,6 +612,7 @@ mod tests {
                 probe_golden_mae: None,
                 kernel_flops: Some(123456),
                 newton_iters: None,
+                accuracy: Some(0.875),
             }),
         }
     }
@@ -643,13 +654,14 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("name,status,spec_hash,data_seed,test_mse"));
-        assert!(lines[0].ends_with("probe_golden_mae,kernel_flops,newton_iters,error"));
+        assert!(lines[0].ends_with("probe_golden_mae,kernel_flops,newton_iters,accuracy,error"));
         assert!(lines[2].contains(",failed,"));
         assert!(lines[2].contains("\"boom, with \"\"quotes\"\"\""));
-        // probe_golden_mae and newton_iters are absent, kernel_flops is an
-        // exact integer cell, error is empty on a completed row.
-        assert!(lines[1].ends_with("0.2,,123456,,"), "{}", lines[1]);
+        // probe_golden_mae and newton_iters are absent, kernel_flops and
+        // accuracy are exact cells, error is empty on a completed row.
+        assert!(lines[1].ends_with("0.2,,123456,,0.875,"), "{}", lines[1]);
         assert_eq!(jrows[0].get("kernel_flops").unwrap().as_f64(), Some(123456.0));
         assert!(jrows[0].get("newton_iters").is_none());
+        assert_eq!(jrows[0].get("accuracy").unwrap().as_f64(), Some(0.875));
     }
 }

@@ -10,7 +10,8 @@
 //!   ckpt.ckpt       trained parameters
 //!   report.json     TrainReport (per-epoch history + final eval + timings)
 //!   history.csv     the Fig-4 series
-//!   eval.json       native eval, PJRT cross-check status, probe stats
+//!   eval.json       native eval, PJRT cross-check status, probe stats,
+//!                   optional crossbar-mapped-network accuracy ("nn")
 //!   timings.json    wall-clock per stage + obs work counters (see below)
 //! ```
 //!
@@ -114,6 +115,9 @@ pub struct RunSummary {
     pub pjrt_skipped: Option<String>,
     /// Probe-stage stats (`None` when `eval.probes` is 0).
     pub probe: Option<ProbeStats>,
+    /// Crossbar-mapped-network accuracy report (`None` when the spec has
+    /// no `nn` section).
+    pub nn: Option<crate::nn::NnReport>,
 }
 
 /// A declarative end-to-end run: spec in, servable run directory out.
@@ -274,6 +278,29 @@ impl Experiment {
         } else {
             None
         };
+        stages.push(("probe", ms(&t)));
+
+        // 6. Optional crossbar-mapped-network evaluation: task accuracy
+        // under this run's device scenario, through the executor the
+        // spec's `nn` section names. `emulated` serves the run's own
+        // trained regression net (the exported directory), closing the
+        // accuracy loop on the surrogate itself.
+        let t = std::time::Instant::now();
+        let nn = match &spec.nn {
+            None => None,
+            Some(nn_spec) => {
+                let nonideal = spec.nonideal.unwrap_or_default();
+                let report = if nn_spec.executor == "emulated" {
+                    let (exec, tile_rows, tile_outs) =
+                        crate::nn::build_run_dir_executor(run_dir, &opts.artifact_dir)?;
+                    crate::nn::nn_eval_with(nn_spec, &nonideal, &exec, tile_rows, tile_outs)?
+                } else {
+                    crate::nn::nn_eval(nn_spec, &nonideal)?
+                };
+                stages.push(("nn", ms(&t)));
+                Some(report)
+            }
+        };
 
         let mut eval_pairs = vec![("native", report.test.to_json())];
         match &pjrt_check {
@@ -293,10 +320,12 @@ impl Experiment {
                 ]),
             ));
         }
+        if let Some(r) = &nn {
+            eval_pairs.push(("nn", r.to_json()));
+        }
         std::fs::write(run_dir.join("eval.json"), Json::obj(eval_pairs).to_string_pretty())?;
-        stages.push(("probe", ms(&t)));
 
-        Ok(RunSummary { run_dir: run_dir.clone(), report, pjrt_check, pjrt_skipped, probe })
+        Ok(RunSummary { run_dir: run_dir.clone(), report, pjrt_check, pjrt_skipped, probe, nn })
     }
 
     /// Stand up a deployment from the exported run directory and replay

@@ -11,7 +11,9 @@
 //! * [`ExperimentSpec`] — a JSON-round-trippable description of a run:
 //!   scenario (`BlockConfig` + `NonIdealSpec`), network variant, dataset
 //!   sampling, training recipe (backend, epochs, batch, `LrSchedule`),
-//!   seeds, and eval probes. See `examples/specs/quickstart.json`.
+//!   seeds, eval probes, and an optional crossbar-mapped-network stage
+//!   ([`crate::nn::NnSpec`]) that adds a task-accuracy column. See
+//!   `examples/specs/quickstart.json` and `examples/specs/nn_quickstart.json`.
 //! * [`Experiment`] — validates a spec and [`Experiment::run`]s it:
 //!   golden datagen, guarded train/test split, training through a
 //!   pluggable `coordinator::Trainer` (`infer::NativeTrainer` by default,
@@ -20,7 +22,8 @@
 //!   artifacts exist, and a probe stage that serves the exported files.
 //! * [`CampaignSpec`] / [`Campaign`] — a *grid* of experiments: a base
 //!   spec plus [`SweepAxes`] (non-ideality scenarios, arch variants,
-//!   seeds, sample distributions, training-recipe knobs) expands into the
+//!   seeds, sample distributions, training-recipe knobs, datagen solver
+//!   paths, nn ADC bits and tile heights) expands into the
 //!   cross-product of named specs, [`Campaign::run`] executes them across
 //!   worker threads with per-run failure isolation and spec-hash resume,
 //!   and the aggregated `summary.json` / `summary.csv` robustness matrix

@@ -12,6 +12,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::{LrSchedule, TrainConfig};
 use crate::datagen::{GenConfig, SampleDist};
 use crate::infer::BackendKind;
+use crate::nn::NnSpec;
 use crate::repro::block_for;
 use crate::spice::SolverChoice;
 use crate::util::{Json, json_parse};
@@ -112,6 +113,11 @@ pub struct ExperimentSpec {
     pub data: DataSpec,
     pub train: TrainSpec,
     pub eval: EvalSpec,
+    /// Optional crossbar-mapped-network evaluation (see [`NnSpec`]): when
+    /// present, the eval stage also trains a small task MLP, programs it
+    /// onto tiles under this spec's `nonideal` scenario, and records the
+    /// task accuracy in `eval.json` (and as a campaign summary column).
+    pub nn: Option<NnSpec>,
 }
 
 impl ExperimentSpec {
@@ -125,6 +131,7 @@ impl ExperimentSpec {
             data: DataSpec::default(),
             train: TrainSpec::default(),
             eval: EvalSpec::default(),
+            nn: None,
         }
     }
 
@@ -204,6 +211,9 @@ impl ExperimentSpec {
                 self.name
             );
         }
+        if let Some(nn) = &self.nn {
+            nn.validate().map_err(anyhow::Error::msg)?;
+        }
         let block = self.resolved_block()?;
         block.validate().map_err(anyhow::Error::msg)?;
         Ok(())
@@ -255,6 +265,11 @@ impl ExperimentSpec {
             ]),
         ));
         pairs.push(("eval", Json::obj(vec![("probes", Json::Num(self.eval.probes as f64))])));
+        // Emitted only when present so pre-existing specs keep their
+        // content hash (the campaign resume token).
+        if let Some(nn) = &self.nn {
+            pairs.push(("nn", nn.to_json()));
+        }
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
@@ -340,6 +355,9 @@ impl ExperimentSpec {
         }
         if let Some(eval) = j.get("eval") {
             spec.eval.probes = usize_in(eval, "probes", spec.eval.probes)?;
+        }
+        if let Some(nn) = j.get("nn") {
+            spec.nn = Some(NnSpec::from_json(nn).map_err(anyhow::Error::msg)?);
         }
         spec.validate()?;
         Ok(spec)
@@ -450,6 +468,32 @@ mod tests {
         block.cell.g_max = 2e-4;
         spec.block = Some(block);
         spec.validate().unwrap();
+    }
+
+    #[test]
+    fn nn_section_roundtrips_and_stays_out_of_plain_specs() {
+        // No nn section: the key stays out of the JSON so pre-existing
+        // specs keep their content hash.
+        let plain = ExperimentSpec::new("exp", "small");
+        assert!(!plain.to_json().to_string().contains("\"nn\""));
+        // With one: full round trip, partial keys default.
+        let mut spec = ExperimentSpec::new("exp", "small");
+        spec.nn = Some(NnSpec { executor: "golden".into(), adc_bits: 6, ..Default::default() });
+        let back = ExperimentSpec::from_str(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back, spec);
+        let partial = ExperimentSpec::from_str(
+            r#"{"name": "q", "variant": "small", "nn": {"executor": "ideal"}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            partial.nn,
+            Some(NnSpec { executor: "ideal".into(), ..Default::default() })
+        );
+        // A bad nn section fails spec validation.
+        assert!(ExperimentSpec::from_str(
+            r#"{"name": "q", "variant": "small", "nn": {"executor": "spice"}}"#
+        )
+        .is_err());
     }
 
     #[test]

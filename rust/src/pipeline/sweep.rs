@@ -54,6 +54,8 @@ enum AxisValue {
     Batch(usize),
     LrBase(f64),
     Golden(bool),
+    AdcBits(u32),
+    Tile(usize),
 }
 
 impl AxisValue {
@@ -69,6 +71,8 @@ impl AxisValue {
             AxisValue::Batch(b) => format!("b{b}"),
             AxisValue::LrBase(lr) => format!("lr{lr}"),
             AxisValue::Golden(g) => (if *g { "gold" } else { "fast" }).to_string(),
+            AxisValue::AdcBits(b) => format!("adc{b}"),
+            AxisValue::Tile(r) => format!("tl{r}"),
         }
     }
 
@@ -92,6 +96,15 @@ impl AxisValue {
             AxisValue::Batch(b) => spec.train.batch = *b,
             AxisValue::LrBase(lr) => spec.train.lr.base = *lr,
             AxisValue::Golden(g) => spec.data.golden = *g,
+            // The nn axes materialize a default nn stage when the base
+            // spec lacks one — sweeping ADC bits implies wanting the
+            // accuracy column.
+            AxisValue::AdcBits(b) => {
+                spec.nn.get_or_insert_with(crate::nn::NnSpec::default).adc_bits = *b
+            }
+            AxisValue::Tile(r) => {
+                spec.nn.get_or_insert_with(crate::nn::NnSpec::default).tile_rows = *r
+            }
         }
     }
 }
@@ -125,12 +138,20 @@ pub struct SweepAxes {
     /// `[true, false]` axis measures how much emulator quality the fast
     /// solver's structure assumptions cost across the rest of the grid.
     pub golden: Vec<bool>,
+    /// Crossbar-mapped-network ADC resolutions (tag `adc{b}`; `0` = ideal
+    /// readout). Applies to the spec's `nn` section, materializing a
+    /// default one when absent — the axis is only meaningful with the
+    /// accuracy column.
+    pub adc_bits: Vec<u32>,
+    /// Crossbar-mapped-network tile heights (wordlines per tile, tag
+    /// `tl{r}`); same `nn`-section semantics as [`Self::adc_bits`].
+    pub tile: Vec<usize>,
 }
 
 /// Canonical axis order; also the summary's axis-column order.
 pub const AXIS_NAMES: &[&str] = &[
     "nonideal", "arch", "data_seed", "train_seed", "dist", "n_samples", "epochs", "batch",
-    "lr_base", "golden",
+    "lr_base", "golden", "adc_bits", "tile",
 ];
 
 /// One expanded grid point: the concrete spec plus the `(axis, tag)`
@@ -184,6 +205,8 @@ impl SweepAxes {
             self.batch.iter().map(|&b| AxisValue::Batch(b)).collect(),
             self.lr_base.iter().map(|&l| AxisValue::LrBase(l)).collect(),
             self.golden.iter().map(|&g| AxisValue::Golden(g)).collect(),
+            self.adc_bits.iter().map(|&b| AxisValue::AdcBits(b)).collect(),
+            self.tile.iter().map(|&r| AxisValue::Tile(r)).collect(),
         ]
     }
 
@@ -317,6 +340,15 @@ impl SweepAxes {
         if !self.golden.is_empty() {
             pairs.push(("golden", Json::Arr(self.golden.iter().map(|&g| Json::Bool(g)).collect())));
         }
+        if !self.adc_bits.is_empty() {
+            pairs.push((
+                "adc_bits",
+                Json::Arr(self.adc_bits.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ));
+        }
+        if !self.tile.is_empty() {
+            pairs.push(("tile", Json::arr_usize(&self.tile)));
+        }
         Json::obj(pairs)
     }
 
@@ -408,6 +440,8 @@ impl SweepAxes {
                 .ok_or_else(|| anyhow::anyhow!("sweep: 'golden' entries must be booleans"))?;
             axes.golden.push(g);
         }
+        axes.adc_bits = usizes(j, "adc_bits")?.into_iter().map(|b| b as u32).collect();
+        axes.tile = usizes(j, "tile")?;
         Ok(axes)
     }
 }
@@ -483,6 +517,30 @@ mod tests {
     }
 
     #[test]
+    fn nn_axes_tag_and_materialize_the_nn_section() {
+        let mut axes = SweepAxes::default();
+        axes.adc_bits = vec![0, 6];
+        axes.tile = vec![8, 16];
+        let points = axes.expand(&base()).unwrap();
+        let names: Vec<&str> = points.iter().map(|p| p.spec.name.as_str()).collect();
+        assert_eq!(names, vec!["b-adc0-tl8", "b-adc0-tl16", "b-adc6-tl8", "b-adc6-tl16"]);
+        // The base spec had no nn section; the axes materialize a default
+        // one and set only their knob on it.
+        let nn = points[2].spec.nn.as_ref().unwrap();
+        assert_eq!(nn.adc_bits, 6);
+        assert_eq!(nn.tile_rows, 8);
+        assert_eq!(nn.executor, crate::nn::NnSpec::default().executor);
+        // A base spec with an explicit nn section keeps its other knobs.
+        let mut with_nn = base();
+        with_nn.nn =
+            Some(crate::nn::NnSpec { executor: "ideal".into(), ..Default::default() });
+        let points = axes.expand(&with_nn).unwrap();
+        let nn = points[1].spec.nn.as_ref().unwrap();
+        assert_eq!(nn.executor, "ideal");
+        assert_eq!(nn.tile_rows, 16);
+    }
+
+    #[test]
     fn name_collisions_and_empty_grid_rejected() {
         let axes = SweepAxes::default();
         assert!(axes.expand(&base()).is_err());
@@ -518,6 +576,8 @@ mod tests {
         axes.batch = vec![8, 16];
         axes.lr_base = vec![1e-3, 5e-3];
         axes.golden = vec![true, false];
+        axes.adc_bits = vec![0, 4, 8];
+        axes.tile = vec![8, 32];
         let back = SweepAxes::from_json(&axes.to_json()).unwrap();
         assert_eq!(back, axes);
         // Preset entries serialize compactly, custom ones in full form.

@@ -149,7 +149,7 @@ fn campaign_grid_aggregates_resumes_and_is_worker_invariant() {
     let first_csv = std::fs::read_to_string(cdir.join("summary.csv")).unwrap();
     assert_eq!(first_csv.lines().count(), 5, "header + one row per run");
     let header = first_csv.lines().next().unwrap();
-    assert!(header.ends_with("kernel_flops,newton_iters,error"), "csv header: {header}");
+    assert!(header.ends_with("kernel_flops,newton_iters,accuracy,error"), "csv header: {header}");
 
     // Resume: corrupt each run's data.bin as a sentinel; a resumed
     // campaign must touch none of them (rows are re-read from eval.json).

@@ -1,0 +1,233 @@
+//! End-to-end guarantees of the crossbar-mapped network subsystem: the
+//! `Ideal` executor reproduces the packed f32 inference kernel to 1e-12,
+//! fast and golden solvers agree on a non-ideal 16×16 tile within Newton
+//! tolerance, the campaign `accuracy` column is byte-identical across
+//! worker counts, the checked-in quickstart spec stays seconds-scale,
+//! and the calibrated golden executor tracks the exact MAC — all
+//! artifact-free.
+
+use std::path::{Path, PathBuf};
+
+use semulator::infer::kernels;
+use semulator::nn::{AdcSpec, Executor, LayerOpts, NnSpec, TiledMatrix, XbarLinear};
+use semulator::pipeline::{Campaign, CampaignOptions, CampaignSpec, ExperimentSpec, RunStatus};
+use semulator::spice::SolverChoice;
+use semulator::util::{json_parse, Rng};
+use semulator::xbar::{AnalogBlock, NonIdealSpec};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("semnn_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// ISSUE acceptance: an ideal-executor `XbarLinear` is bit-for-bit the
+/// plain kernel matmul (to 1e-12). Dyadic weights and inputs are exact
+/// in both f32 and f64, so any disagreement is a wiring bug (tile
+/// offsets, padding, partial-sum order), not rounding.
+#[test]
+fn ideal_executor_matches_kernel_matmul_to_1e12() {
+    let (n_out, n_in) = (5, 12);
+    let mut rng = Rng::seed_from(21);
+    // Multiples of 1/8 in [-1, 1] (weights) and [0, 1] (inputs): every
+    // product and partial sum is a small dyadic rational.
+    let w: Vec<f64> = (0..n_out * n_in).map(|_| (rng.below(17) as f64 - 8.0) / 8.0).collect();
+    let x: Vec<f64> = (0..n_in).map(|_| rng.below(9) as f64 / 8.0).collect();
+    let bias: Vec<f64> = (0..n_out).map(|_| (rng.below(9) as f64 - 4.0) / 4.0).collect();
+    let opts = LayerOpts {
+        tile_rows: 4, // 3 row chunks x 3 out chunks: padding on both edges
+        tile_outs: 2,
+        w_max: 1.0,
+        input_bits: 0,
+        adc: AdcSpec { bits: 0, range: 8.0 },
+        in_scale: 1.0,
+        nonideal: NonIdealSpec::default(),
+    };
+    let layer = XbarLinear::program(&w, &bias, n_out, n_in, &opts).unwrap();
+    let backend = Executor::Ideal.prepare(&layer.tiled).unwrap();
+    let y = layer.forward(&backend, &x).unwrap();
+
+    // The packed kernel: x as a 1-row activation matrix, w pre-transposed
+    // into `bt` layout (n, k) — which is exactly row-major (n_out, n_in).
+    let a: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+    let bt: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+    let mut out = vec![0.0f32; n_out];
+    kernels::matmul_nt(&a, &bt, 1, n_out, n_in, &mut out);
+    for j in 0..n_out {
+        let want = out[j] as f64 + bias[j];
+        assert!((y[j] - want).abs() <= 1e-12, "out {j}: tiled {} vs kernel {want}", y[j]);
+    }
+}
+
+/// ISSUE acceptance: golden-vs-fast tile parity within Newton tolerance
+/// on a 16×16 non-ideal tile — compared at the raw solver level (the
+/// same `CellInputs` both executors hand their solvers), where the
+/// tolerance is the one the fast-solver equivalence proptests pin.
+#[test]
+fn golden_and_fast_agree_on_a_16x16_nonideal_tile() {
+    let mut rng = Rng::seed_from(88);
+    let (n_out, n_in) = (8, 16);
+    let w: Vec<f64> = (0..n_out * n_in).map(|_| rng.range(-1.0, 1.0)).collect();
+    let mut ni = NonIdealSpec::preset("mild").unwrap();
+    ni.seed = 4;
+    // 16 wordlines x 8 differential outputs = a true 16x16 crossbar.
+    let tm = TiledMatrix::program(&w, n_out, n_in, 16, 8, ni, 1.0).unwrap();
+    assert_eq!(tm.tiles.len(), 1);
+    let tile = &tm.tiles[0];
+    assert_eq!((tile.cfg.rows, tile.cfg.cols), (16, 16));
+    let drive: Vec<f64> = (0..n_in).map(|_| rng.uniform()).collect();
+    let x = tile.cell_inputs(&drive);
+    let block = AnalogBlock::new(tile.cfg.clone()).unwrap();
+    let fast = block.simulate(&x);
+    for choice in [SolverChoice::Dense, SolverChoice::Sparse] {
+        let golden = block.simulate_golden_with(&x, choice).unwrap();
+        assert_eq!(golden.len(), fast.len());
+        for (m, (f, g)) in fast.iter().zip(&golden).enumerate() {
+            assert!(
+                (f - g).abs() < 2e-5,
+                "{choice} out {m}: fast {f} vs golden {g} (|diff| {:.2e})",
+                (f - g).abs()
+            );
+        }
+    }
+}
+
+/// The calibrated golden executor tracks the exact MAC on an ideal
+/// device: same sign, same ballpark — the release-mode CI parity smoke.
+#[test]
+fn calibrated_golden_executor_tracks_ideal() {
+    let w = vec![1.0, -0.5, 0.25, 0.75];
+    let opts = LayerOpts {
+        tile_rows: 2,
+        tile_outs: 2,
+        w_max: 1.0,
+        input_bits: 1,
+        adc: AdcSpec { bits: 0, range: 8.0 },
+        in_scale: 1.0,
+        nonideal: NonIdealSpec::default(),
+    };
+    let layer = XbarLinear::program(&w, &[0.0; 2], 2, 2, &opts).unwrap();
+    let ideal = Executor::Ideal.prepare(&layer.tiled).unwrap();
+    let golden = Executor::Golden(SolverChoice::Auto).prepare(&layer.tiled).unwrap();
+    let x = vec![1.0, 1.0];
+    let yi = layer.forward(&ideal, &x).unwrap();
+    let yg = layer.forward(&golden, &x).unwrap();
+    for j in 0..2 {
+        assert!(
+            (yi[j] - yg[j]).abs() < 0.35 * (1.0 + yi[j].abs()),
+            "out {j}: ideal {} vs golden {}",
+            yi[j],
+            yg[j]
+        );
+        assert_eq!(yi[j].signum(), yg[j].signum(), "out {j} sign");
+    }
+}
+
+/// A seconds-scale base spec with an nn section (ideal executor: exact
+/// tile math, no solver cost — the campaign axes still bite through the
+/// ADC and the device scenario).
+fn nn_base(name: &str) -> ExperimentSpec {
+    let mut base = ExperimentSpec::new(name, "small");
+    base.data.n_samples = 48;
+    base.data.test_frac = 0.25;
+    base.train.epochs = 2;
+    base.train.batch = 16;
+    base.train.lr = semulator::coordinator::LrSchedule::paper_scaled(5e-3, 2);
+    base.train.eval_every = 1;
+    base.eval.probes = 2;
+    base.nn = Some(NnSpec {
+        executor: "ideal".into(),
+        hidden: 6,
+        n_train: 48,
+        n_test: 16,
+        epochs: 6,
+        adc_range: 4.0,
+        ..NnSpec::default()
+    });
+    base
+}
+
+/// ISSUE acceptance: a campaign sweeping non-ideality presets x ADC bits
+/// lands a per-run `accuracy` column in summary.json / summary.csv that
+/// is byte-identical across worker counts.
+#[test]
+fn campaign_accuracy_column_is_worker_invariant() {
+    let root = tmp_dir("acc");
+    let spec = || {
+        let mut spec = CampaignSpec::new("nngrid", nn_base("n"));
+        spec.axes.nonideal = vec![
+            ("ideal".to_string(), NonIdealSpec::ideal()),
+            ("mild".to_string(), NonIdealSpec { seed: 3, ..NonIdealSpec::preset("mild").unwrap() }),
+        ];
+        spec.axes.adc_bits = vec![0, 6];
+        spec
+    };
+
+    let c2 = root.join("w2");
+    let report = Campaign::new(spec())
+        .unwrap()
+        .run(&CampaignOptions::new(&c2).artifact_dir(root.join("na2")).workers(2))
+        .unwrap();
+    assert_eq!(report.rows.len(), 4);
+    assert_eq!(report.n_failed, 0);
+    let names: Vec<&str> = report.rows.iter().map(|r| r.name.as_str()).collect();
+    assert_eq!(names, vec!["n-ideal-adc0", "n-ideal-adc6", "n-mild-adc0", "n-mild-adc6"]);
+    assert!(report.rows.iter().all(|r| r.status == RunStatus::Completed));
+
+    // Every summary row carries a real accuracy in [0, 1], and the csv
+    // places it in its named column.
+    let summary_path = c2.join("summary.json");
+    let summary = json_parse(&std::fs::read_to_string(&summary_path).unwrap()).unwrap();
+    let rows = summary.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 4);
+    for row in rows {
+        let name = row.get("name").unwrap().as_str().unwrap();
+        let acc = row
+            .get("accuracy")
+            .unwrap_or_else(|| panic!("{name}: summary row missing accuracy"))
+            .as_f64()
+            .unwrap();
+        assert!((0.0..=1.0).contains(&acc), "{name}: accuracy {acc}");
+    }
+    let csv = std::fs::read_to_string(c2.join("summary.csv")).unwrap();
+    let header: Vec<&str> = csv.lines().next().unwrap().split(',').collect();
+    let acc_col = header.iter().position(|h| *h == "accuracy").expect("accuracy csv column");
+    for line in csv.lines().skip(1) {
+        let cells: Vec<&str> = line.split(',').collect();
+        let acc: f64 = cells[acc_col].parse().unwrap_or_else(|e| {
+            panic!("accuracy cell '{}' in {line}: {e}", cells[acc_col])
+        });
+        assert!((0.0..=1.0).contains(&acc), "{line}");
+    }
+
+    // Byte-identical summaries from a fresh single-worker campaign.
+    let c1 = root.join("w1");
+    Campaign::new(spec())
+        .unwrap()
+        .run(&CampaignOptions::new(&c1).artifact_dir(root.join("na1")).workers(1))
+        .unwrap();
+    for file in ["summary.json", "summary.csv"] {
+        assert_eq!(
+            std::fs::read_to_string(c1.join(file)).unwrap(),
+            std::fs::read_to_string(c2.join(file)).unwrap(),
+            "{file} differs between 1 and 2 workers"
+        );
+    }
+}
+
+/// The checked-in quickstart spec parses, carries an nn section, stays
+/// seconds-scale, and round-trips through the spec serializer.
+#[test]
+fn nn_quickstart_spec_parses_and_stays_seconds_scale() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/specs/nn_quickstart.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    let spec = ExperimentSpec::from_str(&text).unwrap();
+    let nn = spec.nn.clone().expect("nn_quickstart.json must carry an nn section");
+    nn.validate().unwrap();
+    assert!(spec.data.n_samples <= 512, "quickstart grew: {} samples", spec.data.n_samples);
+    assert!(spec.train.epochs <= 16, "quickstart grew: {} epochs", spec.train.epochs);
+    assert!(nn.n_train <= 256 && nn.n_test <= 64, "nn task grew: {}/{}", nn.n_train, nn.n_test);
+    assert!(nn.epochs <= 64, "nn training grew: {} epochs", nn.epochs);
+    let back = ExperimentSpec::from_str(&spec.to_json().to_string_pretty()).unwrap();
+    assert_eq!(back, spec, "nn spec round-trip");
+}

@@ -439,6 +439,43 @@ fn prop_native_trainer_grads_match_fd_builtin_variants() {
     }
 }
 
+/// Property: the differential-pair weight mapping round-trips every
+/// weight to its window-clipped effective value, and both encoded
+/// conductances stay inside the programming window, for random tile
+/// geometries and full-scale choices.
+#[test]
+fn prop_nn_mapping_roundtrip_within_clip() {
+    use semulator::nn::{auto_w_max, WeightMapping};
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from(14_000 + case);
+        let rows = 1 + rng.below(32);
+        let outs = 1 + rng.below(8);
+        let cfg = BlockConfig::with_dims(1, rows, 2 * outs);
+        let w: Vec<f64> = (0..rows * outs).map(|_| rng.range(-3.0, 3.0)).collect();
+        let w_max =
+            if rng.uniform() < 0.5 { rng.range(0.5, 2.5) } else { auto_w_max(&w) };
+        let map = WeightMapping::for_block(&cfg, w_max).unwrap();
+        for (k, &wi) in w.iter().enumerate() {
+            let (gp, gm) = map.encode(wi);
+            for g in [gp, gm] {
+                assert!(
+                    g >= cfg.cell.g_min && g <= cfg.cell.g_max,
+                    "case {case} w[{k}]={wi}: conductance {g} escaped [{}, {}]",
+                    cfg.cell.g_min,
+                    cfg.cell.g_max
+                );
+            }
+            let eff = map.effective(wi);
+            assert!(eff.abs() <= w_max, "case {case} w[{k}]: |{eff}| > {w_max}");
+            let back = map.decode(gp, gm);
+            assert!(
+                (back - eff).abs() <= 1e-12 * (1.0 + eff.abs()),
+                "case {case} w[{k}]={wi}: decoded {back} vs effective {eff}"
+            );
+        }
+    }
+}
+
 /// Property: normalized features are within [0, 1] for any sampler.
 #[test]
 fn prop_normalization_bounds() {

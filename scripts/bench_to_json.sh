@@ -25,11 +25,15 @@ trap 'rm -rf "$tmp"' EXIT
 # work (sparse_nnz + sparse_fill_in) in `flops`, so a nonzero value in the
 # baseline proves the sparse path ran.
 (cd rust && cargo bench --bench bench_golden_solve -- --json "$tmp/golden.jsonl")
+# Crossbar-mapped network lanes: `flops` carries the obs-counted tile-MAC
+# executions of one forward pass (deterministic per lane).
+(cd rust && cargo bench --bench bench_nn_infer -- --json "$tmp/nn.jsonl")
 
 {
   printf '{\n  "generated_by": "scripts/bench_to_json.sh",\n'
   printf '  "kind": "semulator-bench-baseline",\n  "rows": [\n'
-  cat "$tmp/infer.jsonl" "$tmp/train.jsonl" "$tmp/golden.jsonl" | sed 's/^/    /; $!s/$/,/'
+  cat "$tmp/infer.jsonl" "$tmp/train.jsonl" "$tmp/golden.jsonl" "$tmp/nn.jsonl" \
+    | sed 's/^/    /; $!s/$/,/'
   printf '  ]\n}\n'
 } > "$out"
-echo "wrote $out ($(cat "$tmp/infer.jsonl" "$tmp/train.jsonl" "$tmp/golden.jsonl" | wc -l) rows)"
+echo "wrote $out ($(cat "$tmp/infer.jsonl" "$tmp/train.jsonl" "$tmp/golden.jsonl" "$tmp/nn.jsonl" | wc -l) rows)"
