@@ -114,5 +114,23 @@ fn main() {
         stats.mean.as_secs_f64() * 1e3
     );
 
+    // Same transient with per-step energy/settling accounting riding the
+    // accepted-step loop — the power subsystem's perf gate is that this
+    // lane stays within 5% of the plain golden solve above.
+    let lane_p = "block16x16_irdrop/golden_sparse_power";
+    let stats_p = b
+        .bench(lane_p, || block.simulate_golden_power(&x, SolverChoice::Sparse).unwrap())
+        .clone();
+    let work_p =
+        sparse_work_of(|| drop(block.simulate_golden_power(&x, SolverChoice::Sparse).unwrap()));
+    assert!(work_p > 0, "power-accounted golden transient must stay on the sparse backend");
+    jsonl.row(lane_p, 1, stats_p.mean, work_p);
+    let overhead = stats_p.mean.as_secs_f64() / stats.mean.as_secs_f64() - 1.0;
+    println!(
+        "  -> 16x16 IR-drop block golden+power: {:.2} ms/sample ({:+.1}% energy-accounting overhead)",
+        stats_p.mean.as_secs_f64() * 1e3,
+        overhead * 100.0
+    );
+
     jsonl.finish().expect("write --json output");
 }

@@ -4,8 +4,8 @@
 //!   loop with the paper's LR-halving schedule): [`PjrtTrainer`] drives
 //!   the AOT train-step through PJRT, `infer::NativeTrainer` runs the
 //!   artifact-free backward passes. Training runs should be driven
-//!   through `pipeline::Experiment`; calling [`trainer::train`] directly
-//!   is a legacy surface.
+//!   through `pipeline::Experiment`; the free `trainer::train` is
+//!   `#[deprecated]` and slated for removal.
 //! * [`batcher`] — dynamic batching of variant-addressed inference
 //!   requests onto a pluggable emulator backend (native multi-checkpoint
 //!   registry by default; PJRT artifacts opt-in).
@@ -33,6 +33,10 @@ pub use metrics::{LatencyHistogram, Metrics};
 pub use router::{Policy, Route, RouteResult, Router};
 pub use server::Server;
 pub use trainer::{
-    evaluate, evaluate_native, evaluate_state, train, trainer_for, EpochLog, EvalStats, LrSchedule,
+    evaluate, evaluate_native, evaluate_state, trainer_for, EpochLog, EvalStats, LrSchedule,
     PjrtTrainer, TrainConfig, TrainReport, Trainer,
 };
+// Deprecated legacy surface, re-exported for out-of-tree harnesses until
+// its removal release.
+#[allow(deprecated)]
+pub use trainer::train;

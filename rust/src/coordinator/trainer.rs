@@ -101,17 +101,27 @@ pub struct EvalStats {
     pub mse: f64,
     /// Fraction of errors with |err| < 0.5e-3 V (Thm 4.1 with s = 3).
     pub p_halfmv: f64,
+    /// Per-output-column MSE (length = outputs; empty when not computed,
+    /// e.g. the PJRT eval artifact path). For a power-enabled run the last
+    /// two entries are the energy and t_settle head errors.
+    pub head_mse: Vec<f64>,
 }
 
 impl EvalStats {
     /// Serde-free JSON via `util::json`, like the rest of the crate.
+    /// `head_mse` is emitted only for multi-output evals so single-head
+    /// reports keep their established shape.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("n", Json::Num(self.n as f64)),
             ("mae", Json::Num(self.mae)),
             ("mse", Json::Num(self.mse)),
             ("p_halfmv", Json::Num(self.p_halfmv)),
-        ])
+        ];
+        if self.head_mse.len() > 1 {
+            pairs.push(("head_mse", Json::Arr(self.head_mse.iter().map(|&v| Json::Num(v)).collect())));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -212,7 +222,7 @@ impl Trainer for PjrtTrainer<'_> {
         test_ds: &Dataset,
         progress: &mut dyn FnMut(&EpochLog),
     ) -> Result<(ModelState, TrainReport)> {
-        train(self.store, cfg, train_ds, test_ds, progress)
+        train_pjrt(self.store, cfg, train_ds, test_ds, progress)
     }
 }
 
@@ -242,11 +252,26 @@ pub fn trainer_for<'a>(
 /// Train SEMULATOR on `train_ds` through the PJRT train-step artifact,
 /// evaluating on `test_ds`.
 ///
-/// Deprecated surface: prefer `pipeline::Experiment::run` (declarative,
-/// exports a run directory) or the [`Trainer`] trait ([`PjrtTrainer`] /
-/// `infer::NativeTrainer`) when embedding a training loop; this free
-/// function remains for harnesses and the repro entrypoints.
+/// Deprecated: prefer `pipeline::Experiment::run` (declarative, exports a
+/// run directory) or the [`Trainer`] trait ([`PjrtTrainer`] /
+/// `infer::NativeTrainer`) when embedding a training loop. This wrapper
+/// is kept one release for out-of-tree harnesses and will be removed.
+#[deprecated(
+    note = "use pipeline::Experiment::run, or PjrtTrainer through the Trainer trait"
+)]
 pub fn train(
+    store: &ArtifactStore,
+    cfg: &TrainConfig,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    progress: impl FnMut(&EpochLog),
+) -> Result<(ModelState, TrainReport)> {
+    train_pjrt(store, cfg, train_ds, test_ds, progress)
+}
+
+/// The PJRT epoch/minibatch loop behind [`PjrtTrainer`] (and the
+/// deprecated free [`train`]).
+fn train_pjrt(
     store: &ArtifactStore,
     cfg: &TrainConfig,
     train_ds: &Dataset,
@@ -360,6 +385,7 @@ pub fn evaluate(
     let mut yb = Vec::new();
     let mut abs_sum = 0.0f64;
     let mut sq_sum = 0.0f64;
+    let mut sq_cols = vec![0.0f64; meta.outputs];
     let mut n_half = 0usize;
     let mut count = 0usize;
     let idx_all: Vec<usize> = (0..ds.n).collect();
@@ -378,17 +404,20 @@ pub fn evaluate(
         for k in 0..valid {
             abs_sum += abs[k] as f64;
             sq_sum += sq[k] as f64;
+            sq_cols[k % meta.outputs] += sq[k] as f64;
             if (abs[k] as f64) < 0.5e-3 {
                 n_half += 1;
             }
         }
         count += valid;
     }
+    let rows = (count / meta.outputs.max(1)).max(1) as f64;
     Ok(EvalStats {
         n: count,
         mae: abs_sum / count.max(1) as f64,
         mse: sq_sum / count.max(1) as f64,
         p_halfmv: n_half as f64 / count.max(1) as f64,
+        head_mse: sq_cols.iter().map(|s| s / rows).collect(),
     })
 }
 
@@ -411,6 +440,7 @@ pub fn evaluate_native(meta: &VariantMeta, state: &ModelState, ds: &Dataset) -> 
     const CHUNK: usize = 1024;
     let mut abs_sum = 0.0f64;
     let mut sq_sum = 0.0f64;
+    let mut sq_cols = vec![0.0f64; ds.o];
     let mut n_half = 0usize;
     let mut count = 0usize;
     let mut row = 0usize;
@@ -418,10 +448,11 @@ pub fn evaluate_native(meta: &VariantMeta, state: &ModelState, ds: &Dataset) -> 
         let take = CHUNK.min(ds.n - row);
         let preds = engine.forward(&ds.x[row * ds.d..(row + take) * ds.d])?;
         let targets = &ds.y[row * ds.o..(row + take) * ds.o];
-        for (p, t) in preds.iter().zip(targets) {
+        for (k, (p, t)) in preds.iter().zip(targets).enumerate() {
             let e = (*p - *t).abs() as f64;
             abs_sum += e;
             sq_sum += e * e;
+            sq_cols[k % ds.o] += e * e;
             if e < 0.5e-3 {
                 n_half += 1;
             }
@@ -429,11 +460,13 @@ pub fn evaluate_native(meta: &VariantMeta, state: &ModelState, ds: &Dataset) -> 
         count += take * ds.o;
         row += take;
     }
+    let rows = (count / ds.o.max(1)).max(1) as f64;
     Ok(EvalStats {
         n: count,
         mae: abs_sum / count.max(1) as f64,
         mse: sq_sum / count.max(1) as f64,
         p_halfmv: n_half as f64 / count.max(1) as f64,
+        head_mse: sq_cols.iter().map(|s| s / rows).collect(),
     })
 }
 
@@ -504,7 +537,7 @@ mod tests {
         let r = TrainReport {
             history: vec![EpochLog { epoch: 0, lr: 1e-3, train_loss: 0.5, test_loss: Some(0.6) }],
             final_train_loss: 0.5,
-            test: EvalStats { n: 1, mae: 0.1, mse: 0.01, p_halfmv: 0.0 },
+            test: EvalStats { n: 1, mae: 0.1, mse: 0.01, p_halfmv: 0.0, head_mse: vec![] },
             wall_seconds: 1.0,
             steps: 10,
         };
@@ -521,7 +554,7 @@ mod tests {
                 EpochLog { epoch: 1, lr: 5e-4, train_loss: 0.25, test_loss: Some(0.3) },
             ],
             final_train_loss: 0.25,
-            test: EvalStats { n: 4, mae: 0.1, mse: 0.01, p_halfmv: 0.75 },
+            test: EvalStats { n: 4, mae: 0.1, mse: 0.01, p_halfmv: 0.75, head_mse: vec![0.02, 0.005] },
             wall_seconds: 2.5,
             steps: 20,
         };
@@ -535,5 +568,12 @@ mod tests {
         let test = j.get("test").unwrap();
         assert_eq!(test.get("n").unwrap().as_usize(), Some(4));
         assert_eq!(test.get("p_halfmv").unwrap().as_f64(), Some(0.75));
+        // Multi-output stats carry per-head MSE...
+        let heads = test.get("head_mse").unwrap().as_arr().unwrap();
+        assert_eq!(heads.len(), 2);
+        assert_eq!(heads[1].as_f64(), Some(0.005));
+        // ...while single-head (or uncomputed) stats keep the old shape.
+        let single = EvalStats { n: 1, mae: 0.1, mse: 0.01, p_halfmv: 0.0, head_mse: vec![0.01] };
+        assert!(single.to_json().get("head_mse").is_none());
     }
 }

@@ -33,6 +33,14 @@ pub struct GenConfig {
     /// Linear-backend override for the golden path (ignored when
     /// `golden` is false). `Auto` picks by system size.
     pub solver: SolverChoice,
+    /// Append per-sample energy and settling-time labels after the MAC
+    /// outputs (dataset `o` becomes `n_mac + 2`). The golden path
+    /// integrates them from the transient
+    /// ([`AnalogBlock::simulate_golden_power`]); the fast path uses the
+    /// closed-form estimate. Labels are normalized by
+    /// [`crate::power::label_scales`] so they train on the same footing as
+    /// the volt-scale MAC columns; the scales land in `meta.json`.
+    pub power: bool,
 }
 
 impl GenConfig {
@@ -46,6 +54,7 @@ impl GenConfig {
             provenance: Vec::new(),
             golden: false,
             solver: SolverChoice::Auto,
+            power: false,
         }
     }
 
@@ -70,24 +79,40 @@ pub fn generate(cfg: &GenConfig) -> Dataset {
     sp.counter("samples", cfg.n_samples as u64);
     let block = AnalogBlock::new(cfg.block.clone()).expect("invalid block config");
     let d = cfg.block.n_features();
-    let o = cfg.block.n_mac();
+    let o = cfg.block.n_mac() + if cfg.power { crate::power::POWER_HEADS } else { 0 };
+    let (e_scale, t_scale) = crate::power::label_scales(&cfg.block);
     // Pre-derive one RNG seed per sample so results are independent of the
     // worker count and chunking.
     let mut root = Rng::seed_from(cfg.seed);
     let seeds: Vec<u64> = (0..cfg.n_samples).map(|_| root.next_u64()).collect();
 
     let simulate = |x: &crate::xbar::CellInputs| -> Vec<f64> {
-        if cfg.golden {
+        let mut y = if cfg.golden {
             // A golden solve fails only on a singular/non-convergent
             // netlist, which for a validated block config is a bug, not
             // an input-dependent condition — so panicking (and poisoning
             // the worker join) beats silently emitting garbage rows.
+            if cfg.power {
+                let (outs, rep) = block
+                    .simulate_golden_power(x, cfg.solver)
+                    .unwrap_or_else(|e| panic!("golden datagen solve failed: {e}"));
+                let mut outs = outs;
+                outs.push(rep.energy / e_scale);
+                outs.push(rep.t_settle / t_scale);
+                return outs;
+            }
             block
                 .simulate_golden_with(x, cfg.solver)
                 .unwrap_or_else(|e| panic!("golden datagen solve failed: {e}"))
         } else {
             block.simulate(x)
+        };
+        if cfg.power {
+            let rep = block.estimate_power(x);
+            y.push(rep.energy / e_scale);
+            y.push(rep.t_settle / t_scale);
         }
+        y
     };
     let rows: Vec<(Vec<f32>, Vec<f32>)> = parallel_map(cfg.n_samples, cfg.n_workers, |i| {
         let mut rng = Rng::seed_from(seeds[i]);
@@ -138,6 +163,14 @@ pub fn generate_to(cfg: &GenConfig, path: &Path) -> Result<Dataset> {
         ("dist", Json::Str(cfg.dist.tag())),
         ("golden", Json::Bool(cfg.golden)),
         ("solver", Json::Str(cfg.solver.as_str().to_string())),
+        ("power", {
+            let (e_scale, t_scale) = crate::power::label_scales(&cfg.block);
+            Json::obj(vec![
+                ("enabled", Json::Bool(cfg.power)),
+                ("e_scale", Json::Num(e_scale)),
+                ("t_scale", Json::Num(t_scale)),
+            ])
+        }),
         ("nonideal", cfg.block.nonideal.to_json()),
         (
             "block",
@@ -264,6 +297,28 @@ mod tests {
         assert_eq!(meta.get("golden").unwrap().as_bool(), Some(true));
         assert_eq!(meta.get("solver").unwrap().as_str(), Some("auto"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn power_labels_append_two_normalized_columns() {
+        let base = GenConfig::new(BlockConfig::with_dims(1, 3, 2), 4, 17);
+        let plain = generate(&base);
+        let powered = generate(&GenConfig { power: true, ..base.clone() });
+        assert_eq!(powered.o, plain.o + crate::power::POWER_HEADS);
+        for i in 0..plain.n {
+            // MAC columns are untouched by the extra accounting...
+            assert_eq!(&powered.targets(i)[..plain.o], plain.targets(i));
+            // ...and the appended labels are normalized into a sane range.
+            for &l in &powered.targets(i)[plain.o..] {
+                assert!(l.is_finite() && l >= 0.0 && l <= 10.0, "label {l}");
+            }
+        }
+        // Golden power labels also produce the extended shape and stay
+        // close to the fast estimate's order of magnitude.
+        let gold = generate(&GenConfig { power: true, golden: true, ..base });
+        assert_eq!(gold.o, powered.o);
+        let (ef, eg) = (powered.targets(0)[plain.o], gold.targets(0)[plain.o]);
+        assert!(ef > 0.0 && eg > 0.0, "energy labels positive: fast {ef} golden {eg}");
     }
 
     #[test]

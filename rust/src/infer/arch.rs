@@ -107,6 +107,26 @@ impl Arch {
         self.input.iter().product()
     }
 
+    /// The same network with `extra` additional output heads: the final
+    /// dense layer widens by `extra` and `outputs` grows to match, under
+    /// the same variant name. This is how a power-enabled run trains the
+    /// `[mac, energy, t_settle]` multi-output emulator (see
+    /// [`crate::power`]) without declaring a new variant.
+    pub fn with_extra_outputs(&self, extra: usize) -> Result<Arch> {
+        let mut arch = self.clone();
+        match arch.layers.last_mut() {
+            Some(Layer::Dense { cout, .. }) => *cout += extra,
+            other => bail!(
+                "arch '{}': cannot widen outputs — last layer is {:?}, not dense",
+                self.name,
+                other
+            ),
+        }
+        arch.outputs += extra;
+        arch.validate().with_context(|| format!("arch '{}' + {extra} heads", self.name))?;
+        Ok(arch)
+    }
+
     /// Shape-check the layer stack; returns the flattened feature count.
     pub fn validate(&self) -> Result<usize> {
         let mut c = self.input[0];
@@ -399,6 +419,25 @@ mod tests {
             let back = Arch::from_meta(&a.to_meta()).unwrap();
             assert_eq!(a, back, "{name}");
         }
+    }
+
+    #[test]
+    fn with_extra_outputs_widens_only_the_last_dense() {
+        let a = Arch::for_variant("small").unwrap();
+        let wide = a.with_extra_outputs(2).unwrap();
+        assert_eq!(wide.outputs, a.outputs + 2);
+        assert_eq!(wide.name, a.name);
+        assert_eq!(wide.layers.len(), a.layers.len());
+        match (wide.layers.last().unwrap(), a.layers.last().unwrap()) {
+            (Layer::Dense { cout: w, cin: wi, .. }, Layer::Dense { cout: b, cin: bi, .. }) => {
+                assert_eq!(*w, b + 2);
+                assert_eq!(wi, bi, "fan-in unchanged");
+            }
+            other => panic!("unexpected layers {other:?}"),
+        }
+        wide.validate().unwrap();
+        // Zero extra heads is the identity.
+        assert_eq!(a.with_extra_outputs(0).unwrap(), a);
     }
 
     #[test]

@@ -67,6 +67,9 @@ pub struct NativeTrainer {
     arch: Arch,
     meta: VariantMeta,
     plans: Vec<Plan>,
+    /// Optional per-output-column loss weights (length `arch.outputs`).
+    /// `None` is uniform weighting — the established single-objective MSE.
+    out_weights: Option<Vec<f32>>,
 }
 
 impl NativeTrainer {
@@ -130,7 +133,33 @@ impl NativeTrainer {
                 }
             }
         }
-        Ok(Self { arch, meta, plans })
+        Ok(Self { arch, meta, plans, out_weights: None })
+    }
+
+    /// Weight the loss per output column (e.g. down-weighting the
+    /// `[energy, t_settle]` auxiliary heads of a power-enabled run against
+    /// the MAC columns): the objective becomes `Σ w_j·e_ij² / (b·o)`, with
+    /// gradients scaled to match. Length must equal `arch.outputs`; every
+    /// weight must be finite and non-negative.
+    pub fn set_output_weights(&mut self, weights: Vec<f32>) -> Result<()> {
+        anyhow::ensure!(
+            weights.len() == self.arch.outputs,
+            "got {} output weights, arch '{}' has {} outputs",
+            weights.len(),
+            self.arch.name,
+            self.arch.outputs
+        );
+        anyhow::ensure!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "output weights must be finite and >= 0, got {weights:?}"
+        );
+        self.out_weights = Some(weights);
+        Ok(())
+    }
+
+    /// The loss weight of output column `j` (1.0 when unweighted).
+    fn w_out(&self, j: usize) -> f32 {
+        self.out_weights.as_ref().map_or(1.0, |w| w[j])
     }
 
     /// Build from a variant's parameter layout (see [`Arch::from_meta`]);
@@ -219,10 +248,11 @@ impl NativeTrainer {
         let acts = self.forward_tape(state, xb)?;
         let preds = acts.last().unwrap();
         anyhow::ensure!(preds.len() == yb.len(), "target length {} vs {}", yb.len(), preds.len());
+        let o = self.arch.outputs;
         let mut acc = 0.0f64;
-        for (p, t) in preds.iter().zip(yb) {
+        for (idx, (p, t)) in preds.iter().zip(yb).enumerate() {
             let e = (*p - *t) as f64;
-            acc += e * e;
+            acc += self.w_out(idx % o) as f64 * e * e;
         }
         Ok(acc / preds.len() as f64)
     }
@@ -241,15 +271,18 @@ impl NativeTrainer {
         anyhow::ensure!(preds.len() == yb.len(), "target length {} vs {}", yb.len(), preds.len());
         let b = xb.len() / self.arch.n_features();
 
+        let o = self.arch.outputs;
         let mut loss = 0.0f64;
         let scale = 2.0 / preds.len() as f32;
         let mut delta: Vec<f32> = preds
             .iter()
             .zip(yb)
-            .map(|(p, t)| {
+            .enumerate()
+            .map(|(idx, (p, t))| {
+                let w = self.w_out(idx % o);
                 let e = *p - *t;
-                loss += (e as f64) * (e as f64);
-                scale * e
+                loss += (w as f64) * (e as f64) * (e as f64);
+                scale * w * e
             })
             .collect();
         loss /= preds.len() as f64;
@@ -491,6 +524,54 @@ mod tests {
         }
         let l1 = trainer.loss(&state, &xb, &yb).unwrap();
         assert!(l1.is_finite() && l1 < l0 * 0.5, "loss did not drop: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn output_weights_scale_loss_and_gradients_consistently() {
+        // A two-head arch: weighting head 1 by zero must make its error
+        // invisible to both the loss and every gradient (checked against
+        // finite differences of the weighted loss itself).
+        let arch = Arch {
+            name: "two_head".into(),
+            input: [1, 1, 1, 3],
+            outputs: 2,
+            layers: vec![Layer::Flatten, Layer::Dense { cin: 3, cout: 2, celu: false }],
+        };
+        let mut trainer = NativeTrainer::new(arch).unwrap();
+        let state = ModelState::init(trainer.meta(), 11);
+        let xb = [0.3f32, -0.2, 0.9, 0.1, 0.7, -0.4];
+        let yb = [0.5f32, 100.0, -0.25, -100.0]; // wild head-1 targets
+        assert!(trainer.set_output_weights(vec![1.0]).is_err()); // wrong len
+        assert!(trainer.set_output_weights(vec![1.0, -1.0]).is_err());
+        trainer.set_output_weights(vec![1.0, 0.0]).unwrap();
+        let (loss, grads) = trainer.loss_and_grads(&state, &xb, &yb).unwrap();
+        // Zero-weighted head: loss only sees column 0.
+        let mut want = 0.0f64;
+        let engine = NativeEngine::new(trainer.arch(), &state).unwrap();
+        let preds = engine.forward(&xb).unwrap();
+        for i in 0..2 {
+            let e = (preds[i * 2] - yb[i * 2]) as f64;
+            want += e * e;
+        }
+        assert!((loss - want / 4.0).abs() < 1e-9, "loss {loss} vs {want}");
+        // Gradients match finite differences of the weighted loss.
+        let eps = 1e-3f32;
+        for (ai, arr) in state.arrays.iter().enumerate() {
+            for k in 0..arr.len() {
+                let mut plus = state.clone();
+                plus.arrays[ai][k] += eps;
+                let mut minus = state.clone();
+                minus.arrays[ai][k] -= eps;
+                let fd = (trainer.loss(&plus, &xb, &yb).unwrap()
+                    - trainer.loss(&minus, &xb, &yb).unwrap())
+                    / (2.0 * eps as f64);
+                let an = grads[ai][k] as f64;
+                assert!(
+                    (fd - an).abs() <= 1e-3 * (1.0 + fd.abs().max(an.abs())),
+                    "array {ai}[{k}]: fd {fd} vs analytic {an}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -23,6 +23,11 @@
 //!   MLP classifier whose per-tile MACs run on a pluggable executor
 //!   (ideal / fast / golden MNA / the emulator itself) — the
 //!   accuracy-vs-nonideality half of the evaluation.
+//! * [`power`] — **energy & settling-time accounting**: golden transient
+//!   instrumentation (`Σ V²·G·Δt` dissipation, tolerance-band settling)
+//!   producing a `PowerReport` per solve, the matching closed-form
+//!   fast-path estimator, and the label scales behind the emulator's
+//!   optional `[mac, energy, t_settle]` multi-output heads.
 //! * [`pipeline`] — **the offline-pipeline API**: declarative
 //!   `ExperimentSpec` run descriptions and `Experiment::run` driving
 //!   datagen → train → eval → export into servable run directories, and
@@ -131,9 +136,9 @@
 //! trait: [`infer::NativeTrainer`] (backward passes for the native
 //! kernels + SGD with the paper's LR-halving schedule — no artifacts)
 //! and [`coordinator::PjrtTrainer`] (the AOT-compiled Adam step).
-//! The CLI front end is `semulator run --spec spec.json`; direct
-//! `coordinator::trainer::train` calls are a deprecated surface kept for
-//! harnesses.
+//! The CLI front end is `semulator run --spec spec.json`. The free
+//! function `coordinator::trainer::train` is `#[deprecated]`: embed a
+//! training loop through the [`coordinator::Trainer`] trait instead.
 //!
 //! ## Exploring many scenarios: campaigns
 //!
@@ -173,6 +178,7 @@ pub mod model;
 pub mod nn;
 pub mod obs;
 pub mod pipeline;
+pub mod power;
 pub mod repro;
 pub mod runtime;
 pub mod spice;

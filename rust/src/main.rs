@@ -91,11 +91,14 @@ const USAGE: &str = "usage: semulator <info|run|sweep|nn-eval|datagen|train|eval
            datagen -> split -> train -> eval -> servable run directory,
            driven by a declarative ExperimentSpec JSON (see
            examples/specs/). The default 'native' train backend needs
-           zero compiled artifacts.
+           zero compiled artifacts. A spec \"power\" section appends
+           [energy, t_settle] surrogate heads to the emulator and an
+           energy/latency block to eval.json.
   sweep    --spec FILE [--out DIR] [--workers N] [--resume]  run a whole
            CampaignSpec grid (base ExperimentSpec x sweep axes: nonideal,
            arch, data_seed, train_seed, dist, n_samples, epochs, batch,
-           lr_base, golden, adc_bits, tile) across worker threads; per-run
+           lr_base, golden, adc_bits, tile, v_read, t_sense_ns) across
+           worker threads; per-run
            failures become report
            rows instead of aborting, --resume skips runs whose directory
            already holds this exact spec (matched by content hash), and
@@ -129,8 +132,8 @@ const USAGE: &str = "usage: semulator <info|run|sweep|nn-eval|datagen|train|eval
   stats    DIR                            pretty-print the timing breakdown
            of a `semulator run` directory (per-stage wall-clock from its
            timings.json sidecar, kernel FLOPs, Newton iterations, sparse
-           MNA solves, nn tile MACs / ADC clips) or of a whole `semulator
-           sweep` campaign (one row per run + totals)
+           MNA solves, nn tile MACs / ADC clips, dissipated energy) or of
+           a whole `semulator sweep` campaign (one row per run + totals)
   repro    <table1|fig4|fig5|fig6|fig7|bound|speed|all> [--preset ci|small|paper]
 common:    --artifacts DIR (default artifacts)   --work DIR (default runs)
 run:       the run directory (default runs/experiments/<name>) is
@@ -375,13 +378,15 @@ fn cmd_nn_eval(args: &Args) -> Result<()> {
     let report = semulator::nn::nn_eval(&nn, &nonideal)?;
     println!(
         "accuracy {:.3} ({}/{} correct)  software baseline {:.3}  \
-         tile MACs {}  ADC clips {}  in {:.1}s",
+         tile MACs {}  ADC clips {}  energy {}fJ ({:.1} fJ/inference)  in {:.1}s",
         report.accuracy,
         report.n_correct,
         report.n_test,
         report.soft_accuracy,
         human_count(report.tile_macs as f64),
         human_count(report.adc_clips as f64),
+        human_count(report.energy_fj as f64),
+        report.energy_per_inference_fj,
         t0.elapsed().as_secs_f64(),
     );
     if let Some(out) = args.str_opt("out") {
@@ -832,7 +837,7 @@ fn cmd_stats(args: &Args) -> Result<()> {
         .collect();
     names.sort();
     println!(
-        "{:<28} {:>10} {:>10} {:>10} {:>12} {:>12} {:>13} {:>10} {:>10}",
+        "{:<28} {:>10} {:>10} {:>10} {:>12} {:>12} {:>13} {:>10} {:>10} {:>10}",
         "run",
         "total_ms",
         "datagen_ms",
@@ -841,18 +846,22 @@ fn cmd_stats(args: &Args) -> Result<()> {
         "newton_iters",
         "sparse_solves",
         "tile_macs",
-        "adc_clips"
+        "adc_clips",
+        "energy_fj"
     );
     let (mut total, mut flops, mut newton, mut shown) = (0.0f64, 0.0f64, 0.0f64, 0usize);
-    let (mut sparse, mut macs, mut clips) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut sparse, mut macs, mut clips, mut energy) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
     for name in &names {
         match RunTimings::load(&runs.join(name)) {
             Ok(t) => {
                 let stage = |key: &str| {
                     t.stages.iter().find(|(k, _)| k == key).map(|(_, v)| *v).unwrap_or(0.0)
                 };
+                // Golden-integrated plus closed-form-estimated energy, one
+                // column — the split stays in the counters themselves.
+                let run_energy = t.counter("golden_energy_fj") + t.counter("fast_energy_fj");
                 println!(
-                    "{:<28} {:>10.1} {:>10.1} {:>10.1} {:>12} {:>12} {:>13} {:>10} {:>10}",
+                    "{:<28} {:>10.1} {:>10.1} {:>10.1} {:>12} {:>12} {:>13} {:>10} {:>10} {:>10}",
                     name,
                     t.total_ms,
                     stage("datagen"),
@@ -862,6 +871,7 @@ fn cmd_stats(args: &Args) -> Result<()> {
                     human_count(t.counter("sparse_solves")),
                     human_count(t.counter("tile_macs")),
                     human_count(t.counter("adc_clips")),
+                    human_count(run_energy),
                 );
                 total += t.total_ms;
                 flops += t.counter("kernel_flops");
@@ -869,6 +879,7 @@ fn cmd_stats(args: &Args) -> Result<()> {
                 sparse += t.counter("sparse_solves");
                 macs += t.counter("tile_macs");
                 clips += t.counter("adc_clips");
+                energy += run_energy;
                 shown += 1;
             }
             Err(_) => println!("{name:<28} (no timings.json — failed or pre-obs run)"),
@@ -877,13 +888,14 @@ fn cmd_stats(args: &Args) -> Result<()> {
     anyhow::ensure!(shown > 0, "{}: no run under runs/ has a timings.json", dir.display());
     println!(
         "campaign total: {shown}/{} runs, {total:.1} ms, {} kernel FLOPs, {} Newton iters, \
-         {} sparse solves, {} tile MACs, {} ADC clips",
+         {} sparse solves, {} tile MACs, {} ADC clips, {} fJ dissipated",
         names.len(),
         human_count(flops),
         human_count(newton),
         human_count(sparse),
         human_count(macs),
         human_count(clips),
+        human_count(energy),
     );
     Ok(())
 }

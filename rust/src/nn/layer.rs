@@ -108,16 +108,31 @@ enum BackendKind<'a> {
 
 impl BackendKind<'_> {
     /// Raw (uncalibrated) tile response for tile `i` of the grid the
-    /// backend was prepared for.
+    /// backend was prepared for. Every path also lands the tile MAC's
+    /// energy on the obs energy counters: `Golden` integrates it inside
+    /// the transient solve (`golden_energy_fj`/`settling_ps`), the rest
+    /// use the closed-form estimate (`fast_energy_fj`) — which is how
+    /// [`super::XbarMlp::evaluate`] prices a whole inference.
     fn raw(&self, i: usize, tile: &ProgrammedTile, drive: &[f64]) -> Result<Vec<f64>, String> {
         match self {
-            BackendKind::Ideal => Ok(tile.ideal_mac(drive)),
-            BackendKind::Fast(solvers) => Ok(solvers[i].simulate(&tile.cell_inputs(drive))),
+            BackendKind::Ideal => {
+                let x = tile.cell_inputs(drive);
+                crate::power::record_fast(&crate::power::estimate_fast(&tile.cfg, &x));
+                Ok(tile.ideal_mac(drive))
+            }
+            BackendKind::Fast(solvers) => {
+                let x = tile.cell_inputs(drive);
+                solvers[i].estimate_power(&x);
+                Ok(solvers[i].simulate(&x))
+            }
             BackendKind::Golden(blocks, choice) => blocks[i]
-                .simulate_golden_with(&tile.cell_inputs(drive), *choice)
+                .simulate_golden_power(&tile.cell_inputs(drive), *choice)
+                .map(|(outs, _)| outs)
                 .map_err(|e| format!("golden tile solve: {e}")),
             BackendKind::Emulated { dep, variant } => {
-                let req = MacRequest::new(*variant, tile.cell_inputs(drive));
+                let x = tile.cell_inputs(drive);
+                crate::power::record_fast(&crate::power::estimate_fast(&tile.cfg, &x));
+                let req = MacRequest::new(*variant, x);
                 Ok(dep.submit(&req).map_err(|e| format!("{e:#}"))?.outputs)
             }
         }

@@ -255,6 +255,12 @@ pub struct NnReport {
     pub tile_macs: u64,
     /// ADC saturations this evaluation hit (scope-isolated).
     pub adc_clips: u64,
+    /// Analog energy this evaluation dissipated, in femtojoules —
+    /// golden-integrated plus closed-form-estimated, read from the obs
+    /// energy counters (scope-isolated like [`Self::tile_macs`]).
+    pub energy_fj: u64,
+    /// [`Self::energy_fj`] divided by the number of classified images.
+    pub energy_per_inference_fj: f64,
 }
 
 impl NnReport {
@@ -267,6 +273,8 @@ impl NnReport {
             ("n_test", Json::Num(self.n_test as f64)),
             ("tile_macs", Json::Num(self.tile_macs as f64)),
             ("adc_clips", Json::Num(self.adc_clips as f64)),
+            ("energy_fj", Json::Num(self.energy_fj as f64)),
+            ("energy_per_inference_fj", Json::Num(self.energy_per_inference_fj)),
         ])
     }
 }
@@ -329,6 +337,7 @@ impl XbarMlp {
             }
         }
         let d = snap().since(&before);
+        let energy_fj = d.golden_energy_fj + d.fast_energy_fj;
         Ok(NnReport {
             executor: exec.name().to_string(),
             accuracy: n_correct as f64 / ys.len().max(1) as f64,
@@ -337,6 +346,8 @@ impl XbarMlp {
             n_test: ys.len(),
             tile_macs: d.tile_macs,
             adc_clips: d.adc_clips,
+            energy_fj,
+            energy_per_inference_fj: energy_fj as f64 / ys.len().max(1) as f64,
         })
     }
 }
@@ -663,5 +674,14 @@ mod tests {
         );
         assert!(report.tile_macs > 0);
         assert_eq!(report.adc_clips, 0);
+        // Even the ideal executor prices its MACs through the closed-form
+        // energy model: a full evaluation costs a nonzero fJ total.
+        assert!(report.energy_fj > 0, "{report:?}");
+        assert!(report.energy_per_inference_fj > 0.0);
+        assert!(
+            (report.energy_per_inference_fj - report.energy_fj as f64 / report.n_test as f64)
+                .abs()
+                < 1e-9
+        );
     }
 }

@@ -61,6 +61,16 @@ pub struct CounterSet {
     /// ADC conversions that saturated (code clamped to the end of the
     /// converter's range) in `crate::nn::AdcSpec::convert`.
     pub adc_clips: AtomicU64,
+    /// Energy dissipated across golden MNA solves, quantized to integer
+    /// femtojoules by [`crate::power::record_golden`] (work-like: summable
+    /// and deterministic per solve).
+    pub golden_energy_fj: AtomicU64,
+    /// Settling-time estimates across golden solves, quantized to integer
+    /// picoseconds (a latency *tally*, not wall time — deterministic).
+    pub settling_ps: AtomicU64,
+    /// Energy estimated by the closed-form fast-path accounting
+    /// ([`crate::power::record_fast`]), integer femtojoules.
+    pub fast_energy_fj: AtomicU64,
 }
 
 impl CounterSet {
@@ -77,6 +87,9 @@ impl CounterSet {
             sparse_symbolic_reuses: AtomicU64::new(0),
             tile_macs: AtomicU64::new(0),
             adc_clips: AtomicU64::new(0),
+            golden_energy_fj: AtomicU64::new(0),
+            settling_ps: AtomicU64::new(0),
+            fast_energy_fj: AtomicU64::new(0),
         }
     }
 
@@ -94,6 +107,9 @@ impl CounterSet {
             sparse_symbolic_reuses: ld(&self.sparse_symbolic_reuses),
             tile_macs: ld(&self.tile_macs),
             adc_clips: ld(&self.adc_clips),
+            golden_energy_fj: ld(&self.golden_energy_fj),
+            settling_ps: ld(&self.settling_ps),
+            fast_energy_fj: ld(&self.fast_energy_fj),
         }
     }
 }
@@ -112,6 +128,9 @@ pub struct CounterSnapshot {
     pub sparse_symbolic_reuses: u64,
     pub tile_macs: u64,
     pub adc_clips: u64,
+    pub golden_energy_fj: u64,
+    pub settling_ps: u64,
+    pub fast_energy_fj: u64,
 }
 
 impl CounterSnapshot {
@@ -131,11 +150,14 @@ impl CounterSnapshot {
                 .saturating_sub(earlier.sparse_symbolic_reuses),
             tile_macs: self.tile_macs.saturating_sub(earlier.tile_macs),
             adc_clips: self.adc_clips.saturating_sub(earlier.adc_clips),
+            golden_energy_fj: self.golden_energy_fj.saturating_sub(earlier.golden_energy_fj),
+            settling_ps: self.settling_ps.saturating_sub(earlier.settling_ps),
+            fast_energy_fj: self.fast_energy_fj.saturating_sub(earlier.fast_energy_fj),
         }
     }
 
     /// Stable name/value pairs (the serialization order everywhere).
-    pub fn named(&self) -> [(&'static str, u64); 11] {
+    pub fn named(&self) -> [(&'static str, u64); 14] {
         [
             ("kernel_flops", self.kernel_flops),
             ("kernel_bytes", self.kernel_bytes),
@@ -148,6 +170,9 @@ impl CounterSnapshot {
             ("sparse_symbolic_reuses", self.sparse_symbolic_reuses),
             ("tile_macs", self.tile_macs),
             ("adc_clips", self.adc_clips),
+            ("golden_energy_fj", self.golden_energy_fj),
+            ("settling_ps", self.settling_ps),
+            ("fast_energy_fj", self.fast_energy_fj),
         ]
     }
 
@@ -171,6 +196,9 @@ impl CounterSnapshot {
             sparse_symbolic_reuses: g("sparse_symbolic_reuses"),
             tile_macs: g("tile_macs"),
             adc_clips: g("adc_clips"),
+            golden_energy_fj: g("golden_energy_fj"),
+            settling_ps: g("settling_ps"),
+            fast_energy_fj: g("fast_energy_fj"),
         }
     }
 }
@@ -274,6 +302,18 @@ pub fn add_adc_clips(n: u64) {
     add(|c| &c.adc_clips, n);
 }
 
+pub fn add_golden_energy_fj(n: u64) {
+    add(|c| &c.golden_energy_fj, n);
+}
+
+pub fn add_settling_ps(n: u64) {
+    add(|c| &c.settling_ps, n);
+}
+
+pub fn add_fast_energy_fj(n: u64) {
+    add(|c| &c.fast_energy_fj, n);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +373,9 @@ mod tests {
             sparse_symbolic_reuses: 5,
             tile_macs: 77,
             adc_clips: 4,
+            golden_energy_fj: 123_456,
+            settling_ps: 98_765,
+            fast_energy_fj: 42,
         };
         let back = CounterSnapshot::from_json(&s.to_json());
         assert_eq!(back, s);

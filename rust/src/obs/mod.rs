@@ -250,7 +250,8 @@ mod tests {
         );
         assert!(text.contains("# TYPE semulator_kernel_flops_total counter"), "{text}");
         // Every global work counter renders as its own family — including
-        // the sparse-solver counters (PR 7) and the nn tile/ADC counters.
+        // the sparse-solver counters (PR 7), the nn tile/ADC counters, and
+        // the energy/settling counters (PR 9).
         for family in [
             "# TYPE semulator_sparse_solves_total counter",
             "# TYPE semulator_sparse_nnz_total counter",
@@ -258,6 +259,9 @@ mod tests {
             "# TYPE semulator_sparse_symbolic_reuses_total counter",
             "# TYPE semulator_tile_macs_total counter",
             "# TYPE semulator_adc_clips_total counter",
+            "# TYPE semulator_golden_energy_fj_total counter",
+            "# TYPE semulator_settling_ps_total counter",
+            "# TYPE semulator_fast_energy_fj_total counter",
         ] {
             assert!(text.contains(family), "missing {family}\n{text}");
         }

@@ -231,6 +231,12 @@ pub struct RunEval {
     /// and solver-deterministic, so safe inside the byte-identical
     /// summary.
     pub accuracy: Option<f64>,
+    /// Mean per-op dissipated energy (J) from the run's `eval.json`
+    /// `"power"` section (`None` without a power section). Derived from
+    /// seeded test labels, so worker-invariant like [`Self::accuracy`].
+    pub energy: Option<f64>,
+    /// Mean settling time (s), same provenance as [`Self::energy`].
+    pub t_settle: Option<f64>,
 }
 
 /// One summary row: grid coordinates + outcome + metrics.
@@ -410,6 +416,8 @@ fn disk_row(dir: &Path, point: &SweepPoint, hash: &str, status: RunStatus) -> Re
             kernel_flops: counter("kernel_flops"),
             newton_iters: counter("newton_iters"),
             accuracy: eval.get("nn").and_then(|n| n.get("accuracy")).and_then(|v| v.as_f64()),
+            energy: eval.get("power").and_then(|p| p.get("energy")).and_then(|v| v.as_f64()),
+            t_settle: eval.get("power").and_then(|p| p.get("t_settle")).and_then(|v| v.as_f64()),
         }),
     })
 }
@@ -468,7 +476,7 @@ impl CampaignReport {
         }
         out.push_str(
             ",test_mse,test_mae,p_halfmv,probe_emulator_mae,probe_golden_mae,\
-             kernel_flops,newton_iters,accuracy,error\n",
+             kernel_flops,newton_iters,accuracy,energy,t_settle,error\n",
         );
         for row in &self.rows {
             out.push_str(&format!("{},{},{}", row.name, row.status.tag(), row.spec_hash));
@@ -482,7 +490,7 @@ impl CampaignReport {
             let opt_u = |v: Option<u64>| v.map(|x| x.to_string()).unwrap_or_default();
             let e = row.eval.as_ref();
             out.push_str(&format!(
-                ",{},{},{},{},{},{},{},{}",
+                ",{},{},{},{},{},{},{},{},{},{}",
                 opt(e.map(|e| e.test_mse)),
                 opt(e.map(|e| e.test_mae)),
                 opt(e.map(|e| e.p_halfmv)),
@@ -491,6 +499,8 @@ impl CampaignReport {
                 opt_u(e.and_then(|e| e.kernel_flops)),
                 opt_u(e.and_then(|e| e.newton_iters)),
                 opt(e.and_then(|e| e.accuracy)),
+                opt(e.and_then(|e| e.energy)),
+                opt(e.and_then(|e| e.t_settle)),
             ));
             out.push(',');
             if let RunStatus::Failed(err) = &row.status {
@@ -536,6 +546,12 @@ fn row_json(row: &RunRow) -> Json {
         }
         if let Some(v) = e.accuracy {
             pairs.push(("accuracy", Json::Num(v)));
+        }
+        if let Some(v) = e.energy {
+            pairs.push(("energy", Json::Num(v)));
+        }
+        if let Some(v) = e.t_settle {
+            pairs.push(("t_settle", Json::Num(v)));
         }
     }
     if let RunStatus::Failed(err) = &row.status {
@@ -613,6 +629,8 @@ mod tests {
                 kernel_flops: Some(123456),
                 newton_iters: None,
                 accuracy: Some(0.875),
+                energy: Some(1.5e-12),
+                t_settle: None,
             }),
         }
     }
@@ -654,14 +672,18 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].starts_with("name,status,spec_hash,data_seed,test_mse"));
-        assert!(lines[0].ends_with("probe_golden_mae,kernel_flops,newton_iters,accuracy,error"));
+        assert!(lines[0]
+            .ends_with("probe_golden_mae,kernel_flops,newton_iters,accuracy,energy,t_settle,error"));
         assert!(lines[2].contains(",failed,"));
         assert!(lines[2].contains("\"boom, with \"\"quotes\"\"\""));
-        // probe_golden_mae and newton_iters are absent, kernel_flops and
-        // accuracy are exact cells, error is empty on a completed row.
-        assert!(lines[1].ends_with("0.2,,123456,,0.875,"), "{}", lines[1]);
+        // probe_golden_mae, newton_iters and t_settle are absent,
+        // kernel_flops / accuracy / energy are exact cells, error is empty
+        // on a completed row.
+        assert!(lines[1].ends_with("0.2,,123456,,0.875,0.0000000000015,,"), "{}", lines[1]);
         assert_eq!(jrows[0].get("kernel_flops").unwrap().as_f64(), Some(123456.0));
         assert!(jrows[0].get("newton_iters").is_none());
         assert_eq!(jrows[0].get("accuracy").unwrap().as_f64(), Some(0.875));
+        assert_eq!(jrows[0].get("energy").unwrap().as_f64(), Some(1.5e-12));
+        assert!(jrows[0].get("t_settle").is_none());
     }
 }

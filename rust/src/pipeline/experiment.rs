@@ -37,8 +37,9 @@ use crate::coordinator::{
     evaluate_state, trainer_for, EpochLog, EvalStats, Policy, TrainReport, Trainer,
 };
 use crate::datagen::{generate_to, Dataset};
-use crate::infer::load_or_builtin_meta;
+use crate::infer::{load_or_builtin_meta, Arch, NativeTrainer};
 use crate::model::ModelState;
+use crate::power::POWER_HEADS;
 use crate::runtime::ArtifactStore;
 use crate::util::Json;
 use crate::xbar::CellInputs;
@@ -244,12 +245,28 @@ impl Experiment {
         let (train_ds, test_ds) = ds.split(spec.data.test_frac, spec.data.seed ^ 0xA5)?;
         stages.push(("datagen", ms(&t)));
 
-        // 2. Train through the spec's backend.
+        // 2. Train through the spec's backend. A power-enabled run widens
+        // the network by the two auxiliary heads ([`crate::power`]) and
+        // weights their loss columns per the spec — native backend only,
+        // which `ExperimentSpec::validate` already enforced.
         let t = std::time::Instant::now();
         let mut cfg = spec.train_config();
         cfg.ckpt_out = Some(run_dir.join("ckpt.ckpt"));
         let mut store = None; // PJRT artifacts outlive the trainer borrow
-        let trainer = trainer_for(spec.train.backend, &opts.artifact_dir, &spec.variant, &mut store)?;
+        let trainer: Box<dyn Trainer + '_> = match &spec.power {
+            Some(pw) => {
+                let arch = Arch::from_meta(&meta)?.with_extra_outputs(POWER_HEADS)?;
+                let mut t = NativeTrainer::new(arch)?;
+                let mut weights = vec![1.0f32; meta.outputs];
+                weights.push(pw.w_energy as f32);
+                weights.push(pw.w_settle as f32);
+                t.set_output_weights(weights)?;
+                Box::new(t)
+            }
+            None => {
+                trainer_for(spec.train.backend, &opts.artifact_dir, &spec.variant, &mut store)?
+            }
+        };
         let (state, report) = trainer.train(&cfg, &train_ds, &test_ds, progress)?;
         stages.push(("train", ms(&t)));
 
@@ -263,17 +280,23 @@ impl Experiment {
 
         // 4. PJRT cross-check of the trained checkpoint, when the compiled
         // eval artifact is available (skipped, with the reason recorded,
-        // in native-only environments).
+        // in native-only environments; always skipped for power runs — the
+        // compiled eval artifact's output width is fixed at n_mac).
         let t = std::time::Instant::now();
-        let (pjrt_check, pjrt_skipped) =
-            pjrt_cross_check(&opts.artifact_dir, &spec.variant, &state, &test_ds);
+        let (pjrt_check, pjrt_skipped) = if spec.power.is_some() {
+            (None, Some("power heads: compiled eval artifact has fixed n_mac outputs".to_string()))
+        } else {
+            pjrt_cross_check(&opts.artifact_dir, &spec.variant, &state, &test_ds)
+        };
         stages.push(("pjrt_check", ms(&t)));
 
         // 5. Probe stage: serve the *exported* run directory and replay
         // held-out rows through it — emulated route scored against the
         // dataset's golden targets, golden route as the reference line.
+        // Skipped (with the reason recorded in eval.json) for power runs:
+        // the extended checkpoint is not servable as a plain MAC variant.
         let t = std::time::Instant::now();
-        let probe = if spec.eval.probes > 0 {
+        let probe = if spec.eval.probes > 0 && spec.power.is_none() {
             Some(self.probe(opts, run_dir, &test_ds)?)
         } else {
             None
@@ -319,9 +342,36 @@ impl Experiment {
                     ("golden_mae", Json::Num(p.golden_mae)),
                 ]),
             ));
+        } else if spec.eval.probes > 0 && spec.power.is_some() {
+            eval_pairs.push((
+                "probes_skipped",
+                Json::Str("power heads: extended checkpoint is not servable as a MAC variant".into()),
+            ));
         }
         if let Some(r) = &nn {
             eval_pairs.push(("nn", r.to_json()));
+        }
+        if spec.power.is_some() {
+            // Worker-invariant energy/settling summary: the held-out
+            // labels' means de-normalized back to joules / seconds (the
+            // golden truth this run's auxiliary heads were trained on),
+            // plus those heads' per-column eval MSE (normalized units).
+            let o_mac = gen.block.n_mac();
+            let (e_scale, t_scale) = crate::power::label_scales(&gen.block);
+            let mean_col = |j: usize| -> f64 {
+                (0..test_ds.n).map(|i| test_ds.targets(i)[j] as f64).sum::<f64>()
+                    / test_ds.n.max(1) as f64
+            };
+            let head = |k: usize| report.test.head_mse.get(o_mac + k).copied().unwrap_or(f64::NAN);
+            eval_pairs.push((
+                "power",
+                Json::obj(vec![
+                    ("energy", Json::Num(mean_col(o_mac) * e_scale)),
+                    ("t_settle", Json::Num(mean_col(o_mac + 1) * t_scale)),
+                    ("energy_mse", Json::Num(head(0))),
+                    ("t_settle_mse", Json::Num(head(1))),
+                ]),
+            ));
         }
         std::fs::write(run_dir.join("eval.json"), Json::obj(eval_pairs).to_string_pretty())?;
 
@@ -395,6 +445,12 @@ pub fn load_variant_def(run_dir: &Path, artifact_dir: &Path) -> Result<VariantDe
         .with_context(|| format!("read {}", spec_path.display()))?;
     let spec = ExperimentSpec::from_str(&text)
         .with_context(|| format!("parse {}", spec_path.display()))?;
+    anyhow::ensure!(
+        spec.power.is_none(),
+        "run '{}' trained power-extended heads; its [mac, energy, t_settle] checkpoint \
+         cannot be served as a plain MAC variant",
+        spec.name
+    );
     let meta = load_or_builtin_meta(artifact_dir, &spec.variant)
         .with_context(|| format!("run '{}' (variant '{}')", spec.name, spec.variant))?;
     let state = ModelState::load(&run_dir.join("ckpt.ckpt"), &meta)?;

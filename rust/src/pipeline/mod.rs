@@ -11,9 +11,12 @@
 //! * [`ExperimentSpec`] — a JSON-round-trippable description of a run:
 //!   scenario (`BlockConfig` + `NonIdealSpec`), network variant, dataset
 //!   sampling, training recipe (backend, epochs, batch, `LrSchedule`),
-//!   seeds, eval probes, and an optional crossbar-mapped-network stage
-//!   ([`crate::nn::NnSpec`]) that adds a task-accuracy column. See
-//!   `examples/specs/quickstart.json` and `examples/specs/nn_quickstart.json`.
+//!   seeds, eval probes, an optional crossbar-mapped-network stage
+//!   ([`crate::nn::NnSpec`]) that adds a task-accuracy column, and an
+//!   optional [`PowerSpec`] section that appends `[energy, t_settle]`
+//!   surrogate heads (see `crate::power`). See
+//!   `examples/specs/quickstart.json`, `examples/specs/nn_quickstart.json`
+//!   and `examples/specs/power_quickstart.json`.
 //! * [`Experiment`] — validates a spec and [`Experiment::run`]s it:
 //!   golden datagen, guarded train/test split, training through a
 //!   pluggable `coordinator::Trainer` (`infer::NativeTrainer` by default,
@@ -23,7 +26,8 @@
 //! * [`CampaignSpec`] / [`Campaign`] — a *grid* of experiments: a base
 //!   spec plus [`SweepAxes`] (non-ideality scenarios, arch variants,
 //!   seeds, sample distributions, training-recipe knobs, datagen solver
-//!   paths, nn ADC bits and tile heights) expands into the
+//!   paths, nn ADC bits and tile heights, read voltage and sense window)
+//!   expands into the
 //!   cross-product of named specs, [`Campaign::run`] executes them across
 //!   worker threads with per-run failure isolation and spec-hash resume,
 //!   and the aggregated `summary.json` / `summary.csv` robustness matrix
@@ -61,5 +65,5 @@ pub use campaign::{
     CampaignSpec, RunEval, RunRow, RunStatus,
 };
 pub use experiment::{load_variant_def, Experiment, ProbeStats, RunOptions, RunSummary};
-pub use spec::{DataSpec, EvalSpec, ExperimentSpec, TrainSpec};
+pub use spec::{DataSpec, EvalSpec, ExperimentSpec, PowerSpec, TrainSpec};
 pub use sweep::{spec_hash, SweepAxes, SweepPoint, AXIS_NAMES};

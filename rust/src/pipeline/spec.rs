@@ -80,6 +80,61 @@ impl Default for TrainSpec {
     }
 }
 
+/// Energy/settling-time surrogate heads (see [`crate::power`]).
+///
+/// Presence of this section turns the run into a multi-output emulation:
+/// datagen appends normalized `[energy, t_settle]` label columns, the
+/// regression network grows two auxiliary output heads, and `eval.json` /
+/// campaign summaries gain worker-invariant `energy` / `t_settle`
+/// columns. Native backend only.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerSpec {
+    /// Loss weight on the energy head (MAC columns are weighted 1.0).
+    pub w_energy: f64,
+    /// Loss weight on the settling-time head.
+    pub w_settle: f64,
+}
+
+impl Default for PowerSpec {
+    fn default() -> Self {
+        Self { w_energy: 1.0, w_settle: 1.0 }
+    }
+}
+
+impl PowerSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("w_energy", Json::Num(self.w_energy)),
+            ("w_settle", Json::Num(self.w_settle)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut spec = Self::default();
+        let f64_opt = |key: &str, default: f64| -> Result<f64> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("spec: power '{key}' must be a number")),
+            }
+        };
+        spec.w_energy = f64_opt("w_energy", spec.w_energy)?;
+        spec.w_settle = f64_opt("w_settle", spec.w_settle)?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (k, v) in [("w_energy", self.w_energy), ("w_settle", self.w_settle)] {
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0,
+                "spec: power {k} must be finite and >= 0, got {v}"
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Post-training evaluation probes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EvalSpec {
@@ -118,6 +173,11 @@ pub struct ExperimentSpec {
     /// onto tiles under this spec's `nonideal` scenario, and records the
     /// task accuracy in `eval.json` (and as a campaign summary column).
     pub nn: Option<NnSpec>,
+    /// Optional energy/settling-time surrogate heads (see [`PowerSpec`]):
+    /// when present, datagen labels and the trained emulator carry
+    /// `[energy, t_settle]` auxiliary outputs, reported per run and per
+    /// campaign row.
+    pub power: Option<PowerSpec>,
 }
 
 impl ExperimentSpec {
@@ -132,6 +192,7 @@ impl ExperimentSpec {
             train: TrainSpec::default(),
             eval: EvalSpec::default(),
             nn: None,
+            power: None,
         }
     }
 
@@ -155,6 +216,7 @@ impl ExperimentSpec {
         cfg.dist = self.data.dist;
         cfg.golden = self.data.golden;
         cfg.solver = self.data.solver;
+        cfg.power = self.power.is_some();
         Ok(cfg)
     }
 
@@ -214,6 +276,27 @@ impl ExperimentSpec {
         if let Some(nn) = &self.nn {
             nn.validate().map_err(anyhow::Error::msg)?;
         }
+        if let Some(power) = &self.power {
+            power.validate()?;
+            // The AOT PJRT artifacts are compiled for the base `n_mac`
+            // output width; the extended-head network is native-only.
+            anyhow::ensure!(
+                self.train.backend == BackendKind::Native,
+                "spec '{}': power heads require the native training backend \
+                 (the PJRT artifact's output width is fixed at n_mac)",
+                self.name
+            );
+            // The emulated nn executor serves this run's own checkpoint as
+            // a MAC variant, which a power-extended checkpoint is not.
+            if let Some(nn) = &self.nn {
+                anyhow::ensure!(
+                    nn.executor != "emulated",
+                    "spec '{}': the 'emulated' nn executor cannot serve a power-extended \
+                     checkpoint — use ideal | fast | golden",
+                    self.name
+                );
+            }
+        }
         let block = self.resolved_block()?;
         block.validate().map_err(anyhow::Error::msg)?;
         Ok(())
@@ -269,6 +352,9 @@ impl ExperimentSpec {
         // content hash (the campaign resume token).
         if let Some(nn) = &self.nn {
             pairs.push(("nn", nn.to_json()));
+        }
+        if let Some(power) = &self.power {
+            pairs.push(("power", power.to_json()));
         }
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
@@ -358,6 +444,9 @@ impl ExperimentSpec {
         }
         if let Some(nn) = j.get("nn") {
             spec.nn = Some(NnSpec::from_json(nn).map_err(anyhow::Error::msg)?);
+        }
+        if let Some(power) = j.get("power") {
+            spec.power = Some(PowerSpec::from_json(power)?);
         }
         spec.validate()?;
         Ok(spec)
@@ -492,6 +581,38 @@ mod tests {
         // A bad nn section fails spec validation.
         assert!(ExperimentSpec::from_str(
             r#"{"name": "q", "variant": "small", "nn": {"executor": "spice"}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn power_section_roundtrips_and_stays_out_of_plain_specs() {
+        // No power section: the key stays out of the JSON so pre-existing
+        // specs keep their content hash (the campaign resume token).
+        let plain = ExperimentSpec::new("exp", "small");
+        assert!(!plain.to_json().to_string().contains("\"power\""));
+        // With one: full round trip, partial keys default.
+        let mut spec = ExperimentSpec::new("exp", "small");
+        spec.power = Some(PowerSpec { w_energy: 0.5, w_settle: 2.0 });
+        let back = ExperimentSpec::from_str(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back, spec);
+        assert!(back.gen_config().unwrap().power);
+        let partial = ExperimentSpec::from_str(
+            r#"{"name": "q", "variant": "small", "power": {"w_energy": 0.25}}"#,
+        )
+        .unwrap();
+        assert_eq!(partial.power, Some(PowerSpec { w_energy: 0.25, w_settle: 1.0 }));
+        // Power heads are native-only: the AOT PJRT artifact has a fixed
+        // output width.
+        let err = ExperimentSpec::from_str(
+            r#"{"name": "q", "variant": "small", "power": {},
+                "train": {"backend": "pjrt"}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("native"), "{err:#}");
+        // Negative / non-finite weights are rejected.
+        assert!(ExperimentSpec::from_str(
+            r#"{"name": "q", "variant": "small", "power": {"w_settle": -1.0}}"#
         )
         .is_err());
     }

@@ -20,7 +20,7 @@ use anyhow::Result;
 
 use crate::datagen::SampleDist;
 use crate::util::Json;
-use crate::xbar::NonIdealSpec;
+use crate::xbar::{BlockConfig, NonIdealSpec};
 
 use super::spec::ExperimentSpec;
 
@@ -56,6 +56,20 @@ enum AxisValue {
     Golden(bool),
     AdcBits(u32),
     Tile(usize),
+    VRead(f64),
+    TSenseNs(f64),
+}
+
+/// Materialize the spec's golden block so a block-level axis can edit one
+/// field of it (the explicit block, else the variant's canonical one; an
+/// unknown variant falls back to `small` — that grid point fails at run
+/// time with the real variant error, not here).
+fn materialize_block(spec: &mut ExperimentSpec) -> &mut BlockConfig {
+    if spec.block.is_none() {
+        spec.block =
+            Some(spec.resolved_block().unwrap_or_else(|_| BlockConfig::small()));
+    }
+    spec.block.as_mut().expect("block just materialized")
 }
 
 impl AxisValue {
@@ -73,6 +87,8 @@ impl AxisValue {
             AxisValue::Golden(g) => (if *g { "gold" } else { "fast" }).to_string(),
             AxisValue::AdcBits(b) => format!("adc{b}"),
             AxisValue::Tile(r) => format!("tl{r}"),
+            AxisValue::VRead(v) => format!("vr{v}"),
+            AxisValue::TSenseNs(t) => format!("ts{t}"),
         }
     }
 
@@ -105,6 +121,12 @@ impl AxisValue {
             AxisValue::Tile(r) => {
                 spec.nn.get_or_insert_with(crate::nn::NnSpec::default).tile_rows = *r
             }
+            // The power axes edit one field of the golden block, so they
+            // materialize the resolved block into the spec (energy scales
+            // as V², settling with the sense window — the knobs behind the
+            // `energy`/`t_settle` summary columns).
+            AxisValue::VRead(v) => materialize_block(spec).v_read = *v,
+            AxisValue::TSenseNs(t) => materialize_block(spec).t_sense = *t * 1e-9,
         }
     }
 }
@@ -146,12 +168,20 @@ pub struct SweepAxes {
     /// Crossbar-mapped-network tile heights (wordlines per tile, tag
     /// `tl{r}`); same `nn`-section semantics as [`Self::adc_bits`].
     pub tile: Vec<usize>,
+    /// Read voltages in volts (tag `vr{v}`), edited into the resolved
+    /// golden block. Energy scales as V², so this is the natural sweep
+    /// axis for the summary's `energy` column.
+    pub v_read: Vec<f64>,
+    /// Sense windows in **nanoseconds** (tag `ts{t}`; nanoseconds keep
+    /// the tags readable — `ts200`, not `ts0.0000002`), edited into the
+    /// resolved golden block as seconds.
+    pub t_sense_ns: Vec<f64>,
 }
 
 /// Canonical axis order; also the summary's axis-column order.
 pub const AXIS_NAMES: &[&str] = &[
     "nonideal", "arch", "data_seed", "train_seed", "dist", "n_samples", "epochs", "batch",
-    "lr_base", "golden", "adc_bits", "tile",
+    "lr_base", "golden", "adc_bits", "tile", "v_read", "t_sense_ns",
 ];
 
 /// One expanded grid point: the concrete spec plus the `(axis, tag)`
@@ -207,6 +237,8 @@ impl SweepAxes {
             self.golden.iter().map(|&g| AxisValue::Golden(g)).collect(),
             self.adc_bits.iter().map(|&b| AxisValue::AdcBits(b)).collect(),
             self.tile.iter().map(|&r| AxisValue::Tile(r)).collect(),
+            self.v_read.iter().map(|&v| AxisValue::VRead(v)).collect(),
+            self.t_sense_ns.iter().map(|&t| AxisValue::TSenseNs(t)).collect(),
         ]
     }
 
@@ -349,6 +381,12 @@ impl SweepAxes {
         if !self.tile.is_empty() {
             pairs.push(("tile", Json::arr_usize(&self.tile)));
         }
+        if !self.v_read.is_empty() {
+            pairs.push(("v_read", Json::arr_f64(&self.v_read)));
+        }
+        if !self.t_sense_ns.is_empty() {
+            pairs.push(("t_sense_ns", Json::arr_f64(&self.t_sense_ns)));
+        }
         Json::obj(pairs)
     }
 
@@ -442,6 +480,16 @@ impl SweepAxes {
         }
         axes.adc_bits = usizes(j, "adc_bits")?.into_iter().map(|b| b as u32).collect();
         axes.tile = usizes(j, "tile")?;
+        for (key, dst) in
+            [("v_read", &mut axes.v_read), ("t_sense_ns", &mut axes.t_sense_ns)]
+        {
+            for entry in arr(j, key)? {
+                let v = entry.as_f64().filter(|v| v.is_finite() && *v > 0.0).ok_or_else(
+                    || anyhow::anyhow!("sweep: '{key}' entries must be positive numbers"),
+                )?;
+                dst.push(v);
+            }
+        }
         Ok(axes)
     }
 }
@@ -541,6 +589,35 @@ mod tests {
     }
 
     #[test]
+    fn power_axes_tag_and_edit_the_resolved_block() {
+        let mut axes = SweepAxes::default();
+        axes.v_read = vec![0.1, 0.2];
+        axes.t_sense_ns = vec![100.0, 200.0];
+        let points = axes.expand(&base()).unwrap();
+        let names: Vec<&str> = points.iter().map(|p| p.spec.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["b-vr0.1-ts100", "b-vr0.1-ts200", "b-vr0.2-ts100", "b-vr0.2-ts200"]
+        );
+        // The base spec had no explicit block; the axes materialize the
+        // variant's canonical one and edit only their field (nanosecond
+        // tags land as seconds).
+        let blk = points[2].spec.block.as_ref().unwrap();
+        assert_eq!(blk.v_read, 0.2);
+        assert!((blk.t_sense - 100e-9).abs() < 1e-18);
+        assert_eq!(blk.rows, BlockConfig::small().rows);
+        // A swept nonideal scenario survives block materialization: the
+        // resolved block still carries the override.
+        let mut axes = SweepAxes::default();
+        axes.nonideal = vec![("mild".into(), NonIdealSpec::preset("mild").unwrap())];
+        axes.v_read = vec![0.3];
+        let points = axes.expand(&base()).unwrap();
+        let resolved = points[0].spec.resolved_block().unwrap();
+        assert_eq!(resolved.v_read, 0.3);
+        assert_eq!(resolved.nonideal, NonIdealSpec::preset("mild").unwrap());
+    }
+
+    #[test]
     fn name_collisions_and_empty_grid_rejected() {
         let axes = SweepAxes::default();
         assert!(axes.expand(&base()).is_err());
@@ -578,6 +655,8 @@ mod tests {
         axes.golden = vec![true, false];
         axes.adc_bits = vec![0, 4, 8];
         axes.tile = vec![8, 32];
+        axes.v_read = vec![0.1, 0.25];
+        axes.t_sense_ns = vec![100.0, 400.0];
         let back = SweepAxes::from_json(&axes.to_json()).unwrap();
         assert_eq!(back, axes);
         // Preset entries serialize compactly, custom ones in full form.
@@ -597,6 +676,10 @@ mod tests {
         let j = crate::util::json_parse(r#"{"data_seed": [1.5]}"#).unwrap();
         assert!(SweepAxes::from_json(&j).is_err());
         let j = crate::util::json_parse(r#"{"dist": ["gauss"]}"#).unwrap();
+        assert!(SweepAxes::from_json(&j).is_err());
+        let j = crate::util::json_parse(r#"{"v_read": [0.0]}"#).unwrap();
+        assert!(SweepAxes::from_json(&j).is_err());
+        let j = crate::util::json_parse(r#"{"t_sense_ns": ["fast"]}"#).unwrap();
         assert!(SweepAxes::from_json(&j).is_err());
     }
 

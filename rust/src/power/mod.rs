@@ -1,0 +1,412 @@
+//! Per-op energy and settling-time accounting — the physical quantities
+//! behind the energy/latency surrogate heads.
+//!
+//! SEMULATOR's emulator predicts whatever the golden circuit produces; to
+//! make it answer architecture-exploration questions (energy per MAC,
+//! settling latency) those quantities have to exist on the golden path
+//! first. This module provides them in three layers:
+//!
+//! * **Instantaneous physics** — [`dissipated_power`] evaluates the
+//!   closed-form `Σ V²·G` dissipation of every passive device in a
+//!   [`Circuit`] under a solved unknown vector, and [`source_power`] the
+//!   power delivered by the sources; on any DC operating point the two
+//!   balance to numerical precision (pinned by a proptest for both the
+//!   dense and sparse MNA backends).
+//! * **Transient accumulation** — [`PowerAccum`] rides the fixed-step
+//!   transient loop ([`crate::spice::transient`] threads it through when
+//!   [`TranOptions::power`](crate::spice::TranOptions) is set),
+//!   integrating `Σ V²·G·Δt` with the same right-endpoint rule as the
+//!   backward-Euler step itself and tracking the last step at which any
+//!   node voltage still moved more than the tolerance band — the
+//!   settling-time estimate. The result is a [`PowerReport`] per golden
+//!   solve.
+//! * **Closed-form fast path** — [`estimate_fast`] mirrors the golden
+//!   accounting for the structured solver (`E ≈ Σ v_read²·g·t_sense`
+//!   with gate-drive scaling, settling from the slowest bitline RC), so
+//!   ideal/fast executors report energy without a netlist in sight.
+//!
+//! [`label_scales`] defines the normalization used when these quantities
+//! become dataset label columns (datagen appends `[energy, t_settle]`
+//! after the MAC outputs; the multi-head trainer regresses all three).
+//! [`record_golden`] / [`record_fast`] quantize reports onto the global
+//! obs counters (`golden_energy_fj`, `settling_ps`, `fast_energy_fj`) so
+//! campaigns and `semulator stats` can aggregate them deterministically.
+
+use crate::spice::devices::{mos_eval, switch_g};
+use crate::spice::{Circuit, Device};
+use crate::util::Json;
+use crate::xbar::{BlockConfig, CellInputs};
+
+/// Number of auxiliary label columns appended by power-aware datagen
+/// (`energy`, `t_settle`), and of extra output heads on a power-extended
+/// regression network.
+pub const POWER_HEADS: usize = 2;
+
+/// Knobs for transient power/settling accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerOptions {
+    /// Settling tolerance band (V): the settling time is the last accepted
+    /// timepoint at which any node voltage moved more than this within one
+    /// step. At the fixed steps the crossbar blocks use, per-step movement
+    /// is a faithful convergence proxy.
+    pub settle_band: f64,
+}
+
+impl Default for PowerOptions {
+    fn default() -> Self {
+        Self { settle_band: 1e-4 }
+    }
+}
+
+/// Energy and settling estimate of one solve (golden or fast path).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerReport {
+    /// Energy dissipated in passive devices over the solve window (J).
+    pub energy: f64,
+    /// Settling-time estimate (s); `0.0` means settled from the start.
+    pub t_settle: f64,
+    /// Mean dissipated power over the window (W).
+    pub p_avg: f64,
+}
+
+impl PowerReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("energy", Json::Num(self.energy)),
+            ("t_settle", Json::Num(self.t_settle)),
+            ("p_avg", Json::Num(self.p_avg)),
+        ])
+    }
+}
+
+/// Instantaneous power dissipated by every passive device under unknown
+/// vector `x` at time `t` (W).
+///
+/// Resistors and switches contribute `V²·G`; diodes, RRAM cells and
+/// MOSFETs contribute `I(V)·V` from the same device-model evaluations the
+/// MNA stamps use. Capacitors store rather than dissipate, and sources /
+/// controlled sources are active elements counted by [`source_power`].
+pub fn dissipated_power(ckt: &Circuit, x: &[f64], t: f64) -> f64 {
+    use crate::spice::node_v;
+    let mut p_total = 0.0f64;
+    for dev in &ckt.devices {
+        match dev {
+            Device::Resistor { p, n, r } => {
+                let v = node_v(x, *p) - node_v(x, *n);
+                p_total += v * v / r;
+            }
+            Device::Switch { p, n, g_on, g_off, on } => {
+                let v = node_v(x, *p) - node_v(x, *n);
+                p_total += v * v * switch_g(*g_on, *g_off, on, t);
+            }
+            Device::Diode { p, n, model } => {
+                let v = node_v(x, *p) - node_v(x, *n);
+                let (i, _) = model.eval(v);
+                p_total += i * v;
+            }
+            Device::Rram { p, n, model } => {
+                let v = node_v(x, *p) - node_v(x, *n);
+                let (i, _) = model.eval(v);
+                p_total += i * v;
+            }
+            Device::Mosfet { d, g, s, model } => {
+                let vd = node_v(x, *d);
+                let vg = node_v(x, *g);
+                let vs = node_v(x, *s);
+                let op = mos_eval(model, vd, vg, vs);
+                p_total += op.id * (vd - vs);
+            }
+            Device::MosfetFg { d, s, vg, model } => {
+                let vd = node_v(x, *d);
+                let vs = node_v(x, *s);
+                let op = mos_eval(model, vd, *vg, vs);
+                p_total += op.id * (vd - vs);
+            }
+            // Storage and active elements: not dissipation.
+            Device::Capacitor { .. }
+            | Device::VSource { .. }
+            | Device::ISource { .. }
+            | Device::Vccs { .. } => {}
+        }
+    }
+    p_total
+}
+
+/// Instantaneous power delivered by the circuit's sources under unknown
+/// vector `x` at time `t` (W).
+///
+/// Voltage sources read their branch current out of the MNA unknown
+/// vector (ordered after the node voltages, in device order); current and
+/// controlled sources deliver `I·(v_n − v_p)` by the `p→n` through-device
+/// sign convention. On a resistive DC operating point this equals
+/// [`dissipated_power`] exactly (Tellegen's theorem).
+pub fn source_power(ckt: &Circuit, x: &[f64], t: f64) -> f64 {
+    use crate::spice::node_v;
+    let branch_base = ckt.n_nodes() - 1;
+    let mut branch = 0usize;
+    let mut p_total = 0.0f64;
+    for dev in &ckt.devices {
+        match dev {
+            Device::VSource { p, n, .. } => {
+                let i = x[branch_base + branch];
+                // Branch current is positive *into* the + terminal, so the
+                // source delivers -v_pn * i (1 V across 1 kOhm solves to
+                // i = -1 mA and delivers +1 mW).
+                p_total -= (node_v(x, *p) - node_v(x, *n)) * i;
+                branch += 1;
+            }
+            Device::ISource { p, n, wave } => {
+                let i = wave.at(t);
+                p_total += i * (node_v(x, *n) - node_v(x, *p));
+            }
+            Device::Vccs { p, n, cp, cn, gm } => {
+                let i = gm * (node_v(x, *cp) - node_v(x, *cn));
+                p_total += i * (node_v(x, *n) - node_v(x, *p));
+            }
+            _ => {}
+        }
+    }
+    p_total
+}
+
+/// Static power report of a DC operating point held for `t_hold` seconds.
+pub fn dc_power_report(ckt: &Circuit, x: &[f64], t_hold: f64) -> PowerReport {
+    let p = dissipated_power(ckt, x, 0.0);
+    PowerReport { energy: p * t_hold, t_settle: 0.0, p_avg: p }
+}
+
+/// Running energy/settling accumulator for the transient loop.
+///
+/// [`crate::spice::transient`] owns one of these when
+/// `TranOptions::power` is set and calls [`Self::step`] once per accepted
+/// timepoint with the committed unknown vector.
+#[derive(Debug, Clone)]
+pub struct PowerAccum {
+    opts: PowerOptions,
+    /// Node-voltage unknown count (settling watches only these, not the
+    /// voltage-source branch currents).
+    n_v: usize,
+    energy: f64,
+    t_settle: f64,
+    prev_v: Vec<f64>,
+    primed: bool,
+}
+
+impl PowerAccum {
+    pub fn new(ckt: &Circuit, opts: PowerOptions) -> Self {
+        let n_v = ckt.n_nodes() - 1;
+        Self { opts, n_v, energy: 0.0, t_settle: 0.0, prev_v: vec![0.0; n_v], primed: false }
+    }
+
+    /// Record the initial point (t = 0) without integrating energy.
+    pub fn prime(&mut self, x: &[f64]) {
+        self.prev_v.copy_from_slice(&x[..self.n_v]);
+        self.primed = true;
+    }
+
+    /// Account one accepted step of width `h` ending at time `t` with
+    /// committed unknown vector `x`.
+    pub fn step(&mut self, ckt: &Circuit, h: f64, t: f64, x: &[f64]) {
+        // Right-endpoint rule, consistent with the backward-Euler step
+        // that produced `x`.
+        self.energy += dissipated_power(ckt, x, t) * h;
+        let mut max_dv = 0.0f64;
+        for (i, prev) in self.prev_v.iter_mut().enumerate() {
+            max_dv = max_dv.max((x[i] - *prev).abs());
+            *prev = x[i];
+        }
+        // An unprimed accumulator treats the first step's full swing as
+        // movement, which is the conservative choice.
+        if !self.primed || max_dv > self.opts.settle_band {
+            self.t_settle = t;
+        }
+        self.primed = true;
+    }
+
+    pub fn finish(self, t_total: f64) -> PowerReport {
+        let p_avg = if t_total > 0.0 { self.energy / t_total } else { 0.0 };
+        PowerReport { energy: self.energy, t_settle: self.t_settle, p_avg }
+    }
+}
+
+/// Closed-form fast-path estimate matching the golden accounting in
+/// spirit: per-cell read power `v_read²·g` scaled by the normalized gate
+/// drive (a cut-off access transistor passes no current), integrated over
+/// the sense window; settling from the slowest bitline RC (3τ, capped at
+/// the window) against the output stage RC.
+///
+/// Callers are expected to pass *non-ideality-perturbed* cell inputs
+/// (`FastSolver::estimate_power` applies the frozen transform first) so
+/// fast and golden energy labels see the same device corner.
+pub fn estimate_fast(cfg: &BlockConfig, x: &CellInputs) -> PowerReport {
+    let n = cfg.n_cells();
+    assert_eq!(x.v.len(), n, "cell input length");
+    assert_eq!(x.g.len(), n, "cell conductance length");
+    let v2 = cfg.v_read * cfg.v_read;
+    let mut p_total = 0.0f64;
+    let mut g_col = vec![0.0f64; cfg.cols];
+    for k in 0..n {
+        let drive = (x.v[k] / cfg.v_gate_max).clamp(0.0, 1.0);
+        let g_eff = x.g[k] * drive;
+        p_total += v2 * g_eff;
+        g_col[k % cfg.cols] += g_eff;
+    }
+    let energy = p_total * cfg.t_sense;
+    // Slowest column: sense cap against the column's total conductance.
+    let mut tau_max = cfg.periph.r_load * cfg.periph.c_load;
+    for &g in &g_col {
+        let tau = if g > 0.0 { cfg.periph.c_sense / g } else { f64::INFINITY };
+        tau_max = tau_max.max(tau);
+    }
+    let t_settle = (3.0 * tau_max).min(cfg.t_sense);
+    PowerReport { energy, t_settle, p_avg: p_total }
+}
+
+/// Label normalization scales `(e_scale, t_scale)` for power-aware
+/// datasets: energy columns are stored as `energy / e_scale`, settling
+/// columns as `t_settle / t_scale`, keeping the auxiliary heads in the
+/// same O(1) range as the MAC voltage targets. The scales are pure
+/// functions of the block config, so labels stay worker-invariant and
+/// physical units recover exactly from the meta sidecar.
+pub fn label_scales(cfg: &BlockConfig) -> (f64, f64) {
+    let e_scale =
+        (cfg.v_read * cfg.v_read * cfg.cell.g_max * cfg.n_cells() as f64 * cfg.t_sense).max(1e-30);
+    (e_scale, cfg.t_sense)
+}
+
+/// Quantize a golden-path report onto the global obs counters
+/// (femtojoules / picoseconds — integer, deterministic, summable).
+pub fn record_golden(r: &PowerReport) {
+    crate::obs::counters::add_golden_energy_fj((r.energy * 1e15).round().max(0.0) as u64);
+    crate::obs::counters::add_settling_ps((r.t_settle * 1e12).round().max(0.0) as u64);
+}
+
+/// Quantize a fast-path estimate onto the global obs counters.
+pub fn record_fast(r: &PowerReport) {
+    crate::obs::counters::add_fast_energy_fj((r.energy * 1e15).round().max(0.0) as u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spice::{dc_op, transient, NrOptions, TranOptions, Waveform, GND};
+
+    #[test]
+    fn dc_divider_balances_exactly() {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let b = c.node("b");
+        c.vdc(a, GND, 2.0).resistor(a, b, 1e3).resistor(b, GND, 1e3);
+        let x = dc_op(&c, &NrOptions::default()).unwrap();
+        let diss = dissipated_power(&c, &x, 0.0);
+        let src = source_power(&c, &x, 0.0);
+        // 2 V across 2 kOhm total: 2 mW.
+        assert!((diss - 2e-3).abs() < 1e-12, "diss {diss}");
+        assert!((src - diss).abs() < 1e-12, "source {src} vs dissipated {diss}");
+        let rep = dc_power_report(&c, &x, 1e-6);
+        assert!((rep.energy - 2e-9).abs() < 1e-18);
+        assert_eq!(rep.t_settle, 0.0);
+    }
+
+    #[test]
+    fn isource_and_vccs_deliver() {
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        c.isource(GND, a, Waveform::Dc(1e-3)).resistor(a, GND, 1e3);
+        let x = dc_op(&c, &NrOptions::default()).unwrap();
+        assert!((source_power(&c, &x, 0.0) - 1e-3).abs() < 1e-12);
+        assert!((dissipated_power(&c, &x, 0.0) - 1e-3).abs() < 1e-12);
+
+        let mut c = Circuit::new();
+        let vin = c.node("in");
+        let out = c.node("out");
+        c.vdc(vin, GND, 0.5);
+        c.vccs(out, GND, vin, GND, 1e-3).resistor(out, GND, 1e3);
+        let x = dc_op(&c, &NrOptions::default()).unwrap();
+        // The VCCS drives -0.5 V into 1k (0.25 mW); the input vsource
+        // sources no current, so total delivery equals the dissipation.
+        let diss = dissipated_power(&c, &x, 0.0);
+        let src = source_power(&c, &x, 0.0);
+        assert!((diss - 0.25e-3).abs() < 1e-12, "diss {diss}");
+        assert!((src - diss).abs() < 1e-12, "src {src}");
+    }
+
+    #[test]
+    fn nonlinear_dc_balance_within_gmin_slop() {
+        use crate::spice::DiodeModel;
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let k = c.node("k");
+        c.vdc(a, GND, 5.0).resistor(a, k, 1e3).diode(k, GND, DiodeModel::default());
+        let x = dc_op(&c, &NrOptions::default()).unwrap();
+        let diss = dissipated_power(&c, &x, 0.0);
+        let src = source_power(&c, &x, 0.0);
+        // gmin leaks carry ~1e-12 S worth of current; the balance holds to
+        // well under a ppm of the ~20 mW flowing.
+        assert!((src - diss).abs() < 1e-9 * src.abs().max(1.0), "{src} vs {diss}");
+    }
+
+    #[test]
+    fn transient_rc_energy_and_settling() {
+        // RC charge-up: after >> 5 tau, the resistor has dissipated
+        // C V^2 / 2 (equal to the energy stored on the cap) and every node
+        // has stopped moving well before t_stop.
+        let mut c = Circuit::new();
+        let a = c.node("a");
+        let b = c.node("b");
+        c.vdc(a, GND, 1.0).resistor(a, b, 1e3).capacitor(b, GND, 1e-9); // tau = 1 us
+        let mut opts = TranOptions::new(20e-6, 2e-8);
+        opts.uic = true;
+        opts.power = Some(PowerOptions::default());
+        let res = transient(&c, &opts, &NrOptions::default()).unwrap();
+        let rep = res.power.expect("power accounting requested");
+        let expect = 0.5 * 1e-9 * 1.0; // C V^2 / 2
+        assert!(
+            (rep.energy - expect).abs() < 0.05 * expect,
+            "energy {} vs CV^2/2 {expect}",
+            rep.energy
+        );
+        assert!(rep.t_settle > 0.0 && rep.t_settle < 15e-6, "t_settle {}", rep.t_settle);
+        assert!(rep.p_avg > 0.0);
+        // Without the option the report is absent and results identical.
+        let mut plain = TranOptions::new(20e-6, 2e-8);
+        plain.uic = true;
+        let res2 = transient(&c, &plain, &NrOptions::default()).unwrap();
+        assert!(res2.power.is_none());
+        assert_eq!(res.x_final, res2.x_final, "accounting perturbed the solve");
+    }
+
+    #[test]
+    fn fast_estimate_scales_with_drive_and_conductance() {
+        let cfg = BlockConfig::small();
+        let zero = CellInputs::zeros(&cfg);
+        let quiet = estimate_fast(&cfg, &zero);
+        assert_eq!(quiet.energy, 0.0, "no gate drive, no read current");
+        let mut on = CellInputs::zeros(&cfg);
+        for k in 0..cfg.n_cells() {
+            on.v[k] = cfg.v_gate_max;
+            on.g[k] = cfg.cell.g_max;
+        }
+        let loud = estimate_fast(&cfg, &on);
+        let expect = cfg.v_read * cfg.v_read
+            * cfg.cell.g_max
+            * cfg.n_cells() as f64
+            * cfg.t_sense;
+        assert!((loud.energy - expect).abs() < 1e-12 * expect.max(1.0), "{}", loud.energy);
+        assert!(loud.t_settle > 0.0 && loud.t_settle <= cfg.t_sense);
+        assert!(loud.t_settle <= quiet.t_settle.max(cfg.t_sense));
+        // Energy normalizes to <= 1 under the label scale by construction.
+        let (e_scale, t_scale) = label_scales(&cfg);
+        assert!(loud.energy / e_scale <= 1.0 + 1e-12);
+        assert!(loud.t_settle / t_scale <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn report_json_has_stable_keys() {
+        let rep = PowerReport { energy: 1.5e-12, t_settle: 4.2e-8, p_avg: 7.5e-6 };
+        let j = crate::util::json_parse(&rep.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("energy").unwrap().as_f64(), Some(1.5e-12));
+        assert_eq!(j.get("t_settle").unwrap().as_f64(), Some(4.2e-8));
+        assert_eq!(j.get("p_avg").unwrap().as_f64(), Some(7.5e-6));
+    }
+}

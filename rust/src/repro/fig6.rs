@@ -6,7 +6,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::coordinator::{train, LrSchedule, TrainConfig};
+use crate::coordinator::{LrSchedule, PjrtTrainer, TrainConfig, Trainer};
 use crate::runtime::ArtifactStore;
 
 use super::helpers::{dataset_cached, ExpReport, Preset};
@@ -41,7 +41,7 @@ pub fn run(store: &ArtifactStore, work: &Path, opts: &Fig6Options) -> Result<Exp
         cfg.lr = LrSchedule::paper_scaled(opts.preset.lr, opts.preset.epochs);
         cfg.seed = opts.preset.seed;
         cfg.eval_every = 0;
-        let (_, report) = train(store, &cfg, &train_ds, &test_ds, |row| {
+        let (_, report) = PjrtTrainer::new(store).train(&cfg, &train_ds, &test_ds, &mut |row| {
             if opts.verbose && row.epoch % 20 == 0 {
                 eprintln!("  n={n} epoch {:>4} train {:.3e}", row.epoch, row.train_loss);
             }

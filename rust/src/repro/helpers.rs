@@ -5,7 +5,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{train, TrainConfig, TrainReport};
+use crate::coordinator::{PjrtTrainer, TrainConfig, TrainReport, Trainer};
 use crate::datagen::{generate_to, Dataset, GenConfig};
 use crate::model::ModelState;
 use crate::runtime::{lit_f32, read_f32, ArtifactStore};
@@ -79,7 +79,7 @@ pub fn train_cached(
     cfg.seed = preset.seed;
     cfg.eval_every = (preset.epochs / 20).max(1);
     cfg.ckpt_out = Some(ckpt);
-    let (state, report) = train(store, &cfg, &train_ds, &test_ds, |row| {
+    let (state, report) = PjrtTrainer::new(store).train(&cfg, &train_ds, &test_ds, &mut |row| {
         if verbose && (row.epoch % 10 == 0 || row.test_loss.is_some()) {
             eprintln!(
                 "  epoch {:>4}  lr {:.2e}  train {:.3e}  test {}",

@@ -8,6 +8,7 @@
 use super::dc::{nr_solve, node_v, CapMode, Method, NrOptions, SpiceError, TranState, Workspace};
 use super::devices::{Device, NodeId};
 use super::netlist::Circuit;
+use crate::power::{PowerAccum, PowerOptions, PowerReport};
 
 /// Transient run configuration.
 #[derive(Debug, Clone)]
@@ -22,11 +23,22 @@ pub struct TranOptions {
     pub uic: bool,
     /// Node voltages to record at every accepted step.
     pub record: Vec<NodeId>,
+    /// When set, accumulate dissipated energy and a settling-time estimate
+    /// over the run into [`TranResult::power`]. Accounting is read-only:
+    /// the solve sequence and results are bit-identical either way.
+    pub power: Option<PowerOptions>,
 }
 
 impl TranOptions {
     pub fn new(t_stop: f64, h: f64) -> Self {
-        Self { t_stop, h, method: Method::BackwardEuler, uic: false, record: Vec::new() }
+        Self {
+            t_stop,
+            h,
+            method: Method::BackwardEuler,
+            uic: false,
+            record: Vec::new(),
+            power: None,
+        }
     }
 }
 
@@ -41,6 +53,8 @@ pub struct TranResult {
     pub x_final: Vec<f64>,
     /// Total Newton iterations across all steps (solver-cost metric).
     pub nr_iters: usize,
+    /// Energy/settling accounting, present iff [`TranOptions::power`] was set.
+    pub power: Option<PowerReport>,
 }
 
 impl TranResult {
@@ -133,6 +147,11 @@ pub fn transient(ckt: &Circuit, opts: &TranOptions, nr: &NrOptions) -> Result<Tr
         }
     };
     record(0.0, &x, &mut times, &mut traces);
+    let mut power = opts.power.map(|popts| {
+        let mut acc = PowerAccum::new(ckt, popts);
+        acc.prime(&x);
+        acc
+    });
 
     let mut t = 0.0f64;
     let mut first_step = true;
@@ -184,9 +203,13 @@ pub fn transient(ckt: &Circuit, opts: &TranOptions, nr: &NrOptions) -> Result<Tr
         }
         t = t_next;
         record(t, &x, &mut times, &mut traces);
+        if let Some(acc) = power.as_mut() {
+            acc.step(ckt, h_eff, t, &x);
+        }
     }
 
-    Ok(TranResult { times, traces, x_final: x, nr_iters })
+    let power = power.map(|acc| acc.finish(opts.t_stop));
+    Ok(TranResult { times, traces, x_final: x, nr_iters, power })
 }
 
 #[cfg(test)]

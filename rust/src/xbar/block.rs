@@ -13,6 +13,7 @@
 //! a perturbed `AnalogBlock` is the "perturbed golden block" the router's
 //! shadow path and the robustness-eval CLI check the emulator against.
 
+use crate::power::{PowerOptions, PowerReport};
 use crate::spice::{transient, NrOptions, SolverChoice, SpiceError, TranOptions};
 
 use super::array::build_block;
@@ -69,6 +70,40 @@ impl AnalogBlock {
         Ok((0..net.outputs.len()).map(|k| res.final_value(k)).collect())
     }
 
+    /// [`Self::simulate_golden_with`] plus per-solve energy/settling
+    /// accounting: the transient loop integrates `Σ V²·G·Δt` over every
+    /// accepted step and tracks the tolerance-band settling time. The MAC
+    /// outputs are bit-identical to the unaccounted solve; the
+    /// [`PowerReport`] also lands on the `golden_energy_fj`/`settling_ps`
+    /// obs counters.
+    pub fn simulate_golden_power(
+        &self,
+        x: &CellInputs,
+        solver: SolverChoice,
+    ) -> Result<(Vec<f64>, PowerReport), SpiceError> {
+        let _sp = crate::obs::span("xbar.golden_mna_power");
+        crate::obs::counters::add_golden_solves(1);
+        let cfg = self.config();
+        let xr = self.fast.apply_nonideal(x);
+        let net = build_block(cfg, &xr);
+        let mut opts = TranOptions::new(cfg.t_sense, cfg.h);
+        opts.uic = true;
+        opts.record = net.outputs.clone();
+        opts.power = Some(PowerOptions::default());
+        let nr = NrOptions { reltol: 1e-9, vabstol: 1e-12, solver, ..NrOptions::default() };
+        let res = transient(&net.circuit, &opts, &nr)?;
+        let report = res.power.expect("power accounting was requested");
+        crate::power::record_golden(&report);
+        let outs = (0..net.outputs.len()).map(|k| res.final_value(k)).collect();
+        Ok((outs, report))
+    }
+
+    /// Closed-form fast-path energy/settling estimate under the frozen
+    /// non-ideal transform (see [`FastSolver::estimate_power`]).
+    pub fn estimate_power(&self, x: &CellInputs) -> PowerReport {
+        self.fast.estimate_power(x)
+    }
+
     /// Number of outputs (MAC units).
     pub fn n_outputs(&self) -> usize {
         self.config().n_mac()
@@ -117,6 +152,26 @@ mod tests {
                 assert!(o.is_finite());
             }
         }
+    }
+
+    #[test]
+    fn golden_power_matches_plain_solve_and_balances() {
+        use crate::spice::SolverChoice;
+        let mut rng = Rng::seed_from(777);
+        let cfg = BlockConfig::with_dims(1, 4, 2);
+        let block = AnalogBlock::new(cfg.clone()).unwrap();
+        let x = random_inputs(&cfg, &mut rng);
+        let plain = block.simulate_golden(&x).unwrap();
+        let (outs, rep) = block.simulate_golden_power(&x, SolverChoice::Auto).unwrap();
+        assert_eq!(outs, plain, "accounting must not perturb the solve");
+        assert!(rep.energy > 0.0 && rep.energy.is_finite(), "energy {}", rep.energy);
+        assert!(rep.t_settle >= 0.0 && rep.t_settle <= cfg.t_sense, "t_settle {}", rep.t_settle);
+        assert!(rep.p_avg > 0.0);
+        // Dense and sparse backends account identically on this circuit.
+        let (_, dense) = block.simulate_golden_power(&x, SolverChoice::Dense).unwrap();
+        let (_, sparse) = block.simulate_golden_power(&x, SolverChoice::Sparse).unwrap();
+        assert!((dense.energy - sparse.energy).abs() <= 1e-9 * dense.energy.abs().max(1e-30));
+        assert!((dense.t_settle - sparse.t_settle).abs() <= cfg.h * 1e-6);
     }
 
     #[test]

@@ -139,6 +139,18 @@ impl FastSolver {
         }
     }
 
+    /// Closed-form per-op energy/settling estimate under the same frozen
+    /// non-ideal transform as [`Self::simulate`] — no transient loop,
+    /// O(cells) (see [`crate::power::estimate_fast`] for the model). The
+    /// estimate also lands on the `fast_energy_fj` obs counter, so
+    /// ideal/fast executors report energy alongside the golden path.
+    pub fn estimate_power(&self, x: &CellInputs) -> crate::power::PowerReport {
+        let xr = self.apply_nonideal(x);
+        let rep = crate::power::estimate_fast(&self.cfg, &xr);
+        crate::power::record_fast(&rep);
+        rep
+    }
+
     /// Simulate the block's sense transient and return the MAC output
     /// voltages at `t_sense` (same backward-Euler discretization as the
     /// generic engine with `uic = true`). Applies the config's frozen

@@ -12,8 +12,8 @@ use std::sync::Arc;
 
 use semulator::api::{Deployment, MacRequest, VariantDef};
 use semulator::coordinator::{
-    evaluate_state, train, BatcherConfig, EmulatorService, LrSchedule, Metrics, Policy, Route,
-    Router, Server, TrainConfig,
+    evaluate_state, BatcherConfig, EmulatorService, LrSchedule, Metrics, PjrtTrainer, Policy,
+    Route, Router, Server, TrainConfig, Trainer,
 };
 use semulator::datagen::{generate, GenConfig, SampleDist};
 use semulator::infer::{Arch, BackendKind, NativeEngine};
@@ -55,7 +55,8 @@ fn train_on_real_spice_data_reduces_loss() {
     let mut cfg = TrainConfig::new("small", 8);
     cfg.lr = LrSchedule { base: 2e-3, halve_at: vec![6] };
     cfg.eval_every = 0;
-    let (state, report) = train(&store, &cfg, &train_ds, &test_ds, |_| {}).unwrap();
+    let (state, report) =
+        PjrtTrainer::new(&store).train(&cfg, &train_ds, &test_ds, &mut |_| {}).unwrap();
     let first = report.history.first().unwrap().train_loss;
     let last = report.final_train_loss;
     assert!(last < first, "loss did not decrease: {first} -> {last}");

@@ -7,7 +7,8 @@ use semulator::infer::{reference, Arch, Layer, NativeEngine, NativeTrainer};
 use semulator::model::ModelState;
 use semulator::runtime::PjrtBackend;
 use semulator::spice::matrix::{solve, DMat};
-use semulator::spice::{dc_op, node_v, Circuit, NrOptions, RramModel, Waveform, GND};
+use semulator::power::{dc_power_report, dissipated_power, source_power};
+use semulator::spice::{dc_op, node_v, Circuit, NrOptions, RramModel, SolverChoice, Waveform, GND};
 use semulator::stats::{erf, erfinv};
 use semulator::util::{json_parse, Json, Rng};
 use semulator::xbar::{AnalogBlock, BlockConfig, NonIdealSpec};
@@ -70,6 +71,48 @@ fn prop_linear_circuit_superposition() {
         for (a, b) in v1.iter().zip(v2.iter()) {
             assert!((2.0 * a - b).abs() < 1e-9, "case {case}: superposition {a} vs {b}");
         }
+    }
+}
+
+/// Property: on the DC operating point of a random resistive ladder/mesh,
+/// the power delivered by the sources equals the `Σ V²·G` dissipation in
+/// the resistors (Tellegen's theorem) to 1e-9 relative — and the dense
+/// and sparse MNA backends pin the identical power report.
+#[test]
+fn prop_dc_power_balance_dense_sparse() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from(15_000 + case);
+        let n_nodes = 2 + rng.below(10);
+        let mut c = Circuit::new();
+        let nodes: Vec<_> = (0..n_nodes).map(|i| c.node(&format!("n{i}"))).collect();
+        c.vdc(nodes[0], GND, rng.range(0.1, 5.0));
+        // Random mesh, connectivity guaranteed as in the superposition
+        // property above.
+        for (i, &n) in nodes.iter().enumerate().skip(1) {
+            let prev = nodes[rng.below(i)];
+            c.resistor(prev, n, rng.range(1e2, 1e5));
+            c.resistor(n, GND, rng.range(1e3, 1e6));
+        }
+        let mut reports = Vec::new();
+        for solver in [SolverChoice::Dense, SolverChoice::Sparse] {
+            let x = dc_op(&c, &NrOptions { solver, ..NrOptions::default() })
+                .unwrap_or_else(|e| panic!("case {case} {solver:?}: {e}"));
+            let diss = dissipated_power(&c, &x, 0.0);
+            let src = source_power(&c, &x, 0.0);
+            assert!(diss > 0.0, "case {case} {solver:?}: a driven mesh must dissipate");
+            assert!(
+                (src - diss).abs() <= 1e-9 * diss,
+                "case {case} {solver:?}: source {src} vs dissipated {diss}"
+            );
+            reports.push(dc_power_report(&c, &x, 1e-6));
+        }
+        let (d, s) = (&reports[0], &reports[1]);
+        assert!(
+            (d.energy - s.energy).abs() <= 1e-9 * d.energy.abs()
+                && (d.p_avg - s.p_avg).abs() <= 1e-9 * d.p_avg.abs(),
+            "case {case}: dense {d:?} vs sparse {s:?}"
+        );
+        assert_eq!(d.t_settle, 0.0, "case {case}: DC report settles immediately");
     }
 }
 

@@ -1,0 +1,97 @@
+//! Every checked-in spec under `examples/specs/` must parse, validate,
+//! and survive a JSON round trip through the type it documents — the
+//! examples are the schema's living documentation, so a schema change
+//! that orphans one of them fails here instead of at a user's shell.
+
+use std::path::{Path, PathBuf};
+
+use semulator::nn::NnSpec;
+use semulator::pipeline::{spec_hash, CampaignSpec, ExperimentSpec};
+
+fn spec_files() -> Vec<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/specs");
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("read {}: {e}", dir.display()))
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("json"))
+        .collect();
+    files.sort();
+    files
+}
+
+#[test]
+fn every_example_spec_parses_and_roundtrips() {
+    let files = spec_files();
+    assert!(files.len() >= 6, "expected the checked-in specs, found {files:?}");
+    let (mut campaigns, mut experiments, mut power_specs) = (0, 0, 0);
+    for path in &files {
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let text = std::fs::read_to_string(path).unwrap();
+        let j = semulator::util::json_parse(&text)
+            .unwrap_or_else(|e| panic!("{name}: not JSON: {e}"));
+        if j.get("axes").is_some() {
+            // Campaign spec: parse (which validates, including grid
+            // expansion) and round-trip exactly.
+            let spec = CampaignSpec::from_str(&text)
+                .unwrap_or_else(|e| panic!("{name}: campaign parse: {e:#}"));
+            let back = CampaignSpec::from_str(&spec.to_json().to_string_pretty())
+                .unwrap_or_else(|e| panic!("{name}: campaign re-parse: {e:#}"));
+            assert_eq!(back, spec, "{name}: campaign round trip");
+            if spec.base.power.is_some() {
+                power_specs += 1;
+            }
+            campaigns += 1;
+        } else if j.get("data").is_some() || j.get("train").is_some() {
+            // Experiment spec: round-trip must preserve the resume token
+            // (the content hash campaigns match run dirs against).
+            let spec = ExperimentSpec::from_str(&text)
+                .unwrap_or_else(|e| panic!("{name}: experiment parse: {e:#}"));
+            let back = ExperimentSpec::from_str(&spec.to_json().to_string_pretty())
+                .unwrap_or_else(|e| panic!("{name}: experiment re-parse: {e:#}"));
+            assert_eq!(back, spec, "{name}: experiment round trip");
+            assert_eq!(spec_hash(&back), spec_hash(&spec), "{name}: spec_hash stability");
+            if spec.power.is_some() {
+                power_specs += 1;
+            }
+            experiments += 1;
+        } else {
+            // A bare NnSpec object (the other form `semulator nn-eval`
+            // accepts).
+            let spec = NnSpec::from_json(&j)
+                .unwrap_or_else(|e| panic!("{name}: nn parse: {e}"));
+            let back = NnSpec::from_json(&spec.to_json())
+                .unwrap_or_else(|e| panic!("{name}: nn re-parse: {e}"));
+            assert_eq!(back, spec, "{name}: nn round trip");
+        }
+    }
+    assert!(campaigns >= 3, "expected the sweep examples, saw {campaigns}");
+    assert!(experiments >= 3, "expected the run examples, saw {experiments}");
+    assert!(power_specs >= 2, "expected power-carrying examples, saw {power_specs}");
+}
+
+#[test]
+fn power_examples_declare_the_energy_surface() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/specs");
+    // The quickstart power run trains the multi-head emulator off the
+    // native backend with weighted auxiliary heads.
+    let text = std::fs::read_to_string(dir.join("power_quickstart.json")).unwrap();
+    let spec = ExperimentSpec::from_str(&text).unwrap();
+    let pw = spec.power.expect("power section");
+    assert_eq!(pw.w_energy, 1.0);
+    assert_eq!(pw.w_settle, 0.5);
+    assert!(spec.gen_config().unwrap().power);
+    // The campaign sweeps a nonideal axis (and the read voltage) with the
+    // power section on every grid point — the energy/t_settle summary
+    // columns' acceptance spec.
+    let text = std::fs::read_to_string(dir.join("sweep_power.json")).unwrap();
+    let spec = CampaignSpec::from_str(&text).unwrap();
+    assert!(spec.base.power.is_some());
+    assert_eq!(spec.axes.swept_axes(), vec!["nonideal", "v_read"]);
+    let points = spec.expand().unwrap();
+    assert_eq!(points.len(), 4);
+    for p in &points {
+        assert!(p.spec.power.is_some(), "{}: power survives expansion", p.spec.name);
+    }
+    assert_eq!(points[3].spec.block.as_ref().unwrap().v_read, 0.25);
+}
