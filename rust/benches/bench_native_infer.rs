@@ -4,6 +4,12 @@
 //! overhead (typed requests + normalize + batcher channel round trip) over
 //! the raw `NativeEngine::forward_batch`.
 //!
+//! The native path runs in three lanes so the kernel trajectory is
+//! attributable: `native_scalar` (forced-scalar kernels, one worker — the
+//! pre-SIMD baseline), `native_simd1` (detected ISA, one worker — the pure
+//! vectorization win), and `native` (detected ISA, all workers — what
+//! serving actually runs).
+//!
 //! The native rows need nothing but a parameter state — this bench runs
 //! (and demonstrates a batch-256 forward) with no PJRT artifacts loaded.
 //! PJRT rows appear only when `make artifacts` has produced `meta.json`
@@ -70,8 +76,27 @@ fn main() {
             None
         };
 
+        let engine1 = NativeEngine::new(&arch, &state).unwrap().with_workers(1);
+        println!("  (kernel ISA: {})", semulator::infer::kernels::active_isa().name());
         for batch in BATCHES {
             let xs: Vec<f32> = (0..batch * feat).map(|_| rng.uniform() as f32).collect();
+
+            // Scalar baseline: legacy summation order, one worker.
+            let scalar_lane = format!("{variant}/native_scalar/b{batch}");
+            let scalar = {
+                let _g = semulator::infer::kernels::force_scalar();
+                b.bench(&scalar_lane, || engine1.forward(&xs).unwrap()).clone()
+            };
+            jsonl.row(&scalar_lane, batch, scalar.mean, {
+                let _g = semulator::infer::kernels::force_scalar();
+                flops_of(|| drop(engine1.forward(&xs).unwrap()))
+            });
+
+            // Single-worker SIMD: the vectorization win in isolation.
+            let simd1_lane = format!("{variant}/native_simd1/b{batch}");
+            let simd1 = b.bench(&simd1_lane, || engine1.forward(&xs).unwrap()).clone();
+            jsonl.row(&simd1_lane, batch, simd1.mean, flops_of(|| drop(engine1.forward(&xs).unwrap())));
+
             let lane = format!("{variant}/native/b{batch}");
             let native = {
                 let mut sp = semulator::obs::span("bench.native_infer");
@@ -80,8 +105,11 @@ fn main() {
             };
             jsonl.row(&lane, batch, native.mean, flops_of(|| drop(engine.forward(&xs).unwrap())));
             println!(
-                "  -> native: {:.2} µs/sample at batch {batch}",
-                native.mean.as_secs_f64() * 1e6 / batch as f64
+                "  -> native: {:.2} µs/sample at batch {batch} \
+                 (simd1 {:.2}x, threaded {:.2}x over scalar)",
+                native.mean.as_secs_f64() * 1e6 / batch as f64,
+                scalar.mean.as_secs_f64() / simd1.mean.as_secs_f64(),
+                scalar.mean.as_secs_f64() / native.mean.as_secs_f64()
             );
             // Sanity: the timed path really produced a full, finite batch.
             let y = engine.forward(&xs).unwrap();

@@ -1,7 +1,10 @@
 //! Training-step benchmark: the cost that dominates `repro
 //! table1/fig4/fig6` and every `semulator run`.
 //!
-//! Two lanes:
+//! Three lanes:
+//! * **native_scalar** — the same SGD step with the kernels pinned to the
+//!   forced-scalar (pre-SIMD) path, the baseline of the kernel perf
+//!   trajectory;
 //! * **native** — one `infer::NativeTrainer` SGD minibatch step
 //!   (forward tape + backward through the im2col/packed-matmul kernels),
 //!   runs with zero artifacts, so the training-throughput trajectory is
@@ -36,6 +39,22 @@ fn bench_native(b: &mut Bencher, jsonl: &mut BenchJsonl) {
             (0..batch * meta.n_features()).map(|_| rng.range(0.0, 1.0) as f32).collect();
         let yb: Vec<f32> =
             (0..batch * meta.outputs).map(|_| rng.range(-0.05, 0.05) as f32).collect();
+        // Scalar lane first: the pre-SIMD baseline the kernel trajectory
+        // is measured against (same step, forced-scalar kernels).
+        let scalar_lane = format!("{variant}/native_step_scalar_b{batch}");
+        let scalar = {
+            let _g = semulator::infer::kernels::force_scalar();
+            b.bench(&scalar_lane, || {
+                trainer.step(&mut state, &xb, &yb, 1e-4).unwrap();
+            })
+            .clone()
+        };
+        jsonl.row(&scalar_lane, batch, scalar.mean, {
+            let _g = semulator::infer::kernels::force_scalar();
+            flops_of(|| {
+                trainer.step(&mut state, &xb, &yb, 1e-4).unwrap();
+            })
+        });
         let lane = format!("{variant}/native_step_b{batch}");
         let stats = {
             let mut sp = semulator::obs::span("bench.train_step");
@@ -49,9 +68,10 @@ fn bench_native(b: &mut Bencher, jsonl: &mut BenchJsonl) {
             trainer.step(&mut state, &xb, &yb, 1e-4).unwrap();
         }));
         println!(
-            "  -> {:.2} ms/step, {:.1} samples/s",
+            "  -> {:.2} ms/step, {:.1} samples/s ({:.2}x over scalar kernels)",
             stats.mean.as_secs_f64() * 1e3,
-            batch as f64 / stats.mean.as_secs_f64()
+            batch as f64 / stats.mean.as_secs_f64(),
+            scalar.mean.as_secs_f64() / stats.mean.as_secs_f64()
         );
     }
 }

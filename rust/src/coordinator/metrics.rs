@@ -105,6 +105,12 @@ pub struct Metrics {
     pub cross_failed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Estimated analog energy of every request served by this variant,
+    /// femtojoules (PR 9 surrogate: `power::estimate_fast` over the raw
+    /// cell inputs, quantized like the global `fast_energy_fj` counter).
+    pub energy_fj: AtomicU64,
+    /// Estimated settling time summed over this variant's requests, ps.
+    pub t_settle_ps: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -117,7 +123,7 @@ impl Metrics {
     /// the aggregation surface `api::Deployment` sums per-variant metrics
     /// over. Latency histograms stay per-instance; percentiles of a sum
     /// are not the sum of percentiles.
-    pub fn counters(&self) -> [(&'static str, u64); 10] {
+    pub fn counters(&self) -> [(&'static str, u64); 12] {
         let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
         [
             ("requests", ld(&self.requests)),
@@ -130,7 +136,18 @@ impl Metrics {
             ("cross_failed", ld(&self.cross_failed)),
             ("batches", ld(&self.batches)),
             ("batched_requests", ld(&self.batched_requests)),
+            ("energy_fj", ld(&self.energy_fj)),
+            ("t_settle_ps", ld(&self.t_settle_ps)),
         ]
+    }
+
+    /// Record the fast power surrogate's estimate for one served request,
+    /// using the same femtojoule/picosecond quantization as the global
+    /// `fast_energy_fj` / `settling_ps` counters so the per-variant and
+    /// process-wide series stay comparable.
+    pub fn record_power(&self, r: &crate::power::PowerReport) {
+        self.energy_fj.fetch_add((r.energy * 1e15).round().max(0.0) as u64, Ordering::Relaxed);
+        self.t_settle_ps.fetch_add((r.t_settle * 1e12).round().max(0.0) as u64, Ordering::Relaxed);
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -152,6 +169,8 @@ impl Metrics {
             ("verified", Json::Num(self.verified.load(Ordering::Relaxed) as f64)),
             ("cross_checked", Json::Num(self.cross_checked.load(Ordering::Relaxed) as f64)),
             ("cross_failed", Json::Num(self.cross_failed.load(Ordering::Relaxed) as f64)),
+            ("energy_fj", Json::Num(self.energy_fj.load(Ordering::Relaxed) as f64)),
+            ("t_settle_ps", Json::Num(self.t_settle_ps.load(Ordering::Relaxed) as f64)),
             ("mean_batch_size", Json::Num(self.mean_batch_size())),
             ("latency_mean_us", Json::Num(self.latency.mean_us())),
             ("latency_p50_us", Json::Num(self.latency.quantile_us(0.5) as f64)),
@@ -241,6 +260,21 @@ mod tests {
                 assert!(snap.get(k).is_some(), "snapshot missing {k}");
             }
         }
+    }
+
+    #[test]
+    fn record_power_quantizes_like_global_counters() {
+        let m = Metrics::default();
+        m.record_power(&crate::power::PowerReport {
+            energy: 2.4e-15, // 2.4 fJ rounds to 2
+            t_settle: 3.6e-12, // 3.6 ps rounds to 4
+            p_avg: 0.0,
+        });
+        m.record_power(&crate::power::PowerReport { energy: -1.0, t_settle: -1.0, p_avg: 0.0 });
+        let c: std::collections::BTreeMap<_, _> = m.counters().into_iter().collect();
+        assert_eq!(c["energy_fj"], 2);
+        assert_eq!(c["t_settle_ps"], 4);
+        assert_eq!(m.snapshot().get("energy_fj").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

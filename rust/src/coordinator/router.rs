@@ -116,6 +116,7 @@ impl Router {
     /// path for an audit probe).
     pub fn handle_with(&self, x: &CellInputs, policy: Option<Policy>) -> Result<RouteResult> {
         Metrics::inc(&self.metrics.requests);
+        self.record_power(x);
         let t0 = std::time::Instant::now();
         let result = match policy.unwrap_or(self.policy) {
             Policy::Golden => {
@@ -190,6 +191,9 @@ impl Router {
         let policy = policy.unwrap_or(self.policy);
         let t0 = std::time::Instant::now();
         self.metrics.requests.fetch_add(xs.len() as u64, Ordering::Relaxed);
+        for x in xs {
+            self.record_power(x);
+        }
         if matches!(policy, Policy::Golden) {
             self.metrics.golden.fetch_add(xs.len() as u64, Ordering::Relaxed);
             let out = xs
@@ -254,6 +258,19 @@ impl Router {
         }
         self.metrics.latency.record(t0.elapsed());
         Ok(results)
+    }
+
+    /// Serve-time energy accounting (PR 9 leftover): every request is
+    /// priced by the fast power surrogate over its raw cell inputs,
+    /// route-independently — the golden path separately integrates its
+    /// own `golden_energy_fj` during the solve. Feeds both the global
+    /// `fast_energy_fj`/`settling_ps` counters and this variant's
+    /// `energy_fj`/`t_settle_ps` metrics, so `Deployment::metrics_json`
+    /// and the labeled Prometheus families report energy per variant.
+    fn record_power(&self, x: &CellInputs) {
+        let r = crate::power::estimate_fast(self.block.config(), x);
+        crate::power::record_fast(&r);
+        self.metrics.record_power(&r);
     }
 
     /// Counted forward through the primary emulator handle.

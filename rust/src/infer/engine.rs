@@ -11,18 +11,25 @@
 //!   free.
 //! * dense weights `(K, N)` are pre-transposed once to `(N, K)`.
 //!
-//! Bias + CELU run as a fused single-pass epilogue. Batches are split into
-//! contiguous chunks executed on `util::parallel` scoped threads; dense
-//! layers batch whole chunks, convs run per sample within a chunk.
+//! Bias + CELU run as a fused single-pass epilogue. Execution is
+//! *layer-major*: each layer runs over the whole batch before the next
+//! starts, so a dense layer is exactly one [`matmul_nt_with`] call (which
+//! threads itself over output rows and dispatches SIMD internally) and a
+//! conv layer fans sample blocks of its output buffer over
+//! [`crate::util::parallel_chunks_mut`] with one per-sample GEMM each.
+//! One kernel call per logical matmul also keeps the `kernel_flops` /
+//! `kernel_bytes` obs counters byte-identical across worker counts —
+//! the chunked layout used to recount the weight operand once per batch
+//! chunk.
 
 use anyhow::{Context, Result};
 
 use crate::model::ModelState;
 use crate::runtime::VariantMeta;
-use crate::util::{default_workers, parallel_map};
+use crate::util::{default_workers, parallel_chunks_mut};
 
 use super::arch::{Arch, Layer};
-use super::kernels::{bias_celu_cols, bias_celu_rows, matmul_nt};
+use super::kernels::{bias_celu_cols, bias_celu_rows, matmul_nt_with};
 use super::{BackendKind, EmulatorBackend, VariantId, VariantShape};
 
 /// Below this many samples per worker, extra threads cost more than they
@@ -201,7 +208,8 @@ impl NativeEngine {
     }
 
     /// Forward a batch laid out `batch * n_features` batch-major; returns
-    /// `batch * n_outputs`. Splits the batch over scoped worker threads.
+    /// `batch * n_outputs`. Runs layer-major: every layer processes the
+    /// whole batch (threading inside the layer) before the next starts.
     pub fn forward(&self, x: &[f32]) -> Result<Vec<f32>> {
         let n_features = self.n_features();
         anyhow::ensure!(
@@ -211,55 +219,48 @@ impl NativeEngine {
             n_features
         );
         let batch = x.len() / n_features;
-        let tasks = self.workers.min(batch.div_ceil(MIN_CHUNK)).max(1);
-        if tasks <= 1 {
-            return Ok(self.forward_chunk(x));
+        let mut cur = x.to_vec();
+        for ly in &self.layers {
+            cur = self.forward_layer(ly, &cur, batch);
         }
-        let per = batch.div_ceil(tasks);
-        let n_tasks = batch.div_ceil(per);
-        let parts = parallel_map(n_tasks, n_tasks, |t| {
-            let lo = t * per;
-            let hi = ((t + 1) * per).min(batch);
-            self.forward_chunk(&x[lo * n_features..hi * n_features])
-        });
-        let mut out = Vec::with_capacity(batch * self.n_outputs());
-        for part in parts {
-            out.extend_from_slice(&part);
-        }
-        Ok(out)
+        Ok(cur)
     }
 
-    /// Single-threaded forward over a chunk of whole samples.
-    fn forward_chunk(&self, x: &[f32]) -> Vec<f32> {
-        let n = x.len() / self.n_features();
-        let mut cur = x.to_vec();
-        let mut patch: Vec<f32> = Vec::new();
-        for ly in &self.layers {
-            match ly {
-                Packed::Conv { cout, k, p, gather, w, b, celu, in_len, out_len } => {
-                    let mut next = vec![0.0f32; n * out_len];
-                    patch.clear();
-                    patch.resize(p * k, 0.0);
-                    for s in 0..n {
-                        let sample = &cur[s * in_len..(s + 1) * in_len];
+    /// One layer over the whole batch.
+    ///
+    /// Dense: a single batch-wide GEMM — `matmul_nt_with` fans output
+    /// rows over worker threads itself when the shape warrants it. Conv:
+    /// [`MIN_CHUNK`]-sample blocks of the output buffer fan out over
+    /// scoped threads, each running the per-sample gather + GEMM +
+    /// epilogue serially (`max_workers = 1` — the batch loop is already
+    /// parallel). Either way each logical matmul is counted exactly once,
+    /// so the obs work counters do not depend on `self.workers`.
+    fn forward_layer(&self, ly: &Packed, cur: &[f32], batch: usize) -> Vec<f32> {
+        match ly {
+            Packed::Conv { cout, k, p, gather, w, b, celu, in_len, out_len } => {
+                let mut next = vec![0.0f32; batch * out_len];
+                let tasks = self.workers.min(batch.div_ceil(MIN_CHUNK)).max(1);
+                parallel_chunks_mut(&mut next, MIN_CHUNK * out_len, tasks, |ci, chunk| {
+                    let mut patch = vec![0.0f32; p * k];
+                    let base = ci * MIN_CHUNK;
+                    for (s, out) in chunk.chunks_mut(*out_len).enumerate() {
+                        let sample = &cur[(base + s) * in_len..(base + s + 1) * in_len];
                         for (dst, &src) in patch.iter_mut().zip(gather.iter()) {
                             *dst = sample[src as usize];
                         }
-                        let out = &mut next[s * out_len..(s + 1) * out_len];
-                        matmul_nt(w, &patch, *cout, *p, *k, out);
+                        matmul_nt_with(w, &patch, *cout, *p, *k, out, 1);
                         bias_celu_rows(out, *cout, *p, b, *celu);
                     }
-                    cur = next;
-                }
-                Packed::Dense { k, n: nu, wt, b, celu } => {
-                    let mut next = vec![0.0f32; n * nu];
-                    matmul_nt(&cur, wt, n, *nu, *k, &mut next);
-                    bias_celu_cols(&mut next, n, *nu, b, *celu);
-                    cur = next;
-                }
+                });
+                next
+            }
+            Packed::Dense { k, n, wt, b, celu } => {
+                let mut next = vec![0.0f32; batch * n];
+                matmul_nt_with(cur, wt, batch, *n, *k, &mut next, self.workers);
+                bias_celu_cols(&mut next, batch, *n, b, *celu);
+                next
             }
         }
-        cur
     }
 }
 
@@ -333,6 +334,43 @@ mod tests {
         let serial = NativeEngine::new(&arch, &state).unwrap().with_workers(1);
         let parallel = NativeEngine::new(&arch, &state).unwrap().with_workers(4);
         assert_eq!(serial.forward(&x).unwrap(), parallel.forward(&x).unwrap());
+    }
+
+    #[test]
+    fn forced_scalar_matches_reference_bit_exactly() {
+        // The scalar kernels keep the naive per-output summation order,
+        // so with SIMD forced off the packed engine reproduces the
+        // reference oracle exactly — the regression anchor the SIMD
+        // relative-tolerance tests hang off.
+        let _g = crate::infer::kernels::force_scalar();
+        let arch = Arch::for_variant("small").unwrap();
+        let state = ModelState::init(&arch.to_meta(), 17);
+        let engine = NativeEngine::new(&arch, &state).unwrap().with_workers(3);
+        let x = random_inputs(7 * arch.n_features(), 71);
+        let got = engine.forward(&x).unwrap();
+        let want = crate::infer::reference::forward(&arch, &state, &x).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn work_counters_do_not_depend_on_worker_count() {
+        // One kernel call per logical matmul: flops, bytes, and the SIMD
+        // dispatch count must be byte-identical at 1 vs 4 workers (the
+        // chunk-major layout used to recount weight bytes per chunk).
+        use crate::obs::counters;
+        let arch = Arch::for_variant("small").unwrap();
+        let state = ModelState::init(&arch.to_meta(), 8);
+        let x = random_inputs(64 * arch.n_features(), 31);
+        let count = |workers: usize| {
+            let set = std::sync::Arc::new(crate::obs::CounterSet::new());
+            let _g = counters::scoped(set.clone());
+            NativeEngine::new(&arch, &state).unwrap().with_workers(workers).forward(&x).unwrap();
+            let s = set.snapshot();
+            (s.kernel_flops, s.kernel_bytes, s.kernel_simd)
+        };
+        let serial = count(1);
+        assert!(serial.0 > 0 && serial.1 > 0, "engine forward must count work: {serial:?}");
+        assert_eq!(serial, count(4), "kernel counters must be worker-invariant");
     }
 
     #[test]

@@ -1,13 +1,48 @@
 //! Packed f32 matmul and fused bias+activation kernels for the native
-//! inference engine.
+//! inference engine, with runtime-selected SIMD and in-kernel threading.
 //!
-//! Both operands are laid out so the inner loop is a dot product of two
-//! contiguous slices: activations/patches row-major `(M, K)`, weights
-//! pre-transposed to `(N, K)` at engine-build time. The kernel register-
-//! blocks four output columns per pass so each activation row is streamed
-//! once per block instead of once per column. Per-output summation runs
-//! sequentially over `k`, matching the naive reference order — important
-//! for the native-vs-reference parity tests.
+//! Both matmul operands are laid out so the inner loop is a dot product
+//! of two contiguous slices: activations/patches row-major `(M, K)`,
+//! weights pre-transposed to `(N, K)` at engine-build time. The core is
+//! cache-blocked over output columns ([`NC`]-wide strips of the packed
+//! weight stay hot across activation rows) and register-tiled four
+//! output columns per pass.
+//!
+//! # ISA dispatch
+//!
+//! The instruction set is detected once per process ([`detected_isa`]):
+//! AVX2+FMA on x86_64, NEON on aarch64, scalar everywhere else — all via
+//! `std::arch`, zero dependencies. `SEMULATOR_FORCE_SCALAR=1` in the
+//! environment pins the whole process to the scalar path;
+//! [`force_scalar`] pins the *current thread* for the guard's lifetime
+//! (tests and bench lanes). Every matmul entry point reads the effective
+//! ISA once ([`active_isa`]) and threads it by value into any worker
+//! threads it spawns, and counts one `kernel_simd` obs tick per call
+//! dispatched to a vector ISA — `semulator stats` and the Prometheus
+//! exposition show which path ran.
+//!
+//! # Numerics contract
+//!
+//! The scalar path runs per-output summation sequentially over `k`,
+//! matching the naive reference order bit-for-bit — the forced-scalar
+//! lane in CI regresses against that exactly. The SIMD dot kernels
+//! accumulate in 8 (AVX2) / 4 (NEON) partial lanes reduced at the end,
+//! so they match the scalar path to a *relative* tolerance (≤ 1e-5; the
+//! parity tests below pin it). The accumulate kernels and the fused
+//! epilogues preserve per-output evaluation order apart from FMA
+//! contraction. In-kernel threading splits disjoint output rows whose
+//! per-row order never depends on the worker count, so results are
+//! bit-identical across thread counts for a fixed ISA.
+//!
+//! # Threading
+//!
+//! Calls above [`PAR_FLOPS`] (`2·m·n·k`) fan output-row blocks over
+//! [`crate::util::parallel_chunks_mut`] scoped threads (capped by the
+//! `*_with` worker argument; the plain entry points cap at
+//! [`crate::util::default_workers`]) and run under a `kernel.*` obs
+//! span. Small calls stay inline — no spawn, no span, no lock.
+
+use crate::obs::counters;
 
 /// CELU alpha, fixed to 1 like `python/compile/arch.py::CELU_ALPHA`.
 pub const CELU_ALPHA: f32 = 1.0;
@@ -22,85 +57,415 @@ pub fn celu(x: f32) -> f32 {
     }
 }
 
-/// Count one `(m, n, k)` matmul against the obs work counters: 2·m·n·k
-/// FLOPs (chunk-invariant) and the f32 bytes of all three operands
-/// (per-call, so NOT chunk-invariant — the weight operand recounts per
-/// chunk).
-#[inline]
-fn count_matmul(m: usize, n: usize, k: usize) {
-    crate::obs::counters::add_kernel_flops(2 * (m as u64) * (n as u64) * (k as u64));
-    crate::obs::counters::add_kernel_bytes(4 * ((m * k) + (n * k) + (m * n)) as u64);
+/// Column-block width: one `(NC, k)` strip of the packed weight is
+/// streamed per activation row, small enough to stay L1/L2-resident.
+const NC: usize = 64;
+
+/// `2·m·n·k` FLOP threshold above which a matmul fans out worker threads.
+/// Below it (every per-sample conv GEMM, the campaign-sized trainer
+/// steps) threads cost more than they save.
+const PAR_FLOPS: u64 = 4_000_000;
+
+/// Which vector instruction set the kernels dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar loops, reference summation order.
+    Scalar,
+    /// x86_64 AVX2 + FMA (8 f32 lanes), runtime-detected.
+    Avx2,
+    /// aarch64 NEON (4 f32 lanes), baseline on that target.
+    Neon,
 }
 
-/// `out[i, j] = dot(a[i, :], bt[j, :])` with `a: (m, k)` row-major and
-/// `bt: (n, k)` row-major (i.e. the logical `(k, n)` right operand stored
-/// transposed).
-pub fn matmul_nt(a: &[f32], bt: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
-    assert_eq!(a.len(), m * k, "lhs size");
-    assert_eq!(bt.len(), n * k, "packed rhs size");
-    assert_eq!(out.len(), m * n, "out size");
-    count_matmul(m, n, k);
-    for i in 0..m {
-        let ar = &a[i * k..(i + 1) * k];
-        let or = &mut out[i * n..(i + 1) * n];
-        let mut j = 0;
-        while j + 4 <= n {
-            let b0 = &bt[j * k..(j + 1) * k];
-            let b1 = &bt[(j + 1) * k..(j + 2) * k];
-            let b2 = &bt[(j + 2) * k..(j + 3) * k];
-            let b3 = &bt[(j + 3) * k..(j + 4) * k];
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for t in 0..k {
-                let av = ar[t];
-                s0 += av * b0[t];
-                s1 += av * b1[t];
-                s2 += av * b2[t];
-                s3 += av * b3[t];
-            }
-            or[j] = s0;
-            or[j + 1] = s1;
-            or[j + 2] = s2;
-            or[j + 3] = s3;
-            j += 4;
-        }
-        while j < n {
-            let br = &bt[j * k..(j + 1) * k];
-            let mut s = 0.0f32;
-            for t in 0..k {
-                s += ar[t] * br[t];
-            }
-            or[j] = s;
-            j += 1;
+impl Isa {
+    /// Stable lowercase label (`scalar` / `avx2` / `neon`) for stats and
+    /// bench lanes.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
         }
     }
 }
 
+/// Process-wide ISA: detected once, `SEMULATOR_FORCE_SCALAR` wins.
+pub fn detected_isa() -> Isa {
+    static DETECTED: std::sync::OnceLock<Isa> = std::sync::OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        let forced = std::env::var_os("SEMULATOR_FORCE_SCALAR")
+            .is_some_and(|v| !v.is_empty() && v != "0");
+        if forced {
+            return Isa::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+                return Isa::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return Isa::Neon;
+        }
+        #[allow(unreachable_code)]
+        Isa::Scalar
+    })
+}
+
+thread_local! {
+    static TLS_FORCE_SCALAR: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Pins the calling thread to the scalar kernels while alive; restores
+/// the previous state (nestable) on drop. Worker threads a kernel spawns
+/// inherit the forcing because the ISA is resolved once at kernel entry,
+/// and [`crate::util::parallel_map`] / [`crate::util::parallel_chunks_mut`]
+/// re-apply it on their workers — so forcing composes with engine-level
+/// batch threading too.
+pub struct ScalarGuard {
+    prev: bool,
+}
+
+/// Force the scalar path on this thread for the guard's lifetime.
+pub fn force_scalar() -> ScalarGuard {
+    ScalarGuard { prev: TLS_FORCE_SCALAR.with(|c| c.replace(true)) }
+}
+
+/// Whether this thread currently forces the scalar path — captured by the
+/// parallel helpers so worker threads inherit the forcing.
+pub(crate) fn thread_forces_scalar() -> bool {
+    TLS_FORCE_SCALAR.with(|c| c.get())
+}
+
+/// Re-apply a captured force state on a worker thread (RAII like
+/// [`force_scalar`]).
+pub(crate) fn inherit_force_scalar(state: bool) -> ScalarGuard {
+    ScalarGuard { prev: TLS_FORCE_SCALAR.with(|c| c.replace(state)) }
+}
+
+impl Drop for ScalarGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        TLS_FORCE_SCALAR.with(|c| c.set(prev));
+    }
+}
+
+/// The ISA a kernel called from this thread will dispatch to.
+pub fn active_isa() -> Isa {
+    if TLS_FORCE_SCALAR.with(|c| c.get()) {
+        Isa::Scalar
+    } else {
+        detected_isa()
+    }
+}
+
+/// Count one `(m, n, k)` logical matmul against the obs work counters:
+/// `2·m·n·k` FLOPs and the f32 bytes of all three operands. Callers make
+/// exactly one kernel call per logical matmul (worker threads split rows
+/// *inside* the call), so both totals are invariant across worker
+/// counts. A call dispatched to a vector ISA also ticks `kernel_simd`.
+#[inline]
+fn count_matmul(m: usize, n: usize, k: usize, isa: Isa) {
+    counters::add_kernel_flops(2 * (m as u64) * (n as u64) * (k as u64));
+    counters::add_kernel_bytes(4 * ((m * k) + (n * k) + (m * n)) as u64);
+    if isa != Isa::Scalar {
+        counters::add_kernel_simd(1);
+    }
+}
+
+/// Worker count for a kernel of `work = 2·m·n·k` FLOPs: one worker per
+/// [`PAR_FLOPS`] of work, capped by the caller's budget.
+#[inline]
+fn kernel_workers(work: u64, cap: usize) -> usize {
+    if work < PAR_FLOPS || cap <= 1 {
+        1
+    } else {
+        cap.min((work / PAR_FLOPS) as usize + 1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// matmul_nt: out[i, j] = dot(a[i, :], bt[j, :])
+// ---------------------------------------------------------------------------
+
+/// `out[i, j] = dot(a[i, :], bt[j, :])` with `a: (m, k)` row-major and
+/// `bt: (n, k)` row-major (i.e. the logical `(k, n)` right operand stored
+/// transposed). Threads itself over output rows when large (capped at
+/// [`crate::util::default_workers`]); see [`matmul_nt_with`] to bound the
+/// fan-out.
+pub fn matmul_nt(a: &[f32], bt: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    matmul_nt_with(a, bt, m, n, k, out, crate::util::default_workers());
+}
+
+/// [`matmul_nt`] with an explicit worker-thread cap (`1` = stay inline:
+/// what per-sample conv GEMMs inside an already-parallel batch loop use).
+pub fn matmul_nt_with(
+    a: &[f32],
+    bt: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+    max_workers: usize,
+) {
+    assert_eq!(a.len(), m * k, "lhs size");
+    assert_eq!(bt.len(), n * k, "packed rhs size");
+    assert_eq!(out.len(), m * n, "out size");
+    let isa = active_isa();
+    count_matmul(m, n, k, isa);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let work = 2 * (m as u64) * (n as u64) * (k as u64);
+    let workers = kernel_workers(work, max_workers).min(m);
+    if workers <= 1 {
+        matmul_nt_rows(a, bt, m, n, k, out, isa);
+        return;
+    }
+    let _sp = crate::obs::span("kernel.matmul_nt");
+    let rows_per = m.div_ceil(workers);
+    crate::util::parallel_chunks_mut(out, rows_per * n, workers, |ci, chunk| {
+        let base = ci * rows_per;
+        let rows = chunk.len() / n;
+        matmul_nt_rows(&a[base * k..(base + rows) * k], bt, rows, n, k, chunk, isa);
+    });
+}
+
+/// Serial column-blocked core over a contiguous row range.
+fn matmul_nt_rows(a: &[f32], bt: &[f32], m: usize, n: usize, k: usize, out: &mut [f32], isa: Isa) {
+    for jb in (0..n).step_by(NC) {
+        let je = (jb + NC).min(n);
+        for i in 0..m {
+            let ar = &a[i * k..(i + 1) * k];
+            let or = &mut out[i * n..(i + 1) * n];
+            let mut j = jb;
+            while j + 4 <= je {
+                let b0 = &bt[j * k..(j + 1) * k];
+                let b1 = &bt[(j + 1) * k..(j + 2) * k];
+                let b2 = &bt[(j + 2) * k..(j + 3) * k];
+                let b3 = &bt[(j + 3) * k..(j + 4) * k];
+                let (s0, s1, s2, s3) = match isa {
+                    #[cfg(target_arch = "x86_64")]
+                    Isa::Avx2 => unsafe { dot4_avx2(ar, b0, b1, b2, b3) },
+                    #[cfg(target_arch = "aarch64")]
+                    Isa::Neon => unsafe { dot4_neon(ar, b0, b1, b2, b3) },
+                    _ => dot4_scalar(ar, b0, b1, b2, b3),
+                };
+                or[j] = s0;
+                or[j + 1] = s1;
+                or[j + 2] = s2;
+                or[j + 3] = s3;
+                j += 4;
+            }
+            while j < je {
+                let br = &bt[j * k..(j + 1) * k];
+                or[j] = match isa {
+                    #[cfg(target_arch = "x86_64")]
+                    Isa::Avx2 => unsafe { dot1_avx2(ar, br) },
+                    #[cfg(target_arch = "aarch64")]
+                    Isa::Neon => unsafe { dot1_neon(ar, br) },
+                    _ => dot1_scalar(ar, br),
+                };
+                j += 1;
+            }
+        }
+    }
+}
+
+#[inline]
+fn dot1_scalar(ar: &[f32], br: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (av, bv) in ar.iter().zip(br) {
+        s += av * bv;
+    }
+    s
+}
+
+/// Four sequential-order dots sharing one streamed activation row —
+/// exactly the pre-SIMD kernel, kept as the bit-exact reference lane.
+#[inline]
+fn dot4_scalar(ar: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> (f32, f32, f32, f32) {
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (t, &av) in ar.iter().enumerate() {
+        s0 += av * b0[t];
+        s1 += av * b1[t];
+        s2 += av * b2[t];
+        s3 += av * b3[t];
+    }
+    (s0, s1, s2, s3)
+}
+
+// ---------------------------------------------------------------------------
+// Accumulate kernels (backward pass): axpy form so the inner loop is a
+// contiguous fused multiply-add — and so a zero multiplier still
+// propagates `0·inf = NaN` instead of silently skipping it.
+// ---------------------------------------------------------------------------
+
+/// `y[j] += a * x[j]`. No zero-skip: `a == 0.0` must still poison the
+/// accumulator when `x` carries non-finites (diverged gradients).
+#[inline]
+fn axpy(a: f32, x: &[f32], y: &mut [f32], isa: Isa) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { axpy_avx2(a, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { axpy_neon(a, x, y) },
+        _ => {
+            for (o, &bv) in y.iter_mut().zip(x) {
+                *o += a * bv;
+            }
+        }
+    }
+}
+
+/// `out[i, j] += dot(a[i, :], b[:, j])` with both operands in *logical*
+/// row-major layout: `a: (m, k)`, `b: (k, n)`. The accumulate form the
+/// backward pass wants for weight gradients (`dW += dOutᵀ-shaped
+/// products`), streaming `b` row-wise so the inner loop is contiguous.
+/// Non-finite contributions propagate even under a zero multiplier.
+pub fn matmul_nn_acc(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "lhs size");
+    assert_eq!(b.len(), k * n, "rhs size");
+    assert_eq!(out.len(), m * n, "out size");
+    let isa = active_isa();
+    count_matmul(m, n, k, isa);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let work = 2 * (m as u64) * (n as u64) * (k as u64);
+    let workers = kernel_workers(work, crate::util::default_workers()).min(m);
+    if workers <= 1 {
+        nn_acc_rows(a, b, m, n, k, out, isa);
+        return;
+    }
+    let _sp = crate::obs::span("kernel.matmul_nn_acc");
+    let rows_per = m.div_ceil(workers);
+    crate::util::parallel_chunks_mut(out, rows_per * n, workers, |ci, chunk| {
+        let base = ci * rows_per;
+        let rows = chunk.len() / n;
+        nn_acc_rows(&a[base * k..(base + rows) * k], b, rows, n, k, chunk, isa);
+    });
+}
+
+fn nn_acc_rows(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32], isa: Isa) {
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * n..(i + 1) * n];
+        for (t, &av) in ar.iter().enumerate() {
+            axpy(av, &b[t * n..(t + 1) * n], or, isa);
+        }
+    }
+}
+
+/// `out[t, j] += dot(a[:, t], b[:, j])` — the `aᵀ b` accumulate with
+/// `a: (m, k)` and `b: (m, n)` row-major, producing `(k, n)`. This is the
+/// dense weight gradient `dW += xᵀ · dY`. Non-finite contributions
+/// propagate even under a zero multiplier. Threads over disjoint output
+/// (`t`) row blocks when large; per-output accumulation order over the
+/// batch is fixed, so results don't depend on the worker count.
+pub fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "lhs size");
+    assert_eq!(b.len(), m * n, "rhs size");
+    assert_eq!(out.len(), k * n, "out size");
+    let isa = active_isa();
+    count_matmul(m, n, k, isa);
+    if n == 0 || k == 0 {
+        return;
+    }
+    let work = 2 * (m as u64) * (n as u64) * (k as u64);
+    let workers = kernel_workers(work, crate::util::default_workers()).min(k);
+    if workers <= 1 {
+        tn_acc_tslice(a, b, m, n, k, 0, out, isa);
+        return;
+    }
+    let _sp = crate::obs::span("kernel.matmul_tn_acc");
+    let t_per = k.div_ceil(workers);
+    crate::util::parallel_chunks_mut(out, t_per * n, workers, |ci, chunk| {
+        tn_acc_tslice(a, b, m, n, k, ci * t_per, chunk, isa);
+    });
+}
+
+/// Accumulate output rows `t0 .. t0 + out_slice.len()/n` of the `aᵀ b`
+/// product; each worker owns a disjoint `t` range.
+fn tn_acc_tslice(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    t0: usize,
+    out_slice: &mut [f32],
+    isa: Isa,
+) {
+    let tr = out_slice.len() / n;
+    for i in 0..m {
+        let br = &b[i * n..(i + 1) * n];
+        for dt in 0..tr {
+            let av = a[i * k + t0 + dt];
+            axpy(av, br, &mut out_slice[dt * n..(dt + 1) * n], isa);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused bias + CELU epilogues
+// ---------------------------------------------------------------------------
+
 /// Fused epilogue for channel-major conv output `(rows = channels, cols =
 /// spatial positions)`: add `bias[r]` to every element of row `r`, then
-/// optionally CELU — one pass over the buffer.
+/// optionally CELU — one pass over the buffer. Vector groups with any
+/// negative (or NaN) lane fall back to the scalar CELU, so the result is
+/// bit-exact with the scalar path on every ISA.
 pub fn bias_celu_rows(out: &mut [f32], rows: usize, cols: usize, bias: &[f32], apply_celu: bool) {
     assert_eq!(out.len(), rows * cols);
     assert_eq!(bias.len(), rows);
+    let isa = active_isa();
     for r in 0..rows {
         let b = bias[r];
-        for v in &mut out[r * cols..(r + 1) * cols] {
-            let z = *v + b;
-            *v = if apply_celu { celu(z) } else { z };
+        let row = &mut out[r * cols..(r + 1) * cols];
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { bias_celu_splat_avx2(row, b, apply_celu) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { bias_celu_splat_neon(row, b, apply_celu) },
+            _ => bias_celu_splat_scalar(row, b, apply_celu),
         }
     }
 }
 
 /// Fused epilogue for batch-major dense output `(rows = batch, cols =
-/// units)`: add `bias[c]` per column, then optionally CELU.
+/// units)`: add `bias[c]` per column, then optionally CELU. Same
+/// bit-exactness contract as [`bias_celu_rows`].
 pub fn bias_celu_cols(out: &mut [f32], rows: usize, cols: usize, bias: &[f32], apply_celu: bool) {
     assert_eq!(out.len(), rows * cols);
     assert_eq!(bias.len(), cols);
+    let isa = active_isa();
     for r in 0..rows {
         let row = &mut out[r * cols..(r + 1) * cols];
-        for (v, b) in row.iter_mut().zip(bias) {
-            let z = *v + *b;
-            *v = if apply_celu { celu(z) } else { z };
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { bias_celu_vec_avx2(row, bias, apply_celu) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { bias_celu_vec_neon(row, bias, apply_celu) },
+            _ => bias_celu_vec_scalar(row, bias, apply_celu),
         }
+    }
+}
+
+#[inline]
+fn bias_celu_splat_scalar(row: &mut [f32], b: f32, apply_celu: bool) {
+    for v in row {
+        let z = *v + b;
+        *v = if apply_celu { celu(z) } else { z };
+    }
+}
+
+#[inline]
+fn bias_celu_vec_scalar(row: &mut [f32], bias: &[f32], apply_celu: bool) {
+    for (v, b) in row.iter_mut().zip(bias) {
+        let z = *v + *b;
+        *v = if apply_celu { celu(z) } else { z };
     }
 }
 
@@ -117,53 +482,6 @@ pub fn celu_grad_from_act(a: f32) -> f32 {
     }
 }
 
-/// `out[i, j] += dot(a[i, :], b[:, j])` with both operands in *logical*
-/// row-major layout: `a: (m, k)`, `b: (k, n)`. The accumulate form the
-/// backward pass wants for weight gradients (`dW += dOutᵀ-shaped
-/// products`), streaming `b` row-wise so the inner loop is contiguous.
-pub fn matmul_nn_acc(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
-    assert_eq!(a.len(), m * k, "lhs size");
-    assert_eq!(b.len(), k * n, "rhs size");
-    assert_eq!(out.len(), m * n, "out size");
-    count_matmul(m, n, k);
-    for i in 0..m {
-        let ar = &a[i * k..(i + 1) * k];
-        let or = &mut out[i * n..(i + 1) * n];
-        for (t, &av) in ar.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let br = &b[t * n..(t + 1) * n];
-            for (o, &bv) in or.iter_mut().zip(br) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// `out[t, j] += dot(a[:, t], b[:, j])` — the `aᵀ b` accumulate with
-/// `a: (m, k)` and `b: (m, n)` row-major, producing `(k, n)`. This is the
-/// dense weight gradient `dW += xᵀ · dY`.
-pub fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
-    assert_eq!(a.len(), m * k, "lhs size");
-    assert_eq!(b.len(), m * n, "rhs size");
-    assert_eq!(out.len(), k * n, "out size");
-    count_matmul(m, n, k);
-    for i in 0..m {
-        let ar = &a[i * k..(i + 1) * k];
-        let br = &b[i * n..(i + 1) * n];
-        for (t, &av) in ar.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let or = &mut out[t * n..(t + 1) * n];
-            for (o, &bv) in or.iter_mut().zip(br) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
 /// Pack a row-major `(k, n)` dense weight into `(n, k)` for [`matmul_nt`].
 pub fn transpose_pack(w: &[f32], k: usize, n: usize) -> Vec<f32> {
     assert_eq!(w.len(), k * n);
@@ -175,6 +493,254 @@ pub fn transpose_pack(w: &[f32], k: usize, n: usize) -> Vec<f32> {
     }
     wt
 }
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA microkernels (x86_64, runtime-detected)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<0b01>(s, s));
+        _mm_cvtss_f32(s)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot4(
+        ar: &[f32],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+    ) -> (f32, f32, f32, f32) {
+        let k = ar.len();
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        let mut t = 0;
+        while t + 8 <= k {
+            let av = _mm256_loadu_ps(ar.as_ptr().add(t));
+            a0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b0.as_ptr().add(t)), a0);
+            a1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b1.as_ptr().add(t)), a1);
+            a2 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b2.as_ptr().add(t)), a2);
+            a3 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b3.as_ptr().add(t)), a3);
+            t += 8;
+        }
+        let (mut s0, mut s1, mut s2, mut s3) = (hsum(a0), hsum(a1), hsum(a2), hsum(a3));
+        while t < k {
+            let av = ar[t];
+            s0 += av * b0[t];
+            s1 += av * b1[t];
+            s2 += av * b2[t];
+            s3 += av * b3[t];
+            t += 1;
+        }
+        (s0, s1, s2, s3)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot1(ar: &[f32], br: &[f32]) -> f32 {
+        let k = ar.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut t = 0;
+        while t + 8 <= k {
+            acc = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ar.as_ptr().add(t)),
+                _mm256_loadu_ps(br.as_ptr().add(t)),
+                acc,
+            );
+            t += 8;
+        }
+        let mut s = hsum(acc);
+        while t < k {
+            s += ar[t] * br[t];
+            t += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let av = _mm256_set1_ps(a);
+        let mut j = 0;
+        while j + 8 <= n {
+            let yv = _mm256_loadu_ps(y.as_ptr().add(j));
+            let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+            _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_fmadd_ps(av, xv, yv));
+            j += 8;
+        }
+        while j < n {
+            y[j] += a * x[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn bias_celu_splat(row: &mut [f32], b: f32, apply_celu: bool) {
+        let n = row.len();
+        let bv = _mm256_set1_ps(b);
+        let zero = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= n {
+            let z = _mm256_add_ps(_mm256_loadu_ps(row.as_ptr().add(j)), bv);
+            if apply_celu && _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_LT_OQ>(z, zero)) != 0 {
+                super::bias_celu_splat_scalar(&mut row[j..j + 8], b, true);
+            } else {
+                _mm256_storeu_ps(row.as_mut_ptr().add(j), z);
+            }
+            j += 8;
+        }
+        super::bias_celu_splat_scalar(&mut row[j..], b, apply_celu);
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn bias_celu_vec(row: &mut [f32], bias: &[f32], apply_celu: bool) {
+        let n = row.len();
+        let zero = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= n {
+            let z = _mm256_add_ps(
+                _mm256_loadu_ps(row.as_ptr().add(j)),
+                _mm256_loadu_ps(bias.as_ptr().add(j)),
+            );
+            if apply_celu && _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_LT_OQ>(z, zero)) != 0 {
+                super::bias_celu_vec_scalar(&mut row[j..j + 8], &bias[j..j + 8], true);
+            } else {
+                _mm256_storeu_ps(row.as_mut_ptr().add(j), z);
+            }
+            j += 8;
+        }
+        super::bias_celu_vec_scalar(&mut row[j..], &bias[j..], apply_celu);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use avx2::{
+    axpy as axpy_avx2, bias_celu_splat as bias_celu_splat_avx2, bias_celu_vec as bias_celu_vec_avx2,
+    dot1 as dot1_avx2, dot4 as dot4_avx2,
+};
+
+// ---------------------------------------------------------------------------
+// NEON microkernels (aarch64 baseline)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    pub(super) unsafe fn dot4(
+        ar: &[f32],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+    ) -> (f32, f32, f32, f32) {
+        let k = ar.len();
+        let mut a0 = vdupq_n_f32(0.0);
+        let mut a1 = vdupq_n_f32(0.0);
+        let mut a2 = vdupq_n_f32(0.0);
+        let mut a3 = vdupq_n_f32(0.0);
+        let mut t = 0;
+        while t + 4 <= k {
+            let av = vld1q_f32(ar.as_ptr().add(t));
+            a0 = vfmaq_f32(a0, av, vld1q_f32(b0.as_ptr().add(t)));
+            a1 = vfmaq_f32(a1, av, vld1q_f32(b1.as_ptr().add(t)));
+            a2 = vfmaq_f32(a2, av, vld1q_f32(b2.as_ptr().add(t)));
+            a3 = vfmaq_f32(a3, av, vld1q_f32(b3.as_ptr().add(t)));
+            t += 4;
+        }
+        let (mut s0, mut s1, mut s2, mut s3) =
+            (vaddvq_f32(a0), vaddvq_f32(a1), vaddvq_f32(a2), vaddvq_f32(a3));
+        while t < k {
+            let av = ar[t];
+            s0 += av * b0[t];
+            s1 += av * b1[t];
+            s2 += av * b2[t];
+            s3 += av * b3[t];
+            t += 1;
+        }
+        (s0, s1, s2, s3)
+    }
+
+    pub(super) unsafe fn dot1(ar: &[f32], br: &[f32]) -> f32 {
+        let k = ar.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut t = 0;
+        while t + 4 <= k {
+            acc = vfmaq_f32(acc, vld1q_f32(ar.as_ptr().add(t)), vld1q_f32(br.as_ptr().add(t)));
+            t += 4;
+        }
+        let mut s = vaddvq_f32(acc);
+        while t < k {
+            s += ar[t] * br[t];
+            t += 1;
+        }
+        s
+    }
+
+    pub(super) unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let av = vdupq_n_f32(a);
+        let mut j = 0;
+        while j + 4 <= n {
+            let yv = vld1q_f32(y.as_ptr().add(j));
+            let xv = vld1q_f32(x.as_ptr().add(j));
+            vst1q_f32(y.as_mut_ptr().add(j), vfmaq_f32(yv, av, xv));
+            j += 4;
+        }
+        while j < n {
+            y[j] += a * x[j];
+            j += 1;
+        }
+    }
+
+    pub(super) unsafe fn bias_celu_splat(row: &mut [f32], b: f32, apply_celu: bool) {
+        let n = row.len();
+        let bv = vdupq_n_f32(b);
+        let mut j = 0;
+        while j + 4 <= n {
+            let z = vaddq_f32(vld1q_f32(row.as_ptr().add(j)), bv);
+            // NaN lanes fail the `>= 0` check and take the scalar path too.
+            if apply_celu && !(vminvq_f32(z) >= 0.0) {
+                super::bias_celu_splat_scalar(&mut row[j..j + 4], b, true);
+            } else {
+                vst1q_f32(row.as_mut_ptr().add(j), z);
+            }
+            j += 4;
+        }
+        super::bias_celu_splat_scalar(&mut row[j..], b, apply_celu);
+    }
+
+    pub(super) unsafe fn bias_celu_vec(row: &mut [f32], bias: &[f32], apply_celu: bool) {
+        let n = row.len();
+        let mut j = 0;
+        while j + 4 <= n {
+            let z = vaddq_f32(vld1q_f32(row.as_ptr().add(j)), vld1q_f32(bias.as_ptr().add(j)));
+            if apply_celu && !(vminvq_f32(z) >= 0.0) {
+                super::bias_celu_vec_scalar(&mut row[j..j + 4], &bias[j..j + 4], true);
+            } else {
+                vst1q_f32(row.as_mut_ptr().add(j), z);
+            }
+            j += 4;
+        }
+        super::bias_celu_vec_scalar(&mut row[j..], &bias[j..], apply_celu);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+use neon::{
+    axpy as axpy_neon, bias_celu_splat as bias_celu_splat_neon, bias_celu_vec as bias_celu_vec_neon,
+    dot1 as dot1_neon, dot4 as dot4_neon,
+};
 
 #[cfg(test)]
 mod tests {
@@ -200,6 +766,23 @@ mod tests {
         (0..n).map(|_| rng.range(-1.0, 1.0) as f32).collect()
     }
 
+    /// Awkward shapes: lane tails in every dimension, k = 1, odd n.
+    const SHAPES: [(usize, usize, usize); 9] = [
+        (1, 1, 1),
+        (2, 7, 3),
+        (5, 4, 9),
+        (3, 13, 1),
+        (8, 8, 32),
+        (4, 5, 17),
+        (1, 9, 16),
+        (6, 31, 33),
+        (2, 66, 8),
+    ];
+
+    fn close_rel(g: f32, w: f32, ctx: &str) {
+        assert!((g - w).abs() <= 1e-5 * (1.0 + w.abs()), "{ctx}: {g} vs {w}");
+    }
+
     #[test]
     fn identity_weight_is_identity() {
         let (m, k) = (3, 5);
@@ -217,8 +800,8 @@ mod tests {
 
     #[test]
     fn matches_naive_on_rectangular_shapes() {
-        // Includes n not divisible by 4 (tail path) and k = 1 edge.
-        for (m, n, k, seed) in [(1, 1, 1, 2), (2, 7, 3, 3), (5, 4, 9, 4), (3, 13, 1, 5), (8, 8, 32, 6)] {
+        for (si, &(m, n, k)) in SHAPES.iter().enumerate() {
+            let seed = 2 + si as u64;
             let a = fill(m * k, seed);
             let b = fill(k * n, seed + 100);
             let want = matmul_naive(&a, &b, m, n, k);
@@ -226,9 +809,119 @@ mod tests {
             let mut got = vec![0.0f32; m * n];
             matmul_nt(&a, &bt, m, n, k, &mut got);
             for (g, w) in got.iter().zip(&want) {
-                assert!((g - w).abs() <= 1e-5, "({m},{n},{k}): {g} vs {w}");
+                close_rel(*g, *w, &format!("({m},{n},{k})"));
             }
         }
+    }
+
+    #[test]
+    fn forced_scalar_matches_reference_order_exactly() {
+        let _g = force_scalar();
+        assert_eq!(active_isa(), Isa::Scalar);
+        for (si, &(m, n, k)) in SHAPES.iter().enumerate() {
+            let seed = 40 + si as u64;
+            let a = fill(m * k, seed);
+            let b = fill(k * n, seed + 100);
+            let bt = transpose_pack(&b, k, n);
+            let mut got = vec![0.0f32; m * n];
+            matmul_nt(&a, &bt, m, n, k, &mut got);
+            // Bit-exact: the scalar kernel keeps the naive summation order.
+            assert_eq!(got, matmul_naive(&a, &b, m, n, k), "({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn simd_matches_scalar_within_relative_tolerance() {
+        // On hosts without a vector ISA both runs are scalar and the
+        // comparison is trivially exact; with AVX2/NEON this pins the
+        // documented <= 1e-5 relative parity across lane-tail shapes.
+        for (si, &(m, n, k)) in SHAPES.iter().enumerate() {
+            let seed = 60 + si as u64;
+            let a = fill(m * k, seed);
+            let b = fill(k * n, seed + 100);
+            let bt = transpose_pack(&b, k, n);
+            let mut simd = vec![0.0f32; m * n];
+            matmul_nt(&a, &bt, m, n, k, &mut simd);
+            let mut scal = vec![0.0f32; m * n];
+            {
+                let _g = force_scalar();
+                matmul_nt(&a, &bt, m, n, k, &mut scal);
+            }
+            for (g, w) in simd.iter().zip(&scal) {
+                close_rel(*g, *w, &format!("nt ({m},{n},{k})"));
+            }
+
+            let seedb = fill(m * n, seed + 7);
+            let mut simd_nn = seedb.clone();
+            matmul_nn_acc(&a, &b, m, n, k, &mut simd_nn);
+            let mut scal_nn = seedb.clone();
+            {
+                let _g = force_scalar();
+                matmul_nn_acc(&a, &b, m, n, k, &mut scal_nn);
+            }
+            for (g, w) in simd_nn.iter().zip(&scal_nn) {
+                close_rel(*g, *w, &format!("nn ({m},{n},{k})"));
+            }
+
+            let b2 = fill(m * n, seed + 9);
+            let mut simd_tn = vec![0.0f32; k * n];
+            matmul_tn_acc(&a, &b2, m, n, k, &mut simd_tn);
+            let mut scal_tn = vec![0.0f32; k * n];
+            {
+                let _g = force_scalar();
+                matmul_tn_acc(&a, &b2, m, n, k, &mut scal_tn);
+            }
+            for (g, w) in simd_tn.iter().zip(&scal_tn) {
+                close_rel(*g, *w, &format!("tn ({m},{n},{k})"));
+            }
+        }
+    }
+
+    #[test]
+    fn epilogues_are_bit_exact_across_isas() {
+        for (cols, seed) in [(1usize, 80u64), (7, 81), (8, 82), (19, 83), (64, 84)] {
+            let rows = 3;
+            let base = fill(rows * cols, seed);
+            let bias_r = fill(rows, seed + 1);
+            let bias_c = fill(cols, seed + 2);
+            for apply in [false, true] {
+                let mut simd = base.clone();
+                bias_celu_rows(&mut simd, rows, cols, &bias_r, apply);
+                let mut scal = base.clone();
+                {
+                    let _g = force_scalar();
+                    bias_celu_rows(&mut scal, rows, cols, &bias_r, apply);
+                }
+                assert_eq!(simd, scal, "rows cols={cols} celu={apply}");
+
+                let mut simd = base.clone();
+                bias_celu_cols(&mut simd, rows, cols, &bias_c, apply);
+                let mut scal = base.clone();
+                {
+                    let _g = force_scalar();
+                    bias_celu_cols(&mut scal, rows, cols, &bias_c, apply);
+                }
+                assert_eq!(simd, scal, "cols cols={cols} celu={apply}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_serial_bit_exactly() {
+        // 2*m*n*k just above PAR_FLOPS so the auto path fans out.
+        let (m, n, k) = (260, 64, 128);
+        assert!(2 * (m * n * k) as u64 > PAR_FLOPS);
+        let a = fill(m * k, 90);
+        let b = fill(k * n, 91);
+        let bt = transpose_pack(&b, k, n);
+        let mut serial = vec![0.0f32; m * n];
+        matmul_nt_with(&a, &bt, m, n, k, &mut serial, 1);
+        let mut auto = vec![0.0f32; m * n];
+        matmul_nt(&a, &bt, m, n, k, &mut auto);
+        let mut four = vec![0.0f32; m * n];
+        matmul_nt_with(&a, &bt, m, n, k, &mut four, 4);
+        assert_eq!(serial, auto);
+        assert_eq!(serial, four);
     }
 
     #[test]
@@ -270,6 +963,48 @@ mod tests {
     }
 
     #[test]
+    fn zero_times_inf_poisons_accumulators() {
+        // A zero multiplier must not skip a non-finite contribution:
+        // 0 * inf = NaN has to reach the accumulator (diverged gradients
+        // must surface, not vanish). Checked on both ISA paths.
+        for forced in [false, true] {
+            let _g = forced.then(force_scalar);
+            let (m, n, k) = (1, 4, 2);
+            let a = vec![0.0f32, 1.0]; // a[0] multiplies the inf row
+            let mut b = vec![1.0f32; k * n];
+            b[0] = f32::INFINITY;
+            let mut out = vec![0.0f32; m * n];
+            matmul_nn_acc(&a, &b, m, n, k, &mut out);
+            assert!(out[0].is_nan(), "nn_acc forced={forced}: {out:?}");
+            assert!(out[1].is_finite(), "nn_acc forced={forced}: {out:?}");
+
+            // tn: a[:, t] holds the zero, b carries the inf.
+            let a2 = vec![0.0f32, 1.0]; // (m=2, k=1)
+            let mut b2 = vec![1.0f32; 2 * n];
+            b2[0] = f32::NEG_INFINITY;
+            let mut out2 = vec![0.0f32; n];
+            matmul_tn_acc(&a2, &b2, 2, n, 1, &mut out2);
+            assert!(out2[0].is_nan(), "tn_acc forced={forced}: {out2:?}");
+            assert!(out2[1].is_finite(), "tn_acc forced={forced}: {out2:?}");
+        }
+    }
+
+    #[test]
+    fn force_scalar_guard_nests_and_restores() {
+        let outer = active_isa();
+        {
+            let _a = force_scalar();
+            assert_eq!(active_isa(), Isa::Scalar);
+            {
+                let _b = force_scalar();
+                assert_eq!(active_isa(), Isa::Scalar);
+            }
+            assert_eq!(active_isa(), Isa::Scalar);
+        }
+        assert_eq!(active_isa(), outer);
+    }
+
+    #[test]
     fn matmuls_count_flops_and_bytes() {
         use crate::obs::counters;
         let set = std::sync::Arc::new(crate::obs::CounterSet::new());
@@ -286,7 +1021,17 @@ mod tests {
         matmul_nn_acc(&a, &b, m, n, k, &mut out);
         let mut wt = vec![0.0f32; k * n];
         matmul_tn_acc(&a, &out, m, n, k, &mut wt);
-        assert_eq!(set.snapshot().kernel_flops, 3 * 48);
+        let s = set.snapshot();
+        assert_eq!(s.kernel_flops, 3 * 48);
+        // One kernel_simd tick per vector-dispatched call, zero when the
+        // process/thread runs scalar.
+        let expect_simd = if active_isa() == Isa::Scalar { 0 } else { 3 };
+        assert_eq!(s.kernel_simd, expect_simd);
+        {
+            let _f = force_scalar();
+            matmul_nt(&a, &bt, m, n, k, &mut out);
+        }
+        assert_eq!(set.snapshot().kernel_simd, expect_simd, "forced-scalar call must not tick");
     }
 
     #[test]

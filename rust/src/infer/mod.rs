@@ -10,7 +10,10 @@
 //!
 //! * [`arch`] — Rust mirror of the Table-2 layer stacks, plus
 //!   reconstruction from `meta.json` parameter layouts.
-//! * [`kernels`] — packed/tiled f32 matmul with fused bias+CELU epilogues.
+//! * [`kernels`] — cache-blocked f32 matmul with runtime-detected SIMD
+//!   (AVX2/FMA, NEON, scalar fallback), in-kernel threading for large
+//!   shapes, and fused bias+CELU epilogues; `SEMULATOR_FORCE_SCALAR=1`
+//!   (or [`kernels::force_scalar`]) pins the bit-exact scalar lane.
 //! * [`engine`] — [`NativeEngine`]: load-time weight packing (conv im2col
 //!   gather tables, pre-transposed dense weights) and thread-parallel
 //!   batched execution.

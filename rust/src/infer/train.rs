@@ -19,6 +19,11 @@
 //! and updates parameters with minibatch SGD on the mean-squared-error
 //! loss under a [`LrSchedule`](crate::coordinator::LrSchedule). Gradients
 //! are held to finite differences by `tests/proptests.rs`.
+//!
+//! Divergence stays visible: the accumulate kernels propagate non-finite
+//! contributions (`0 · ∞ = NaN` by IEEE-754, never silently skipped), so
+//! an `inf`/`NaN` anywhere in the gradient stream poisons the affected
+//! parameter gradients instead of vanishing behind a sparsity shortcut.
 
 use std::time::Instant;
 
@@ -571,6 +576,33 @@ mod tests {
                     "array {ai}[{k}]: fd {fd} vs analytic {an}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn inf_in_gradient_stream_poisons_grads_not_vanishes() {
+        // Regression for the kernels' old `av == 0.0` accumulate skip: a
+        // diverged target makes delta = -inf, and the weight gradient
+        // dW = xᵀ·delta must go NaN (0·∞) on rows fed by a zero feature —
+        // not stay at a clean-looking 0.0 that masks the divergence.
+        let arch = Arch {
+            name: "one_dense".into(),
+            input: [1, 1, 1, 2],
+            outputs: 1,
+            layers: vec![Layer::Flatten, Layer::Dense { cin: 2, cout: 1, celu: false }],
+        };
+        let trainer = NativeTrainer::new(arch).unwrap();
+        let state = ModelState::init(trainer.meta(), 2);
+        let xb = [0.0f32, 1.0]; // feature 0 is exactly zero
+        let yb = [f32::INFINITY];
+        for forced in [false, true] {
+            let _g = forced.then(crate::infer::kernels::force_scalar);
+            let (loss, grads) = trainer.loss_and_grads(&state, &xb, &yb).unwrap();
+            assert!(loss.is_infinite(), "diverged loss must surface: {loss}");
+            // dW[0] = 0.0 · (-inf) = NaN; dW[1] = 1.0 · (-inf) = -inf.
+            assert!(grads[0][0].is_nan(), "forced={forced}: zero-feature grad {}", grads[0][0]);
+            assert!(grads[0][1].is_infinite(), "forced={forced}: grad {}", grads[0][1]);
+            assert!(grads[1][0].is_infinite(), "forced={forced}: bias grad {}", grads[1][0]);
         }
     }
 

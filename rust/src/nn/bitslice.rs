@@ -157,6 +157,30 @@ mod tests {
     }
 
     #[test]
+    fn adc_full_scale_boundary_is_not_a_clip() {
+        // Boundary semantics: a reading that *rounds* exactly to ±max_code
+        // is representable and must not count as saturation; the first
+        // reading whose rounded code lands one LSB beyond must count
+        // exactly once. 4 bits over ±7 puts the LSB at exactly 1.0.
+        let adc = AdcSpec { bits: 4, range: 7.0 };
+        let before = counters::global_snapshot();
+        assert_eq!(adc.convert(7.0), 7.0); // exact full scale
+        assert_eq!(adc.convert(-7.0), -7.0);
+        assert_eq!(adc.convert(7.49), 7.0); // still rounds to max_code
+        assert_eq!(adc.convert(-7.49), -7.0);
+        assert_eq!(counters::global_snapshot().since(&before).adc_clips, 0);
+        // One LSB beyond full scale: rounded code 8 > max_code 7 — the
+        // output clamps and the counter moves by exactly one per reading.
+        assert_eq!(adc.convert(8.0), 7.0);
+        assert_eq!(counters::global_snapshot().since(&before).adc_clips, 1);
+        assert_eq!(adc.convert(-8.0), -7.0);
+        assert_eq!(counters::global_snapshot().since(&before).adc_clips, 2);
+        // Half-LSB past full scale rounds away from zero to code 8: clips.
+        assert_eq!(adc.convert(7.5), 7.0);
+        assert_eq!(counters::global_snapshot().since(&before).adc_clips, 3);
+    }
+
+    #[test]
     fn analog_slice_is_identity() {
         let s = InputSlicer { bits: 0 };
         let x = vec![0.1, 0.9, 0.5];

@@ -14,7 +14,10 @@
 //!   [`crate::xbar::AnalogBlock::simulate_golden_with`], dense or sparse
 //!   per [`SolverChoice`].
 //! * [`Executor::Emulated`] — a trained regression network served by an
-//!   [`crate::api::Deployment`] (the paper's surrogate in the loop).
+//!   [`crate::api::Deployment`] (the paper's surrogate in the loop). Its
+//!   native backend runs the SIMD/threaded f32 kernels
+//!   ([`crate::infer::kernels`]); the digital accumulation here stays in
+//!   f64, so executor choice never changes the layer's own arithmetic.
 //!
 //! Physical executors read out *voltages*, not dot products, so each
 //! layer/executor pair is calibrated once against an ideal single-cell

@@ -31,9 +31,16 @@ pub struct CounterSet {
     /// per call) — invariant under batching/chunking/worker count.
     pub kernel_flops: AtomicU64,
     /// Bytes the matmul kernels streamed ((m·k + n·k + m·n)·4 per call).
-    /// NOT chunk-invariant (the weight operand is counted once per chunk);
-    /// report it, but never put it in byte-identical summaries.
+    /// The engine makes exactly one kernel call per logical matmul, so
+    /// this is invariant under batching/chunking/worker count like
+    /// `kernel_flops`.
     pub kernel_bytes: AtomicU64,
+    /// Matmul kernel calls dispatched to a vector ISA (AVX2/NEON) —
+    /// zero under `SEMULATOR_FORCE_SCALAR` or on scalar-only hosts, so
+    /// stats show which path actually ran. Deterministic for a fixed
+    /// host + environment, but NOT portable across machines: keep it out
+    /// of cross-machine-comparable summaries.
+    pub kernel_simd: AtomicU64,
     /// Newton iterations spent inside the fast solver (cell + bitline +
     /// ladder + output loops) — per-sample deterministic.
     pub newton_iters: AtomicU64,
@@ -78,6 +85,7 @@ impl CounterSet {
         Self {
             kernel_flops: AtomicU64::new(0),
             kernel_bytes: AtomicU64::new(0),
+            kernel_simd: AtomicU64::new(0),
             newton_iters: AtomicU64::new(0),
             fast_solves: AtomicU64::new(0),
             golden_solves: AtomicU64::new(0),
@@ -98,6 +106,7 @@ impl CounterSet {
         CounterSnapshot {
             kernel_flops: ld(&self.kernel_flops),
             kernel_bytes: ld(&self.kernel_bytes),
+            kernel_simd: ld(&self.kernel_simd),
             newton_iters: ld(&self.newton_iters),
             fast_solves: ld(&self.fast_solves),
             golden_solves: ld(&self.golden_solves),
@@ -119,6 +128,7 @@ impl CounterSet {
 pub struct CounterSnapshot {
     pub kernel_flops: u64,
     pub kernel_bytes: u64,
+    pub kernel_simd: u64,
     pub newton_iters: u64,
     pub fast_solves: u64,
     pub golden_solves: u64,
@@ -139,6 +149,7 @@ impl CounterSnapshot {
         CounterSnapshot {
             kernel_flops: self.kernel_flops.saturating_sub(earlier.kernel_flops),
             kernel_bytes: self.kernel_bytes.saturating_sub(earlier.kernel_bytes),
+            kernel_simd: self.kernel_simd.saturating_sub(earlier.kernel_simd),
             newton_iters: self.newton_iters.saturating_sub(earlier.newton_iters),
             fast_solves: self.fast_solves.saturating_sub(earlier.fast_solves),
             golden_solves: self.golden_solves.saturating_sub(earlier.golden_solves),
@@ -157,10 +168,11 @@ impl CounterSnapshot {
     }
 
     /// Stable name/value pairs (the serialization order everywhere).
-    pub fn named(&self) -> [(&'static str, u64); 14] {
+    pub fn named(&self) -> [(&'static str, u64); 15] {
         [
             ("kernel_flops", self.kernel_flops),
             ("kernel_bytes", self.kernel_bytes),
+            ("kernel_simd", self.kernel_simd),
             ("newton_iters", self.newton_iters),
             ("fast_solves", self.fast_solves),
             ("golden_solves", self.golden_solves),
@@ -187,6 +199,7 @@ impl CounterSnapshot {
         CounterSnapshot {
             kernel_flops: g("kernel_flops"),
             kernel_bytes: g("kernel_bytes"),
+            kernel_simd: g("kernel_simd"),
             newton_iters: g("newton_iters"),
             fast_solves: g("fast_solves"),
             golden_solves: g("golden_solves"),
@@ -264,6 +277,10 @@ pub fn add_kernel_flops(n: u64) {
 
 pub fn add_kernel_bytes(n: u64) {
     add(|c| &c.kernel_bytes, n);
+}
+
+pub fn add_kernel_simd(n: u64) {
+    add(|c| &c.kernel_simd, n);
 }
 
 pub fn add_newton_iters(n: u64) {
@@ -364,6 +381,7 @@ mod tests {
         let s = CounterSnapshot {
             kernel_flops: 1 << 40,
             kernel_bytes: 7,
+            kernel_simd: 9,
             newton_iters: 3,
             fast_solves: 2,
             golden_solves: 1,

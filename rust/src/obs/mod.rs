@@ -155,7 +155,7 @@ impl Registry {
             p.gauge(&format!("semulator_{k}"), &[], *v);
         }
         // Per-variant request counters, family-major so samples group.
-        let per_variant: Vec<(&str, [(&'static str, u64); 10])> =
+        let per_variant: Vec<(&str, [(&'static str, u64); 12])> =
             self.variants.iter().map(|e| (e.name.as_str(), e.metrics.counters())).collect();
         if let Some((_, first)) = per_variant.first() {
             for idx in 0..first.len() {
@@ -262,9 +262,14 @@ mod tests {
             "# TYPE semulator_golden_energy_fj_total counter",
             "# TYPE semulator_settling_ps_total counter",
             "# TYPE semulator_fast_energy_fj_total counter",
+            "# TYPE semulator_kernel_simd_total counter",
         ] {
             assert!(text.contains(family), "missing {family}\n{text}");
         }
+        // Per-variant serve-time energy families (PR 9 leftover): every
+        // variant exposes its quantized energy/settling tallies.
+        assert!(text.contains("semulator_energy_fj_total{variant=\"a\"} 0"), "{text}");
+        assert!(text.contains("semulator_t_settle_ps_total{variant=\"b\"} 0"), "{text}");
         // One TYPE declaration per family.
         let decls = text.matches("# TYPE semulator_requests_total").count();
         assert_eq!(decls, 1);

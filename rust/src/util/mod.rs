@@ -10,5 +10,5 @@ pub mod rng;
 
 pub use bench::{BenchConfig, BenchJsonl, BenchStats, Bencher};
 pub use json::{parse as json_parse, Json, JsonError};
-pub use parallel::{default_workers, parallel_map};
+pub use parallel::{default_workers, parallel_chunks_mut, parallel_map};
 pub use rng::Rng;

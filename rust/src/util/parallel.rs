@@ -23,6 +23,7 @@ where
         return (0..n).map(f).collect();
     }
     let obs_scope = crate::obs::counters::current_scope();
+    let force_scalar = crate::infer::kernels::thread_forces_scalar();
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let chunk = n.div_ceil(workers);
     std::thread::scope(|scope| {
@@ -31,6 +32,7 @@ where
             let obs_scope = obs_scope.clone();
             scope.spawn(move || {
                 let _obs = crate::obs::counters::scoped_opt(obs_scope);
+                let _isa = crate::infer::kernels::inherit_force_scalar(force_scalar);
                 let base = w * chunk;
                 for (i, s) in slot.iter_mut().enumerate() {
                     *s = Some(f(base + i));
@@ -39,6 +41,54 @@ where
         }
     });
     out.into_iter().map(|x| x.expect("worker failed to fill slot")).collect()
+}
+
+/// Split `data` into `chunk_len`-element chunks and apply
+/// `f(chunk_index, chunk)` to each, fanning chunks over up to `n_workers`
+/// scoped threads. The mutable-slice sibling of [`parallel_map`] — the
+/// SIMD matmul kernels and the layer-major engine use it to hand each
+/// worker a disjoint block of one shared output buffer instead of
+/// concatenating per-worker allocations.
+///
+/// Chunk boundaries and indices depend only on `chunk_len` (the final
+/// chunk may be short), never on `n_workers`, so any computation whose
+/// per-chunk result is a pure function of its chunk is bit-identical
+/// across worker counts. Workers inherit the calling thread's
+/// [`crate::obs::counters`] scope.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, n_workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let workers = n_workers.max(1).min(n_chunks);
+    if workers == 1 {
+        for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(ci, chunk);
+        }
+        return;
+    }
+    let obs_scope = crate::obs::counters::current_scope();
+    let force_scalar = crate::infer::kernels::thread_forces_scalar();
+    let per = n_chunks.div_ceil(workers);
+    let stride = per * chunk_len;
+    std::thread::scope(|scope| {
+        for (w, group) in data.chunks_mut(stride).enumerate() {
+            let f = &f;
+            let obs_scope = obs_scope.clone();
+            scope.spawn(move || {
+                let _obs = crate::obs::counters::scoped_opt(obs_scope);
+                let _isa = crate::infer::kernels::inherit_force_scalar(force_scalar);
+                for (i, chunk) in group.chunks_mut(chunk_len).enumerate() {
+                    f(w * per + i, chunk);
+                }
+            });
+        }
+    });
 }
 
 /// Default worker count: all available cores.
@@ -75,6 +125,49 @@ mod tests {
         let set = std::sync::Arc::new(crate::obs::CounterSet::new());
         let _g = counters::scoped(set.clone());
         parallel_map(16, 4, |_| counters::add_newton_iters(1));
+        assert_eq!(set.snapshot().newton_iters, 16);
+    }
+
+    #[test]
+    fn chunks_mut_covers_every_element_once() {
+        for workers in [1, 3, 8] {
+            let mut data = vec![0u32; 23];
+            parallel_chunks_mut(&mut data, 5, workers, |ci, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = (ci * 5 + i) as u32 + 1;
+                }
+            });
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, i as u32 + 1, "workers={workers}");
+            }
+        }
+        let mut empty: Vec<u32> = Vec::new();
+        parallel_chunks_mut(&mut empty, 4, 4, |_, _| panic!("no chunks on empty input"));
+    }
+
+    #[test]
+    fn chunks_mut_indices_do_not_depend_on_worker_count() {
+        let run = |workers: usize| {
+            let mut data = vec![0usize; 40];
+            parallel_chunks_mut(&mut data, 6, workers, |ci, chunk| {
+                for v in chunk.iter_mut() {
+                    *v = ci;
+                }
+            });
+            data
+        };
+        let base = run(1);
+        assert_eq!(base, run(2));
+        assert_eq!(base, run(7));
+    }
+
+    #[test]
+    fn chunks_mut_workers_inherit_obs_scope() {
+        use crate::obs::counters;
+        let set = std::sync::Arc::new(crate::obs::CounterSet::new());
+        let _g = counters::scoped(set.clone());
+        let mut data = vec![0u8; 32];
+        parallel_chunks_mut(&mut data, 2, 4, |_, _| counters::add_newton_iters(1));
         assert_eq!(set.snapshot().newton_iters, 16);
     }
 

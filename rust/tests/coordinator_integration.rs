@@ -776,6 +776,14 @@ fn tcp_protocol_two_variants_and_robustness() {
     assert_eq!(snap.get("requests").unwrap().as_f64(), Some(3.0));
     assert_eq!(snap.get("verified").unwrap().as_f64(), Some(3.0));
     assert!(snap.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    // Serve-time energy metrics (PR 9 leftover): every served request is
+    // priced by the fast power surrogate, per variant and in the totals.
+    let ideal_fj = vars.get("ideal").unwrap().get("energy_fj").unwrap().as_f64().unwrap();
+    let harsh_fj = vars.get("harsh").unwrap().get("energy_fj").unwrap().as_f64().unwrap();
+    assert!(ideal_fj > 0.0, "ideal served 2 requests, energy_fj must be positive");
+    assert!(harsh_fj > 0.0, "harsh served 1 request, energy_fj must be positive");
+    assert_eq!(snap.get("energy_fj").unwrap().as_f64(), Some(ideal_fj + harsh_fj));
+    assert!(vars.get("ideal").unwrap().get("t_settle_ps").unwrap().as_f64().unwrap() >= 0.0);
 
     // Prometheus exposition over the same socket: the `prom` field must
     // pass the format lint and carry the per-variant counters and the
@@ -787,6 +795,12 @@ fn tcp_protocol_two_variants_and_robustness() {
     assert!(prom.contains("semulator_requests_total{variant=\"ideal\"} 2"), "{prom}");
     assert!(prom.contains("semulator_request_latency_us_bucket"), "{prom}");
     assert!(prom.contains("semulator_kernel_flops_total"), "{prom}");
+    // Per-variant energy families carry the surrogate estimates, and the
+    // process-wide fast-energy counter ticked alongside them.
+    assert!(prom.contains("# TYPE semulator_energy_fj_total counter"), "{prom}");
+    assert!(prom.contains("semulator_energy_fj_total{variant=\"ideal\"}"), "{prom}");
+    assert!(prom.contains("semulator_t_settle_ps_total{variant=\"harsh\"}"), "{prom}");
+    assert!(!prom.contains("semulator_fast_energy_fj_total 0\n"), "{prom}");
 
     // The trace ring replays recent spans; this very connection's
     // requests are in it.

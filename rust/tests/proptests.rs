@@ -247,6 +247,14 @@ fn prop_fast_solver_equivalence_random_geometry() {
 /// on random `ModelState`s, batch sizes and inputs, for every built-in
 /// architecture — the engine's core correctness signal (the reference
 /// mirrors `python/compile/kernels/ref.py` op for op).
+///
+/// Tolerance, not equality: the SIMD kernels accumulate dot products in
+/// 8/4-lane partials with FMA contraction, a different (but equally
+/// valid) f32 summation order than the reference's sequential loop, so
+/// the default-ISA lane is held to 1e-4 absolute on O(1)-scale outputs.
+/// The forced-scalar lane keeps the legacy order and must stay
+/// *bit-exact* — that is the regression anchor if the tolerance lane
+/// ever drifts.
 #[test]
 fn prop_native_engine_matches_reference() {
     for case in 0..20 {
@@ -268,6 +276,11 @@ fn prop_native_engine_matches_reference() {
                 "case {case} ({variant}) out {i}: native {g} vs reference {w}"
             );
         }
+        // Forced-scalar lane: same inputs, exact-order kernels, bitwise
+        // agreement with the oracle.
+        let _g = semulator::infer::kernels::force_scalar();
+        let exact = engine.forward(&x).unwrap();
+        assert_eq!(exact, want, "case {case} ({variant}): scalar lane must be bit-exact");
     }
 }
 
@@ -423,6 +436,14 @@ fn fd_grad(
 /// matches central finite differences of its own loss, for a stack that
 /// contains every `Arch` layer kind (conv ± CELU, flatten, dense ± CELU).
 /// Exhaustive over all 51 parameters per case.
+///
+/// The relative tolerance absorbs two independent error sources: FD
+/// truncation/cancellation at f32 precision, and the SIMD accumulate
+/// kernels' partial-lane/FMA summation order (which differs from the
+/// scalar order by O(k·eps) per dot product). Neither term is
+/// order-exact, so the check is `|an - fd| <= 5e-3 + 5e-2·max(|an|,|fd|)`
+/// on whichever ISA the host selects — the same bound the pre-SIMD
+/// scalar kernels were held to.
 #[test]
 fn prop_native_trainer_grads_match_fd_all_layer_kinds() {
     let trainer = NativeTrainer::new(all_kinds_arch()).unwrap();

@@ -13,6 +13,15 @@
 # Timings are machine-dependent: treat the checked-in baseline as a shape
 # reference (schema + lane list + FLOP counts, which ARE deterministic),
 # not as a perf contract across hosts.
+#
+# Kernel lanes (PR 10): bench_native_infer emits three native rows per
+# (variant, batch) — `native_scalar` (SEMULATOR_FORCE_SCALAR-equivalent
+# forced-scalar kernels, one worker), `native_simd1` (detected ISA, one
+# worker) and `native` (detected ISA, threaded) — and bench_train_step
+# pairs each `native_step_b*` row with a `native_step_scalar_b*` baseline.
+# The scalar/simd/threaded ratio on the b256+ rows is the kernel perf
+# trajectory; `flops` is identical across the three lanes by construction
+# (work counters are ISA- and worker-invariant).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 out="${1:-BENCH_baseline.json}"
